@@ -1,0 +1,137 @@
+//! End-to-end driver: proves every layer of the stack composes on one
+//! real workload. This is the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Pipeline exercised:
+//!   1. synthetic FashionMNIST-like data (L3 data substrate)
+//!   2. truly-sparse sequential SET training with All-ReLU + Importance
+//!      Pruning, several hundred epochs, loss curve logged (L3 engine)
+//!   3. WASAP-SGD parallel training of the same task (L3 coordinator)
+//!   4. masked-dense baseline via the AOT JAX/XLA artifacts — the L2
+//!      graph embedding the L1 Pallas kernel — executed through PJRT
+//!      from Rust ("Keras" comparator)
+//!   5. sparse checkpoint round-trip
+//!
+//! Run: `cargo run --release --example end_to_end [-- epochs]`
+//! Writes results/e2e_curve.csv with the loss curve.
+
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::coordinator::{run_parallel, ParallelConfig};
+use tsnn::importance::ImportanceConfig;
+use tsnn::prelude::*;
+use tsnn::runtime::{default_artifacts_dir, Manifest, MaskedDenseTrainer};
+use tsnn::train::train_sequential;
+use tsnn::util::Timer;
+
+fn main() -> Result<()> {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    println!("=== [1/5] dataset ===");
+    let spec = DatasetSpec::small("fashion");
+    let mut rng = Rng::new(42);
+    let data = datasets::generate(&spec, &mut rng)?;
+    println!(
+        "fashion-like: {} features, {} classes, {}+{} samples ({:.0} MiB)",
+        data.n_features,
+        data.n_classes,
+        data.n_train(),
+        data.n_test(),
+        data.memory_mib()
+    );
+
+    println!("\n=== [2/5] truly-sparse sequential SET training ({epochs} epochs) ===");
+    let mut cfg = TrainConfig::small_preset("fashion");
+    cfg.epochs = epochs;
+    cfg.importance = Some(ImportanceConfig {
+        start_epoch: epochs / 2,
+        period: 10,
+        percentile: 5.0,
+        min_connections: 64,
+    });
+    let t = Timer::start();
+    let seq = train_sequential(&cfg, &data, &mut Rng::new(42))?;
+    println!(
+        "sequential: best acc {:.4}, weights {} -> {}, {:.1}s",
+        seq.best_test_accuracy,
+        seq.start_weights,
+        seq.end_weights,
+        t.secs()
+    );
+    // loss-curve log (every 10th epoch to keep output readable)
+    println!("loss curve (every 10th epoch):");
+    for e in seq.epochs.iter().step_by(10) {
+        println!(
+            "  epoch {:>4}: train_loss {:.4} train_acc {:.4} test_acc {:.4} weights {}",
+            e.epoch, e.train_loss, e.train_accuracy, e.test_accuracy, e.weight_count
+        );
+    }
+    let path = tsnn::bench::write_artifact("e2e_curve.csv", &seq.curves_csv())?;
+    println!("full curve written to {}", path.display());
+
+    println!("\n=== [3/5] WASAP-SGD parallel training ===");
+    let pcfg = ParallelConfig {
+        workers: 5,
+        phase1_epochs: (epochs * 4 / 5).max(1),
+        phase2_epochs: (epochs / 5).max(1),
+        synchronous: false,
+            hot_start: true,
+            grad_clip: 5.0,
+        };
+    let t = Timer::start();
+    let par = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(42))?;
+    println!(
+        "WASAP: final acc {:.4} (phase1 {:.4}), staleness {:.2}, dropped {}, {:.1}s",
+        par.final_test_accuracy,
+        par.phase1_test_accuracy,
+        par.server_stats.mean_staleness,
+        par.server_stats.dropped_entries,
+        t.secs()
+    );
+
+    println!("\n=== [4/5] masked-dense XLA baseline (L1 pallas -> L2 jax -> L3 rust) ===");
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let arch = manifest
+        .get("fashion")
+        .expect("fashion artifact missing; run `make artifacts`");
+    let mut baseline = MaskedDenseTrainer::new(arch, cfg.epsilon, &mut Rng::new(42))?;
+    println!(
+        "masked-dense state: {:.1} MiB (CSR equivalent: {:.1} MiB)",
+        baseline.memory_bytes() as f64 / 1048576.0,
+        seq.model.memory_bytes() as f64 / 1048576.0
+    );
+    let base_epochs = 3.min(epochs);
+    let t = Timer::start();
+    let mut last = None;
+    for _ in 0..base_epochs {
+        let ep = baseline.train_epoch(&data, 0.01, &mut rng)?;
+        baseline.evolve(0.3, &mut rng);
+        last = Some(ep);
+    }
+    let per_epoch = t.secs() / base_epochs as f64;
+    let seq_per_epoch = seq.phases.get("train") / epochs as f64;
+    println!(
+        "masked-dense: {:.2}s/epoch vs truly-sparse {:.2}s/epoch ({}x)",
+        per_epoch,
+        seq_per_epoch,
+        (per_epoch / seq_per_epoch.max(1e-9)).round()
+    );
+    if let Some(ep) = last {
+        println!("masked-dense last epoch: loss {:.4} acc {:.4}", ep.loss, ep.accuracy);
+    }
+    let base_acc = baseline.evaluate(&data)?;
+    println!("masked-dense test acc after {base_epochs} epochs: {base_acc:.4}");
+
+    println!("\n=== [5/5] checkpoint round-trip ===");
+    let ckpt = std::env::temp_dir().join("tsnn_e2e.tsnn");
+    tsnn::model::checkpoint::save(&seq.model, &ckpt)?;
+    let reloaded = tsnn::model::checkpoint::load(&ckpt)?;
+    let mut ws = reloaded.alloc_workspace(256);
+    let (_, acc) = reloaded.evaluate(&data.x_test, &data.y_test, 256, &mut ws);
+    assert!((acc - seq.final_test_accuracy).abs() < 1e-6);
+    println!("reload OK: acc {acc:.4} == {:.4}", seq.final_test_accuracy);
+
+    println!("\nE2E: all five stages passed.");
+    Ok(())
+}

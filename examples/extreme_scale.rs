@@ -1,0 +1,92 @@
+//! Extreme-scale sparse MLPs (§2.4): build million-neuron truly-sparse
+//! models, measure the four phases the paper reports (weight init /
+//! training / inference / weight evolution) and show where the dense
+//! equivalent would OOM.
+//!
+//! Run: `cargo run --release --example extreme_scale [-- neurons_millions]`
+//! (defaults to 1M neurons; the table4_extreme bench sweeps further)
+
+use tsnn::config::DatasetSpec;
+use tsnn::nn::MomentumSgd;
+use tsnn::prelude::*;
+use tsnn::set::{evolve_model, EvolutionConfig};
+use tsnn::util::Timer;
+
+fn main() -> Result<()> {
+    let millions: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+
+    // 65536-feature binary task (scaled-down row count of the paper's
+    // "big artificial dataset"); hidden width chosen to hit the target
+    // neuron count with two hidden layers.
+    let n_features = 65_536usize;
+    let hidden = (((millions * 1e6) as usize).saturating_sub(n_features + 2) / 2).max(1000);
+    let sizes = vec![n_features, hidden, hidden, 2];
+    let epsilon = 5.0;
+
+    let spec = DatasetSpec {
+        name: "extreme".into(),
+        generator: "extreme".into(),
+        n_features,
+        n_classes: 2,
+        n_train: 512,
+        n_test: 128,
+    };
+    println!("generating {} features x {} samples ...", n_features, 640);
+    let mut rng = Rng::new(1);
+    let data = datasets::generate(&spec, &mut rng)?;
+
+    // --- weight initialisation (vectorised per-row: §2.4's bottleneck) ---
+    let t = Timer::start();
+    let mut model = SparseMlp::new(
+        &sizes,
+        epsilon,
+        Activation::AllRelu { alpha: 0.6 },
+        &WeightInit::HeUniform,
+        &mut rng,
+    )?;
+    let init_secs = t.secs();
+
+    let neurons = model.neuron_count();
+    let weights = model.weight_count();
+    let dense_weights: usize = sizes.windows(2).map(|w| w[0] * w[1]).sum();
+    println!("\nneurons          : {neurons} ({:.2}M)", neurons as f64 / 1e6);
+    println!("sparse weights   : {weights} ({:.1} MiB CSR)", model.memory_bytes() as f64 / 1048576.0);
+    println!(
+        "dense equivalent : {dense_weights} weights = {:.0} GiB f32 (+{:.0} GiB momentum) -> OOM on this host",
+        dense_weights as f64 * 4.0 / 1073741824.0,
+        dense_weights as f64 * 4.0 / 1073741824.0
+    );
+    println!("init time        : {init_secs:.1}s");
+
+    // --- one training epoch (batch 128) ---
+    let batch = 128;
+    let mut ws = model.alloc_workspace(batch);
+    let opt = MomentumSgd::default();
+    let mut batcher = Batcher::new(data.n_train(), n_features, batch);
+    batcher.reset(&mut rng);
+    let t = Timer::start();
+    let mut steps = 0;
+    let mut last_loss = 0.0;
+    while let Some((x, y)) = batcher.next_batch(&data.x_train, &data.y_train) {
+        let s = model.train_step(x, y, &opt, 0.01, None, &mut ws, &mut rng);
+        last_loss = s.loss;
+        steps += 1;
+    }
+    let train_secs = t.secs();
+    println!("train epoch      : {train_secs:.1}s ({steps} steps, loss {last_loss:.4})");
+
+    // --- inference over the test split ---
+    let t = Timer::start();
+    let (_, acc) = model.evaluate(&data.x_test, &data.y_test, batch, &mut ws);
+    println!("inference        : {:.1}s (acc {acc:.3})", t.secs());
+
+    // --- topology evolution ---
+    let t = Timer::start();
+    evolve_model(&mut model, &EvolutionConfig::default(), &mut rng)?;
+    println!("weight evolution : {:.1}s", t.secs());
+
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Importance Pruning demo: during-training (Algorithm 2) vs
+//! post-training (§5.3) on the Madelon dataset — the paper's flagship
+//! pruning result (≈80% fewer parameters, *better* accuracy).
+//!
+//! Run: `cargo run --release --example importance_pruning`
+
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::importance::{self, ImportanceConfig};
+use tsnn::prelude::*;
+use tsnn::train::train_sequential;
+
+fn main() -> Result<()> {
+    let spec = DatasetSpec::small("madelon");
+    let mut rng = Rng::new(11);
+    let data = datasets::generate(&spec, &mut rng)?;
+
+    let mut base_cfg = TrainConfig::small_preset("madelon");
+    base_cfg.epochs = 40;
+    base_cfg.importance = None;
+
+    // --- no pruning ---
+    let base = train_sequential(&base_cfg, &data, &mut Rng::new(11))?;
+
+    // --- Importance Pruning during training (Algorithm 2) ---
+    let mut during_cfg = base_cfg.clone();
+    during_cfg.importance = Some(ImportanceConfig {
+        start_epoch: 15,
+        period: 5,
+        percentile: 10.0,
+        min_connections: 64,
+    });
+    let during = train_sequential(&during_cfg, &data, &mut Rng::new(11))?;
+
+    // --- post-training percentile sweep on the unpruned model (§5.3) ---
+    println!("### Post-training pruning sweep (Table 6 style)\n");
+    println!("| threshold | test acc | remaining weights |");
+    println!("|-----------|----------|-------------------|");
+    let mut ws = base.model.alloc_workspace(256);
+    for pct in [5.0, 10.0, 15.0, 20.0, 25.0] {
+        let mut m = base.model.clone();
+        let (_, remaining) = importance::prune_post_training(&mut m, pct);
+        let (_, acc) = m.evaluate(&data.x_test, &data.y_test, 256, &mut ws);
+        println!("| {pct:>4}th    | {:.4}   | {remaining:>8}          |", acc);
+    }
+
+    println!("\n### During-training vs baseline\n");
+    println!(
+        "baseline : acc {:.4}, weights {} -> {}",
+        base.best_test_accuracy, base.start_weights, base.end_weights
+    );
+    println!(
+        "integrated: acc {:.4}, weights {} -> {}  ({:.0}% params removed)",
+        during.best_test_accuracy,
+        during.start_weights,
+        during.end_weights,
+        100.0 * (1.0 - during.end_weights as f64 / during.start_weights as f64)
+    );
+    println!(
+        "\ntrain-time: baseline {:.1}s vs integrated {:.1}s",
+        base.phases.get("train"),
+        during.phases.get("train")
+    );
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For each entry in ``model.ARCHITECTURES`` this emits:
+
+  artifacts/<name>_fwd.hlo.txt    forward(x, [w,b,m]*L) -> (logits,)
+  artifacts/<name>_train.hlo.txt  train_step(x, y, lr, [w,b,vw,vb,m]*L)
+                                  -> (loss, acc, [w,b,vw,vb]*L)
+
+plus ``artifacts/manifest.json`` describing shapes and argument order so
+the Rust loader can allocate buffers without re-deriving the convention.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_arch(name: str, cfg: dict, out_dir: str) -> dict:
+    """Lower forward + train_step for one architecture; return manifest entry."""
+    sizes = cfg["sizes"]
+    batch = cfg["batch"]
+    act = cfg.get("act", "allrelu")
+    alpha = cfg.get("alpha", 0.6)
+    use_pallas = cfg.get("use_pallas_first_layer", False)
+    n_layers = len(sizes) - 1
+
+    # ---- forward ----
+    fwd = M.make_forward(sizes, act=act, alpha=alpha,
+                         use_pallas_first_layer=use_pallas)
+    fwd_args = [_spec((batch, sizes[0]))]
+    for l in range(n_layers):
+        shp = (sizes[l], sizes[l + 1])
+        fwd_args += [_spec(shp), _spec((sizes[l + 1],)), _spec(shp)]
+    fwd_path = os.path.join(out_dir, f"{name}_fwd.hlo.txt")
+    with open(fwd_path, "w") as f:
+        f.write(to_hlo_text(jax.jit(fwd).lower(*fwd_args)))
+
+    # ---- train step ----
+    step = M.make_train_step(
+        sizes, act=act, alpha=alpha,
+        momentum=cfg.get("momentum", 0.9),
+        weight_decay=cfg.get("weight_decay", 0.0002),
+    )
+    st_args = [_spec((batch, sizes[0])), _spec((batch,), jnp.int32), _spec(())]
+    for l in range(n_layers):
+        shp = (sizes[l], sizes[l + 1])
+        st_args += [_spec(shp), _spec((sizes[l + 1],)), _spec(shp),
+                    _spec((sizes[l + 1],)), _spec(shp)]
+    train_path = os.path.join(out_dir, f"{name}_train.hlo.txt")
+    with open(train_path, "w") as f:
+        f.write(to_hlo_text(jax.jit(step).lower(*st_args)))
+
+    return {
+        "name": name,
+        "sizes": list(sizes),
+        "batch": batch,
+        "act": act,
+        "alpha": alpha,
+        "momentum": cfg.get("momentum", 0.9),
+        "weight_decay": cfg.get("weight_decay", 0.0002),
+        "use_pallas_first_layer": bool(use_pallas),
+        "forward_hlo": os.path.basename(fwd_path),
+        "train_hlo": os.path.basename(train_path),
+        "forward_args": "x, then per layer: w, b, m",
+        "train_args": "x, y:i32, lr:f32[], then per layer: w, b, vw, vb, m",
+        "train_outputs": "loss, acc, then per layer: w, b, vw, vb",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--arch", action="append", default=None,
+        help="subset of architectures to lower (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.arch or list(M.ARCHITECTURES)
+    manifest = {"format": "hlo-text", "entries": []}
+    for name in names:
+        cfg = M.ARCHITECTURES[name]
+        print(f"lowering {name} sizes={cfg['sizes']} batch={cfg['batch']} ...")
+        manifest["entries"].append(lower_arch(name, cfg, args.out))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(names)} architectures to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

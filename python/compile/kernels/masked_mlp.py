@@ -1,0 +1,222 @@
+"""Layer-1 Pallas kernels: tiled masked matmul with fused All-ReLU.
+
+The paper's "simulated sparsity" compute — dense weights with a binary
+mask — is exactly what today's accelerators support (NVIDIA 2:4, TPU
+masked-dense). This kernel is the hot-spot of the masked-dense baseline
+(the "Keras" comparator of Tables 2-3) and the hardware-adaptation story
+of DESIGN.md: the HBM<->VMEM schedule the paper's GPU peers express with
+threadblocks is expressed here with a BlockSpec grid over MXU-shaped
+(128x128) tiles.
+
+All kernels are lowered with ``interpret=True`` so they execute on the
+CPU PJRT backend (real TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot run). Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernel.py`` including hypothesis shape sweeps.
+
+VMEM accounting (f32, per grid step, default TM=TN=TK=128):
+    x tile   TM*TK*4 =  64 KiB
+    w tile   TK*TN*4 =  64 KiB
+    m tile   TK*TN*4 =  64 KiB
+    acc      TM*TN*4 =  64 KiB
+    total             256 KiB  << 16 MiB VMEM -> double-buffering head-room.
+MXU estimate: each grid step issues a TMxTKxTN = 128^3 MAC block, i.e.
+128 MXU-systolic passes at full 128x128 occupancy when shapes divide the
+tile; ragged edges are padded by BlockSpec so utilisation = true_flops /
+padded_flops (reported by ``mxu_utilisation`` below).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-shaped. TK is the contraction tile.
+TM = 128
+TN = 128
+TK = 128
+
+
+def _vmem_scratch(shape, dtype):
+    """VMEM scratch allocation, portable across jax versions.
+
+    On TPU this is ``pltpu.VMEM(shape, dtype)``; interpret mode emulates
+    it with a plain buffer.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step of o = x @ (w * m).
+
+    Accumulates partial products over the k grid axis in an f32 VMEM
+    scratch accumulator and writes the tile out on the last k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xw = jnp.dot(
+        x_ref[...],
+        (w_ref[...] * m_ref[...]).astype(x_ref.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] += xw
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _alternated_left_relu(z, alpha, layer_parity):
+    """All-ReLU (paper Eq. 3): slope sign alternates with layer parity.
+
+    parity 0 (even layer index): f(z) = -alpha*z for z<=0
+    parity 1 (odd  layer index): f(z) = +alpha*z for z<=0
+    positive side is identity in both cases.
+    """
+    sign = jnp.where(layer_parity == 0, -1.0, 1.0).astype(z.dtype)
+    return jnp.where(z > 0, z, sign * alpha * z)
+
+
+def _masked_layer_kernel(
+    x_ref, w_ref, m_ref, b_ref, o_ref, acc_ref, *, n_k: int, alpha: float, parity: int
+):
+    """Fused layer tile: o = AllReLU(x @ (w*m) + b)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...],
+        (w_ref[...] * m_ref[...]).astype(x_ref.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        z = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        a = _alternated_left_relu(z, jnp.float32(alpha), jnp.int32(parity))
+        o_ref[...] = a.astype(o_ref.dtype)
+
+
+def _grid(b, n_in, n_out, tm, tn, tk):
+    return (pl.cdiv(b, tm), pl.cdiv(n_out, tn), pl.cdiv(n_in, tk))
+
+
+def _pad_to(a, mults):
+    """Zero-pad each axis of ``a`` up to a multiple of ``mults[axis]``.
+
+    Ragged tile edges read out-of-bounds inside pallas (interpret mode
+    surfaces them as NaN); zero padding outside the kernel is free under
+    jit (fuses) and keeps the kernel branch-free. Zero padding is exact
+    for matmul (0-contributions) and for All-ReLU applied to sliced-away
+    rows/cols.
+    """
+    pads = []
+    for dim, mult in zip(a.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return a
+    return jnp.pad(a, pads)
+
+
+@partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def masked_matmul(x, w, mask, *, tm: int = TM, tn: int = TN, tk: int = TK):
+    """o[b, n_out] = x[b, n_in] @ (w * mask)[n_in, n_out], Pallas-tiled.
+
+    ``mask`` is the binary sparsity pattern (same shape as ``w``); this is
+    the paper's "binary mask to simulate sparsity" compute path.
+    """
+    b, n_in = x.shape
+    n_in2, n_out = w.shape
+    assert n_in == n_in2 and w.shape == mask.shape
+    tm, tn, tk = min(tm, b), min(tn, n_out), min(tk, n_in)
+    xp = _pad_to(x, (tm, tk))
+    wp = _pad_to(w, (tk, tn))
+    mp = _pad_to(mask, (tk, tn))
+    bp, n_inp = xp.shape
+    n_outp = wp.shape[1]
+    grid = _grid(bp, n_inp, n_outp, tm, tn, tk)
+    out = pl.pallas_call(
+        partial(_masked_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, n_outp), x.dtype),
+        scratch_shapes=[_vmem_scratch((tm, tn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, mp)
+    return out[:b, :n_out]
+
+
+@partial(jax.jit, static_argnames=("alpha", "parity", "tm", "tn", "tk"))
+def masked_mlp_layer(
+    x,
+    w,
+    mask,
+    b,
+    *,
+    alpha: float = 0.6,
+    parity: int = 0,
+    tm: int = TM,
+    tn: int = TN,
+    tk: int = TK,
+):
+    """Fused masked layer with All-ReLU: AllReLU(x @ (w*mask) + b).
+
+    ``parity`` is ``layer_index % 2`` (paper Eq. 3). Bias is broadcast
+    along the batch tile; it rides in as a (1, tn) block.
+    """
+    bsz, n_in = x.shape
+    n_in2, n_out = w.shape
+    assert n_in == n_in2 and w.shape == mask.shape and b.shape == (n_out,)
+    tm, tn, tk = min(tm, bsz), min(tn, n_out), min(tk, n_in)
+    xp = _pad_to(x, (tm, tk))
+    wp = _pad_to(w, (tk, tn))
+    mp = _pad_to(mask, (tk, tn))
+    bvp = _pad_to(b.reshape(1, -1), (1, tn))
+    bp, n_inp = xp.shape
+    n_outp = wp.shape[1]
+    grid = _grid(bp, n_inp, n_outp, tm, tn, tk)
+    out = pl.pallas_call(
+        partial(_masked_layer_kernel, n_k=grid[2], alpha=alpha, parity=parity),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, tn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, n_outp), x.dtype),
+        scratch_shapes=[_vmem_scratch((tm, tn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, mp, bvp)
+    return out[:bsz, :n_out]
+
+
+def vmem_bytes(tm: int = TM, tn: int = TN, tk: int = TK, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint of the fused layer kernel."""
+    return dtype_bytes * (tm * tk + 2 * tk * tn + tn + tm * tn) + 4 * tm * tn
+
+
+def mxu_utilisation(b: int, n_in: int, n_out: int, tm=TM, tn=TN, tk=TK) -> float:
+    """Analytic MXU utilisation: useful MACs / padded-tile MACs."""
+    import math
+
+    padded = (
+        math.ceil(b / tm) * tm * math.ceil(n_in / tk) * tk * math.ceil(n_out / tn) * tn
+    )
+    return (b * n_in * n_out) / padded

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness signal).
+
+These are the straight-line jax.numpy definitions of everything in
+``masked_mlp.py``; ``python/tests/test_kernel.py`` asserts allclose
+between kernel and oracle across hypothesis-generated shape/dtype/seed
+sweeps. Keep these boring and obviously-correct.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x, w, mask):
+    """o = x @ (w * mask) in f32 accumulation."""
+    return jnp.dot(
+        x, (w * mask).astype(x.dtype), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def all_relu_ref(z, alpha: float, parity: int):
+    """All-ReLU, paper Eq. 3.
+
+    Layer parity 0 (l % 2 == 0): negative side slope is -alpha.
+    Layer parity 1 (l % 2 == 1): negative side slope is +alpha.
+    """
+    sign = -1.0 if parity == 0 else 1.0
+    return jnp.where(z > 0, z, jnp.asarray(sign * alpha, z.dtype) * z)
+
+
+def masked_mlp_layer_ref(x, w, mask, b, alpha: float, parity: int):
+    """Fused layer oracle: AllReLU(x @ (w*mask) + b)."""
+    z = jnp.dot(
+        x, (w * mask).astype(x.dtype), preferred_element_type=jnp.float32
+    ) + b.astype(jnp.float32)
+    return all_relu_ref(z, alpha, parity).astype(x.dtype)
+
+
+def srelu_ref(z, tl, al, tr, ar):
+    """SReLU (Jin et al. 2016) oracle — used by the activation ablations.
+
+    f(z) = tl + al*(z - tl)   z <= tl
+           z                  tl < z < tr
+           tr + ar*(z - tr)   z >= tr
+    """
+    below = tl + al * (z - tl)
+    above = tr + ar * (z - tr)
+    return jnp.where(z <= tl, below, jnp.where(z >= tr, above, z))

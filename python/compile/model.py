@@ -1,0 +1,192 @@
+"""Layer-2: masked-dense sparse-MLP compute graph in JAX.
+
+This is the paper's *comparator* path — "simulate sparsity with a binary
+mask over dense matrices" (the Keras rows of Tables 2-3) — expressed in
+JAX so it AOT-lowers (``aot.py``) to HLO text that the Rust coordinator
+executes via PJRT. Python never runs at training time.
+
+Two entry points are lowered per architecture:
+
+* ``forward(x, *params_and_masks)``      -> logits            (eval path)
+* ``train_step(x, y, lr, *state)``       -> (loss, acc, *new_state)
+
+Masks are *runtime inputs*, so the Rust side can run SET topology
+evolution (prune/regrow on the mask) between steps without recompiling
+the executable. The quickstart artifact routes its first layer through
+the Pallas fused kernel (interpret=True lowers it into plain HLO) to
+prove the L1 -> L2 -> L3 composition.
+
+Flat argument convention (what Rust feeds, in order):
+
+  forward:    x, then per layer l: w_l, b_l, m_l
+  train_step: x, y(int32), lr(f32 scalar), then per layer l:
+              w_l, b_l, vw_l, vb_l, m_l
+  returns:    loss(f32), acc(f32), then per layer l: w_l, b_l, vw_l, vb_l
+
+Hyperparameters baked at lowering time (static): layer sizes, alpha,
+momentum, weight decay, activation kind.
+"""
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_mlp as pk
+from .kernels.ref import all_relu_ref
+
+
+# ---------------------------------------------------------------------------
+# Activations (match rust/src/nn/activations.rs semantics)
+# ---------------------------------------------------------------------------
+
+
+def activation(z, kind: str, alpha: float, layer_index: int):
+    """Hidden-layer activation dispatch.
+
+    ``layer_index`` is the 1-based hidden layer index; All-ReLU alternates
+    the negative-side slope sign with its parity (paper Eq. 3).
+    """
+    if kind == "relu":
+        return jnp.maximum(z, 0.0)
+    if kind == "lrelu":
+        return jnp.where(z > 0, z, alpha * z)
+    if kind == "allrelu":
+        return all_relu_ref(z, alpha, layer_index % 2)
+    raise ValueError(f"unknown activation kind: {kind}")
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean softmax cross-entropy with integer labels (stable log-sum-exp)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _unflatten(flat, n_layers, per_layer):
+    """Group a flat arg tail into per-layer tuples of width ``per_layer``."""
+    assert len(flat) == n_layers * per_layer, (len(flat), n_layers, per_layer)
+    return [tuple(flat[i * per_layer : (i + 1) * per_layer]) for i in range(n_layers)]
+
+
+def forward(x, flat_params, *, sizes: Sequence[int], act: str, alpha: float,
+            use_pallas_first_layer: bool = False):
+    """Masked MLP forward -> logits. ``flat_params`` = [w,b,m] per layer."""
+    n_layers = len(sizes) - 1
+    layers = _unflatten(list(flat_params), n_layers, 3)
+    h = x
+    for l, (w, b, m) in enumerate(layers, start=1):
+        is_output = l == n_layers
+        if use_pallas_first_layer and l == 1 and not is_output:
+            # L1 kernel: fused masked matmul + All-ReLU tile kernel.
+            # With act == "relu", parity=1/alpha=0.0 reduces AllReLU to ReLU.
+            h = pk.masked_mlp_layer(
+                h, w, m, b,
+                alpha=alpha if act == "allrelu" else 0.0,
+                parity=l % 2 if act == "allrelu" else 1,
+            )
+            continue
+        z = h @ (w * m) + b
+        h = z if is_output else activation(z, act, alpha, l)
+    return h
+
+
+def make_forward(sizes, act="allrelu", alpha=0.6, use_pallas_first_layer=False):
+    """Positional-flat forward fn ready for jit/lowering."""
+
+    def fn(x, *flat_params):
+        return (
+            forward(
+                x, flat_params, sizes=sizes, act=act, alpha=alpha,
+                use_pallas_first_layer=use_pallas_first_layer,
+            ),
+        )
+
+    return fn
+
+
+def make_train_step(sizes, act="allrelu", alpha=0.6, momentum=0.9,
+                    weight_decay=0.0002):
+    """Momentum-SGD masked train step (paper Eq. 1 + weight decay).
+
+    v <- mu*v - lr*(g + wd*w);  w <- w + v.  Gradients are masked so
+    update energy never leaks outside the sparse topology.
+    """
+    n_layers = len(sizes) - 1
+
+    def loss_fn(wb, masks, x, y):
+        flat = []
+        for (w, b), m in zip(wb, masks):
+            flat += [w, b, m]
+        logits = forward(x, flat, sizes=sizes, act=act, alpha=alpha)
+        return softmax_cross_entropy(logits, y), logits
+
+    def fn(x, y, lr, *state):
+        per = _unflatten(list(state), n_layers, 5)
+        wb = [(w, b) for (w, b, vw, vb, m) in per]
+        vel = [(vw, vb) for (w, b, vw, vb, m) in per]
+        masks = [m for (w, b, vw, vb, m) in per]
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            wb, masks, x, y
+        )
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+        out = [loss, acc]
+        for (w, b), (gw, gb), (vw, vb), m in zip(wb, grads, vel, masks):
+            gw = gw * m  # keep updates inside the topology
+            nvw = momentum * vw - lr * (gw + weight_decay * w)
+            nvb = momentum * vb - lr * gb
+            nw = (w + nvw) * m
+            nb = b + nvb
+            out += [nw, nb, nvw * m, nvb]
+        return tuple(out)
+
+    return fn
+
+
+def init_state(sizes, density, seed=0, scheme="he_uniform"):
+    """Reference initialiser (mirrors rust nn::init) used by tests/aot.
+
+    Returns the flat per-layer [w, b, vw, vb, m] list for train_step.
+    Mask is Erdős–Rényi with the given density.
+    """
+    key = jax.random.PRNGKey(seed)
+    flat = []
+    for l in range(len(sizes) - 1):
+        fan_in, fan_out = sizes[l], sizes[l + 1]
+        key, kw, km = jax.random.split(key, 3)
+        if scheme == "he_uniform":
+            lim = jnp.sqrt(6.0 / fan_in)
+            w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -lim, lim)
+        elif scheme == "xavier":
+            lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+            w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -lim, lim)
+        else:  # normal
+            w = 0.05 * jax.random.normal(kw, (fan_in, fan_out), jnp.float32)
+        m = (jax.random.uniform(km, (fan_in, fan_out)) < density).astype(jnp.float32)
+        b = jnp.zeros((fan_out,), jnp.float32)
+        flat += [w * m, b, jnp.zeros_like(w), jnp.zeros_like(b), m]
+    return flat
+
+
+# Architectures lowered by aot.py. Names appear in artifacts/manifest.json
+# and in rust/src/runtime/. "small"/"quickstart" keep tests fast; the rest
+# are the paper's Table 2 architectures (the masked-dense comparator).
+ARCHITECTURES = {
+    "small": dict(sizes=(64, 128, 64, 10), batch=32, act="allrelu", alpha=0.6),
+    "quickstart": dict(sizes=(64, 128, 10), batch=32, act="allrelu", alpha=0.6,
+                       use_pallas_first_layer=True),
+    "higgs": dict(sizes=(28, 1000, 1000, 1000, 2), batch=128, act="allrelu",
+                  alpha=0.05),
+    "fashion": dict(sizes=(784, 1000, 1000, 1000, 10), batch=128, act="allrelu",
+                    alpha=0.6),
+    "cifar": dict(sizes=(3072, 4000, 1000, 4000, 10), batch=128, act="allrelu",
+                  alpha=0.75),
+}

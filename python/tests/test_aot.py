@@ -1,0 +1,77 @@
+"""AOT pipeline: lowering produces loadable, well-formed HLO text."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_roundtrip(tmp_path):
+    """Lowered HLO text must contain an ENTRY computation and f32 IO."""
+    fwd = M.make_forward((4, 6, 3))
+    args = [jax.ShapeDtypeStruct((2, 4), jnp.float32)]
+    for l in range(2):
+        shp = ((4, 6), (6,), (4, 6)) if l == 0 else ((6, 3), (3,), (6, 3))
+        args += [jax.ShapeDtypeStruct(s, jnp.float32) for s in shp]
+    text = aot.to_hlo_text(jax.jit(fwd).lower(*args))
+    assert "ENTRY" in text
+    assert "f32[2,4]" in text  # input batch
+
+
+def test_lower_arch_writes_artifacts(tmp_path):
+    entry = aot.lower_arch(
+        "tiny", dict(sizes=(6, 8, 3), batch=4, act="relu", alpha=0.0),
+        str(tmp_path))
+    assert (tmp_path / "tiny_fwd.hlo.txt").exists()
+    assert (tmp_path / "tiny_train.hlo.txt").exists()
+    assert entry["sizes"] == [6, 8, 3]
+    assert entry["train_outputs"].startswith("loss, acc")
+
+
+def test_manifest_matches_architectures(tmp_path):
+    # Lower just the tiny config via main()-equivalent path
+    entry = aot.lower_arch(
+        "tiny", dict(sizes=(5, 7, 2), batch=3), str(tmp_path))
+    manifest = {"format": "hlo-text", "entries": [entry]}
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps(manifest))
+    loaded = json.loads(p.read_text())
+    e = loaded["entries"][0]
+    assert e["forward_hlo"] == "tiny_fwd.hlo.txt"
+    assert e["batch"] == 3
+
+
+def test_repo_artifacts_exist_if_built():
+    """If `make artifacts` has run, the manifest must be coherent."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man = os.path.join(art, "manifest.json")
+    if not os.path.exists(man):
+        return  # artifacts not built yet; covered by make test
+    m = json.loads(open(man).read())
+    for e in m["entries"]:
+        assert os.path.exists(os.path.join(art, e["forward_hlo"]))
+        assert os.path.exists(os.path.join(art, e["train_hlo"]))
+
+
+def test_lowered_train_step_numerics(tmp_path):
+    """Executing the jitted train step (same fn that is lowered) learns."""
+    sizes = (8, 12, 3)
+    step = jax.jit(M.make_train_step(sizes, weight_decay=0.0))
+    st = M.init_state(sizes, 0.6, seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, 16).astype(np.int32))
+    first = last = None
+    for _ in range(40):
+        out = step(x, y, jnp.float32(0.1), *st)
+        if first is None:
+            first = float(out[0])
+        last = float(out[0])
+        new = list(out[2:])
+        st = [new[4 * i + j] if j < 4 else st[5 * i + 4]
+              for i in range(2) for j in range(5)]
+    assert last < first

@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle.
+
+The CORE correctness signal for the kernel layer: every kernel must match
+``ref.py`` to tight f32 tolerances across hypothesis-generated shapes,
+tile sizes, sparsity levels, alphas, and parities.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.masked_mlp import (
+    masked_matmul,
+    masked_mlp_layer,
+    mxu_utilisation,
+    vmem_bytes,
+)
+from compile.kernels.ref import (
+    all_relu_ref,
+    masked_matmul_ref,
+    masked_mlp_layer_ref,
+    srelu_ref,
+)
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _mask(rng, density, *shape):
+    return jnp.asarray((rng.random(shape) < density).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit tests
+# ---------------------------------------------------------------------------
+
+
+class TestMaskedMatmul:
+    def test_exact_tiles(self):
+        rng = np.random.default_rng(1)
+        x, w, m = _rand(rng, 32, 32), _rand(rng, 32, 32), _mask(rng, 0.2, 32, 32)
+        np.testing.assert_allclose(
+            masked_matmul(x, w, m, tm=16, tn=16, tk=16),
+            masked_matmul_ref(x, w, m), rtol=RTOL, atol=ATOL)
+
+    def test_ragged_tiles(self):
+        rng = np.random.default_rng(2)
+        x, w, m = _rand(rng, 20, 70), _rand(rng, 70, 33), _mask(rng, 0.1, 70, 33)
+        np.testing.assert_allclose(
+            masked_matmul(x, w, m, tm=16, tn=16, tk=16),
+            masked_matmul_ref(x, w, m), rtol=RTOL, atol=ATOL)
+
+    def test_tiles_larger_than_shape(self):
+        rng = np.random.default_rng(3)
+        x, w, m = _rand(rng, 4, 6), _rand(rng, 6, 5), _mask(rng, 0.5, 6, 5)
+        np.testing.assert_allclose(
+            masked_matmul(x, w, m),  # default 128 tiles clamp to shape
+            masked_matmul_ref(x, w, m), rtol=RTOL, atol=ATOL)
+
+    def test_zero_mask_is_zero(self):
+        rng = np.random.default_rng(4)
+        x, w = _rand(rng, 8, 16), _rand(rng, 16, 8)
+        out = masked_matmul(x, w, jnp.zeros((16, 8)), tm=8, tn=8, tk=8)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_full_mask_is_dense(self):
+        rng = np.random.default_rng(5)
+        x, w = _rand(rng, 8, 16), _rand(rng, 16, 8)
+        np.testing.assert_allclose(
+            masked_matmul(x, w, jnp.ones((16, 8)), tm=8, tn=8, tk=8),
+            x @ w, rtol=RTOL, atol=ATOL)
+
+    def test_mask_zeros_block_weight_values(self):
+        """Masked-out weights must not influence the product at all."""
+        rng = np.random.default_rng(6)
+        x = _rand(rng, 8, 16)
+        w1, m = _rand(rng, 16, 8), _mask(rng, 0.3, 16, 8)
+        w2 = w1 + (1.0 - m) * 1e6  # garbage outside topology
+        np.testing.assert_allclose(
+            masked_matmul(x, w1, m, tm=8, tn=8, tk=8),
+            masked_matmul(x, w2, m, tm=8, tn=8, tk=8), rtol=RTOL, atol=ATOL)
+
+
+class TestMaskedLayer:
+    @pytest.mark.parametrize("parity", [0, 1])
+    @pytest.mark.parametrize("alpha", [0.0, 0.05, 0.6, 0.75])
+    def test_fused_layer_matches_ref(self, parity, alpha):
+        rng = np.random.default_rng(7)
+        x, w = _rand(rng, 24, 40), _rand(rng, 40, 24)
+        m, b = _mask(rng, 0.2, 40, 24), _rand(rng, 24)
+        np.testing.assert_allclose(
+            masked_mlp_layer(x, w, m, b, alpha=alpha, parity=parity,
+                             tm=16, tn=16, tk=16),
+            masked_mlp_layer_ref(x, w, m, b, alpha, parity),
+            rtol=RTOL, atol=ATOL)
+
+    def test_alpha_zero_parity1_is_relu(self):
+        rng = np.random.default_rng(8)
+        x, w = _rand(rng, 8, 8), _rand(rng, 8, 8)
+        m, b = jnp.ones((8, 8)), jnp.zeros(8)
+        out = masked_mlp_layer(x, w, m, b, alpha=0.0, parity=1, tm=8, tn=8, tk=8)
+        np.testing.assert_allclose(out, jnp.maximum(x @ w, 0.0),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_even_parity_flips_negative_sign(self):
+        """Paper Eq.3: even layers use slope -alpha, odd layers +alpha."""
+        z = jnp.asarray([-2.0, -1.0, 0.0, 1.0])
+        even = all_relu_ref(z, 0.5, 0)
+        odd = all_relu_ref(z, 0.5, 1)
+        np.testing.assert_allclose(even, [1.0, 0.5, 0.0, 1.0])
+        np.testing.assert_allclose(odd, [-1.0, -0.5, 0.0, 1.0])
+
+    def test_positive_side_identity(self):
+        z = jnp.asarray([0.1, 3.0, 100.0])
+        for p in (0, 1):
+            np.testing.assert_allclose(all_relu_ref(z, 0.9, p), z)
+
+
+class TestSReLURef:
+    def test_identity_region(self):
+        z = jnp.asarray([-0.5, 0.0, 0.5])
+        np.testing.assert_allclose(srelu_ref(z, -1.0, 0.1, 1.0, 0.1), z)
+
+    def test_saturating_regions(self):
+        np.testing.assert_allclose(
+            srelu_ref(jnp.asarray([-3.0]), -1.0, 0.1, 1.0, 0.2), [-1.2])
+        np.testing.assert_allclose(
+            srelu_ref(jnp.asarray([3.0]), -1.0, 0.1, 1.0, 0.2), [1.4])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, tiles, densities, alphas
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def matmul_case(draw):
+    b = draw(st.integers(1, 48))
+    n_in = draw(st.integers(1, 96))
+    n_out = draw(st.integers(1, 64))
+    tm = draw(st.sampled_from([8, 16, 32, 128]))
+    tn = draw(st.sampled_from([8, 16, 32, 128]))
+    tk = draw(st.sampled_from([8, 16, 32, 128]))
+    density = draw(st.sampled_from([0.0, 0.05, 0.3, 1.0]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, n_in, n_out, tm, tn, tk, density, seed
+
+
+@given(matmul_case())
+@settings(max_examples=25, deadline=None)
+def test_hypothesis_masked_matmul(case):
+    b, n_in, n_out, tm, tn, tk, density, seed = case
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, b, n_in), _rand(rng, n_in, n_out)
+    m = _mask(rng, density, n_in, n_out)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, m, tm=tm, tn=tn, tk=tk),
+        masked_matmul_ref(x, w, m), rtol=1e-4, atol=1e-4)
+
+
+@given(matmul_case(), st.sampled_from([0.05, 0.25, 0.6, 0.75]),
+       st.integers(0, 1))
+@settings(max_examples=25, deadline=None)
+def test_hypothesis_fused_layer(case, alpha, parity):
+    b, n_in, n_out, tm, tn, tk, density, seed = case
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, b, n_in), _rand(rng, n_in, n_out)
+    m, bias = _mask(rng, density, n_in, n_out), _rand(rng, n_out)
+    np.testing.assert_allclose(
+        masked_mlp_layer(x, w, m, bias, alpha=alpha, parity=parity,
+                         tm=tm, tn=tn, tk=tk),
+        masked_mlp_layer_ref(x, w, m, bias, alpha, parity),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Roofline bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class TestRoofline:
+    def test_vmem_budget(self):
+        # default tiling must leave double-buffering headroom in 16 MiB VMEM
+        assert vmem_bytes() * 2 < 16 * 1024 * 1024
+
+    def test_mxu_utilisation_exact(self):
+        assert mxu_utilisation(128, 128, 128) == 1.0
+
+    def test_mxu_utilisation_ragged(self):
+        u = mxu_utilisation(100, 100, 100)
+        assert 0 < u < 1
+        np.testing.assert_allclose(u, 100**3 / 128**3)

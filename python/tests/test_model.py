@@ -1,0 +1,127 @@
+"""L2 correctness: masked MLP model, loss, train step semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+SIZES = (12, 16, 8, 4)
+
+
+def _state(density=0.5, seed=0):
+    return M.init_state(SIZES, density, seed=seed)
+
+
+def _data(batch=8, seed=1):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, SIZES[0])).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, SIZES[-1], batch).astype(np.int32))
+    return x, y
+
+
+class TestForward:
+    def test_shapes(self):
+        st = _state()
+        flat = [t for i in range(3) for t in (st[5 * i], st[5 * i + 1], st[5 * i + 4])]
+        x, _ = _data()
+        logits = M.forward(x, flat, sizes=SIZES, act="allrelu", alpha=0.6)
+        assert logits.shape == (8, 4)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_activation_kinds_differ(self):
+        st = _state()
+        flat = [t for i in range(3) for t in (st[5 * i], st[5 * i + 1], st[5 * i + 4])]
+        x, _ = _data()
+        lr = M.forward(x, flat, sizes=SIZES, act="relu", alpha=0.6)
+        la = M.forward(x, flat, sizes=SIZES, act="allrelu", alpha=0.6)
+        assert not np.allclose(lr, la)
+
+    def test_unknown_activation_raises(self):
+        with pytest.raises(ValueError):
+            M.activation(jnp.zeros(3), "swish", 0.1, 1)
+
+
+class TestLoss:
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        y = jnp.asarray([0, 3, 7, 9], jnp.int32)
+        np.testing.assert_allclose(
+            M.softmax_cross_entropy(logits, y), np.log(10.0), rtol=1e-6)
+
+    def test_cross_entropy_confident(self):
+        logits = jnp.asarray([[100.0, 0.0], [0.0, 100.0]])
+        y = jnp.asarray([0, 1], jnp.int32)
+        assert float(M.softmax_cross_entropy(logits, y)) < 1e-6
+
+    def test_stability_large_logits(self):
+        logits = jnp.asarray([[1e4, -1e4]])
+        y = jnp.asarray([0], jnp.int32)
+        assert np.isfinite(float(M.softmax_cross_entropy(logits, y)))
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        step = jax.jit(M.make_train_step(SIZES, weight_decay=0.0))
+        st = _state()
+        x, y = _data(batch=16)
+        losses = []
+        for _ in range(60):
+            out = step(x, y, jnp.float32(0.05), *st)
+            losses.append(float(out[0]))
+            new = list(out[2:])
+            # re-attach masks (unchanged by the step)
+            st = [new[4 * i + j] if j < 4 else st[5 * i + 4]
+                  for i in range(3) for j in range(5)]
+        assert losses[-1] < losses[0] * 0.5, losses[::10]
+
+    def test_masks_preserved_by_update(self):
+        """No weight may appear outside the mask after any update."""
+        step = jax.jit(M.make_train_step(SIZES))
+        st = _state(density=0.3)
+        x, y = _data()
+        out = step(x, y, jnp.float32(0.1), *st)
+        for i in range(3):
+            m = st[5 * i + 4]
+            nw, nvw = out[2 + 4 * i], out[2 + 4 * i + 2]
+            assert float(jnp.abs(nw * (1 - m)).max()) == 0.0
+            assert float(jnp.abs(nvw * (1 - m)).max()) == 0.0
+
+    def test_accuracy_in_unit_interval(self):
+        step = jax.jit(M.make_train_step(SIZES))
+        st = _state()
+        x, y = _data()
+        out = step(x, y, jnp.float32(0.01), *st)
+        assert 0.0 <= float(out[1]) <= 1.0
+
+    def test_zero_lr_freezes_weights(self):
+        step = jax.jit(M.make_train_step(SIZES, weight_decay=0.0))
+        st = _state()
+        x, y = _data()
+        out = step(x, y, jnp.float32(0.0), *st)
+        for i in range(3):
+            np.testing.assert_allclose(out[2 + 4 * i], st[5 * i], rtol=0, atol=0)
+
+    def test_momentum_accumulates(self):
+        step = jax.jit(M.make_train_step(SIZES, momentum=0.9, weight_decay=0.0))
+        st = _state()
+        x, y = _data()
+        out1 = step(x, y, jnp.float32(0.01), *st)
+        v1 = out1[2 + 2]  # vw of layer 0
+        assert float(jnp.abs(v1).max()) > 0.0
+
+
+class TestInitState:
+    @pytest.mark.parametrize("scheme", ["he_uniform", "xavier", "normal"])
+    def test_schemes(self, scheme):
+        st = M.init_state(SIZES, 0.4, scheme=scheme)
+        assert len(st) == 15
+        for i in range(3):
+            w, m = st[5 * i], st[5 * i + 4]
+            assert float(jnp.abs(w * (1 - m)).max()) == 0.0
+
+    def test_density_controls_nnz(self):
+        lo = M.init_state(SIZES, 0.1, seed=3)
+        hi = M.init_state(SIZES, 0.9, seed=3)
+        assert float(lo[4].sum()) < float(hi[4].sum())

@@ -1,0 +1,80 @@
+//! Fig. 5 — gradient flow of sparse MLPs: All-ReLU vs ReLU on the
+//! CIFAR10-, FashionMNIST- and Madelon-like datasets (3 hidden layers).
+//!
+//! Gradient flow = ‖∇L‖² (first-order expected loss decrease per unit
+//! learning rate); the paper shows All-ReLU keeps it consistently higher,
+//! which is its explanation for the accuracy gains.
+//!
+//! Emits results/fig5_gradflow_<dataset>.csv with both series.
+
+use tsnn::bench::{env_usize, paper_scale, write_artifact, Table};
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::nn::Activation;
+use tsnn::prelude::*;
+use tsnn::train::{train_sequential_opts, TrainOptions};
+
+fn main() {
+    let paper = paper_scale();
+    let epochs = env_usize("TSNN_EPOCHS", if paper { 500 } else { 10 });
+    let every = (epochs / 15).max(1);
+
+    let mut table = Table::new(
+        "Fig. 5 — mean gradient flow (higher is better)",
+        &["dataset", "activation", "mean ||grad||^2", "final ||grad||^2"],
+    );
+
+    for name in ["cifar", "fashion", "madelon"] {
+        let spec = if paper {
+            DatasetSpec::paper(name)
+        } else {
+            DatasetSpec::small(name)
+        };
+        let data = tsnn::data::generate(&spec, &mut Rng::new(1)).expect("dataset");
+        let mut csv = String::from("activation,epoch,grad_norm_sq,loss\n");
+
+        for (act, label) in [
+            (Activation::Relu, "relu"),
+            (Activation::AllRelu { alpha: 0.75 }, "allrelu"),
+        ] {
+            let mut cfg = if paper {
+                TrainConfig::paper_preset(name)
+            } else {
+                TrainConfig::small_preset(name)
+            };
+            cfg.epochs = epochs;
+            cfg.activation = match (act, cfg.activation) {
+                (Activation::Relu, _) => Activation::Relu,
+                (_, Activation::AllRelu { alpha }) => Activation::AllRelu { alpha },
+                (a, _) => a,
+            };
+            let r = train_sequential_opts(
+                &cfg,
+                &data,
+                &mut Rng::new(42),
+                TrainOptions {
+                    gradflow_every: every,
+                    verbose: false,
+                },
+            )
+            .expect("train");
+            let gf = r.gradflow.expect("gradflow enabled");
+            let mean: f64 = gf.points.iter().map(|p| p.grad_norm_sq).sum::<f64>()
+                / gf.points.len().max(1) as f64;
+            let last = gf.points.last().map(|p| p.grad_norm_sq).unwrap_or(0.0);
+            for p in &gf.points {
+                csv.push_str(&format!("{label},{},{},{}\n", p.epoch, p.grad_norm_sq, p.loss));
+            }
+            table.row(vec![
+                name.to_string(),
+                label.into(),
+                format!("{mean:.4e}"),
+                format!("{last:.4e}"),
+            ]);
+        }
+        let _ = write_artifact(&format!("fig5_gradflow_{name}.csv"), &csv);
+    }
+
+    table.emit("fig5_gradflow.csv");
+    println!("paper reference (Fig. 5): All-ReLU maintains visibly higher");
+    println!("gradient flow than ReLU on all three datasets.");
+}

@@ -1,0 +1,118 @@
+//! Figs. 9–18 (supplementary) — activation / pre-activation distributions
+//! per hidden layer for ReLU, All-ReLU and SReLU on the CIFAR10-like
+//! dataset, plus the learned SReLU slope distributions.
+//!
+//! Emits results/fig9_18_distributions.csv: histograms (layer, kind,
+//! bucket, count) for post-training models — the evidence behind the
+//! "from SReLU to All-ReLU" design narrative (§5.1).
+
+use tsnn::bench::{env_usize, paper_scale, write_artifact, Table};
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::nn::{Activation, SRelu};
+use tsnn::prelude::*;
+use tsnn::train::train_sequential;
+
+fn histogram(values: &[f32], buckets: usize, lo: f32, hi: f32) -> Vec<usize> {
+    let mut h = vec![0usize; buckets];
+    let w = (hi - lo) / buckets as f32;
+    for &v in values {
+        let b = (((v - lo) / w) as isize).clamp(0, buckets as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+fn main() {
+    let paper = paper_scale();
+    let epochs = env_usize("TSNN_EPOCHS", if paper { 1000 } else { 8 });
+    let spec = if paper {
+        DatasetSpec::paper("cifar")
+    } else {
+        DatasetSpec::small("cifar")
+    };
+    let data = tsnn::data::generate(&spec, &mut Rng::new(1)).expect("dataset");
+
+    let mut csv = String::from("kind,layer,bucket_lo,bucket_hi,count\n");
+    let mut table = Table::new(
+        "Figs. 9-18 — per-layer pre-activation stats (cifar-like)",
+        &["activation", "layer", "mean", "std", "frac<0"],
+    );
+    let (lo, hi, buckets) = (-5.0f32, 5.0f32, 50usize);
+
+    for (act, label, srelu) in [
+        (Activation::Relu, "relu", false),
+        (Activation::AllRelu { alpha: 0.75 }, "allrelu", false),
+        (Activation::Relu, "srelu", true),
+    ] {
+        let mut cfg = if paper {
+            TrainConfig::paper_preset("cifar")
+        } else {
+            TrainConfig::small_preset("cifar")
+        };
+        cfg.epochs = epochs;
+        cfg.activation = act;
+        let mut r = train_sequential(&cfg, &data, &mut Rng::new(42)).expect("train");
+        if srelu {
+            // retrofit trainable SReLU on hidden layers and fine-tune
+            for l in 0..r.model.layers.len() - 1 {
+                let n = r.model.layers[l].n_out();
+                r.model.layers[l].srelu = Some(SRelu::new(n));
+            }
+            let mut ws = r.model.alloc_workspace(cfg.batch);
+            let opt = cfg.optimizer;
+            let mut rng = Rng::new(7);
+            let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
+            for _ in 0..(epochs / 5).max(1) {
+                batcher.reset(&mut rng);
+                while let Some((x, y)) = batcher.next_batch(&data.x_train, &data.y_train) {
+                    r.model.train_step(x, y, &opt, 0.01, None, &mut ws, &mut rng);
+                }
+            }
+        }
+
+        // forward a probe batch, record pre-activation stats per layer
+        let probe = 512.min(data.n_train());
+        let mut ws = r.model.alloc_workspace(probe);
+        r.model
+            .forward(&data.x_train[..probe * data.n_features], probe, &mut ws, None);
+        for l in 0..r.model.layers.len() - 1 {
+            let pre = &ws.pre[l];
+            let mean: f64 = pre.iter().map(|&v| v as f64).sum::<f64>() / pre.len() as f64;
+            let var: f64 = pre.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>()
+                / pre.len() as f64;
+            let neg = pre.iter().filter(|&&v| v < 0.0).count() as f64 / pre.len() as f64;
+            table.row(vec![
+                label.into(),
+                format!("{}", l + 1),
+                format!("{mean:.3}"),
+                format!("{:.3}", var.sqrt()),
+                format!("{neg:.3}"),
+            ]);
+            for (b, count) in histogram(pre, buckets, lo, hi).into_iter().enumerate() {
+                let blo = lo + (hi - lo) * b as f32 / buckets as f32;
+                let bhi = lo + (hi - lo) * (b + 1) as f32 / buckets as f32;
+                csv.push_str(&format!("{label}_pre,{},{blo},{bhi},{count}\n", l + 1));
+            }
+        }
+        // SReLU learned slopes (Figs. 15-17)
+        if srelu {
+            for (l, layer) in r.model.layers.iter().enumerate() {
+                if let Some(s) = &layer.srelu {
+                    for (b, count) in histogram(&s.al, 20, -1.0, 1.0).into_iter().enumerate() {
+                        let blo = -1.0 + 2.0 * b as f32 / 20.0;
+                        csv.push_str(&format!(
+                            "srelu_left_slope,{},{blo},{},{count}\n",
+                            l + 1,
+                            blo + 0.1
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    table.emit("fig9_18_distributions.csv");
+    let _ = write_artifact("fig9_18_histograms.csv", &csv);
+    println!("paper reference (Figs. 9-18): All-ReLU's alternating negative");
+    println!("slope mirrors the sign-alternating left slopes SReLU learns.");
+}

@@ -1,0 +1,171 @@
+//! §Perf — hot-path micro-benchmarks (the profiling instrument for the
+//! performance pass; before/after numbers recorded in EXPERIMENTS.md).
+//!
+//! Measures, across layer shapes and ε values:
+//!   * spmm_forward / spmm_grad_input / spmm_grad_weights (L3 kernels)
+//!   * full train_step (fwd + loss + bwd + update)
+//!   * SET evolution step and Erdős–Rényi init
+//!   * masked-dense XLA train step (L2 path) when artifacts exist
+//!
+//! Reports achieved GFLOP/s (2·nnz·batch per spmm) against a naive
+//! single-core roofline so optimisation progress is quantified.
+
+use tsnn::bench::{env_usize, time_it, Table};
+use tsnn::nn::MomentumSgd;
+use tsnn::prelude::*;
+use tsnn::set::{evolve_layer, EvolutionConfig};
+use tsnn::sparse::{erdos_renyi_epsilon, ops};
+
+fn main() {
+    let batch = env_usize("TSNN_BATCH", 128);
+    let iters = env_usize("TSNN_ITERS", 20);
+
+    let mut table = Table::new(
+        "§Perf — truly-sparse hot-path kernels (1 core)",
+        &["kernel", "shape", "eps", "nnz", "mean ms", "GFLOP/s"],
+    );
+
+    for &(n_in, n_out, eps) in &[
+        (784usize, 1000usize, 20.0f64),
+        (1000, 1000, 20.0),
+        (3072, 4000, 20.0),
+        (4000, 1000, 20.0),
+        (65536, 4096, 5.0),
+    ] {
+        let mut rng = Rng::new(1);
+        let w = erdos_renyi_epsilon(n_in, n_out, eps, &mut rng, &WeightInit::HeUniform);
+        let nnz = w.nnz();
+        let x: Vec<f32> = (0..batch * n_in).map(|_| rng.normal()).collect();
+        let dz: Vec<f32> = (0..batch * n_out).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f32; batch * n_out];
+        let mut dx = vec![0.0f32; batch * n_in];
+        let mut dw = vec![0.0f32; nnz];
+        let flops = 2.0 * nnz as f64 * batch as f64;
+        let shape = format!("{n_in}x{n_out}");
+
+        let (mean, _) = time_it(2, iters, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_forward(&x, batch, &w, &mut out);
+        });
+        table.row(vec![
+            "spmm_forward".into(),
+            shape.clone(),
+            format!("{eps}"),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", flops / mean / 1e9),
+        ]);
+
+        let (mean, _) = time_it(2, iters, || {
+            ops::spmm_grad_input(&dz, batch, &w, &mut dx);
+        });
+        table.row(vec![
+            "spmm_grad_input".into(),
+            shape.clone(),
+            format!("{eps}"),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", flops / mean / 1e9),
+        ]);
+
+        let (mean, _) = time_it(2, iters, || {
+            dw.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_grad_weights(&x, &dz, batch, &w, &mut dw);
+        });
+        table.row(vec![
+            "spmm_grad_weights".into(),
+            shape.clone(),
+            format!("{eps}"),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", flops / mean / 1e9),
+        ]);
+    }
+
+    // end-to-end train step + evolution + init
+    {
+        let sizes = [784usize, 1000, 1000, 1000, 10];
+        let mut rng = Rng::new(2);
+        let mut model = SparseMlp::new(
+            &sizes,
+            20.0,
+            Activation::AllRelu { alpha: 0.6 },
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+        .unwrap();
+        let mut ws = model.alloc_workspace(batch);
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.normal()).collect();
+        let y: Vec<u32> = (0..batch).map(|i| (i % 10) as u32).collect();
+        let opt = MomentumSgd::default();
+        let nnz = model.weight_count();
+        let (mean, _) = time_it(2, iters, || {
+            model.train_step(&x, &y, &opt, 0.01, None, &mut ws, &mut rng);
+        });
+        // fwd ~2·nnz·B, grad_in ~2·nnz·B, grad_w ~2·nnz·B
+        let flops = 6.0 * nnz as f64 * batch as f64;
+        table.row(vec![
+            "train_step (fashion arch)".into(),
+            "784-1000x3-10".into(),
+            "20".into(),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", flops / mean / 1e9),
+        ]);
+
+        let (mean, _) = time_it(1, iters.min(10), || {
+            let mut l = model.layers[1].clone();
+            evolve_layer(&mut l, &EvolutionConfig::default(), &mut rng).unwrap();
+        });
+        table.row(vec![
+            "evolve_layer (clone incl.)".into(),
+            "1000x1000".into(),
+            "20".into(),
+            model.layers[1].weights.nnz().to_string(),
+            format!("{:.3}", mean * 1e3),
+            "-".into(),
+        ]);
+
+        let (mean, _) = time_it(1, iters.min(10), || {
+            erdos_renyi_epsilon(3072, 4000, 20.0, &mut rng, &WeightInit::HeUniform)
+        });
+        table.row(vec![
+            "erdos_renyi init".into(),
+            "3072x4000".into(),
+            "20".into(),
+            "-".into(),
+            format!("{:.3}", mean * 1e3),
+            "-".into(),
+        ]);
+    }
+
+    // masked-dense XLA step for comparison (L2 path)
+    if let Ok(m) = tsnn::runtime::Manifest::load(&tsnn::runtime::default_artifacts_dir()) {
+        if let Some(arch) = m.get("fashion") {
+            let mut rng = Rng::new(3);
+            if let Ok(mut trainer) = tsnn::runtime::MaskedDenseTrainer::new(arch, 20.0, &mut rng)
+            {
+                let x: Vec<f32> = (0..arch.batch * 784).map(|_| rng.normal()).collect();
+                let y: Vec<i32> = (0..arch.batch).map(|i| (i % 10) as i32).collect();
+                let (mean, _) = time_it(1, iters.min(10), || {
+                    trainer.step(&x, &y, 0.01).unwrap();
+                });
+                let dense: usize = arch
+                    .sizes
+                    .windows(2)
+                    .map(|w| w[0] * w[1])
+                    .sum();
+                table.row(vec![
+                    "masked-dense XLA train step".into(),
+                    "784-1000x3-10".into(),
+                    "dense+mask".into(),
+                    dense.to_string(),
+                    format!("{:.3}", mean * 1e3),
+                    format!("{:.2}", 6.0 * dense as f64 * arch.batch as f64 / mean / 1e9),
+                ]);
+            }
+        }
+    }
+
+    table.emit("perf_hotpath.csv");
+}

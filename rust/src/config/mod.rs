@@ -1,0 +1,463 @@
+//! Experiment configuration: dataset specs, training hyperparameters,
+//! the paper's Table 7 presets, and a small `key=value` config parser so
+//! experiments are reproducible from files or CLI overrides.
+
+use crate::error::{Result, TsnnError};
+use crate::importance::ImportanceConfig;
+use crate::nn::{Activation, LrSchedule, MomentumSgd};
+use crate::set::EvolutionConfig;
+use crate::sparse::WeightInit;
+
+/// What dataset to generate (see `data::datasets`).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Human-readable name (used in reports).
+    pub name: String,
+    /// Generator id: leukemia | higgs | madelon | fashion | cifar | extreme.
+    pub generator: String,
+    /// Feature dimensionality.
+    pub n_features: usize,
+    /// Class count.
+    pub n_classes: usize,
+    /// Train samples.
+    pub n_train: usize,
+    /// Test samples.
+    pub n_test: usize,
+}
+
+impl DatasetSpec {
+    /// Paper-scale spec (Table 1 shapes).
+    pub fn paper(name: &str) -> DatasetSpec {
+        match name {
+            "leukemia" => DatasetSpec {
+                name: name.into(),
+                generator: "leukemia".into(),
+                n_features: 54675,
+                n_classes: 18,
+                n_train: 1397,
+                n_test: 699,
+            },
+            "higgs" => DatasetSpec {
+                name: name.into(),
+                generator: "higgs".into(),
+                n_features: 28,
+                n_classes: 2,
+                n_train: 105_000,
+                n_test: 50_000,
+            },
+            "madelon" => DatasetSpec {
+                name: name.into(),
+                generator: "madelon".into(),
+                n_features: 500,
+                n_classes: 2,
+                n_train: 2000,
+                n_test: 600,
+            },
+            "fashion" => DatasetSpec {
+                name: name.into(),
+                generator: "fashion".into(),
+                n_features: 784,
+                n_classes: 10,
+                n_train: 60_000,
+                n_test: 10_000,
+            },
+            "cifar" => DatasetSpec {
+                name: name.into(),
+                generator: "cifar".into(),
+                n_features: 3072,
+                n_classes: 10,
+                n_train: 50_000,
+                n_test: 10_000,
+            },
+            "extreme" => DatasetSpec {
+                name: name.into(),
+                generator: "extreme".into(),
+                n_features: 65_536,
+                n_classes: 2,
+                n_train: 7000,
+                n_test: 3000,
+            },
+            other => panic!("unknown paper dataset '{other}'"),
+        }
+    }
+
+    /// Scaled-down spec for tests and default bench runs (same shape
+    /// family, 1-core-friendly sample counts).
+    pub fn small(name: &str) -> DatasetSpec {
+        match name {
+            "leukemia" => DatasetSpec {
+                name: name.into(),
+                generator: "leukemia".into(),
+                n_features: 2048,
+                n_classes: 18,
+                n_train: 700,
+                n_test: 350,
+            },
+            "higgs" => DatasetSpec {
+                name: name.into(),
+                generator: "higgs".into(),
+                n_features: 28,
+                n_classes: 2,
+                n_train: 4000,
+                n_test: 2000,
+            },
+            "madelon" => DatasetSpec {
+                name: name.into(),
+                generator: "madelon".into(),
+                n_features: 500,
+                n_classes: 2,
+                n_train: 2000,
+                n_test: 600,
+            },
+            "fashion" => DatasetSpec {
+                name: name.into(),
+                generator: "fashion".into(),
+                n_features: 784,
+                n_classes: 10,
+                n_train: 4000,
+                n_test: 1000,
+            },
+            "cifar" => DatasetSpec {
+                name: name.into(),
+                generator: "cifar".into(),
+                n_features: 3072,
+                n_classes: 10,
+                n_train: 3000,
+                n_test: 1000,
+            },
+            "extreme" => DatasetSpec {
+                name: name.into(),
+                generator: "extreme".into(),
+                n_features: 4096,
+                n_classes: 2,
+                n_train: 1400,
+                n_test: 600,
+            },
+            other => panic!("unknown small dataset '{other}'"),
+        }
+    }
+}
+
+/// Full training configuration (architecture + optimisation + the three
+/// paper contributions' switches).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Hidden layer sizes (input/output come from the dataset).
+    pub hidden: Vec<usize>,
+    /// SET sparsity knob ε.
+    pub epsilon: f64,
+    /// Hidden activation.
+    pub activation: Activation,
+    /// Weight initialisation scheme.
+    pub init: WeightInit,
+    /// LR schedule.
+    pub lr: LrSchedule,
+    /// Optimiser hyperparameters.
+    pub optimizer: MomentumSgd,
+    /// Mini-batch size.
+    pub batch: usize,
+    /// Training epochs.
+    pub epochs: usize,
+    /// Dropout rate on hidden activations (0 disables).
+    pub dropout: f32,
+    /// SET evolution (None = static sparsity).
+    pub evolution: Option<EvolutionConfig>,
+    /// Importance pruning (None = off).
+    pub importance: Option<ImportanceConfig>,
+    /// RNG seed.
+    pub seed: u64,
+    /// Evaluate on test set every `eval_every` epochs.
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            hidden: vec![256, 256],
+            epsilon: 10.0,
+            activation: Activation::AllRelu { alpha: 0.6 },
+            init: WeightInit::HeUniform,
+            lr: LrSchedule::Constant(0.01),
+            optimizer: MomentumSgd::default(),
+            batch: 128,
+            epochs: 50,
+            dropout: 0.3,
+            evolution: Some(EvolutionConfig::default()),
+            importance: None,
+            seed: 42,
+            eval_every: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Table 7 hyperparameters for a paper dataset (ε, η, batch, init, α),
+    /// with the Table 2 architectures.
+    pub fn paper_preset(dataset: &str) -> TrainConfig {
+        let d = TrainConfig::default();
+        match dataset {
+            "leukemia" => TrainConfig {
+                hidden: vec![27_500, 27_500],
+                epsilon: 10.0,
+                activation: Activation::AllRelu { alpha: 0.75 },
+                init: WeightInit::Normal(0.05),
+                lr: LrSchedule::Constant(0.005),
+                batch: 5,
+                ..d
+            },
+            "higgs" => TrainConfig {
+                hidden: vec![1000, 1000, 1000],
+                epsilon: 10.0,
+                activation: Activation::AllRelu { alpha: 0.05 },
+                init: WeightInit::Xavier,
+                lr: LrSchedule::Constant(0.01),
+                batch: 128,
+                ..d
+            },
+            "madelon" => TrainConfig {
+                hidden: vec![400, 100, 400],
+                epsilon: 10.0,
+                activation: Activation::AllRelu { alpha: 0.5 },
+                init: WeightInit::Normal(0.05),
+                lr: LrSchedule::Constant(0.01),
+                batch: 32,
+                ..d
+            },
+            "fashion" => TrainConfig {
+                hidden: vec![1000, 1000, 1000],
+                epsilon: 20.0,
+                activation: Activation::AllRelu { alpha: 0.6 },
+                init: WeightInit::HeUniform,
+                lr: LrSchedule::Constant(0.01),
+                batch: 128,
+                ..d
+            },
+            "cifar" => TrainConfig {
+                hidden: vec![4000, 1000, 4000],
+                epsilon: 20.0,
+                activation: Activation::AllRelu { alpha: 0.75 },
+                init: WeightInit::HeUniform,
+                lr: LrSchedule::Constant(0.01),
+                batch: 128,
+                ..d
+            },
+            _ => d,
+        }
+    }
+
+    /// Scaled-down preset matching `DatasetSpec::small` (shorter, thinner).
+    pub fn small_preset(dataset: &str) -> TrainConfig {
+        let mut cfg = TrainConfig::paper_preset(dataset);
+        cfg.epochs = 30;
+        cfg.hidden = match dataset {
+            "leukemia" => vec![512, 512],
+            "higgs" => vec![256, 256, 256],
+            "madelon" => vec![400, 100, 400],
+            "fashion" => vec![256, 256, 256],
+            "cifar" => vec![512, 256, 512],
+            _ => cfg.hidden,
+        };
+        if let Some(imp) = cfg.importance.as_mut() {
+            imp.start_epoch = 10;
+            imp.period = 5;
+        }
+        cfg
+    }
+
+    /// Full layer-size vector for a dataset.
+    pub fn sizes(&self, n_features: usize, n_classes: usize) -> Vec<usize> {
+        let mut s = Vec::with_capacity(self.hidden.len() + 2);
+        s.push(n_features);
+        s.extend_from_slice(&self.hidden);
+        s.push(n_classes);
+        s
+    }
+
+    /// Apply a `key=value` override (CLI/config-file syntax). Supported
+    /// keys: epochs, batch, epsilon, lr, seed, dropout, alpha, activation,
+    /// init, hidden (e.g. `hidden=256x256x128`), zeta, importance
+    /// (on/off), importance_start, importance_period, importance_pct,
+    /// eval_every, momentum, weight_decay.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |k: &str, v: &str| TsnnError::Config(format!("bad value '{v}' for '{k}'"));
+        match key {
+            "epochs" => self.epochs = value.parse().map_err(|_| bad(key, value))?,
+            "batch" => self.batch = value.parse().map_err(|_| bad(key, value))?,
+            "epsilon" => self.epsilon = value.parse().map_err(|_| bad(key, value))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "dropout" => self.dropout = value.parse().map_err(|_| bad(key, value))?,
+            "eval_every" => self.eval_every = value.parse().map_err(|_| bad(key, value))?,
+            "lr" => {
+                let eta: f32 = value.parse().map_err(|_| bad(key, value))?;
+                self.lr = LrSchedule::Constant(eta);
+            }
+            "momentum" => {
+                self.optimizer.momentum = value.parse().map_err(|_| bad(key, value))?
+            }
+            "weight_decay" => {
+                self.optimizer.weight_decay = value.parse().map_err(|_| bad(key, value))?
+            }
+            "activation" => {
+                self.activation = Activation::parse(value).ok_or_else(|| bad(key, value))?
+            }
+            "alpha" => {
+                let a: f32 = value.parse().map_err(|_| bad(key, value))?;
+                self.activation = match self.activation {
+                    Activation::AllRelu { .. } => Activation::AllRelu { alpha: a },
+                    Activation::LeakyRelu { .. } => Activation::LeakyRelu { alpha: a },
+                    other => other,
+                };
+            }
+            "init" => self.init = WeightInit::parse(value).ok_or_else(|| bad(key, value))?,
+            "hidden" => {
+                let sizes: Option<Vec<usize>> =
+                    value.split('x').map(|p| p.parse().ok()).collect();
+                self.hidden = sizes.ok_or_else(|| bad(key, value))?;
+            }
+            "zeta" => {
+                let z: f64 = value.parse().map_err(|_| bad(key, value))?;
+                self.evolution.get_or_insert_with(Default::default).zeta = z;
+            }
+            "evolution" => match value {
+                "on" => {
+                    self.evolution.get_or_insert_with(Default::default);
+                }
+                "off" => self.evolution = None,
+                _ => return Err(bad(key, value)),
+            },
+            "importance" => match value {
+                "on" => {
+                    self.importance.get_or_insert_with(Default::default);
+                }
+                "off" => self.importance = None,
+                _ => return Err(bad(key, value)),
+            },
+            "importance_start" => {
+                self.importance
+                    .get_or_insert_with(Default::default)
+                    .start_epoch = value.parse().map_err(|_| bad(key, value))?
+            }
+            "importance_period" => {
+                self.importance.get_or_insert_with(Default::default).period =
+                    value.parse().map_err(|_| bad(key, value))?
+            }
+            "importance_pct" => {
+                self.importance
+                    .get_or_insert_with(Default::default)
+                    .percentile = value.parse().map_err(|_| bad(key, value))?
+            }
+            other => {
+                return Err(TsnnError::Config(format!("unknown config key '{other}'")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments.
+    pub fn apply_file(&mut self, text: &str) -> Result<()> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                TsnnError::Config(format!("line {}: expected key=value", lineno + 1))
+            })?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_presets_match_table7() {
+        let c = TrainConfig::paper_preset("fashion");
+        assert_eq!(c.epsilon, 20.0);
+        assert_eq!(c.batch, 128);
+        assert_eq!(c.activation, Activation::AllRelu { alpha: 0.6 });
+        assert_eq!(c.init, WeightInit::HeUniform);
+        let h = TrainConfig::paper_preset("higgs");
+        assert_eq!(h.activation, Activation::AllRelu { alpha: 0.05 });
+        assert_eq!(h.init, WeightInit::Xavier);
+        let m = TrainConfig::paper_preset("madelon");
+        assert_eq!(m.hidden, vec![400, 100, 400]);
+        assert_eq!(m.batch, 32);
+        let l = TrainConfig::paper_preset("leukemia");
+        assert_eq!(l.batch, 5);
+        assert!((match l.lr {
+            LrSchedule::Constant(e) => e,
+            _ => 0.0,
+        } - 0.005)
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn sizes_wraps_dataset_dims() {
+        let c = TrainConfig::paper_preset("cifar");
+        assert_eq!(c.sizes(3072, 10), vec![3072, 4000, 1000, 4000, 10]);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = TrainConfig::default();
+        c.set("epochs", "7").unwrap();
+        c.set("hidden", "32x16").unwrap();
+        c.set("activation", "relu").unwrap();
+        c.set("importance", "on").unwrap();
+        c.set("importance_pct", "10").unwrap();
+        c.set("zeta", "0.25").unwrap();
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.hidden, vec![32, 16]);
+        assert_eq!(c.activation, Activation::Relu);
+        assert_eq!(c.importance.unwrap().percentile, 10.0);
+        assert_eq!(c.evolution.unwrap().zeta, 0.25);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("epochs", "x").is_err());
+    }
+
+    #[test]
+    fn alpha_override_keeps_activation_kind() {
+        let mut c = TrainConfig::default();
+        c.set("alpha", "0.9").unwrap();
+        assert_eq!(c.activation, Activation::AllRelu { alpha: 0.9 });
+        c.set("activation", "relu").unwrap();
+        c.set("alpha", "0.5").unwrap();
+        assert_eq!(c.activation, Activation::Relu); // relu has no alpha
+    }
+
+    #[test]
+    fn apply_file_parses_comments_and_blanks() {
+        let mut c = TrainConfig::default();
+        c.apply_file("# comment\n\nepochs = 3\nbatch=64 # inline\n")
+            .unwrap();
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.batch, 64);
+        assert!(c.apply_file("no_equals_here").is_err());
+    }
+
+    #[test]
+    fn dataset_specs_paper_match_table1() {
+        let d = DatasetSpec::paper("leukemia");
+        assert_eq!((d.n_features, d.n_classes, d.n_train, d.n_test), (54675, 18, 1397, 699));
+        let c = DatasetSpec::paper("cifar");
+        assert_eq!(c.n_features, 3072);
+        let e = DatasetSpec::paper("extreme");
+        assert_eq!(e.n_features, 65536);
+        assert_eq!(e.n_train + e.n_test, 10_000);
+    }
+
+    #[test]
+    fn small_specs_are_smaller() {
+        for name in ["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme"] {
+            let s = DatasetSpec::small(name);
+            let p = DatasetSpec::paper(name);
+            assert!(s.n_train <= p.n_train, "{name}");
+            assert_eq!(s.n_classes, p.n_classes, "{name}");
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Phase-2 model averaging + re-sparsification (Algorithm 1, lines 36–37).
+//!
+//! After phase 2 each of the K workers holds a model whose topology has
+//! evolved independently. Averaging `θ_f = (1/K) Σ θ_i` is taken over the
+//! *union* of topologies (absent links contribute 0), which densifies the
+//! model; the paper then prunes "unimportant connections, accounting for
+//! a fraction S' − S … based on their magnitude, corresponding to the
+//! largest negative weights and the smallest positive weights" to restore
+//! each layer's original budget.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, TsnnError};
+use crate::model::{SparseLayer, SparseMlp};
+use crate::sparse::CsrMatrix;
+
+/// Average K worker models over the union topology; then magnitude-prune
+/// each layer back to `target_nnz[l]` links.
+pub fn average_and_resparsify(models: &[SparseMlp], target_nnz: &[usize]) -> Result<SparseMlp> {
+    let k = models.len();
+    if k == 0 {
+        return Err(TsnnError::Coordinator("no models to average".into()));
+    }
+    let sizes = models[0].sizes.clone();
+    for m in models {
+        if m.sizes != sizes {
+            return Err(TsnnError::Coordinator("model size mismatch".into()));
+        }
+    }
+    let n_layers = sizes.len() - 1;
+    if target_nnz.len() != n_layers {
+        return Err(TsnnError::Coordinator("target_nnz length mismatch".into()));
+    }
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        // union-average weights row by row
+        let (n_in, n_out) = (sizes[l], sizes[l + 1]);
+        let mut triplets: Vec<(u32, u32, f32)> = Vec::new();
+        let inv_k = 1.0f32 / k as f32;
+        for i in 0..n_in {
+            let mut row: BTreeMap<u32, f32> = BTreeMap::new();
+            for m in models {
+                let (cols, vals) = m.layers[l].weights.row(i);
+                for (&c, &v) in cols.iter().zip(vals.iter()) {
+                    *row.entry(c).or_insert(0.0) += v * inv_k;
+                }
+            }
+            for (c, v) in row {
+                triplets.push((i as u32, c, v));
+            }
+        }
+        let mut weights = CsrMatrix::from_coo(n_in, n_out, triplets)?;
+
+        // magnitude prune back to target: drop smallest positives and
+        // largest negatives until <= target_nnz
+        let excess = weights.nnz().saturating_sub(target_nnz[l]);
+        if excess > 0 {
+            let mut mags: Vec<f32> = weights.values.iter().map(|v| v.abs()).collect();
+            let idx = excess - 1;
+            let (_, cut, _) =
+                mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+            let cut = *cut;
+            let vals = weights.values.clone();
+            let mut removed = 0usize;
+            weights.retain(|kk| {
+                let keep = vals[kk].abs() > cut || (vals[kk].abs() == cut && {
+                    // keep ties only once the quota is filled
+                    if removed < excess {
+                        removed += 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
+                keep
+            });
+        }
+        let nnz = weights.nnz();
+
+        // average biases
+        let mut bias = vec![0.0f32; n_out];
+        for m in models {
+            for (b, &mb) in bias.iter_mut().zip(m.layers[l].bias.iter()) {
+                *b += mb * inv_k;
+            }
+        }
+
+        layers.push(SparseLayer {
+            weights,
+            bias,
+            velocity: vec![0.0; nnz],
+            bias_velocity: vec![0.0; n_out],
+            activation: models[0].layers[l].activation,
+            srelu: None,
+        });
+    }
+    Ok(SparseMlp { sizes, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::sparse::WeightInit;
+    use crate::util::Rng;
+
+    fn model(seed: u64) -> SparseMlp {
+        SparseMlp::new(
+            &[8, 12, 3],
+            4.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut Rng::new(seed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_models_average_to_themselves() {
+        let m = model(1);
+        let targets: Vec<usize> = m.layers.iter().map(|l| l.weights.nnz()).collect();
+        let avg = average_and_resparsify(&[m.clone(), m.clone()], &targets).unwrap();
+        for (a, b) in avg.layers.iter().zip(m.layers.iter()) {
+            assert_eq!(a.weights.col_idx, b.weights.col_idx);
+            for (x, y) in a.weights.values.iter().zip(b.weights.values.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn divergent_topologies_union_then_prune_to_target() {
+        let a = model(2);
+        let b = model(3); // different topology
+        let targets: Vec<usize> = a.layers.iter().map(|l| l.weights.nnz()).collect();
+        let avg = average_and_resparsify(&[a.clone(), b], &targets).unwrap();
+        for (l, layer) in avg.layers.iter().enumerate() {
+            layer.weights.validate().unwrap();
+            assert!(
+                layer.weights.nnz() <= targets[l],
+                "layer {l}: {} > {}",
+                layer.weights.nnz(),
+                targets[l]
+            );
+        }
+    }
+
+    #[test]
+    fn averaged_values_are_halved_on_disjoint_links() {
+        // craft models with one known disjoint entry
+        let mut a = model(4);
+        let mut b = a.clone();
+        // zero everything, set one entry in a only
+        for m in [&mut a, &mut b] {
+            for l in &mut m.layers {
+                for v in &mut l.weights.values {
+                    *v = 0.0;
+                }
+            }
+        }
+        a.layers[0].weights.values[0] = 2.0;
+        b.layers[0].weights.values[1] = 4.0;
+        let targets: Vec<usize> = a.layers.iter().map(|l| l.weights.nnz()).collect();
+        let avg = average_and_resparsify(&[a.clone(), b], &targets).unwrap();
+        // union-average: entry0 = 1.0, entry1 = 2.0 (identical topology here
+        // so union == topology; values averaged)
+        assert!((avg.layers[0].weights.values[0] - 1.0).abs() < 1e-6);
+        assert!((avg.layers[0].weights.values[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_mismatched_models() {
+        let a = model(5);
+        let mut rng = Rng::new(6);
+        let b = SparseMlp::new(
+            &[8, 10, 3],
+            4.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        let targets: Vec<usize> = a.layers.iter().map(|l| l.weights.nnz()).collect();
+        assert!(average_and_resparsify(&[a, b], &targets).is_err());
+        assert!(average_and_resparsify(&[], &[]).is_err());
+    }
+}

@@ -1,0 +1,549 @@
+//! WASAP-SGD / WASSP-SGD — the paper's parallel training contribution.
+//!
+//! Two-phase data-parallel training of truly-sparse models over a
+//! shared-memory parameter server (the single-machine MPI setup of the
+//! paper, realised with OS threads — see DESIGN.md §3):
+//!
+//! * **Phase 1** — K workers repeatedly fetch the model, compute a sparse
+//!   gradient on a mini-batch of their shard, and push it. *WASAP* pushes
+//!   asynchronously (no barrier; staleness handled by
+//!   `RetainValidUpdates`); *WASSP* synchronises every step and averages
+//!   the K gradients (with Goyal-style warmup + linear LR scaling).
+//!   The server runs SET topology evolution every `n ÷ B` pushes.
+//! * **Phase 2** — each worker trains its replica locally (topology
+//!   evolving independently), after which the models are averaged over
+//!   the union topology and magnitude-pruned back to the sparsity budget
+//!   (Stochastic-Weight-Averaging-style generalisation boost).
+
+pub mod average;
+pub mod server;
+
+use std::sync::Arc;
+
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::error::{Result, TsnnError};
+use crate::model::Batcher;
+use crate::model::SparseMlp;
+use crate::nn::LrSchedule;
+use crate::train::{self, TrainOptions};
+use crate::util::{PhaseTimes, Rng, Timer};
+
+pub use average::average_and_resparsify;
+pub use server::{ParameterServer, ServerStats, Snapshot, SparseGradient};
+
+/// Parallel-training configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelConfig {
+    /// Worker count K (paper: physical cores − 1).
+    pub workers: usize,
+    /// Epochs of phase 1 (τ₁).
+    pub phase1_epochs: usize,
+    /// Epochs of phase 2 (τ₂ − τ₁).
+    pub phase2_epochs: usize,
+    /// Synchronous phase 1 (WASSP) instead of asynchronous (WASAP).
+    pub synchronous: bool,
+    /// Wrap a constant LR into the paper's hot-start schedule for WASAP
+    /// phase 1 ("benefits from larger learning rates for the first few
+    /// epochs", §2.3). Disable when the caller tunes the schedule itself.
+    pub hot_start: bool,
+    /// L2 gradient clipping applied worker-side before each push (0 = off).
+    /// Stabilises hot-start async SGD against stale-gradient overshoot.
+    pub grad_clip: f32,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            workers: 5,
+            phase1_epochs: 20,
+            phase2_epochs: 5,
+            synchronous: false,
+            hot_start: true,
+            grad_clip: 5.0,
+        }
+    }
+}
+
+/// Scale all gradient buffers so the global L2 norm is at most `clip`.
+fn clip_gradients(grad_w: &mut [Vec<f32>], grad_b: &mut [Vec<f32>], clip: f32) {
+    if clip <= 0.0 {
+        return;
+    }
+    let norm_sq: f32 = grad_w
+        .iter()
+        .chain(grad_b.iter())
+        .flat_map(|g| g.iter())
+        .map(|g| g * g)
+        .sum();
+    let norm = norm_sq.sqrt();
+    if norm > clip && norm.is_finite() {
+        let scale = clip / norm;
+        for g in grad_w.iter_mut().chain(grad_b.iter_mut()) {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+}
+
+/// Result of a parallel run.
+#[derive(Debug)]
+pub struct ParallelReport {
+    /// The final (averaged, re-sparsified) model.
+    pub model: SparseMlp,
+    /// Test accuracy after phase 1 (pre-averaging).
+    pub phase1_test_accuracy: f32,
+    /// Final test accuracy of the averaged model.
+    pub final_test_accuracy: f32,
+    /// Weights at start.
+    pub start_weights: usize,
+    /// Weights at end.
+    pub end_weights: usize,
+    /// Server-side statistics (staleness, dropped updates, ...).
+    pub server_stats: ServerStats,
+    /// Wall-clock per phase.
+    pub phases: PhaseTimes,
+}
+
+fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
+    let per = n / workers;
+    let lo = k * per;
+    let hi = if k + 1 == workers { n } else { lo + per };
+    (lo, hi)
+}
+
+/// Build a worker-local dataset containing only its shard of train data
+/// (test split shared for evaluation convenience).
+fn shard_dataset(data: &Dataset, lo: usize, hi: usize) -> Dataset {
+    let nf = data.n_features;
+    Dataset {
+        name: format!("{}[{}..{}]", data.name, lo, hi),
+        n_features: nf,
+        n_classes: data.n_classes,
+        x_train: data.x_train[lo * nf..hi * nf].to_vec(),
+        y_train: data.y_train[lo..hi].to_vec(),
+        x_test: data.x_test.clone(),
+        y_test: data.y_test.clone(),
+    }
+}
+
+/// Run WASAP-SGD (or WASSP-SGD when `pcfg.synchronous`).
+pub fn run_parallel(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    rng: &mut Rng,
+) -> Result<ParallelReport> {
+    if pcfg.workers == 0 {
+        return Err(TsnnError::Coordinator("need at least one worker".into()));
+    }
+    let mut phases = PhaseTimes::new();
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let model = phases.time("init", || {
+        SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, rng)
+    })?;
+    let start_weights = model.weight_count();
+
+    let pushes_per_epoch = data.n_train().div_ceil(cfg.batch);
+    // Asynchrony begets momentum (Mitliagkas et al., cited by the paper):
+    // K async workers contribute an implicit momentum of ~1 − 1/K, so the
+    // explicit coefficient is reduced to keep the *effective* momentum at
+    // the configured value: μ_explicit = 1 − (1 − μ)·K, clamped at 0.
+    // Without this, μ=0.9 with K≥3 exceeds effective momentum 1 and the
+    // server model diverges to a constant predictor.
+    let mut opt = cfg.optimizer;
+    if !pcfg.synchronous && pcfg.workers > 1 {
+        let k = pcfg.workers as f32;
+        opt.momentum = (1.0 - (1.0 - opt.momentum) * k).max(0.0);
+    }
+    let ps = ParameterServer::new(
+        model,
+        opt,
+        cfg.evolution,
+        cfg.importance,
+        pushes_per_epoch,
+        cfg.seed,
+    );
+
+    // ---- phase 1 ----
+    let t1 = Timer::start();
+    if pcfg.synchronous {
+        run_phase1_sync(cfg, pcfg, data, &ps)?;
+    } else {
+        run_phase1_async(cfg, pcfg, data, &ps)?;
+    }
+    phases.add("phase1", t1.secs());
+
+    let (phase1_model, server_stats) = ps.finish();
+    // The averaging step restores the sparsity budget of the *phase-1*
+    // model, so Importance Pruning reductions made during phase 1 persist
+    // through phase 2's union-average.
+    let target_nnz: Vec<usize> = phase1_model
+        .layers
+        .iter()
+        .map(|l| l.weights.nnz())
+        .collect();
+    let mut ws = phase1_model.alloc_workspace(256);
+    let (_, phase1_acc) = phases.time("test", || {
+        phase1_model.evaluate(&data.x_test, &data.y_test, 256, &mut ws)
+    });
+
+    // ---- phase 2: local training per worker, then averaging ----
+    let t2 = Timer::start();
+    let final_model = if pcfg.phase2_epochs > 0 {
+        let mut locals: Vec<SparseMlp> = Vec::with_capacity(pcfg.workers);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for k in 0..pcfg.workers {
+                let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, k);
+                let shard = shard_dataset(data, lo, hi);
+                let mut local_cfg = cfg.clone();
+                local_cfg.epochs = pcfg.phase2_epochs;
+                local_cfg.eval_every = 0; // no test eval inside workers
+                let mut local_model = phase1_model.clone();
+                let mut local_rng = Rng::new(cfg.seed).split(1000 + k as u64);
+                handles.push(scope.spawn(move || -> Result<SparseMlp> {
+                    let mut local_phases = PhaseTimes::new();
+                    train::train_model(
+                        &local_cfg,
+                        &shard,
+                        &mut local_model,
+                        &mut local_rng,
+                        TrainOptions::default(),
+                        &mut local_phases,
+                    )?;
+                    Ok(local_model)
+                }));
+            }
+            for h in handles {
+                locals.push(h.join().map_err(|_| {
+                    TsnnError::Coordinator("phase-2 worker panicked".into())
+                })??);
+            }
+            Ok(())
+        })?;
+        average_and_resparsify(&locals, &target_nnz)?
+    } else {
+        phase1_model
+    };
+    phases.add("phase2", t2.secs());
+
+    let mut ws = final_model.alloc_workspace(256);
+    let (_, final_acc) = phases.time("test", || {
+        final_model.evaluate(&data.x_test, &data.y_test, 256, &mut ws)
+    });
+
+    Ok(ParallelReport {
+        end_weights: final_model.weight_count(),
+        start_weights,
+        phase1_test_accuracy: phase1_acc,
+        final_test_accuracy: final_acc,
+        server_stats,
+        phases,
+        model: final_model,
+    })
+}
+
+/// Phase 1, asynchronous (WASAP): workers fetch/push with no barrier.
+fn run_phase1_async(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    ps: &ParameterServer,
+) -> Result<()> {
+    // WASAP benefits from a hot-start LR (paper §2.3); respect an explicit
+    // schedule if the caller set one, otherwise wrap the constant rate.
+    let schedule = match cfg.lr {
+        LrSchedule::Constant(eta) if pcfg.hot_start => LrSchedule::HotStart {
+            hot: eta * 2.0,
+            base: eta,
+            hot_epochs: 3,
+        },
+        other => other,
+    };
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for k in 0..pcfg.workers {
+            let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, k);
+            let mut rng = Rng::new(cfg.seed).split(k as u64);
+            let dropout = if cfg.dropout > 0.0 {
+                Some(crate::nn::Dropout::new(cfg.dropout))
+            } else {
+                None
+            };
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut batcher = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
+                batcher.reset(&mut rng);
+                let mut ws = crate::model::Workspace::default();
+                loop {
+                    let epoch = ps.epoch();
+                    if epoch >= pcfg.phase1_epochs {
+                        return Ok(());
+                    }
+                    let snap = ps.fetch();
+                    let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
+                        Some(b) => b,
+                        None => {
+                            batcher.reset(&mut rng);
+                            batcher.next_batch(&data.x_train, &data.y_train).unwrap()
+                        }
+                    };
+                    snap.model
+                        .compute_gradients(batch.0, batch.1, dropout.as_ref(), &mut ws, &mut rng);
+                    let mut grad_w = ws.grad_w.clone();
+                    let mut grad_b = ws.grad_b.clone();
+                    clip_gradients(&mut grad_w, &mut grad_b, pcfg.grad_clip);
+                    let grad = SparseGradient {
+                        grad_w,
+                        grad_b,
+                        topo: Arc::clone(&snap.model),
+                        gen: snap.gen,
+                        fetched_step: snap.step,
+                    };
+                    ps.push(grad, schedule.at(epoch))?;
+                }
+            }));
+        }
+        for h in handles {
+            h.join()
+                .map_err(|_| TsnnError::Coordinator("phase-1 worker panicked".into()))??;
+        }
+        Ok(())
+    })
+}
+
+/// Phase 1, synchronous (WASSP): per step all K gradients are computed
+/// against the same snapshot, averaged, and applied once (Goyal et al.
+/// warmup + linear scaling on the LR).
+fn run_phase1_sync(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    ps: &ParameterServer,
+) -> Result<()> {
+    let base = match cfg.lr {
+        LrSchedule::Constant(eta) => eta,
+        other => other.at(0),
+    };
+    let schedule = LrSchedule::Warmup {
+        base,
+        scale: (pcfg.workers as f32).max(1.0).min(4.0),
+        warmup_epochs: 5,
+    };
+    let k = pcfg.workers;
+    let steps_per_epoch = data.n_train().div_ceil(cfg.batch);
+
+    // Per-worker persistent state across the run.
+    let mut rngs: Vec<Rng> = (0..k).map(|i| Rng::new(cfg.seed).split(i as u64)).collect();
+    let mut batchers: Vec<Batcher> = (0..k)
+        .map(|i| {
+            let (lo, hi) = shard_bounds(data.n_train(), k, i);
+            Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi)
+        })
+        .collect();
+    for (b, r) in batchers.iter_mut().zip(rngs.iter_mut()) {
+        b.reset(r);
+    }
+    let dropout = if cfg.dropout > 0.0 {
+        Some(crate::nn::Dropout::new(cfg.dropout))
+    } else {
+        None
+    };
+
+    for epoch in 0..pcfg.phase1_epochs {
+        let lr = schedule.at(epoch);
+        for _ in 0..steps_per_epoch {
+            let snap = ps.fetch();
+            // Barrier semantics: all K gradients computed against `snap`,
+            // then averaged and applied once. Computation itself fans out
+            // across scoped threads (real thread-parallelism on multicore
+            // hosts; deterministic aggregation either way).
+            let mut grads: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::with_capacity(k);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for ((batcher, rng), _) in
+                    batchers.iter_mut().zip(rngs.iter_mut()).zip(0..k)
+                {
+                    let model = Arc::clone(&snap.model);
+                    let dref = dropout.as_ref();
+                    handles.push(scope.spawn(move || {
+                        let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
+                            Some(b) => b,
+                            None => {
+                                batcher.reset(rng);
+                                batcher.next_batch(&data.x_train, &data.y_train).unwrap()
+                            }
+                        };
+                        let mut ws = crate::model::Workspace::default();
+                        model.compute_gradients(batch.0, batch.1, dref, &mut ws, rng);
+                        (ws.grad_w, ws.grad_b)
+                    }));
+                }
+                for h in handles {
+                    grads.push(h.join().expect("sync worker panicked"));
+                }
+            });
+            // average K aligned gradients
+            let inv_k = 1.0f32 / k as f32;
+            let (mut agg_w, mut agg_b) = grads.pop().unwrap();
+            for (gw, gb) in &grads {
+                for (a, g) in agg_w.iter_mut().zip(gw.iter()) {
+                    for (x, y) in a.iter_mut().zip(g.iter()) {
+                        *x += y;
+                    }
+                }
+                for (a, g) in agg_b.iter_mut().zip(gb.iter()) {
+                    for (x, y) in a.iter_mut().zip(g.iter()) {
+                        *x += y;
+                    }
+                }
+            }
+            for a in agg_w.iter_mut().flat_map(|v| v.iter_mut()) {
+                *a *= inv_k;
+            }
+            for a in agg_b.iter_mut().flat_map(|v| v.iter_mut()) {
+                *a *= inv_k;
+            }
+            clip_gradients(&mut agg_w, &mut agg_b, pcfg.grad_clip);
+            ps.apply_aligned(&agg_w, &agg_b, lr)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cleanly separable two-blob data: the coordinator unit tests pin
+    /// the *machinery* (phases, staleness, averaging), so the learning
+    /// problem itself must converge reliably in a handful of epochs.
+    fn blob_data() -> Dataset {
+        let (n_train, n_test, nf) = (400usize, 160usize, 20usize);
+        let mut rng = Rng::new(1);
+        let gen = |n: usize, rng: &mut Rng| {
+            let mut x = vec![0.0f32; n * nf];
+            let mut y = vec![0u32; n];
+            for s in 0..n {
+                let c = (s % 2) as u32;
+                y[s] = c;
+                let shift = if c == 0 { -1.5 } else { 1.5 };
+                for f in 0..nf {
+                    x[s * nf + f] = rng.normal() + if f < 6 { shift } else { 0.0 };
+                }
+            }
+            (x, y)
+        };
+        let (x_train, y_train) = gen(n_train, &mut rng);
+        let (x_test, y_test) = gen(n_test, &mut rng);
+        Dataset {
+            name: "blobs".into(),
+            n_features: nf,
+            n_classes: 2,
+            x_train,
+            y_train,
+            x_test,
+            y_test,
+        }
+    }
+
+    fn quick() -> (TrainConfig, Dataset) {
+        let data = blob_data();
+        // Unit tests here pin the *coordination* machinery (phases,
+        // staleness, averaging); SET evolution is off and the LR hot so a
+        // short async run converges reliably — evolution+parallel together
+        // is covered by server tests and rust/tests/integration.rs.
+        let cfg = TrainConfig {
+            hidden: vec![48, 24],
+            epsilon: 8.0,
+            batch: 40,
+            dropout: 0.0,
+            epochs: 0, // unused by parallel driver
+            lr: LrSchedule::Constant(0.05),
+            evolution: None,
+            ..TrainConfig::default()
+        };
+        (cfg, data)
+    }
+
+    #[test]
+    fn wasap_trains_and_averages() {
+        let (cfg, data) = quick();
+        let pcfg = ParallelConfig {
+            workers: 3,
+            phase1_epochs: 25,
+            phase2_epochs: 5,
+            synchronous: false,
+            hot_start: true,
+            grad_clip: 5.0,
+        };
+        let report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(2)).unwrap();
+        // async scheduling is nondeterministic; require clearly-above-chance
+        // learning rather than a tight accuracy bar (integration tests pin
+        // the stronger parity-with-sequential property).
+        assert!(report.final_test_accuracy > 0.55, "{}", report.final_test_accuracy);
+        assert!(report.server_stats.steps > 0);
+        assert!(report.server_stats.epochs >= 25);
+        // re-sparsification keeps the budget
+        assert!(report.end_weights <= report.start_weights + report.start_weights / 10);
+        assert!(report.phases.get("phase1") > 0.0);
+        assert!(report.phases.get("phase2") > 0.0);
+    }
+
+    #[test]
+    fn wassp_trains_synchronously() {
+        let (cfg, data) = quick();
+        let pcfg = ParallelConfig {
+            workers: 2,
+            phase1_epochs: 4,
+            phase2_epochs: 1,
+            synchronous: true,
+            hot_start: true,
+            grad_clip: 5.0,
+        };
+        let report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(3)).unwrap();
+        assert!(report.final_test_accuracy > 0.5, "{}", report.final_test_accuracy);
+        // synchronous path never produces stale pushes
+        assert_eq!(report.server_stats.dropped_entries, 0);
+    }
+
+    #[test]
+    fn single_worker_wasap_matches_sequential_semantics() {
+        let (cfg, data) = quick();
+        let pcfg = ParallelConfig {
+            workers: 1,
+            phase1_epochs: 5,
+            phase2_epochs: 0,
+            synchronous: false,
+            hot_start: true,
+            grad_clip: 5.0,
+        };
+        let report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(4)).unwrap();
+        assert!(report.server_stats.mean_staleness <= 1.0);
+        assert!(report.final_test_accuracy > 0.5);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let (cfg, data) = quick();
+        let pcfg = ParallelConfig {
+            workers: 0,
+            ..Default::default()
+        };
+        assert!(run_parallel(&cfg, &pcfg, &data, &mut Rng::new(5)).is_err());
+    }
+
+    #[test]
+    fn shard_bounds_cover_everything() {
+        let mut covered = vec![false; 103];
+        for k in 0..7 {
+            let (lo, hi) = shard_bounds(103, 7, k);
+            for c in covered[lo..hi].iter_mut() {
+                assert!(!*c);
+                *c = true;
+            }
+        }
+        assert!(covered.into_iter().all(|c| c));
+    }
+}

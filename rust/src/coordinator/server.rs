@@ -1,0 +1,421 @@
+//! Shared-memory parameter server (paper Fig. 2 / Fig. 8).
+//!
+//! The master owns the canonical sparse model; workers fetch snapshots
+//! and push sparse gradients with atomic (lock-protected) read/write
+//! operations. Because the master periodically runs the SET topology
+//! evolution, a worker's gradient may reference links that no longer
+//! exist — `RetainValidUpdates` (Algorithm 1 line 14) intersects the
+//! worker's topology with the current one and applies only valid entries.
+
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::importance::{self, ImportanceConfig};
+use crate::model::SparseMlp;
+use crate::nn::MomentumSgd;
+use crate::set::{self, EvolutionConfig};
+use crate::util::Rng;
+
+/// A worker's snapshot of the server model.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// The model replica (topology + values).
+    pub model: Arc<SparseMlp>,
+    /// Topology generation at fetch time.
+    pub gen: u64,
+    /// Server step at fetch time (staleness accounting).
+    pub step: u64,
+}
+
+/// Sparse gradient aligned to a snapshot's topology.
+#[derive(Debug)]
+pub struct SparseGradient {
+    /// Per-layer weight gradients aligned to the snapshot CSR values.
+    pub grad_w: Vec<Vec<f32>>,
+    /// Per-layer bias gradients.
+    pub grad_b: Vec<Vec<f32>>,
+    /// The topology the gradients are aligned to.
+    pub topo: Arc<SparseMlp>,
+    /// Generation of that topology.
+    pub gen: u64,
+    /// Server step the worker fetched at (for staleness stats).
+    pub fetched_step: u64,
+}
+
+struct ServerState {
+    model: SparseMlp,
+    snapshot: Arc<SparseMlp>,
+    gen: u64,
+    step: u64,
+    epoch: usize,
+    pushes_since_evolution: usize,
+    dropped_entries: u64,
+    applied_entries: u64,
+    staleness_sum: u64,
+    staleness_max: u64,
+}
+
+/// Lock-protected parameter server.
+pub struct ParameterServer {
+    state: Mutex<ServerState>,
+    opt: MomentumSgd,
+    evolution: Option<EvolutionConfig>,
+    importance: Option<ImportanceConfig>,
+    /// Pushes per epoch (⌈n_train / batch⌉ — Algorithm 1's `n ÷ B`).
+    pushes_per_epoch: usize,
+    evo_rng: Mutex<Rng>,
+    /// Count of topology evolutions performed.
+    pub evolutions: AtomicUsize,
+}
+
+/// Aggregate statistics at the end of phase 1.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    /// Total server updates applied.
+    pub steps: u64,
+    /// Epochs completed.
+    pub epochs: usize,
+    /// Gradient entries applied.
+    pub applied_entries: u64,
+    /// Gradient entries dropped by RetainValidUpdates.
+    pub dropped_entries: u64,
+    /// Mean staleness (server steps between fetch and push).
+    pub mean_staleness: f64,
+    /// Max staleness observed.
+    pub max_staleness: u64,
+    /// Topology generations.
+    pub generations: u64,
+}
+
+impl ParameterServer {
+    /// Wrap an initial model.
+    pub fn new(
+        model: SparseMlp,
+        opt: MomentumSgd,
+        evolution: Option<EvolutionConfig>,
+        importance: Option<ImportanceConfig>,
+        pushes_per_epoch: usize,
+        seed: u64,
+    ) -> Self {
+        let snapshot = Arc::new(model.clone());
+        ParameterServer {
+            state: Mutex::new(ServerState {
+                model,
+                snapshot,
+                gen: 0,
+                step: 0,
+                epoch: 0,
+                pushes_since_evolution: 0,
+                dropped_entries: 0,
+                applied_entries: 0,
+                staleness_sum: 0,
+                staleness_max: 0,
+            }),
+            opt,
+            evolution,
+            importance,
+            pushes_per_epoch: pushes_per_epoch.max(1),
+            evo_rng: Mutex::new(Rng::new(seed ^ 0x5e17_c0de)),
+            evolutions: AtomicUsize::new(0),
+        }
+    }
+
+    /// Atomic read: fetch the current model snapshot.
+    pub fn fetch(&self) -> Snapshot {
+        let st = self.state.lock().unwrap();
+        Snapshot {
+            model: Arc::clone(&st.snapshot),
+            gen: st.gen,
+            step: st.step,
+        }
+    }
+
+    /// Current epoch (workers poll this to decide when to stop).
+    pub fn epoch(&self) -> usize {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Atomic write: push a gradient; the server applies valid entries
+    /// (Algorithm 1 lines 13–21) and advances step/epoch/topology.
+    pub fn push(&self, grad: SparseGradient, lr: f32) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let staleness = st.step.saturating_sub(grad.fetched_step);
+        st.staleness_sum += staleness;
+        st.staleness_max = st.staleness_max.max(staleness);
+
+        if grad.gen == st.gen {
+            // fast path: same topology, gradients align with values
+            for (l, layer) in st.model.layers.iter_mut().enumerate() {
+                layer.apply_update(&self.opt, &grad.grad_w[l], &grad.grad_b[l], lr);
+            }
+            st.applied_entries += grad.grad_w.iter().map(|g| g.len() as u64).sum::<u64>();
+        } else {
+            // RetainValidUpdates: merge-intersect worker topology with the
+            // current one per row; only entries present in BOTH receive
+            // the update.
+            let mut applied = 0u64;
+            let mut dropped = 0u64;
+            for (l, layer) in st.model.layers.iter_mut().enumerate() {
+                let worker_w = &grad.topo.layers[l].weights;
+                let gw = &grad.grad_w[l];
+                let cur = &mut layer.weights;
+                let (mu, wd) = (self.opt.momentum, self.opt.weight_decay);
+                for i in 0..cur.n_rows {
+                    let (ws_, we_) = (worker_w.row_ptr[i], worker_w.row_ptr[i + 1]);
+                    let (cs, ce) = (cur.row_ptr[i], cur.row_ptr[i + 1]);
+                    let (mut a, mut b) = (ws_, cs);
+                    while a < we_ && b < ce {
+                        let wc = worker_w.col_idx[a];
+                        let cc = cur.col_idx[b];
+                        if wc == cc {
+                            let g = gw[a];
+                            let v = &mut layer.velocity[b];
+                            *v = mu * *v - lr * (g + wd * cur.values[b]);
+                            cur.values[b] += *v;
+                            applied += 1;
+                            a += 1;
+                            b += 1;
+                        } else if wc < cc {
+                            dropped += 1;
+                            a += 1;
+                        } else {
+                            b += 1;
+                        }
+                    }
+                    dropped += (we_ - a) as u64;
+                }
+                // biases always align (no bias topology)
+                self.opt
+                    .update_bias(&mut layer.bias, &grad.grad_b[l], &mut layer.bias_velocity, lr);
+            }
+            st.applied_entries += applied;
+            st.dropped_entries += dropped;
+        }
+
+        st.step += 1;
+        st.pushes_since_evolution += 1;
+
+        // Algorithm 1 line 16: evolution every n÷B pushes = 1 "epoch"
+        if st.pushes_since_evolution >= self.pushes_per_epoch {
+            st.pushes_since_evolution = 0;
+            st.epoch += 1;
+            let mut rng = self.evo_rng.lock().unwrap();
+            if let Some(imp) = &self.importance {
+                if imp.due(st.epoch) {
+                    importance::prune_model(&mut st.model, imp);
+                }
+            }
+            if let Some(evo) = &self.evolution {
+                set::evolve_model(&mut st.model, evo, &mut rng)?;
+                st.gen += 1;
+            }
+        }
+        // publish a fresh snapshot for subsequent fetches
+        st.snapshot = Arc::new(st.model.clone());
+        Ok(())
+    }
+
+    /// Synchronous update path (WASSP): apply an averaged dense-of-sparse
+    /// gradient already aligned to the CURRENT topology.
+    pub fn apply_aligned(&self, grad_w: &[Vec<f32>], grad_b: &[Vec<f32>], lr: f32) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        for (l, layer) in st.model.layers.iter_mut().enumerate() {
+            layer.apply_update(&self.opt, &grad_w[l], &grad_b[l], lr);
+        }
+        st.step += 1;
+        st.pushes_since_evolution += 1;
+        if st.pushes_since_evolution >= self.pushes_per_epoch {
+            st.pushes_since_evolution = 0;
+            st.epoch += 1;
+            let mut rng = self.evo_rng.lock().unwrap();
+            if let Some(imp) = &self.importance {
+                if imp.due(st.epoch) {
+                    importance::prune_model(&mut st.model, imp);
+                }
+            }
+            if let Some(evo) = &self.evolution {
+                set::evolve_model(&mut st.model, evo, &mut rng)?;
+                st.gen += 1;
+            }
+        }
+        st.snapshot = Arc::new(st.model.clone());
+        Ok(())
+    }
+
+    /// Take the final model + stats (consumes nothing; clones).
+    pub fn finish(&self) -> (SparseMlp, ServerStats) {
+        let st = self.state.lock().unwrap();
+        let stats = ServerStats {
+            steps: st.step,
+            epochs: st.epoch,
+            applied_entries: st.applied_entries,
+            dropped_entries: st.dropped_entries,
+            mean_staleness: if st.step > 0 {
+                st.staleness_sum as f64 / st.step as f64
+            } else {
+                0.0
+            },
+            max_staleness: st.staleness_max,
+            generations: st.gen,
+        };
+        (st.model.clone(), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::sparse::WeightInit;
+
+    fn model(seed: u64) -> SparseMlp {
+        SparseMlp::new(
+            &[10, 16, 4],
+            5.0,
+            Activation::Relu,
+            &WeightInit::Normal(0.5),
+            &mut Rng::new(seed),
+        )
+        .unwrap()
+    }
+
+    fn zero_grad_like(m: &SparseMlp) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (
+            m.layers.iter().map(|l| vec![0.0; l.weights.nnz()]).collect(),
+            m.layers.iter().map(|l| vec![0.0; l.n_out()]).collect(),
+        )
+    }
+
+    #[test]
+    fn fetch_then_aligned_push_updates_model() {
+        let m = model(1);
+        let ps = ParameterServer::new(
+            m,
+            MomentumSgd {
+                momentum: 0.0,
+                weight_decay: 0.0,
+            },
+            None,
+            None,
+            1000,
+            0,
+        );
+        let snap = ps.fetch();
+        let (mut gw, gb) = zero_grad_like(&snap.model);
+        gw[0][0] = 1.0;
+        let before = snap.model.layers[0].weights.values[0];
+        ps.push(
+            SparseGradient {
+                grad_w: gw,
+                grad_b: gb,
+                topo: Arc::clone(&snap.model),
+                gen: snap.gen,
+                fetched_step: snap.step,
+            },
+            0.1,
+        )
+        .unwrap();
+        let (after, stats) = ps.finish();
+        assert!((after.layers[0].weights.values[0] - (before - 0.1)).abs() < 1e-6);
+        assert_eq!(stats.steps, 1);
+        assert_eq!(stats.dropped_entries, 0);
+    }
+
+    #[test]
+    fn evolution_triggers_every_epoch_of_pushes() {
+        let m = model(2);
+        let ps = ParameterServer::new(
+            m,
+            MomentumSgd::default(),
+            Some(EvolutionConfig::default()),
+            None,
+            3, // 3 pushes per epoch
+            0,
+        );
+        for _ in 0..7 {
+            let snap = ps.fetch();
+            let (gw, gb) = zero_grad_like(&snap.model);
+            ps.push(
+                SparseGradient {
+                    grad_w: gw,
+                    grad_b: gb,
+                    topo: Arc::clone(&snap.model),
+                    gen: snap.gen,
+                    fetched_step: snap.step,
+                },
+                0.01,
+            )
+            .unwrap();
+        }
+        let (_, stats) = ps.finish();
+        assert_eq!(stats.epochs, 2); // 7 pushes / 3 per epoch
+        assert_eq!(stats.generations, 2);
+    }
+
+    #[test]
+    fn stale_gradient_intersects_topologies() {
+        let m = model(3);
+        let ps = ParameterServer::new(
+            m,
+            MomentumSgd {
+                momentum: 0.0,
+                weight_decay: 0.0,
+            },
+            Some(EvolutionConfig {
+                zeta: 0.5,
+                ..Default::default()
+            }),
+            None,
+            1, // evolve after every push
+            0,
+        );
+        let old_snap = ps.fetch();
+        // push once to trigger evolution (gen 0 -> 1)
+        {
+            let (gw, gb) = zero_grad_like(&old_snap.model);
+            ps.push(
+                SparseGradient {
+                    grad_w: gw,
+                    grad_b: gb,
+                    topo: Arc::clone(&old_snap.model),
+                    gen: old_snap.gen,
+                    fetched_step: old_snap.step,
+                },
+                0.01,
+            )
+            .unwrap();
+        }
+        // now push a gradient aligned to the OLD topology
+        let (mut gw, gb) = zero_grad_like(&old_snap.model);
+        for g in gw.iter_mut().flat_map(|v| v.iter_mut()) {
+            *g = 1.0;
+        }
+        ps.push(
+            SparseGradient {
+                grad_w: gw,
+                grad_b: gb,
+                topo: Arc::clone(&old_snap.model),
+                gen: old_snap.gen,
+                fetched_step: old_snap.step,
+            },
+            0.01,
+        )
+        .unwrap();
+        let (_, stats) = ps.finish();
+        // zeta=0.5 pruned roughly half: some entries must be dropped, the
+        // surviving intersection applied
+        assert!(stats.dropped_entries > 0, "{stats:?}");
+        assert!(stats.applied_entries > 0);
+        assert!(stats.max_staleness >= 1);
+    }
+
+    #[test]
+    fn snapshots_are_cheap_arcs() {
+        let m = model(4);
+        let ps = ParameterServer::new(m, MomentumSgd::default(), None, None, 10, 0);
+        let a = ps.fetch();
+        let b = ps.fetch();
+        assert!(Arc::ptr_eq(&a.model, &b.model));
+    }
+}

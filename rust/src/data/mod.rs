@@ -1,0 +1,8 @@
+//! Data substrate: Guyon-style synthetic generation ([`synth`]) and the
+//! paper's dataset suite ([`datasets`]).
+
+pub mod datasets;
+pub mod synth;
+
+pub use datasets::{generate, Dataset};
+pub use synth::{make_classification, standardize, SynthSpec};

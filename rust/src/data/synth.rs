@@ -1,0 +1,374 @@
+//! Guyon-style synthetic classification data (`make_classification`).
+//!
+//! A faithful re-implementation of the generator behind scikit-learn's
+//! `make_classification` (Guyon 2003) — the algorithm that produced the
+//! paper's Madelon dataset and its §2.4 "big artificial dataset":
+//! class clusters at hypercube vertices in an informative subspace,
+//! linearly-redundant features, pure-noise probe features, label noise,
+//! and feature shuffling.
+
+use crate::error::{Result, TsnnError};
+use crate::util::Rng;
+
+/// Parameters for [`make_classification`].
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    /// Total samples to generate.
+    pub n_samples: usize,
+    /// Total features (informative + redundant + probes).
+    pub n_features: usize,
+    /// Dimensionality of the informative subspace.
+    pub n_informative: usize,
+    /// Features that are random linear combinations of informative ones.
+    pub n_redundant: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Gaussian clusters per class.
+    pub n_clusters_per_class: usize,
+    /// Distance scale between hypercube vertices (larger = easier).
+    pub class_sep: f64,
+    /// Fraction of labels randomly reassigned (irreducible error).
+    pub flip_y: f64,
+    /// Shuffle feature columns (hide which are informative).
+    pub shuffle: bool,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            n_samples: 100,
+            n_features: 20,
+            n_informative: 2,
+            n_redundant: 2,
+            n_classes: 2,
+            n_clusters_per_class: 2,
+            class_sep: 1.0,
+            flip_y: 0.01,
+            shuffle: true,
+        }
+    }
+}
+
+impl SynthSpec {
+    /// Madelon's published recipe: 5 informative, 15 redundant, 480
+    /// probes, 2 classes, 16 clusters per class on a hypercube.
+    pub fn madelon(n_samples: usize) -> Self {
+        SynthSpec {
+            n_samples,
+            n_features: 500,
+            n_informative: 5,
+            n_redundant: 15,
+            n_classes: 2,
+            n_clusters_per_class: 16,
+            class_sep: 2.0,
+            flip_y: 0.02,
+            shuffle: true,
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_informative + self.n_redundant > self.n_features {
+            return Err(TsnnError::Data(format!(
+                "informative {} + redundant {} exceed features {}",
+                self.n_informative, self.n_redundant, self.n_features
+            )));
+        }
+        if self.n_informative == 0 || self.n_classes < 2 || self.n_samples == 0 {
+            return Err(TsnnError::Data("degenerate synth spec".into()));
+        }
+        let clusters = self.n_classes * self.n_clusters_per_class;
+        // need enough hypercube corners (with sign choices) for clusters
+        if (clusters as f64).log2() > 2.0 * self.n_informative as f64 {
+            return Err(TsnnError::Data(format!(
+                "{} clusters need more than 2^{} hypercube corners",
+                clusters,
+                2 * self.n_informative
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Gray-code style hypercube corner `index` in `dim` dims scaled by `sep`.
+fn hypercube_vertex(index: usize, dim: usize, sep: f64) -> Vec<f64> {
+    (0..dim)
+        .map(|d| {
+            if (index >> (d % (8 * std::mem::size_of::<usize>())).min(63)) & 1 == 1 {
+                sep
+            } else {
+                -sep
+            }
+        })
+        .collect()
+}
+
+/// Generate features (row-major `[n_samples, n_features]`) and labels.
+pub fn make_classification(spec: &SynthSpec, rng: &mut Rng) -> Result<(Vec<f32>, Vec<u32>)> {
+    spec.validate()?;
+    let n = spec.n_samples;
+    let nf = spec.n_features;
+    let ni = spec.n_informative;
+    let nr = spec.n_redundant;
+    let n_clusters = spec.n_classes * spec.n_clusters_per_class;
+
+    // cluster centroids at distinct hypercube vertices (shuffled corners)
+    let corners = 1usize << ni.min(20);
+    let mut corner_ids: Vec<usize> = (0..corners.max(n_clusters)).collect();
+    rng.shuffle(&mut corner_ids);
+    let centroids: Vec<Vec<f64>> = (0..n_clusters)
+        .map(|c| hypercube_vertex(corner_ids[c % corner_ids.len()], ni, spec.class_sep))
+        .collect();
+
+    // per-cluster random covariance transform A (ni x ni)
+    let transforms: Vec<Vec<f64>> = (0..n_clusters)
+        .map(|_| (0..ni * ni).map(|_| rng.normal() as f64).collect())
+        .collect();
+
+    // redundant mixing matrix B (ni x nr)
+    let mix: Vec<f64> = (0..ni * nr).map(|_| rng.normal() as f64).collect();
+
+    let mut x = vec![0.0f32; n * nf];
+    let mut y = vec![0u32; n];
+    let mut informative = vec![0.0f64; ni];
+
+    for s in 0..n {
+        let cluster = rng.below_usize(n_clusters);
+        let class = (cluster % spec.n_classes) as u32;
+        y[s] = class;
+        let centroid = &centroids[cluster];
+        let a = &transforms[cluster];
+        // raw gaussian, transformed by A, shifted to centroid
+        let raw: Vec<f64> = (0..ni).map(|_| rng.normal() as f64).collect();
+        for i in 0..ni {
+            let mut acc = 0.0f64;
+            for k in 0..ni {
+                acc += raw[k] * a[k * ni + i];
+            }
+            informative[i] = centroid[i] + acc;
+        }
+        let row = &mut x[s * nf..(s + 1) * nf];
+        for i in 0..ni {
+            row[i] = informative[i] as f32;
+        }
+        // redundant = informative @ B
+        for r in 0..nr {
+            let mut acc = 0.0f64;
+            for i in 0..ni {
+                acc += informative[i] * mix[i * nr + r];
+            }
+            row[ni + r] = acc as f32;
+        }
+        // probes: pure noise
+        for p in (ni + nr)..nf {
+            row[p] = rng.normal();
+        }
+    }
+
+    // label noise
+    if spec.flip_y > 0.0 {
+        for label in y.iter_mut() {
+            if rng.bernoulli(spec.flip_y) {
+                *label = rng.below(spec.n_classes as u64) as u32;
+            }
+        }
+    }
+
+    // shuffle feature columns so informative ones are hidden
+    if spec.shuffle {
+        let mut perm: Vec<usize> = (0..nf).collect();
+        rng.shuffle(&mut perm);
+        let mut shuffled = vec![0.0f32; n * nf];
+        for s in 0..n {
+            let src = &x[s * nf..(s + 1) * nf];
+            let dst = &mut shuffled[s * nf..(s + 1) * nf];
+            for (new_col, &old_col) in perm.iter().enumerate() {
+                dst[new_col] = src[old_col];
+            }
+        }
+        x = shuffled;
+    }
+
+    Ok((x, y))
+}
+
+/// Z-score standardisation: fit mean/std on train, apply to both splits
+/// (the paper standardises every dataset to zero mean / unit variance).
+pub fn standardize(x_train: &mut [f32], x_test: &mut [f32], n_features: usize) {
+    let n_train = x_train.len() / n_features;
+    if n_train == 0 {
+        return;
+    }
+    let mut mean = vec![0.0f64; n_features];
+    let mut var = vec![0.0f64; n_features];
+    for s in 0..n_train {
+        for f in 0..n_features {
+            mean[f] += x_train[s * n_features + f] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n_train as f64;
+    }
+    for s in 0..n_train {
+        for f in 0..n_features {
+            let d = x_train[s * n_features + f] as f64 - mean[f];
+            var[f] += d * d;
+        }
+    }
+    let inv_std: Vec<f32> = var
+        .iter()
+        .map(|&v| {
+            let std = (v / n_train as f64).sqrt();
+            if std < 1e-12 {
+                0.0
+            } else {
+                (1.0 / std) as f32
+            }
+        })
+        .collect();
+    let apply = |buf: &mut [f32]| {
+        let rows = buf.len() / n_features;
+        for s in 0..rows {
+            for f in 0..n_features {
+                let v = &mut buf[s * n_features + f];
+                *v = (*v - mean[f] as f32) * inv_std[f];
+            }
+        }
+    };
+    apply(x_train);
+    apply(x_test);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let spec = SynthSpec {
+            n_samples: 200,
+            n_features: 30,
+            n_informative: 4,
+            n_redundant: 3,
+            n_classes: 3,
+            ..Default::default()
+        };
+        let (x, y) = make_classification(&spec, &mut Rng::new(1)).unwrap();
+        assert_eq!(x.len(), 200 * 30);
+        assert_eq!(y.len(), 200);
+        assert!(y.iter().all(|&c| c < 3));
+        // all classes present
+        for c in 0..3u32 {
+            assert!(y.iter().any(|&v| v == c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = SynthSpec::default();
+        s.n_informative = 25; // > n_features
+        assert!(s.validate().is_err());
+        let mut s2 = SynthSpec::default();
+        s2.n_classes = 1;
+        assert!(s2.validate().is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SynthSpec::default();
+        let a = make_classification(&spec, &mut Rng::new(5)).unwrap();
+        let b = make_classification(&spec, &mut Rng::new(5)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn classes_are_separable_by_a_linear_probe() {
+        // informative structure must be learnable: train a tiny logistic
+        // regression via our own MLP later; here check class-conditional
+        // means differ significantly in at least one feature.
+        let spec = SynthSpec {
+            n_samples: 600,
+            n_features: 10,
+            n_informative: 4,
+            n_redundant: 0,
+            n_classes: 2,
+            n_clusters_per_class: 1,
+            class_sep: 2.0,
+            flip_y: 0.0,
+            shuffle: false,
+        };
+        let (x, y) = make_classification(&spec, &mut Rng::new(7)).unwrap();
+        let mut best_gap = 0.0f64;
+        for f in 0..4 {
+            let (mut m0, mut m1, mut c0, mut c1) = (0.0f64, 0.0f64, 0usize, 0usize);
+            for s in 0..600 {
+                let v = x[s * 10 + f] as f64;
+                if y[s] == 0 {
+                    m0 += v;
+                    c0 += 1;
+                } else {
+                    m1 += v;
+                    c1 += 1;
+                }
+            }
+            let gap = (m0 / c0 as f64 - m1 / c1 as f64).abs();
+            best_gap = best_gap.max(gap);
+        }
+        assert!(best_gap > 1.0, "gap {best_gap}");
+    }
+
+    #[test]
+    fn flip_y_injects_noise() {
+        let mut spec = SynthSpec {
+            n_samples: 2000,
+            class_sep: 5.0,
+            n_clusters_per_class: 1,
+            shuffle: false,
+            ..Default::default()
+        };
+        spec.flip_y = 0.0;
+        let (_, y_clean) = make_classification(&spec, &mut Rng::new(9)).unwrap();
+        spec.flip_y = 0.3;
+        let (_, y_noisy) = make_classification(&spec, &mut Rng::new(9)).unwrap();
+        let diff = y_clean
+            .iter()
+            .zip(y_noisy.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diff > 100, "diff {diff}");
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut rng = Rng::new(11);
+        let nf = 5;
+        let mut train: Vec<f32> = (0..100 * nf).map(|_| rng.normal() * 3.0 + 7.0).collect();
+        let mut test: Vec<f32> = (0..20 * nf).map(|_| rng.normal() * 3.0 + 7.0).collect();
+        standardize(&mut train, &mut test, nf);
+        for f in 0..nf {
+            let mean: f64 = (0..100).map(|s| train[s * nf + f] as f64).sum::<f64>() / 100.0;
+            let var: f64 =
+                (0..100).map(|s| (train[s * nf + f] as f64 - mean).powi(2)).sum::<f64>() / 100.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn standardize_handles_constant_feature() {
+        let mut train = vec![3.0f32; 10];
+        let mut test = vec![3.0f32; 4];
+        standardize(&mut train, &mut test, 1);
+        assert!(train.iter().all(|&v| v == 0.0));
+        assert!(test.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn madelon_spec_matches_published_recipe() {
+        let s = SynthSpec::madelon(2000);
+        assert_eq!(s.n_features, 500);
+        assert_eq!(s.n_informative, 5);
+        assert_eq!(s.n_redundant, 15);
+        s.validate().unwrap();
+    }
+}

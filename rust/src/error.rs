@@ -1,0 +1,49 @@
+//! Error types for the tsnn crate.
+
+use thiserror::Error;
+
+/// Unified error type across the sparse engine, coordinator and runtime.
+#[derive(Debug, Error)]
+pub enum TsnnError {
+    /// Shape mismatch between tensors / layers.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration value.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Dataset generation / loading problem.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// Sparse-matrix structural invariant violated.
+    #[error("sparse structure error: {0}")]
+    Sparse(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / parallel-training failure.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Checkpoint serialization problems.
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    /// IO wrapper.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, TsnnError>;
+
+impl TsnnError {
+    /// Helper for shape errors with formatted context.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        TsnnError::Shape(msg.into())
+    }
+}

@@ -1,0 +1,249 @@
+//! Neuron importance and Importance Pruning (paper Eq. 4, Algorithm 2).
+//!
+//! Importance of hidden neuron `j` in layer `l` is its *node strength*:
+//! `I_j = Σ_i |w_ij|` over incoming connections. During training (every
+//! `p` epochs after epoch `τ`) all incoming weights of neurons whose
+//! importance falls below a threshold are removed — hubs survive,
+//! redundancy is eliminated, and both memory and epoch time shrink.
+//!
+//! Two modes mirror the paper's evaluation:
+//! * **during-training** ([`prune_low_importance`]) — Algorithm 2, used
+//!   by Table 2 / Table 3 runs;
+//! * **post-training percentile sweep** ([`prune_percentile`]) — the
+//!   §5.3 / Table 6 ablation showing why integration during training wins.
+
+use crate::model::{SparseLayer, SparseMlp};
+
+/// Importance of each output neuron of one layer (Eq. 4).
+pub fn neuron_importance(layer: &SparseLayer) -> Vec<f32> {
+    layer.weights.column_abs_sums()
+}
+
+/// Importance pruning schedule parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ImportanceConfig {
+    /// First epoch at which pruning may run (paper: τ = 200).
+    pub start_epoch: usize,
+    /// Run every `period` epochs after `start_epoch` (paper: p).
+    pub period: usize,
+    /// Neurons below this percentile of the layer's importance
+    /// distribution lose all incoming connections (paper uses an absolute
+    /// threshold t; the percentile form is scale-free and is what the
+    /// §5.3 sweep explores).
+    pub percentile: f64,
+    /// Never prune a layer below this many remaining connections.
+    pub min_connections: usize,
+}
+
+impl Default for ImportanceConfig {
+    fn default() -> Self {
+        ImportanceConfig {
+            start_epoch: 200,
+            period: 40,
+            percentile: 5.0,
+            min_connections: 16,
+        }
+    }
+}
+
+impl ImportanceConfig {
+    /// Whether pruning should run at `epoch` (Algorithm 2's
+    /// `e % p == 0 && e >= τ`).
+    pub fn due(&self, epoch: usize) -> bool {
+        self.period > 0 && epoch >= self.start_epoch && epoch % self.period == 0
+    }
+}
+
+/// The value at the given percentile (0–100) of `xs` (linear selection,
+/// no interpolation — matches numpy's "lower" method).
+pub fn percentile_value(xs: &[f32], pct: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    let idx = ((pct / 100.0) * (v.len() - 1) as f64).floor() as usize;
+    let (_, val, _) = v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    *val
+}
+
+/// Remove all incoming connections of output neurons with importance
+/// `< threshold` on this layer. Returns connections removed.
+///
+/// The *output layer* of a classifier must keep its class neurons, so
+/// callers exclude it (as the paper's Algorithm 2 operates on hidden
+/// units).
+pub fn prune_neurons_below(layer: &mut SparseLayer, threshold: f32) -> usize {
+    let imp = neuron_importance(layer);
+    let cols = layer.weights.col_idx.clone();
+    layer.retain_entries(|k| imp[cols[k] as usize] >= threshold)
+}
+
+/// Percentile-based importance pruning of one layer, with a floor on
+/// remaining connections. Returns connections removed.
+pub fn prune_low_importance(layer: &mut SparseLayer, cfg: &ImportanceConfig) -> usize {
+    if layer.weights.nnz() <= cfg.min_connections {
+        return 0;
+    }
+    let imp = neuron_importance(layer);
+    // only consider neurons that have connections at all
+    let active: Vec<f32> = imp.iter().copied().filter(|&v| v > 0.0).collect();
+    if active.is_empty() {
+        return 0;
+    }
+    let thr = percentile_value(&active, cfg.percentile);
+    let removed = prune_neurons_below(layer, thr);
+    removed
+}
+
+/// During-training importance pruning across hidden layers (all layers
+/// except the final classifier layer's output side).
+pub fn prune_model(mlp: &mut SparseMlp, cfg: &ImportanceConfig) -> usize {
+    let n_layers = mlp.layers.len();
+    let mut removed = 0usize;
+    for (l, layer) in mlp.layers.iter_mut().enumerate() {
+        if l + 1 == n_layers {
+            continue; // never prune class-output neurons
+        }
+        removed += prune_low_importance(layer, cfg);
+    }
+    removed
+}
+
+/// Post-training variant (§5.3 / Table 6): prune every hidden layer at a
+/// fixed percentile once and return (removed, remaining).
+pub fn prune_post_training(mlp: &mut SparseMlp, pct: f64) -> (usize, usize) {
+    let cfg = ImportanceConfig {
+        start_epoch: 0,
+        period: 1,
+        percentile: pct,
+        min_connections: 0,
+    };
+    let removed = prune_model(mlp, &cfg);
+    (removed, mlp.weight_count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::sparse::{CsrMatrix, WeightInit};
+    use crate::util::Rng;
+
+    fn layer_with(vals: Vec<(u32, u32, f32)>, n_in: usize, n_out: usize) -> SparseLayer {
+        let weights = CsrMatrix::from_coo(n_in, n_out, vals).unwrap();
+        let nnz = weights.nnz();
+        SparseLayer {
+            weights,
+            bias: vec![0.0; n_out],
+            velocity: vec![0.0; nnz],
+            bias_velocity: vec![0.0; n_out],
+            activation: Activation::Relu,
+            srelu: None,
+        }
+    }
+
+    #[test]
+    fn importance_is_column_strength() {
+        let l = layer_with(vec![(0, 0, 1.0), (1, 0, -2.0), (0, 1, 0.5)], 2, 3);
+        assert_eq!(neuron_importance(&l), vec![3.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn prune_below_removes_whole_neurons() {
+        let mut l = layer_with(
+            vec![(0, 0, 1.0), (1, 0, -2.0), (0, 1, 0.5), (1, 1, 0.1)],
+            2,
+            2,
+        );
+        // importances: col0 = 3.0, col1 = 0.6
+        let removed = prune_neurons_below(&mut l, 1.0);
+        assert_eq!(removed, 2);
+        assert_eq!(l.weights.column_counts(), vec![2, 0]);
+    }
+
+    #[test]
+    fn percentile_value_selects() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile_value(&xs, 0.0), 1.0);
+        assert_eq!(percentile_value(&xs, 100.0), 5.0);
+        assert_eq!(percentile_value(&xs, 50.0), 3.0);
+        assert_eq!(percentile_value(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn schedule_due() {
+        let cfg = ImportanceConfig {
+            start_epoch: 200,
+            period: 40,
+            ..Default::default()
+        };
+        assert!(!cfg.due(199));
+        assert!(cfg.due(200));
+        assert!(!cfg.due(201));
+        assert!(cfg.due(240));
+    }
+
+    #[test]
+    fn min_connections_floor_holds() {
+        let mut rng = Rng::new(1);
+        let mut l = SparseLayer::erdos_renyi(
+            10,
+            10,
+            1.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        );
+        let cfg = ImportanceConfig {
+            min_connections: usize::MAX,
+            ..Default::default()
+        };
+        assert_eq!(prune_low_importance(&mut l, &cfg), 0);
+    }
+
+    #[test]
+    fn prune_model_spares_output_layer() {
+        let mut rng = Rng::new(2);
+        let mut mlp = SparseMlp::new(
+            &[30, 40, 40, 5],
+            6.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        let out_nnz = mlp.layers[2].weights.nnz();
+        let cfg = ImportanceConfig {
+            start_epoch: 0,
+            period: 1,
+            percentile: 25.0,
+            min_connections: 0,
+        };
+        let removed = prune_model(&mut mlp, &cfg);
+        assert!(removed > 0);
+        assert_eq!(mlp.layers[2].weights.nnz(), out_nnz);
+        for l in &mlp.layers {
+            l.weights.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn post_training_sweep_monotone() {
+        let mut rng = Rng::new(3);
+        let base = SparseMlp::new(
+            &[50, 60, 60, 4],
+            8.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        let mut prev_remaining = usize::MAX;
+        for pct in [5.0, 10.0, 15.0, 20.0, 25.0] {
+            let mut m = base.clone();
+            let (_, remaining) = prune_post_training(&mut m, pct);
+            assert!(remaining <= prev_remaining, "pct {pct}");
+            prev_remaining = remaining;
+        }
+    }
+}

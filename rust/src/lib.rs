@@ -1,0 +1,45 @@
+//! # tsnn — Truly Sparse Neural Networks at Scale
+//!
+//! A Rust + JAX + Pallas reproduction of *"Truly Sparse Neural Networks
+//! at Scale"* (Curci, Mocanu, Pechenizkiy, 2021): a truly-sparse (CSR,
+//! never-dense) training engine with the paper's three contributions —
+//! **WASAP-SGD** parallel training, the **All-ReLU** activation, and
+//! **Importance Pruning** — plus the SET dynamic-sparse-training
+//! substrate, synthetic dataset generators, a PJRT runtime for the
+//! masked-dense comparator, and bench harnesses regenerating every table
+//! and figure of the paper's evaluation.
+//!
+//! ## Layer map (see DESIGN.md)
+//! - L3: this crate — coordinator, sparse engine, datasets, CLI.
+//! - L2: `python/compile/model.py` — masked-dense MLP, AOT-lowered to
+//!   HLO text in `artifacts/`, executed via [`runtime`].
+//! - L1: `python/compile/kernels/` — Pallas masked-matmul + fused
+//!   All-ReLU kernel, folded into the L2 artifacts.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gradflow;
+pub mod importance;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod set;
+pub mod sparse;
+pub mod train;
+pub mod util;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{DatasetSpec, TrainConfig};
+    pub use crate::data::datasets;
+    pub use crate::error::{Result, TsnnError};
+    pub use crate::model::{Batcher, SparseLayer, SparseMlp, Workspace};
+    pub use crate::nn::{Activation, Dropout, LrSchedule, MomentumSgd};
+    pub use crate::sparse::{CsrMatrix, WeightInit};
+    pub use crate::train::{train_sequential, TrainReport};
+    pub use crate::util::Rng;
+}

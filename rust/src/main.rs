@@ -1,0 +1,313 @@
+//! `tsnn` — CLI launcher for the truly-sparse training framework.
+//!
+//! Subcommands:
+//!   datasets                         print the dataset inventory (Table 1)
+//!   train <dataset> [k=v ...]        sequential SET training (§2.2)
+//!   parallel <dataset> [k=v ...]     WASAP/WASSP parallel training (§2.3)
+//!   baseline <arch> [k=v ...]        masked-dense XLA baseline ("Keras")
+//!   inspect <checkpoint>             print a checkpoint's structure
+//!
+//! Common options: --paper (full paper-scale dataset), --seed N,
+//! --save PATH, --workers K, --sync, --phase1 N, --phase2 N, --verbose.
+
+use tsnn::bench::fmt_duration;
+use tsnn::cli::Args;
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::coordinator::{run_parallel, ParallelConfig};
+use tsnn::data::datasets;
+use tsnn::error::{Result, TsnnError};
+use tsnn::prelude::Rng;
+use tsnn::runtime::{default_artifacts_dir, Manifest, MaskedDenseTrainer};
+use tsnn::train::{train_sequential_opts, TrainOptions};
+use tsnn::util::logging;
+
+const DATASETS: &[&str] = &["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme"];
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "datasets" => cmd_datasets(args),
+        "train" => cmd_train(args),
+        "parallel" => cmd_parallel(args),
+        "baseline" => cmd_baseline(args),
+        "inspect" => cmd_inspect(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(TsnnError::Config(format!(
+            "unknown subcommand '{other}' (try 'tsnn help')"
+        ))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "tsnn — Truly Sparse Neural Networks at Scale (reproduction)\n\n\
+         usage: tsnn <subcommand> [args]\n\n\
+         subcommands:\n\
+         \x20 datasets                      dataset inventory (Table 1)\n\
+         \x20 train <dataset> [k=v ...]     sequential SET training\n\
+         \x20 parallel <dataset> [k=v ...]  WASAP/WASSP parallel training\n\
+         \x20 baseline <arch> [k=v ...]     masked-dense XLA baseline\n\
+         \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\n\
+         options: --paper --seed N --save PATH --workers K --sync\n\
+         \x20        --phase1 N --phase2 N --verbose --gradflow N\n\
+         overrides: epochs= batch= epsilon= lr= alpha= activation= init=\n\
+         \x20          hidden=AxBxC zeta= dropout= importance=on|off ...\n\
+         datasets: {DATASETS:?}"
+    );
+}
+
+fn dataset_spec(args: &Args, name: &str) -> DatasetSpec {
+    if args.flag("paper") {
+        DatasetSpec::paper(name)
+    } else {
+        DatasetSpec::small(name)
+    }
+}
+
+fn build_config(args: &Args, dataset: &str) -> Result<TrainConfig> {
+    let mut cfg = if args.flag("paper") {
+        TrainConfig::paper_preset(dataset)
+    } else {
+        TrainConfig::small_preset(dataset)
+    };
+    if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path)?;
+        cfg.apply_file(&text)?;
+    }
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    if let Some(seed) = args.opt("seed") {
+        cfg.set("seed", seed)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    let mut table = tsnn::bench::Table::new(
+        "Table 1 — dataset inventory",
+        &["dataset", "domain", "features", "train", "test", "classes", "size"],
+    );
+    let domains = [
+        ("leukemia", "microarray (synthetic)"),
+        ("higgs", "physics (synthetic)"),
+        ("madelon", "artificial (Guyon)"),
+        ("fashion", "images (synthetic)"),
+        ("cifar", "RGB images (synthetic)"),
+        ("extreme", "big artificial (§2.4)"),
+    ];
+    for (name, domain) in domains {
+        let spec = dataset_spec(args, name);
+        let mib = (spec.n_train + spec.n_test) as f64 * spec.n_features as f64 * 4.0
+            / (1024.0 * 1024.0);
+        table.row(vec![
+            name.into(),
+            domain.into(),
+            spec.n_features.to_string(),
+            spec.n_train.to_string(),
+            spec.n_test.to_string(),
+            spec.n_classes.to_string(),
+            format!("{mib:.0} MiB"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = args
+        .positional
+        .first()
+        .ok_or_else(|| TsnnError::Config("train needs a dataset name".into()))?;
+    let spec = dataset_spec(args, dataset);
+    let cfg = build_config(args, dataset)?;
+    let mut rng = Rng::new(cfg.seed);
+    log::info!(
+        "generating {} ({} features, {} train)",
+        spec.name,
+        spec.n_features,
+        spec.n_train
+    );
+    let data = datasets::generate(&spec, &mut rng)?;
+    let opts = TrainOptions {
+        gradflow_every: args.opt_parse("gradflow", 0usize)?,
+        verbose: args.flag("verbose"),
+    };
+    log::info!(
+        "training {:?} ε={} act={:?} epochs={}",
+        cfg.sizes(data.n_features, data.n_classes),
+        cfg.epsilon,
+        cfg.activation,
+        cfg.epochs
+    );
+    let report = train_sequential_opts(&cfg, &data, &mut rng, opts)?;
+    println!(
+        "dataset={} best_test_acc={:.4} final_test_acc={:.4} start_w={} end_w={} train_time={}",
+        spec.name,
+        report.best_test_accuracy,
+        report.final_test_accuracy,
+        report.start_weights,
+        report.end_weights,
+        fmt_duration(report.phases.get("train"))
+    );
+    for (phase, secs) in report.phases.iter() {
+        println!("  phase {phase:<12} {}", fmt_duration(secs));
+    }
+    if let Some(path) = args.opt("save") {
+        tsnn::model::checkpoint::save(&report.model, std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    if let Some(path) = args.opt("curves") {
+        std::fs::write(path, report.curves_csv())?;
+        println!("curves written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_parallel(args: &Args) -> Result<()> {
+    let dataset = args
+        .positional
+        .first()
+        .ok_or_else(|| TsnnError::Config("parallel needs a dataset name".into()))?;
+    let spec = dataset_spec(args, dataset);
+    let cfg = build_config(args, dataset)?;
+    let pcfg = ParallelConfig {
+        workers: args.opt_parse("workers", 5usize)?,
+        phase1_epochs: args
+            .opt_parse("phase1", cfg.epochs.saturating_sub(cfg.epochs / 5).max(1))?,
+        phase2_epochs: args.opt_parse("phase2", (cfg.epochs / 5).max(1))?,
+        synchronous: args.flag("sync"),
+            hot_start: true,
+            grad_clip: 5.0,
+        };
+    let mut rng = Rng::new(cfg.seed);
+    let data = datasets::generate(&spec, &mut rng)?;
+    log::info!(
+        "{} with {} workers (phase1={} phase2={})",
+        if pcfg.synchronous { "WASSP-SGD" } else { "WASAP-SGD" },
+        pcfg.workers,
+        pcfg.phase1_epochs,
+        pcfg.phase2_epochs
+    );
+    let report = run_parallel(&cfg, &pcfg, &data, &mut rng)?;
+    println!(
+        "dataset={} algo={} workers={} phase1_acc={:.4} final_acc={:.4} \
+         steps={} mean_staleness={:.2} dropped={} time={}",
+        spec.name,
+        if pcfg.synchronous { "WASSP" } else { "WASAP" },
+        pcfg.workers,
+        report.phase1_test_accuracy,
+        report.final_test_accuracy,
+        report.server_stats.steps,
+        report.server_stats.mean_staleness,
+        report.server_stats.dropped_entries,
+        fmt_duration(report.phases.get("phase1") + report.phases.get("phase2"))
+    );
+    if let Some(path) = args.opt("save") {
+        tsnn::model::checkpoint::save(&report.model, std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let arch_name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("small");
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let arch = manifest
+        .get(arch_name)
+        .ok_or_else(|| TsnnError::Config(format!("unknown architecture '{arch_name}'")))?;
+    let epochs: usize = args.opt_parse("epochs", 3usize)?;
+    let epsilon: f64 = args.opt_parse("epsilon", 10.0f64)?;
+    let lr: f32 = args.opt_parse("lr", 0.01f32)?;
+    let seed: u64 = args.opt_parse("seed", 42u64)?;
+
+    // dataset shaped to the architecture
+    let spec = DatasetSpec {
+        name: format!("synthetic-for-{arch_name}"),
+        generator: "madelon".into(),
+        n_features: arch.sizes[0],
+        n_classes: *arch.sizes.last().unwrap(),
+        n_train: args.opt_parse("train", 2048usize)?,
+        n_test: args.opt_parse("test", 512usize)?,
+    };
+    let mut rng = Rng::new(seed);
+    let mut data = datasets::generate(&spec, &mut rng)?;
+    // madelon generator is binary; fold labels into the arch's class count
+    let nc = spec.n_classes as u32;
+    for (i, y) in data.y_train.iter_mut().enumerate() {
+        *y = (*y + (i as u32 % nc)) % nc;
+    }
+    for (i, y) in data.y_test.iter_mut().enumerate() {
+        *y = (*y + (i as u32 % nc)) % nc;
+    }
+
+    log::info!("masked-dense baseline: arch={arch_name} epochs={epochs}");
+    let mut trainer = MaskedDenseTrainer::new(arch, epsilon, &mut rng)?;
+    println!(
+        "arch={} dense_memory={} KiB nnz={}",
+        arch_name,
+        trainer.memory_bytes() / 1024,
+        trainer.nnz()
+    );
+    for e in 0..epochs {
+        let ep = trainer.train_epoch(&data, lr, &mut rng)?;
+        trainer.evolve(0.3, &mut rng);
+        println!(
+            "epoch {e}: loss={:.4} acc={:.4} ({})",
+            ep.loss,
+            ep.accuracy,
+            fmt_duration(ep.seconds)
+        );
+    }
+    let acc = trainer.evaluate(&data)?;
+    println!("baseline test accuracy: {acc:.4}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| TsnnError::Config("inspect needs a checkpoint path".into()))?;
+    let model = tsnn::model::checkpoint::load(std::path::Path::new(path))?;
+    println!("sizes: {:?}", model.sizes);
+    println!("neurons: {}", model.neuron_count());
+    println!("weights: {}", model.weight_count());
+    println!("memory: {} KiB", model.memory_bytes() / 1024);
+    for (l, layer) in model.layers.iter().enumerate() {
+        println!(
+            "  layer {l}: {}x{} nnz={} density={:.4} act={:?}",
+            layer.n_in(),
+            layer.n_out(),
+            layer.weights.nnz(),
+            layer.weights.density(),
+            layer.activation
+        );
+    }
+    Ok(())
+}

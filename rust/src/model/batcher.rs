@@ -1,0 +1,149 @@
+//! Mini-batch iteration with per-epoch shuffling.
+//!
+//! Workers own disjoint shards of the training set (data parallelism);
+//! each worker re-shuffles its shard between local epochs, exactly as in
+//! Algorithm 1 ("Each worker shuffles its data partition after each
+//! local epoch").
+
+use crate::util::Rng;
+
+/// Indexes a dataset into shuffled mini-batches; gathers rows into a
+/// reused contiguous buffer.
+#[derive(Debug)]
+pub struct Batcher {
+    order: Vec<usize>,
+    batch: usize,
+    n_features: usize,
+    cursor: usize,
+    xbuf: Vec<f32>,
+    ybuf: Vec<u32>,
+}
+
+impl Batcher {
+    /// Batcher over `n` samples of `n_features` each.
+    pub fn new(n: usize, n_features: usize, batch: usize) -> Self {
+        assert!(batch > 0);
+        Batcher {
+            order: (0..n).collect(),
+            batch,
+            n_features,
+            cursor: 0,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        }
+    }
+
+    /// Restrict to a shard: samples `[lo, hi)` of the dataset (used by
+    /// parallel workers).
+    pub fn shard(n: usize, n_features: usize, batch: usize, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= n);
+        Batcher {
+            order: (lo..hi).collect(),
+            batch,
+            n_features,
+            cursor: 0,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        }
+    }
+
+    /// Samples in this batcher's (shard of the) dataset.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    /// True when no samples.
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Batches per epoch (ceil).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch)
+    }
+
+    /// Shuffle and rewind (start of epoch).
+    pub fn reset(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next mini-batch gathered from `x`/`y`, or None at epoch end.
+    /// Returned slices are valid until the next call.
+    pub fn next_batch<'a>(
+        &'a mut self,
+        x: &[f32],
+        y: &[u32],
+    ) -> Option<(&'a [f32], &'a [u32])> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let end = (self.cursor + self.batch).min(self.order.len());
+        let idxs = &self.order[self.cursor..end];
+        let nf = self.n_features;
+        self.xbuf.clear();
+        self.xbuf.reserve(idxs.len() * nf);
+        self.ybuf.clear();
+        for &i in idxs {
+            self.xbuf.extend_from_slice(&x[i * nf..(i + 1) * nf]);
+            self.ybuf.push(y[i]);
+        }
+        self.cursor = end;
+        Some((&self.xbuf, &self.ybuf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_sample_once() {
+        let n = 23;
+        let x: Vec<f32> = (0..n * 2).map(|v| v as f32).collect();
+        let y: Vec<u32> = (0..n as u32).collect();
+        let mut b = Batcher::new(n, 2, 5);
+        b.reset(&mut Rng::new(1));
+        let mut seen = Vec::new();
+        while let Some((_, ys)) = b.next_batch(&x, &y) {
+            seen.extend_from_slice(ys);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gathers_matching_rows() {
+        let x = vec![10.0, 11.0, 20.0, 21.0, 30.0, 31.0];
+        let y = vec![1u32, 2, 3];
+        let mut b = Batcher::new(3, 2, 2);
+        b.reset(&mut Rng::new(2));
+        while let Some((xs, ys)) = b.next_batch(&x, &y) {
+            for (k, &label) in ys.iter().enumerate() {
+                assert_eq!(xs[k * 2], label as f32 * 10.0);
+                assert_eq!(xs[k * 2 + 1], label as f32 * 10.0 + 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_restricts_indices() {
+        let mut b = Batcher::shard(10, 1, 3, 4, 8);
+        assert_eq!(b.len(), 4);
+        let x: Vec<f32> = (0..10).map(|v| v as f32).collect();
+        let y: Vec<u32> = (0..10).collect();
+        b.reset(&mut Rng::new(3));
+        let mut seen = Vec::new();
+        while let Some((_, ys)) = b.next_batch(&x, &y) {
+            seen.extend_from_slice(ys);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn batches_per_epoch_rounds_up() {
+        assert_eq!(Batcher::new(10, 1, 3).batches_per_epoch(), 4);
+        assert_eq!(Batcher::new(9, 1, 3).batches_per_epoch(), 3);
+    }
+}

@@ -1,0 +1,262 @@
+//! Sparse checkpoint format: save/load a [`SparseMlp`] without ever
+//! materialising dense weights.
+//!
+//! Layout (little-endian):
+//!   magic "TSNN" | version u32 | json header length u32 | json header |
+//!   per layer: row_ptr (u64s), col_idx (u32s), values (f32s),
+//!              bias (f32s), velocity (f32s), bias_velocity (f32s)
+//!
+//! The JSON header carries sizes, activations and nnz counts so a loader
+//! can pre-validate before touching the bulk arrays.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Result, TsnnError};
+use crate::nn::Activation;
+use crate::sparse::CsrMatrix;
+use crate::util::json::{self, Json};
+
+use super::layer::SparseLayer;
+use super::mlp::SparseMlp;
+
+const MAGIC: &[u8; 4] = b"TSNN";
+const VERSION: u32 = 1;
+
+fn act_name(a: &Activation) -> String {
+    match a {
+        Activation::Relu => "relu".into(),
+        Activation::LeakyRelu { alpha } => format!("lrelu:{alpha}"),
+        Activation::AllRelu { alpha } => format!("allrelu:{alpha}"),
+        Activation::Linear => "linear".into(),
+    }
+}
+
+/// Save a model to `path`.
+pub fn save(mlp: &SparseMlp, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+
+    let header = json::obj(vec![
+        (
+            "sizes",
+            Json::Arr(mlp.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        (
+            "activations",
+            Json::Arr(
+                mlp.layers
+                    .iter()
+                    .map(|l| Json::Str(act_name(&l.activation)))
+                    .collect(),
+            ),
+        ),
+        (
+            "nnz",
+            Json::Arr(
+                mlp.layers
+                    .iter()
+                    .map(|l| Json::Num(l.weights.nnz() as f64))
+                    .collect(),
+            ),
+        ),
+    ]);
+    let hbytes = header.dump().into_bytes();
+    w.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+    w.write_all(&hbytes)?;
+
+    for layer in &mlp.layers {
+        for &p in &layer.weights.row_ptr {
+            w.write_all(&(p as u64).to_le_bytes())?;
+        }
+        for &c in &layer.weights.col_idx {
+            w.write_all(&c.to_le_bytes())?;
+        }
+        for &v in &layer.weights.values {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &b in &layer.bias {
+            w.write_all(&b.to_le_bytes())?;
+        }
+        for &v in &layer.velocity {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &v in &layer.bias_velocity {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_exact4(r: &mut impl Read) -> Result<[u8; 4]> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(b)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_exact4(r)?))
+}
+
+fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u64_vec(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
+    let mut buf = vec![0u8; n * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Load a model from `path`.
+pub fn load(path: &Path) -> Result<SparseMlp> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let magic = read_exact4(&mut r)?;
+    if &magic != MAGIC {
+        return Err(TsnnError::Checkpoint("bad magic".into()));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(TsnnError::Checkpoint(format!("unsupported version {version}")));
+    }
+    let hlen = read_u32(&mut r)? as usize;
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes)?;
+    let header = json::parse(
+        std::str::from_utf8(&hbytes).map_err(|_| TsnnError::Checkpoint("header utf8".into()))?,
+    )
+    .map_err(TsnnError::Checkpoint)?;
+
+    let sizes: Vec<usize> = header
+        .get("sizes")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| TsnnError::Checkpoint("missing sizes".into()))?
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+    let acts: Vec<Activation> = header
+        .get("activations")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| TsnnError::Checkpoint("missing activations".into()))?
+        .iter()
+        .filter_map(|v| v.as_str().and_then(Activation::parse))
+        .collect();
+    let nnzs: Vec<usize> = header
+        .get("nnz")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| TsnnError::Checkpoint("missing nnz".into()))?
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect();
+    let n_layers = sizes.len().saturating_sub(1);
+    if acts.len() != n_layers || nnzs.len() != n_layers || n_layers == 0 {
+        return Err(TsnnError::Checkpoint("inconsistent header".into()));
+    }
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let (n_in, n_out) = (sizes[l], sizes[l + 1]);
+        let nnz = nnzs[l];
+        let row_ptr: Vec<usize> = read_u64_vec(&mut r, n_in + 1)?
+            .into_iter()
+            .map(|v| v as usize)
+            .collect();
+        let col_idx = read_u32_vec(&mut r, nnz)?;
+        let values = read_f32_vec(&mut r, nnz)?;
+        let bias = read_f32_vec(&mut r, n_out)?;
+        let velocity = read_f32_vec(&mut r, nnz)?;
+        let bias_velocity = read_f32_vec(&mut r, n_out)?;
+        let weights = CsrMatrix {
+            n_rows: n_in,
+            n_cols: n_out,
+            row_ptr,
+            col_idx,
+            values,
+        };
+        weights
+            .validate()
+            .map_err(|e| TsnnError::Checkpoint(format!("layer {l}: {e}")))?;
+        layers.push(SparseLayer {
+            weights,
+            bias,
+            velocity,
+            bias_velocity,
+            activation: acts[l],
+            srelu: None,
+        });
+    }
+    Ok(SparseMlp { sizes, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::WeightInit;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Rng::new(42);
+        let mut mlp = SparseMlp::new(
+            &[10, 20, 5],
+            4.0,
+            Activation::AllRelu { alpha: 0.75 },
+            &WeightInit::Xavier,
+            &mut rng,
+        )
+        .unwrap();
+        // make state non-trivial
+        for l in &mut mlp.layers {
+            for (i, v) in l.velocity.iter_mut().enumerate() {
+                *v = i as f32 * 0.1;
+            }
+            for (i, b) in l.bias.iter_mut().enumerate() {
+                *b = i as f32;
+            }
+        }
+        let dir = std::env::temp_dir().join("tsnn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.tsnn");
+        save(&mlp, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.sizes, mlp.sizes);
+        for (a, b) in loaded.layers.iter().zip(mlp.layers.iter()) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.velocity, b.velocity);
+            assert_eq!(a.activation, b.activation);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("tsnn_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tsnn");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,180 @@
+//! A sparsely-connected layer: CSR weights + bias + aligned optimizer
+//! state + activation.
+
+use crate::nn::{remap_aligned, Activation, MomentumSgd, SRelu};
+use crate::sparse::{erdos_renyi_epsilon, CsrMatrix, WeightInit};
+use crate::util::Rng;
+
+/// One sparse layer of the MLP (`n_in × n_out` CSR weights).
+#[derive(Debug, Clone)]
+pub struct SparseLayer {
+    /// Sparse weights, rows = inputs.
+    pub weights: CsrMatrix,
+    /// Bias per output neuron.
+    pub bias: Vec<f32>,
+    /// Momentum velocity aligned with `weights.values`.
+    pub velocity: Vec<f32>,
+    /// Momentum velocity for biases.
+    pub bias_velocity: Vec<f32>,
+    /// Element-wise activation (ignored when `srelu` is set).
+    pub activation: Activation,
+    /// Optional trainable SReLU (the comparator activation).
+    pub srelu: Option<SRelu>,
+}
+
+impl SparseLayer {
+    /// Erdős–Rényi-initialised layer with the SET ε sparsity knob.
+    pub fn erdos_renyi(
+        n_in: usize,
+        n_out: usize,
+        epsilon: f64,
+        activation: Activation,
+        init: &WeightInit,
+        rng: &mut Rng,
+    ) -> Self {
+        let weights = erdos_renyi_epsilon(n_in, n_out, epsilon, rng, init);
+        let nnz = weights.nnz();
+        SparseLayer {
+            weights,
+            bias: vec![0.0; n_out],
+            velocity: vec![0.0; nnz],
+            bias_velocity: vec![0.0; n_out],
+            activation,
+            srelu: None,
+        }
+    }
+
+    /// Input dimension.
+    pub fn n_in(&self) -> usize {
+        self.weights.n_rows
+    }
+
+    /// Output dimension.
+    pub fn n_out(&self) -> usize {
+        self.weights.n_cols
+    }
+
+    /// Trainable parameter count (weights + biases + SReLU params).
+    pub fn param_count(&self) -> usize {
+        self.weights.nnz()
+            + self.bias.len()
+            + self.srelu.as_ref().map(|s| s.param_count()).unwrap_or(0)
+    }
+
+    /// Apply the optimizer to this layer's weights and biases.
+    pub fn apply_update(
+        &mut self,
+        opt: &MomentumSgd,
+        grad_w: &[f32],
+        grad_b: &[f32],
+        lr: f32,
+    ) {
+        opt.update(&mut self.weights.values, grad_w, &mut self.velocity, lr);
+        opt.update_bias(&mut self.bias, grad_b, &mut self.bias_velocity, lr);
+    }
+
+    /// Rebuild aligned state after a structural change described by
+    /// `old_index_of_new` (see [`remap_aligned`]). New links start with
+    /// zero velocity.
+    pub fn remap_state(&mut self, old_index_of_new: &[Option<usize>]) {
+        self.velocity = remap_aligned(&self.velocity, old_index_of_new, 0.0);
+        debug_assert_eq!(self.velocity.len(), self.weights.nnz());
+    }
+
+    /// Drop entries by storage index predicate, keeping velocity aligned.
+    /// Returns number of removed entries.
+    pub fn retain_entries(&mut self, keep: impl FnMut(usize) -> bool) -> usize {
+        let before = self.weights.nnz();
+        let kept = self.weights.retain(keep);
+        self.velocity = kept.iter().map(|&k| self.velocity[k]).collect();
+        before - self.weights.nnz()
+    }
+
+    /// Insert new links (currently-empty positions), giving them zero
+    /// velocity and the provided weight values.
+    pub fn insert_entries(&mut self, additions: Vec<(u32, u32, f32)>) -> crate::error::Result<()> {
+        let n_add = additions.len();
+        let old_to_new = self.weights.insert(additions)?;
+        let mut vel = vec![0.0f32; self.weights.nnz()];
+        for (old, &new) in old_to_new.iter().enumerate() {
+            vel[new] = self.velocity[old];
+        }
+        self.velocity = vel;
+        debug_assert_eq!(self.weights.nnz(), old_to_new.len() + n_add);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> SparseLayer {
+        let mut rng = Rng::new(1);
+        SparseLayer::erdos_renyi(
+            20,
+            10,
+            3.0,
+            Activation::AllRelu { alpha: 0.6 },
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn construction_invariants() {
+        let l = layer();
+        l.weights.validate().unwrap();
+        assert_eq!(l.velocity.len(), l.weights.nnz());
+        assert_eq!(l.bias.len(), 10);
+        assert!(l.param_count() >= l.weights.nnz() + 10);
+    }
+
+    #[test]
+    fn retain_keeps_velocity_aligned() {
+        let mut l = layer();
+        for (i, v) in l.velocity.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let vals = l.weights.values.clone();
+        let removed = l.retain_entries(|k| vals[k] > 0.0);
+        assert!(removed > 0);
+        assert_eq!(l.velocity.len(), l.weights.nnz());
+        // the surviving velocities must still be integers < original nnz
+        for &v in &l.velocity {
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn insert_preserves_velocity_of_existing() {
+        let mut l = layer();
+        for (i, v) in l.velocity.iter_mut().enumerate() {
+            *v = (i + 1) as f32;
+        }
+        // find an empty slot
+        let mut empty = None;
+        'outer: for i in 0..l.n_in() {
+            for j in 0..l.n_out() as u32 {
+                if l.weights.find(i, j).is_none() {
+                    empty = Some((i as u32, j));
+                    break 'outer;
+                }
+            }
+        }
+        let (i, j) = empty.unwrap();
+        let old_sum: f32 = l.velocity.iter().sum();
+        l.insert_entries(vec![(i, j, 0.123)]).unwrap();
+        assert_eq!(l.weights.get(i as usize, j), 0.123);
+        let new_sum: f32 = l.velocity.iter().sum();
+        assert_eq!(old_sum, new_sum); // inserted entry has zero velocity
+    }
+
+    #[test]
+    fn srelu_counts_in_params() {
+        let mut l = layer();
+        let base = l.param_count();
+        l.srelu = Some(SRelu::new(10));
+        assert_eq!(l.param_count(), base + 40);
+    }
+}

@@ -1,0 +1,518 @@
+//! The truly-sparse multilayer perceptron: forward, backward, train step.
+//!
+//! All buffers live in a reusable [`Workspace`] so the steady-state epoch
+//! loop performs no allocation — one of the §Perf items. The backward
+//! pass produces weight gradients *only on existing links* (aligned with
+//! each layer's CSR values), which is the memory property that separates
+//! truly-sparse training from masked-dense training.
+
+use crate::error::{Result, TsnnError};
+use crate::nn::{accuracy, softmax_cross_entropy, Activation, Dropout, MomentumSgd};
+use crate::sparse::{ops, WeightInit};
+use crate::util::Rng;
+
+use super::layer::SparseLayer;
+
+/// Sparse MLP: `sizes[0] → sizes[1] → … → sizes[L]` with sparse layers.
+#[derive(Debug, Clone)]
+pub struct SparseMlp {
+    /// Layer dimensions (length L+1).
+    pub sizes: Vec<usize>,
+    /// The L sparse layers.
+    pub layers: Vec<SparseLayer>,
+}
+
+/// Reusable buffers for forward/backward over a fixed max batch size.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Pre-activations per layer: pre[l] is [batch, sizes[l+1]].
+    pub pre: Vec<Vec<f32>>,
+    /// Post-activations: act[l] is the input to layer l; act[0] = x copy.
+    pub act: Vec<Vec<f32>>,
+    /// Logits gradient / layer delta buffers (double-buffered).
+    delta_a: Vec<f32>,
+    delta_b: Vec<f32>,
+    /// Aligned weight gradients per layer.
+    pub grad_w: Vec<Vec<f32>>,
+    /// Bias gradients per layer.
+    pub grad_b: Vec<Vec<f32>>,
+    /// Dropout masks per hidden layer.
+    drop_masks: Vec<Vec<f32>>,
+    /// SReLU parameter gradients per layer (None for fixed activations).
+    pub srelu_grads: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    /// Loss-gradient buffer (reused across steps; §Perf change 4).
+    dlogits: Vec<f32>,
+}
+
+/// One train-step report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    /// Mean batch loss.
+    pub loss: f32,
+    /// Batch accuracy.
+    pub accuracy: f32,
+    /// Σ‖∇‖² across all weight/bias gradients (the gradient-flow metric
+    /// of Fig. 5: first-order expected loss decrease per unit lr).
+    pub grad_norm_sq: f32,
+}
+
+impl SparseMlp {
+    /// Construct with Erdős–Rényi layers at SET ε, shared activation for
+    /// hidden layers and linear output.
+    pub fn new(
+        sizes: &[usize],
+        epsilon: f64,
+        activation: Activation,
+        init: &WeightInit,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        if sizes.len() < 2 {
+            return Err(TsnnError::Config("need at least input+output sizes".into()));
+        }
+        let n_layers = sizes.len() - 1;
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let act = if l + 1 == n_layers {
+                Activation::Linear
+            } else {
+                activation
+            };
+            layers.push(SparseLayer::erdos_renyi(
+                sizes[l],
+                sizes[l + 1],
+                epsilon,
+                act,
+                init,
+                rng,
+            ));
+        }
+        Ok(SparseMlp {
+            sizes: sizes.to_vec(),
+            layers,
+        })
+    }
+
+    /// Number of layers (connections matrices).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Output classes.
+    pub fn n_classes(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Total trainable parameters (the paper's `n^W` columns).
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Total stored weights (excluding biases).
+    pub fn weight_count(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.nnz()).sum()
+    }
+
+    /// Total neurons (the paper's headline scale metric).
+    pub fn neuron_count(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Bytes of weight storage (CSR arrays + biases + velocities).
+    pub fn memory_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.weights.memory_bytes() + 4 * (l.bias.len() * 2 + l.velocity.len()))
+            .sum()
+    }
+
+    /// Size a workspace for `batch` samples.
+    pub fn alloc_workspace(&self, batch: usize) -> Workspace {
+        let mut ws = Workspace::default();
+        self.resize_workspace(&mut ws, batch);
+        ws
+    }
+
+    /// (Re)size an existing workspace; no-op when already the right size.
+    pub fn resize_workspace(&self, ws: &mut Workspace, batch: usize) {
+        let n_layers = self.n_layers();
+        ws.pre.resize(n_layers, Vec::new());
+        ws.act.resize(n_layers + 1, Vec::new());
+        ws.grad_w.resize(n_layers, Vec::new());
+        ws.grad_b.resize(n_layers, Vec::new());
+        ws.drop_masks.resize(n_layers, Vec::new());
+        ws.srelu_grads.resize(n_layers, None);
+        ws.act[0].resize(batch * self.sizes[0], 0.0);
+        let max_width = self.sizes.iter().max().copied().unwrap_or(0);
+        ws.delta_a.resize(batch * max_width, 0.0);
+        ws.delta_b.resize(batch * max_width, 0.0);
+        for (l, layer) in self.layers.iter().enumerate() {
+            ws.pre[l].resize(batch * layer.n_out(), 0.0);
+            ws.act[l + 1].resize(batch * layer.n_out(), 0.0);
+            ws.grad_w[l].resize(layer.weights.nnz(), 0.0);
+            ws.grad_b[l].resize(layer.n_out(), 0.0);
+        }
+    }
+
+    /// Forward pass over a batch. When `dropout` is set (training mode),
+    /// hidden activations are dropped with the recorded masks kept for
+    /// backward. Returns a reference to the logits buffer.
+    pub fn forward<'w>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        ws: &'w mut Workspace,
+        dropout: Option<(&Dropout, &mut Rng)>,
+    ) -> &'w [f32] {
+        debug_assert_eq!(x.len(), batch * self.sizes[0]);
+        self.resize_workspace(ws, batch);
+        ws.act[0].copy_from_slice(x);
+        let n_layers = self.n_layers();
+        let mut drop = dropout;
+        for (l, layer) in self.layers.iter().enumerate() {
+            let n_out = layer.n_out();
+            // z = x W + b  (bias folded into the zero-init pass)
+            {
+                // `act` and `pre` are disjoint fields, so the split borrow
+                // is safe and allocation-free.
+                let (act, pre) = (&ws.act, &mut ws.pre);
+                let pre_l = &mut pre[l];
+                for b in 0..batch {
+                    pre_l[b * n_out..(b + 1) * n_out].copy_from_slice(&layer.bias);
+                }
+                ops::spmm_forward(&act[l], batch, &layer.weights, pre_l);
+            }
+            // activation into act[l+1]
+            ws.act[l + 1].copy_from_slice(&ws.pre[l]);
+            if let Some(srelu) = &layer.srelu {
+                srelu.apply(&mut ws.act[l + 1], n_out);
+            } else {
+                layer.activation.apply(&mut ws.act[l + 1], l + 1);
+            }
+            // dropout on hidden layers only
+            ws.drop_masks[l].clear();
+            if l + 1 < n_layers {
+                if let Some((d, rng)) = drop.as_mut() {
+                    let mut mask = std::mem::take(&mut ws.drop_masks[l]);
+                    d.apply(&mut ws.act[l + 1], &mut mask, rng);
+                    ws.drop_masks[l] = mask;
+                }
+            }
+        }
+        &ws.act[n_layers]
+    }
+
+    /// Backward pass given `dlogits` already stored in the workspace's
+    /// delta buffer (callers use [`SparseMlp::train_step`]; exposed for
+    /// the coordinator's gradient-only workers).
+    ///
+    /// Fills `ws.grad_w` / `ws.grad_b` (overwritten, not accumulated) and
+    /// returns Σ‖∇‖².
+    pub fn backward(&self, batch: usize, ws: &mut Workspace, dlogits: &[f32]) -> f32 {
+        let n_layers = self.n_layers();
+        debug_assert_eq!(dlogits.len(), batch * self.n_classes());
+        ws.delta_a[..dlogits.len()].copy_from_slice(dlogits);
+        let mut grad_sq = 0.0f32;
+        for l in (0..n_layers).rev() {
+            let layer = &self.layers[l];
+            let (n_in, n_out) = (layer.n_in(), layer.n_out());
+            let delta_len = batch * n_out;
+            // bias grad
+            let gb = &mut ws.grad_b[l];
+            gb.iter_mut().for_each(|v| *v = 0.0);
+            ops::bias_grad(&ws.delta_a[..delta_len], batch, n_out, gb);
+            // weight grad (aligned with CSR values)
+            let gw = &mut ws.grad_w[l];
+            gw.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_grad_weights(
+                &ws.act[l],
+                &ws.delta_a[..delta_len],
+                batch,
+                &layer.weights,
+                gw,
+            );
+            grad_sq += gw.iter().map(|g| g * g).sum::<f32>();
+            grad_sq += gb.iter().map(|g| g * g).sum::<f32>();
+            if l > 0 {
+                // input gradient into delta_b
+                let dx_len = batch * n_in;
+                ws.delta_b[..dx_len].iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_grad_input(
+                    &ws.delta_a[..delta_len],
+                    batch,
+                    &layer.weights,
+                    &mut ws.delta_b[..dx_len],
+                );
+                // through dropout of layer l-1's output (mask recorded at
+                // forward time; empty mask means dropout was off)
+                let prev = &self.layers[l - 1];
+                let mask = &ws.drop_masks[l - 1];
+                if !mask.is_empty() {
+                    for (d, &m) in ws.delta_b[..dx_len].iter_mut().zip(mask.iter()) {
+                        *d *= m;
+                    }
+                }
+                // through activation of layer l-1 (pre-activation stored)
+                if let Some(srelu) = &prev.srelu {
+                    let g = srelu.backprop(
+                        &ws.pre[l - 1],
+                        &mut ws.delta_b[..dx_len],
+                        prev.n_out(),
+                    );
+                    ws.srelu_grads[l - 1] = Some(g);
+                } else {
+                    prev.activation
+                        .backprop(&ws.pre[l - 1], &mut ws.delta_b[..dx_len], l);
+                }
+                std::mem::swap(&mut ws.delta_a, &mut ws.delta_b);
+            }
+        }
+        grad_sq
+    }
+
+    /// One training step: forward, loss, backward, momentum-SGD update.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        labels: &[u32],
+        opt: &MomentumSgd,
+        lr: f32,
+        dropout: Option<&Dropout>,
+        ws: &mut Workspace,
+        rng: &mut Rng,
+    ) -> StepStats {
+        let stats = self.compute_gradients(x, labels, dropout, ws, rng);
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            layer.apply_update(opt, &ws.grad_w[l], &ws.grad_b[l], lr);
+            if let (Some(srelu), Some(g)) = (layer.srelu.as_mut(), ws.srelu_grads[l].take()) {
+                srelu.update(&g, lr);
+            }
+        }
+        stats
+    }
+
+    /// Compute gradients for a batch WITHOUT updating weights — the
+    /// coordinator's worker-side primitive (gradients are pushed to the
+    /// parameter server instead). Returns stats; gradients stay in `ws`.
+    pub fn compute_gradients(
+        &self,
+        x: &[f32],
+        labels: &[u32],
+        dropout: Option<&Dropout>,
+        ws: &mut Workspace,
+        rng: &mut Rng,
+    ) -> StepStats {
+        let batch = labels.len();
+        let n_classes = self.n_classes();
+        let drop = dropout.map(|d| (d, &mut *rng));
+        self.forward(x, batch, ws, drop);
+        let logits = &ws.act[self.n_layers()];
+        let acc = accuracy(logits, labels, n_classes);
+        let mut dlogits = std::mem::take(&mut ws.dlogits);
+        dlogits.resize(batch * n_classes, 0.0);
+        let loss = softmax_cross_entropy(logits, labels, n_classes, &mut dlogits);
+        let grad_norm_sq = self.backward(batch, ws, &dlogits);
+        ws.dlogits = dlogits;
+        StepStats {
+            loss,
+            accuracy: acc,
+            grad_norm_sq,
+        }
+    }
+
+    /// Evaluate mean loss and accuracy over a full dataset in batches.
+    pub fn evaluate(
+        &self,
+        x: &[f32],
+        labels: &[u32],
+        batch: usize,
+        ws: &mut Workspace,
+    ) -> (f32, f32) {
+        let n = labels.len();
+        let n_classes = self.n_classes();
+        let n_feat = self.sizes[0];
+        let mut total_loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        let mut dlogits = vec![0.0f32; batch * n_classes];
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + batch).min(n);
+            let bsz = end - start;
+            self.forward(&x[start * n_feat..end * n_feat], bsz, ws, None);
+            let logits = &ws.act[self.n_layers()];
+            dlogits.resize(bsz * n_classes, 0.0);
+            let loss =
+                softmax_cross_entropy(logits, &labels[start..end], n_classes, &mut dlogits);
+            let acc = accuracy(logits, &labels[start..end], n_classes);
+            total_loss += loss as f64 * bsz as f64;
+            correct += acc as f64 * bsz as f64;
+            seen += bsz;
+            start = end;
+        }
+        (
+            (total_loss / seen.max(1) as f64) as f32,
+            (correct / seen.max(1) as f64) as f32,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (SparseMlp, Vec<f32>, Vec<u32>) {
+        let mut rng = Rng::new(7);
+        let mlp = SparseMlp::new(
+            &[12, 32, 16, 3],
+            8.0,
+            Activation::AllRelu { alpha: 0.6 },
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+        .unwrap();
+        // separable toy data: class = argmax of three feature groups
+        let n = 90;
+        let mut x = vec![0.0f32; n * 12];
+        let mut y = vec![0u32; n];
+        let mut r = Rng::new(3);
+        for s in 0..n {
+            let c = (s % 3) as u32;
+            y[s] = c;
+            for f in 0..12 {
+                let boost = if f / 4 == c as usize { 2.0 } else { 0.0 };
+                x[s * 12 + f] = r.normal() * 0.3 + boost;
+            }
+        }
+        (mlp, x, y)
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let (mlp, x, _) = toy();
+        let mut ws = mlp.alloc_workspace(90);
+        let logits = mlp.forward(&x, 90, &mut ws, None);
+        assert_eq!(logits.len(), 90 * 3);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn training_learns_toy_problem() {
+        let (mut mlp, x, y) = toy();
+        let mut ws = mlp.alloc_workspace(90);
+        let opt = MomentumSgd {
+            momentum: 0.9,
+            weight_decay: 0.0,
+        };
+        let mut rng = Rng::new(1);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..80 {
+            let s = mlp.train_step(&x, &y, &opt, 0.05, None, &mut ws, &mut rng);
+            first.get_or_insert(s.loss);
+            last = s.loss;
+        }
+        assert!(
+            last < first.unwrap() * 0.5,
+            "loss {} -> {last}",
+            first.unwrap()
+        );
+        let (_, acc) = mlp.evaluate(&x, &y, 32, &mut ws);
+        assert!(acc > 0.8, "acc {acc}");
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut rng = Rng::new(11);
+        let mlp = SparseMlp::new(
+            &[5, 7, 4],
+            4.0,
+            Activation::LeakyRelu { alpha: 0.1 },
+            &WeightInit::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let x: Vec<f32> = (0..3 * 5).map(|_| rng.normal()).collect();
+        let y = vec![0u32, 2, 1];
+        let mut ws = mlp.alloc_workspace(3);
+        let mut r2 = Rng::new(0);
+        mlp.compute_gradients(&x, &y, None, &mut ws, &mut r2);
+        let loss_of = |m: &SparseMlp| {
+            let mut w = m.alloc_workspace(3);
+            m.forward(&x, 3, &mut w, None);
+            let logits = &w.act[m.n_layers()];
+            let mut d = vec![0.0f32; 3 * 4];
+            softmax_cross_entropy(logits, &y, 4, &mut d)
+        };
+        let eps = 1e-3f32;
+        for l in 0..2 {
+            // check a handful of weight gradients
+            let nnz = mlp.layers[l].weights.nnz();
+            for k in [0, nnz / 2, nnz - 1] {
+                let mut mp = mlp.clone();
+                mp.layers[l].weights.values[k] += eps;
+                let mut mm = mlp.clone();
+                mm.layers[l].weights.values[k] -= eps;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+                let g = ws.grad_w[l][k];
+                assert!((g - fd).abs() < 2e-2, "layer {l} k {k}: {g} vs {fd}");
+            }
+            // and a bias gradient
+            let mut mp = mlp.clone();
+            mp.layers[l].bias[0] += eps;
+            let mut mm = mlp.clone();
+            mm.layers[l].bias[0] -= eps;
+            let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+            assert!((ws.grad_b[l][0] - fd).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn dropout_train_still_learns_and_eval_is_deterministic() {
+        let (mut mlp, x, y) = toy();
+        let mut ws = mlp.alloc_workspace(90);
+        let opt = MomentumSgd::default();
+        let drop = Dropout::new(0.3);
+        let mut rng = Rng::new(5);
+        for _ in 0..60 {
+            mlp.train_step(&x, &y, &opt, 0.05, Some(&drop), &mut ws, &mut rng);
+        }
+        let (l1, a1) = mlp.evaluate(&x, &y, 16, &mut ws);
+        let (l2, a2) = mlp.evaluate(&x, &y, 16, &mut ws);
+        assert_eq!(l1, l2);
+        assert_eq!(a1, a2);
+        assert!(a1 > 0.6, "acc {a1}");
+    }
+
+    #[test]
+    fn counts_and_memory() {
+        let (mlp, _, _) = toy();
+        assert_eq!(mlp.neuron_count(), 12 + 32 + 16 + 3);
+        assert!(mlp.param_count() > 0);
+        assert!(mlp.memory_bytes() > 0);
+        assert!(mlp.weight_count() < 12 * 32 + 32 * 16 + 16 * 3); // sparse
+    }
+
+    #[test]
+    fn rejects_degenerate_sizes() {
+        let mut rng = Rng::new(0);
+        assert!(SparseMlp::new(
+            &[5],
+            1.0,
+            Activation::Relu,
+            &WeightInit::Xavier,
+            &mut rng
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn evaluate_handles_ragged_last_batch() {
+        let (mlp, x, y) = toy();
+        let mut ws = mlp.alloc_workspace(90);
+        let (l1, a1) = mlp.evaluate(&x, &y, 90, &mut ws);
+        let (l2, a2) = mlp.evaluate(&x, &y, 7, &mut ws);
+        assert!((l1 - l2).abs() < 1e-4);
+        assert!((a1 - a2).abs() < 1e-5);
+    }
+}

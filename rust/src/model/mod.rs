@@ -1,0 +1,11 @@
+//! The truly-sparse MLP model: layers, forward/backward, batching and
+//! sparse checkpoints.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod layer;
+pub mod mlp;
+
+pub use batcher::Batcher;
+pub use layer::SparseLayer;
+pub use mlp::{SparseMlp, StepStats, Workspace};

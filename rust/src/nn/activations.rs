@@ -1,0 +1,308 @@
+//! Activation functions for sparse MLPs.
+//!
+//! Includes the paper's contribution **All-ReLU** (Eq. 3): a Leaky-ReLU
+//! variant whose negative-side slope *sign alternates with hidden-layer
+//! parity*, breaking symmetry and preserving gradient flow without
+//! SReLU's four trainable parameters per neuron. SReLU itself is
+//! implemented (with trainable per-neuron parameters) as the comparator
+//! the paper benchmarks against.
+
+/// Parameter-free / fixed-parameter activations, applied element-wise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Activation {
+    /// max(0, x).
+    Relu,
+    /// x>0 ? x : alpha*x.
+    LeakyRelu { alpha: f32 },
+    /// Paper Eq. 3. `layer_index` is the 1-based hidden layer index;
+    /// even layers use slope -alpha, odd layers +alpha on the negative side.
+    AllRelu { alpha: f32 },
+    /// Identity (output layers).
+    Linear,
+}
+
+impl Activation {
+    /// Parse from a config string ("relu", "lrelu:0.1", "allrelu:0.6").
+    pub fn parse(s: &str) -> Option<Activation> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let alpha = |d: f32| arg.and_then(|a| a.parse().ok()).unwrap_or(d);
+        match name {
+            "relu" => Some(Activation::Relu),
+            "lrelu" | "leaky_relu" => Some(Activation::LeakyRelu { alpha: alpha(0.01) }),
+            "allrelu" | "all_relu" => Some(Activation::AllRelu { alpha: alpha(0.6) }),
+            "linear" | "none" => Some(Activation::Linear),
+            _ => None,
+        }
+    }
+
+    /// Apply in place. `layer_index` is the 1-based layer number (used by
+    /// All-ReLU parity; ignored by the others).
+    pub fn apply(&self, z: &mut [f32], layer_index: usize) {
+        match *self {
+            Activation::Relu => {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Activation::LeakyRelu { alpha } => {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v *= alpha;
+                    }
+                }
+            }
+            Activation::AllRelu { alpha } => {
+                let slope = if layer_index % 2 == 0 { -alpha } else { alpha };
+                for v in z.iter_mut() {
+                    if *v <= 0.0 {
+                        *v *= slope;
+                    }
+                }
+            }
+            Activation::Linear => {}
+        }
+    }
+
+    /// Derivative w.r.t. pre-activation, given the **pre-activation** `z`,
+    /// multiplied into `dz` in place (dz *= f'(z)).
+    pub fn backprop(&self, z: &[f32], dz: &mut [f32], layer_index: usize) {
+        debug_assert_eq!(z.len(), dz.len());
+        match *self {
+            Activation::Relu => {
+                for (d, &v) in dz.iter_mut().zip(z.iter()) {
+                    if v <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            Activation::LeakyRelu { alpha } => {
+                for (d, &v) in dz.iter_mut().zip(z.iter()) {
+                    if v <= 0.0 {
+                        *d *= alpha;
+                    }
+                }
+            }
+            Activation::AllRelu { alpha } => {
+                let slope = if layer_index % 2 == 0 { -alpha } else { alpha };
+                for (d, &v) in dz.iter_mut().zip(z.iter()) {
+                    if v <= 0.0 {
+                        *d *= slope;
+                    }
+                }
+            }
+            Activation::Linear => {}
+        }
+    }
+}
+
+/// SReLU (Jin et al. 2016) with trainable per-neuron parameters
+/// `(t_l, a_l, t_r, a_r)` — the comparator All-ReLU replaces. Carries
+/// 4·n_out trainable parameters, which is exactly the overhead the paper
+/// eliminates.
+#[derive(Debug, Clone)]
+pub struct SRelu {
+    /// Left threshold per neuron.
+    pub tl: Vec<f32>,
+    /// Left slope per neuron.
+    pub al: Vec<f32>,
+    /// Right threshold per neuron.
+    pub tr: Vec<f32>,
+    /// Right slope per neuron.
+    pub ar: Vec<f32>,
+}
+
+impl SRelu {
+    /// Standard initialisation: identity in [0, 1], slopes 0.2 outside —
+    /// mirrors the SET reference implementation.
+    pub fn new(n: usize) -> Self {
+        SRelu {
+            tl: vec![0.0; n],
+            al: vec![0.2; n],
+            tr: vec![1.0; n],
+            ar: vec![0.2; n],
+        }
+    }
+
+    /// Trainable parameter count (the overhead All-ReLU removes).
+    pub fn param_count(&self) -> usize {
+        4 * self.tl.len()
+    }
+
+    /// Forward in place over a [batch, n] buffer.
+    pub fn apply(&self, z: &mut [f32], n: usize) {
+        for (k, v) in z.iter_mut().enumerate() {
+            let j = k % n;
+            if *v <= self.tl[j] {
+                *v = self.tl[j] + self.al[j] * (*v - self.tl[j]);
+            } else if *v >= self.tr[j] {
+                *v = self.tr[j] + self.ar[j] * (*v - self.tr[j]);
+            }
+        }
+    }
+
+    /// Backward: scales dz in place and accumulates parameter grads.
+    /// Returns (d_tl, d_al, d_tr, d_ar).
+    pub fn backprop(
+        &self,
+        z: &[f32],
+        dz: &mut [f32],
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut dtl = vec![0.0f32; n];
+        let mut dal = vec![0.0f32; n];
+        let mut dtr = vec![0.0f32; n];
+        let mut dar = vec![0.0f32; n];
+        for (k, d) in dz.iter_mut().enumerate() {
+            let j = k % n;
+            let v = z[k];
+            if v <= self.tl[j] {
+                dtl[j] += *d * (1.0 - self.al[j]);
+                dal[j] += *d * (v - self.tl[j]);
+                *d *= self.al[j];
+            } else if v >= self.tr[j] {
+                dtr[j] += *d * (1.0 - self.ar[j]);
+                dar[j] += *d * (v - self.tr[j]);
+                *d *= self.ar[j];
+            }
+        }
+        (dtl, dal, dtr, dar)
+    }
+
+    /// SGD step on the four parameter vectors.
+    pub fn update(&mut self, grads: &(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>), lr: f32) {
+        for (p, g) in self.tl.iter_mut().zip(grads.0.iter()) {
+            *p -= lr * g;
+        }
+        for (p, g) in self.al.iter_mut().zip(grads.1.iter()) {
+            *p -= lr * g;
+        }
+        for (p, g) in self.tr.iter_mut().zip(grads.2.iter()) {
+            *p -= lr * g;
+        }
+        for (p, g) in self.ar.iter_mut().zip(grads.3.iter()) {
+            *p -= lr * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negative() {
+        let mut z = vec![-1.0, 0.0, 2.0];
+        Activation::Relu.apply(&mut z, 1);
+        assert_eq!(z, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn allrelu_parity_flips_sign() {
+        // paper Eq.3: even layer -> -alpha * x on negative side
+        let mut even = vec![-2.0, 1.0];
+        Activation::AllRelu { alpha: 0.5 }.apply(&mut even, 2);
+        assert_eq!(even, vec![1.0, 1.0]);
+        let mut odd = vec![-2.0, 1.0];
+        Activation::AllRelu { alpha: 0.5 }.apply(&mut odd, 1);
+        assert_eq!(odd, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn allrelu_matches_python_ref_semantics() {
+        // mirror python ref: parity = layer % 2; even->-alpha, odd->+alpha
+        let z = [-2.0f32, -1.0, 0.0, 1.0];
+        let mut e = z;
+        Activation::AllRelu { alpha: 0.5 }.apply(&mut e, 0);
+        assert_eq!(e.to_vec(), vec![1.0, 0.5, 0.0, 1.0]);
+        let mut o = z;
+        Activation::AllRelu { alpha: 0.5 }.apply(&mut o, 1);
+        assert_eq!(o.to_vec(), vec![-1.0, -0.5, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn backprop_gradients_match_finite_difference() {
+        let acts = [
+            Activation::Relu,
+            Activation::LeakyRelu { alpha: 0.1 },
+            Activation::AllRelu { alpha: 0.6 },
+            Activation::Linear,
+        ];
+        let zs = [-1.5f32, -0.1, 0.3, 2.0];
+        for act in acts {
+            for layer in 1..=2 {
+                for &z0 in &zs {
+                    let eps = 1e-3f32;
+                    let mut zp = vec![z0 + eps];
+                    let mut zm = vec![z0 - eps];
+                    act.apply(&mut zp, layer);
+                    act.apply(&mut zm, layer);
+                    let fd = (zp[0] - zm[0]) / (2.0 * eps);
+                    let mut d = vec![1.0f32];
+                    act.backprop(&[z0], &mut d, layer);
+                    assert!(
+                        (d[0] - fd).abs() < 1e-2,
+                        "{act:?} layer {layer} z {z0}: {} vs fd {fd}",
+                        d[0]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_strings() {
+        assert_eq!(Activation::parse("relu"), Some(Activation::Relu));
+        assert_eq!(
+            Activation::parse("allrelu:0.75"),
+            Some(Activation::AllRelu { alpha: 0.75 })
+        );
+        assert_eq!(
+            Activation::parse("lrelu"),
+            Some(Activation::LeakyRelu { alpha: 0.01 })
+        );
+        assert_eq!(Activation::parse("garbage"), None);
+    }
+
+    #[test]
+    fn srelu_identity_region() {
+        let s = SRelu::new(2);
+        let mut z = vec![0.5, 0.9, 0.1, 0.2];
+        let orig = z.clone();
+        s.apply(&mut z, 2);
+        assert_eq!(z, orig);
+    }
+
+    #[test]
+    fn srelu_saturates_and_backprops() {
+        let s = SRelu::new(1);
+        let mut z = vec![-2.0f32, 3.0];
+        s.apply(&mut z, 1);
+        // left: 0 + 0.2*(-2-0) = -0.4 ; right: 1 + 0.2*(3-1) = 1.4
+        assert!((z[0] + 0.4).abs() < 1e-6);
+        assert!((z[1] - 1.4).abs() < 1e-6);
+        let mut dz = vec![1.0f32, 1.0];
+        let grads = s.backprop(&[-2.0, 3.0], &mut dz, 1);
+        assert!((dz[0] - 0.2).abs() < 1e-6);
+        assert!((dz[1] - 0.2).abs() < 1e-6);
+        assert!((grads.1[0] - (-2.0)).abs() < 1e-6); // dal = z - tl
+    }
+
+    #[test]
+    fn srelu_param_count_is_4n() {
+        assert_eq!(SRelu::new(100).param_count(), 400);
+    }
+
+    #[test]
+    fn srelu_update_moves_params() {
+        let mut s = SRelu::new(1);
+        let g = (vec![1.0], vec![1.0], vec![1.0], vec![1.0]);
+        s.update(&g, 0.1);
+        assert!((s.tl[0] + 0.1).abs() < 1e-6);
+        assert!((s.al[0] - 0.1).abs() < 1e-6);
+    }
+}

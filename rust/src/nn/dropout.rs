@@ -1,0 +1,97 @@
+//! Inverted dropout on hidden activations (paper: rate 0.3 / 0.4).
+
+use crate::util::Rng;
+
+/// Inverted-dropout mask generator/applier.
+#[derive(Debug, Clone, Copy)]
+pub struct Dropout {
+    /// Probability of *dropping* a unit.
+    pub rate: f32,
+}
+
+impl Dropout {
+    /// New dropout with the given drop probability (0 disables).
+    pub fn new(rate: f32) -> Self {
+        assert!((0.0..1.0).contains(&rate), "dropout rate must be in [0,1)");
+        Dropout { rate }
+    }
+
+    /// Apply in place during training, recording the kept-scale mask into
+    /// `mask` (1/(1-rate) for kept units, 0 for dropped) for backward.
+    pub fn apply(&self, h: &mut [f32], mask: &mut Vec<f32>, rng: &mut Rng) {
+        mask.clear();
+        if self.rate == 0.0 {
+            return; // empty mask signals identity to backward()
+        }
+        let keep_scale = 1.0 / (1.0 - self.rate);
+        mask.reserve(h.len());
+        for v in h.iter_mut() {
+            if rng.bernoulli(self.rate as f64) {
+                *v = 0.0;
+                mask.push(0.0);
+            } else {
+                *v *= keep_scale;
+                mask.push(keep_scale);
+            }
+        }
+    }
+
+    /// Backward: multiply dz by the recorded mask.
+    pub fn backward(&self, dz: &mut [f32], mask: &[f32]) {
+        if mask.is_empty() {
+            return;
+        }
+        debug_assert_eq!(dz.len(), mask.len());
+        for (d, &m) in dz.iter_mut().zip(mask.iter()) {
+            *d *= m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let d = Dropout::new(0.0);
+        let mut h = vec![1.0, 2.0, 3.0];
+        let mut mask = Vec::new();
+        d.apply(&mut h, &mut mask, &mut Rng::new(1));
+        assert_eq!(h, vec![1.0, 2.0, 3.0]);
+        assert!(mask.is_empty());
+    }
+
+    #[test]
+    fn expectation_preserved() {
+        let d = Dropout::new(0.4);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mut h = vec![1.0f32; n];
+        let mut mask = Vec::new();
+        d.apply(&mut h, &mut mask, &mut rng);
+        let mean: f32 = h.iter().sum::<f32>() / n as f32;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn backward_uses_same_mask() {
+        let d = Dropout::new(0.5);
+        let mut rng = Rng::new(3);
+        let mut h = vec![1.0f32; 64];
+        let mut mask = Vec::new();
+        d.apply(&mut h, &mut mask, &mut rng);
+        let mut dz = vec![1.0f32; 64];
+        d.backward(&mut dz, &mask);
+        // gradient must be zero exactly where activation was dropped
+        for (hv, dv) in h.iter().zip(dz.iter()) {
+            assert_eq!(*hv == 0.0, *dv == 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_rate_one() {
+        Dropout::new(1.0);
+    }
+}

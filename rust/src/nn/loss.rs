@@ -1,0 +1,189 @@
+//! Loss functions: softmax cross-entropy (classification) and MSE.
+//!
+//! Both return the mean loss over the batch and write `d loss / d logits`
+//! into a caller-provided buffer (the backward entry point of the MLP).
+
+/// Numerically-stable softmax over one row, in place.
+pub fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Mean softmax cross-entropy with integer labels.
+///
+/// `logits: [batch, n_classes]` (row-major), `labels: [batch]`.
+/// Writes `dlogits = (softmax - onehot) / batch` and returns the loss.
+pub fn softmax_cross_entropy(
+    logits: &[f32],
+    labels: &[u32],
+    n_classes: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    let batch = labels.len();
+    debug_assert_eq!(logits.len(), batch * n_classes);
+    debug_assert_eq!(dlogits.len(), logits.len());
+    let inv_b = 1.0 / batch as f32;
+    let mut loss = 0.0f32;
+    for b in 0..batch {
+        let row = &logits[b * n_classes..(b + 1) * n_classes];
+        let drow = &mut dlogits[b * n_classes..(b + 1) * n_classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row.iter()) {
+            *d = (v - max).exp();
+            sum += *d;
+        }
+        let log_sum = sum.ln() + max;
+        let y = labels[b] as usize;
+        debug_assert!(y < n_classes);
+        loss += log_sum - row[y];
+        let inv = 1.0 / sum;
+        for d in drow.iter_mut() {
+            *d *= inv * inv_b;
+        }
+        drow[y] -= inv_b;
+    }
+    loss * inv_b
+}
+
+/// Mean squared error over a [batch, n] prediction; writes
+/// `dpred = 2 (pred - target) / (batch * n)`.
+pub fn mse(pred: &[f32], target: &[f32], batch: usize, dpred: &mut [f32]) -> f32 {
+    debug_assert_eq!(pred.len(), target.len());
+    debug_assert_eq!(pred.len(), dpred.len());
+    let n = pred.len();
+    let scale = 2.0 / n as f32;
+    let _ = batch;
+    let mut loss = 0.0f32;
+    for ((d, &p), &t) in dpred.iter_mut().zip(pred.iter()).zip(target.iter()) {
+        let diff = p - t;
+        loss += diff * diff;
+        *d = scale * diff;
+    }
+    loss / n as f32
+}
+
+/// Batch classification accuracy from logits.
+pub fn accuracy(logits: &[f32], labels: &[u32], n_classes: usize) -> f32 {
+    let batch = labels.len();
+    if batch == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for b in 0..batch {
+        let row = &logits[b * n_classes..(b + 1) * n_classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best as u32 == labels[b] {
+            correct += 1;
+        }
+    }
+    correct as f32 / batch as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalises() {
+        let mut row = vec![1.0, 2.0, 3.0];
+        softmax_row(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut row = vec![1e4, -1e4];
+        softmax_row(&mut row);
+        assert!(row[0].is_finite() && (row[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_n() {
+        let logits = vec![0.0f32; 4 * 10];
+        let labels = vec![0u32, 3, 7, 9];
+        let mut d = vec![0.0f32; 40];
+        let loss = softmax_cross_entropy(&logits, &labels, 10, &mut d);
+        assert!((loss - (10f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_confident_is_zero() {
+        let logits = vec![100.0, 0.0, 0.0, 100.0];
+        let labels = vec![0u32, 1];
+        let mut d = vec![0.0f32; 4];
+        let loss = softmax_cross_entropy(&logits, &labels, 2, &mut d);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_gradient_matches_finite_difference() {
+        let logits = vec![0.3f32, -0.7, 1.1, 0.2, 0.9, -0.1];
+        let labels = vec![2u32, 0];
+        let mut d = vec![0.0f32; 6];
+        let loss0 = softmax_cross_entropy(&logits, &labels, 3, &mut d);
+        let _ = loss0;
+        let eps = 1e-3f32;
+        for k in 0..6 {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let mut scratch = vec![0.0f32; 6];
+            let fp = softmax_cross_entropy(&lp, &labels, 3, &mut scratch);
+            let fm = softmax_cross_entropy(&lm, &labels, 3, &mut scratch);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((d[k] - fd).abs() < 1e-3, "k={k}: {} vs {fd}", d[k]);
+        }
+    }
+
+    #[test]
+    fn gradient_rows_sum_to_zero() {
+        // softmax - onehot sums to zero per row
+        let logits = vec![0.5f32, 1.5, -0.5, 2.0, 0.0, 1.0];
+        let labels = vec![1u32, 2];
+        let mut d = vec![0.0f32; 6];
+        softmax_cross_entropy(&logits, &labels, 3, &mut d);
+        for b in 0..2 {
+            let s: f32 = d[b * 3..(b + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mse_and_gradient() {
+        let pred = vec![1.0f32, 2.0];
+        let target = vec![0.0f32, 0.0];
+        let mut d = vec![0.0f32; 2];
+        let loss = mse(&pred, &target, 1, &mut d);
+        assert!((loss - 2.5).abs() < 1e-6); // (1+4)/2
+        assert!((d[0] - 1.0).abs() < 1e-6); // 2*1/2
+        assert!((d[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = vec![
+            0.1, 0.9, // -> 1
+            0.8, 0.2, // -> 0
+            0.4, 0.6, // -> 1
+        ];
+        assert!((accuracy(&logits, &[1, 0, 0], 2) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(accuracy(&logits, &[], 2), 0.0);
+    }
+}

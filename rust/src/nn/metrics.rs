@@ -1,0 +1,152 @@
+//! Evaluation metrics and running statistics.
+
+/// Running mean/min/max accumulator for scalar streams (loss curves etc.).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: usize,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Stats {
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Add a sample.
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Mean (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+
+    /// Minimum sample (inf if empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum sample (-inf if empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Confusion matrix for k-class classification.
+#[derive(Debug, Clone)]
+pub struct ConfusionMatrix {
+    k: usize,
+    counts: Vec<usize>,
+}
+
+impl ConfusionMatrix {
+    /// k-class confusion matrix (rows = true, cols = predicted).
+    pub fn new(k: usize) -> Self {
+        ConfusionMatrix {
+            k,
+            counts: vec![0; k * k],
+        }
+    }
+
+    /// Record one (true, predicted) pair.
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        debug_assert!(truth < self.k && pred < self.k);
+        self.counts[truth * self.k + pred] += 1;
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Overall accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let correct: usize = (0..self.k).map(|i| self.counts[i * self.k + i]).sum();
+        correct as f64 / total as f64
+    }
+
+    /// Per-class recall.
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: usize = self.counts[class * self.k..(class + 1) * self.k].iter().sum();
+        if row == 0 {
+            0.0
+        } else {
+            self.counts[class * self.k + class] as f64 / row as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn confusion_accuracy_and_recall() {
+        let mut c = ConfusionMatrix::new(2);
+        c.record(0, 0);
+        c.record(0, 1);
+        c.record(1, 1);
+        c.record(1, 1);
+        assert_eq!(c.total(), 4);
+        assert!((c.accuracy() - 0.75).abs() < 1e-12);
+        assert!((c.recall(0) - 0.5).abs() < 1e-12);
+        assert!((c.recall(1) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Neural-network building blocks for the truly-sparse engine:
+//! activations (including the paper's All-ReLU), losses, momentum SGD,
+//! dropout and metrics.
+
+pub mod activations;
+pub mod dropout;
+pub mod loss;
+pub mod metrics;
+pub mod optimizer;
+
+pub use activations::{Activation, SRelu};
+pub use dropout::Dropout;
+pub use loss::{accuracy, mse, softmax_cross_entropy};
+pub use metrics::{ConfusionMatrix, Stats};
+pub use optimizer::{remap_aligned, LrSchedule, MomentumSgd};

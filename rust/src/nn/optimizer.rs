@@ -1,0 +1,203 @@
+//! Momentum SGD with weight decay — the paper's update rule (Eq. 1).
+//!
+//! `v ← μ·v − η·(g + λ·w)` ; `w ← w + v`. This classical-momentum form
+//! is algebraically the paper's `W_{t+1} = W_t + μ(W_t − W_{t−1}) − η∇W_t`
+//! with `v_t = W_t − W_{t−1}`. Velocities are plain `Vec<f32>` aligned to
+//! the CSR `values` array; topology evolution remaps them via the
+//! old→new index maps the structural ops return.
+
+/// Hyperparameters of the sparse momentum-SGD update.
+#[derive(Debug, Clone, Copy)]
+pub struct MomentumSgd {
+    /// Momentum coefficient μ (paper: 0.9).
+    pub momentum: f32,
+    /// L2 weight decay λ.
+    pub weight_decay: f32,
+}
+
+impl Default for MomentumSgd {
+    fn default() -> Self {
+        MomentumSgd {
+            momentum: 0.9,
+            weight_decay: 0.0002,
+        }
+    }
+}
+
+impl MomentumSgd {
+    /// Update weights in place given aligned gradients and velocities.
+    pub fn update(&self, weights: &mut [f32], grads: &[f32], velocity: &mut [f32], lr: f32) {
+        debug_assert_eq!(weights.len(), grads.len());
+        debug_assert_eq!(weights.len(), velocity.len());
+        let (mu, wd) = (self.momentum, self.weight_decay);
+        for ((w, &g), v) in weights.iter_mut().zip(grads.iter()).zip(velocity.iter_mut()) {
+            *v = mu * *v - lr * (g + wd * *w);
+            *w += *v;
+        }
+    }
+
+    /// Bias update (no weight decay on biases, standard practice).
+    pub fn update_bias(&self, bias: &mut [f32], grads: &[f32], velocity: &mut [f32], lr: f32) {
+        debug_assert_eq!(bias.len(), grads.len());
+        debug_assert_eq!(bias.len(), velocity.len());
+        let mu = self.momentum;
+        for ((b, &g), v) in bias.iter_mut().zip(grads.iter()).zip(velocity.iter_mut()) {
+            *v = mu * *v - lr * g;
+            *b += *v;
+        }
+    }
+}
+
+/// Remap an aligned state vector (e.g. velocity) through a structure
+/// change described by `old_index_of_new[k] = Some(old)` for survivors and
+/// `None` for newly-created entries (which get `fill`).
+pub fn remap_aligned(state: &[f32], old_index_of_new: &[Option<usize>], fill: f32) -> Vec<f32> {
+    old_index_of_new
+        .iter()
+        .map(|o| o.map(|k| state[k]).unwrap_or(fill))
+        .collect()
+}
+
+/// Learning-rate schedules used by the experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant η.
+    Constant(f32),
+    /// Linear warmup from `base/k` to `base·k_scale` over `warmup` epochs,
+    /// then constant — Goyal et al.'s gradual-warmup + linear-scaling rule,
+    /// used by WASSP-SGD.
+    Warmup {
+        base: f32,
+        scale: f32,
+        warmup_epochs: usize,
+    },
+    /// Large initial rate for `hot_epochs`, then constant base rate —
+    /// what the paper found effective for WASAP-SGD phase 1.
+    HotStart {
+        hot: f32,
+        base: f32,
+        hot_epochs: usize,
+    },
+}
+
+impl LrSchedule {
+    /// Learning rate at the given epoch.
+    pub fn at(&self, epoch: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(eta) => eta,
+            LrSchedule::Warmup {
+                base,
+                scale,
+                warmup_epochs,
+            } => {
+                let target = base * scale;
+                if warmup_epochs == 0 || epoch >= warmup_epochs {
+                    target
+                } else {
+                    base + (target - base) * (epoch as f32 / warmup_epochs as f32)
+                }
+            }
+            LrSchedule::HotStart {
+                hot,
+                base,
+                hot_epochs,
+            } => {
+                if epoch < hot_epochs {
+                    hot
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_matches_formula() {
+        let opt = MomentumSgd {
+            momentum: 0.9,
+            weight_decay: 0.0,
+        };
+        let mut w = vec![1.0f32];
+        let mut v = vec![0.5f32];
+        opt.update(&mut w, &[2.0], &mut v, 0.1);
+        // v = 0.9*0.5 - 0.1*2 = 0.25 ; w = 1.25
+        assert!((v[0] - 0.25).abs() < 1e-6);
+        assert!((w[0] - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_weights() {
+        let opt = MomentumSgd {
+            momentum: 0.0,
+            weight_decay: 0.1,
+        };
+        let mut w = vec![1.0f32];
+        let mut v = vec![0.0f32];
+        opt.update(&mut w, &[0.0], &mut v, 1.0);
+        assert!((w[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equivalent_to_paper_eq1() {
+        // W_{t+1} = W_t + mu (W_t - W_{t-1}) - eta g  with v_t = W_t - W_{t-1}
+        let opt = MomentumSgd {
+            momentum: 0.7,
+            weight_decay: 0.0,
+        };
+        let mut w = vec![2.0f32];
+        let mut v = vec![0.0f32];
+        let gs = [0.3f32, -0.2, 0.8, 0.1];
+        let (mut w_prev, mut w_ref) = (2.0f32, 2.0f32);
+        for &g in &gs {
+            opt.update(&mut w, &[g], &mut v, 0.05);
+            let next = w_ref + 0.7 * (w_ref - w_prev) - 0.05 * g;
+            w_prev = w_ref;
+            w_ref = next;
+            assert!((w[0] - w_ref).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_update_has_no_decay() {
+        let opt = MomentumSgd {
+            momentum: 0.0,
+            weight_decay: 0.5,
+        };
+        let mut b = vec![1.0f32];
+        let mut v = vec![0.0f32];
+        opt.update_bias(&mut b, &[0.0], &mut v, 1.0);
+        assert_eq!(b[0], 1.0);
+    }
+
+    #[test]
+    fn remap_keeps_survivors_zeroes_new() {
+        let state = vec![1.0, 2.0, 3.0];
+        let map = vec![Some(2), None, Some(0)];
+        assert_eq!(remap_aligned(&state, &map, 0.0), vec![3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn schedules() {
+        assert_eq!(LrSchedule::Constant(0.01).at(100), 0.01);
+        let w = LrSchedule::Warmup {
+            base: 0.01,
+            scale: 5.0,
+            warmup_epochs: 10,
+        };
+        assert!((w.at(0) - 0.01).abs() < 1e-7);
+        assert!((w.at(10) - 0.05).abs() < 1e-7);
+        assert!(w.at(5) > 0.01 && w.at(5) < 0.05);
+        let h = LrSchedule::HotStart {
+            hot: 0.05,
+            base: 0.01,
+            hot_epochs: 3,
+        };
+        assert_eq!(h.at(2), 0.05);
+        assert_eq!(h.at(3), 0.01);
+    }
+}

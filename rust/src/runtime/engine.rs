@@ -1,0 +1,182 @@
+//! PJRT execution engine: load AOT HLO-text artifacts and run them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see `python/compile/aot.py`).
+//!
+//! The client is process-wide (PJRT CPU clients are heavyweight); all
+//! executables share it.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use crate::error::{Result, TsnnError};
+
+fn xerr(e: xla::Error) -> TsnnError {
+    TsnnError::Runtime(e.to_string())
+}
+
+thread_local! {
+    // PJRT handles are Rc-based (not Send/Sync), so the shared client is
+    // per-thread; the masked-dense baseline is single-threaded anyway.
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with the thread-local PJRT CPU client (created on first use).
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                xla::PjRtClient::cpu()
+                    .map_err(|e| TsnnError::Runtime(format!("PJRT cpu client: {e}")))?,
+            );
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// A compiled HLO executable with convenience execution.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Source path (diagnostics).
+    pub path: String,
+}
+
+impl HloExecutable {
+    /// Load HLO text from `path`, compile on the shared CPU client.
+    pub fn load(path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|client| client.compile(&comp).map_err(xerr))?;
+        Ok(HloExecutable {
+            exe,
+            path: path.display().to_string(),
+        })
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| TsnnError::Runtime("empty execution result".into()))?;
+        let literal = first.to_literal_sync().map_err(xerr)?;
+        literal.to_tuple().map_err(xerr)
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        return Err(TsnnError::Runtime(format!(
+            "literal shape {dims:?} wants {expect} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(xerr)
+}
+
+/// Build an i32 literal (labels).
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        return Err(TsnnError::Runtime("literal shape mismatch".into()));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(xerr)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back to a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(xerr)
+}
+
+/// Read a scalar f32 literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(xerr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{default_artifacts_dir, Manifest};
+
+    /// These tests need `make artifacts` to have run; they skip otherwise
+    /// (make test builds artifacts first, so CI always exercises them).
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping runtime test: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn loads_and_runs_small_forward() {
+        let Some(m) = manifest() else { return };
+        let Some(e) = m.get("small") else { return };
+        let exe = HloExecutable::load(&e.forward_hlo).unwrap();
+        // build zero params -> logits should be all zeros (bias 0)
+        let batch = e.batch;
+        let mut inputs =
+            vec![literal_f32(&vec![0.1f32; batch * e.sizes[0]], &[batch as i64, e.sizes[0] as i64])
+                .unwrap()];
+        for l in 0..e.n_layers() {
+            let (ni, no) = (e.sizes[l], e.sizes[l + 1]);
+            inputs.push(literal_f32(&vec![0.0f32; ni * no], &[ni as i64, no as i64]).unwrap());
+            inputs.push(literal_f32(&vec![0.0f32; no], &[no as i64]).unwrap());
+            inputs.push(literal_f32(&vec![1.0f32; ni * no], &[ni as i64, no as i64]).unwrap());
+        }
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(logits.len(), batch * e.sizes[e.sizes.len() - 1]);
+        assert!(logits.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pallas_quickstart_artifact_runs() {
+        // proves the L1 pallas kernel lowered into the L2 HLO and executes
+        // via the rust PJRT runtime (the full three-layer composition).
+        let Some(m) = manifest() else { return };
+        let Some(e) = m.get("quickstart") else { return };
+        assert!(e.use_pallas_first_layer);
+        let exe = HloExecutable::load(&e.forward_hlo).unwrap();
+        let batch = e.batch;
+        let mut inputs =
+            vec![
+                literal_f32(&vec![0.5f32; batch * e.sizes[0]], &[batch as i64, e.sizes[0] as i64])
+                    .unwrap(),
+            ];
+        for l in 0..e.n_layers() {
+            let (ni, no) = (e.sizes[l], e.sizes[l + 1]);
+            inputs.push(literal_f32(&vec![0.01f32; ni * no], &[ni as i64, no as i64]).unwrap());
+            inputs.push(literal_f32(&vec![0.0f32; no], &[no as i64]).unwrap());
+            inputs.push(literal_f32(&vec![1.0f32; ni * no], &[ni as i64, no as i64]).unwrap());
+        }
+        let out = exe.run(&inputs).unwrap();
+        let logits = to_vec_f32(&out[0]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // x @ W: 64 inputs * 0.5 * 0.01 = 0.32 per hidden unit (AllReLU id
+        // on positive side), then 128 * 0.32 * 0.01 per logit = 0.4096
+        let expect = 64.0 * 0.5 * 0.01 * 128.0 * 0.01;
+        assert!((logits[0] - expect).abs() < 1e-3, "{} vs {expect}", logits[0]);
+    }
+}

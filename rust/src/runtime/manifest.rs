@@ -1,0 +1,163 @@
+//! `artifacts/manifest.json` loader: describes the AOT-lowered
+//! architectures (shapes, hyperparameters, file names) produced by
+//! `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, TsnnError};
+use crate::util::json;
+
+/// One lowered architecture.
+#[derive(Debug, Clone)]
+pub struct ArchEntry {
+    /// Architecture name ("small", "fashion", ...).
+    pub name: String,
+    /// Layer sizes including input/output.
+    pub sizes: Vec<usize>,
+    /// Batch size baked into the executables.
+    pub batch: usize,
+    /// All-ReLU slope baked into the graph.
+    pub alpha: f64,
+    /// Momentum baked into the train step.
+    pub momentum: f64,
+    /// Weight decay baked into the train step.
+    pub weight_decay: f64,
+    /// Whether the first layer routes through the Pallas kernel.
+    pub use_pallas_first_layer: bool,
+    /// Forward-pass HLO file (relative to the artifacts dir).
+    pub forward_hlo: PathBuf,
+    /// Train-step HLO file.
+    pub train_hlo: PathBuf,
+}
+
+impl ArchEntry {
+    /// Number of weight layers.
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifacts directory (absolute or cwd-relative).
+    pub dir: PathBuf,
+    /// Lowered architectures.
+    pub entries: Vec<ArchEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text)
+            .map_err(|e| TsnnError::Runtime(format!("manifest parse: {e}")))?;
+        let entries = root
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| TsnnError::Runtime("manifest missing entries".into()))?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let get_str = |k: &str| -> Result<String> {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| TsnnError::Runtime(format!("manifest entry missing {k}")))
+            };
+            let get_num = |k: &str| -> Result<f64> {
+                e.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| TsnnError::Runtime(format!("manifest entry missing {k}")))
+            };
+            let sizes: Vec<usize> = e
+                .get("sizes")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| TsnnError::Runtime("entry missing sizes".into()))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            if sizes.len() < 2 {
+                return Err(TsnnError::Runtime("entry sizes too short".into()));
+            }
+            out.push(ArchEntry {
+                name: get_str("name")?,
+                sizes,
+                batch: get_num("batch")? as usize,
+                alpha: get_num("alpha").unwrap_or(0.0),
+                momentum: get_num("momentum").unwrap_or(0.9),
+                weight_decay: get_num("weight_decay").unwrap_or(0.0),
+                use_pallas_first_layer: e
+                    .get("use_pallas_first_layer")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                forward_hlo: dir.join(get_str("forward_hlo")?),
+                train_hlo: dir.join(get_str("train_hlo")?),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries: out,
+        })
+    }
+
+    /// Find an architecture by name.
+    pub fn get(&self, name: &str) -> Option<&ArchEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// Default artifacts dir: `$TSNN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("TSNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": [{
+        "name": "tiny", "sizes": [4, 8, 2], "batch": 16, "alpha": 0.6,
+        "momentum": 0.9, "weight_decay": 0.0002,
+        "use_pallas_first_layer": true,
+        "forward_hlo": "tiny_fwd.hlo.txt", "train_hlo": "tiny_train.hlo.txt"
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        let e = m.get("tiny").unwrap();
+        assert_eq!(e.sizes, vec![4, 8, 2]);
+        assert_eq!(e.batch, 16);
+        assert_eq!(e.n_layers(), 2);
+        assert!(e.use_pallas_first_layer);
+        assert_eq!(e.forward_hlo, PathBuf::from("/art/tiny_fwd.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), "not json").is_err());
+        let missing = r#"{"entries": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(Path::new("."), missing).is_err());
+    }
+
+    #[test]
+    fn repo_manifest_parses_if_present() {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.entries.is_empty());
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — no Python on
+//! the training path. Hosts the masked-dense baseline (the paper's
+//! "Keras with a binary mask" comparator).
+
+pub mod engine;
+pub mod manifest;
+pub mod masked;
+
+pub use engine::HloExecutable;
+pub use manifest::{default_artifacts_dir, ArchEntry, Manifest};
+pub use masked::{MaskedDenseTrainer, MaskedEpoch};

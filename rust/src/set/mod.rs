@@ -1,0 +1,237 @@
+//! Sparse Evolutionary Training (SET) — dynamic topology evolution.
+//!
+//! At the end of each training epoch (Mocanu et al. 2018; Algorithm 2 of
+//! the paper), every sparse layer:
+//!
+//! 1. removes a fraction ζ of the **smallest positive** weights,
+//! 2. removes a fraction ζ of the **largest negative** weights (i.e. the
+//!    negatives closest to zero — smallest magnitude on the negative side),
+//! 3. regrows the same number of connections at uniformly-random empty
+//!    positions with freshly-initialised weights and zero velocity.
+//!
+//! The prune thresholds are found with select-nth (O(nnz)), the regrowth
+//! by rejection sampling against the CSR structure (O(k log deg)).
+
+use crate::error::Result;
+use crate::model::{SparseLayer, SparseMlp};
+use crate::sparse::WeightInit;
+use crate::util::Rng;
+
+/// Topology-evolution hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EvolutionConfig {
+    /// Fraction ζ of each sign class pruned per evolution step (paper: 0.3).
+    pub zeta: f64,
+    /// Initialiser for regrown connections.
+    pub init: WeightInit,
+}
+
+impl Default for EvolutionConfig {
+    fn default() -> Self {
+        EvolutionConfig {
+            zeta: 0.3,
+            init: WeightInit::HeUniform,
+        }
+    }
+}
+
+/// Outcome of one evolution step on one layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EvolutionStats {
+    /// Connections removed.
+    pub pruned: usize,
+    /// Connections regrown.
+    pub regrown: usize,
+}
+
+/// Magnitude-prune thresholds: remove the ζ-fraction smallest positive
+/// values and the ζ-fraction of negatives closest to zero.
+///
+/// Returns `(pos_cut, neg_cut)`: prune entries with `0 < v <= pos_cut` or
+/// `neg_cut <= v < 0`. Zero-valued entries are always pruned.
+pub fn prune_thresholds(values: &[f32], zeta: f64) -> (f32, f32) {
+    let mut pos: Vec<f32> = values.iter().copied().filter(|v| *v > 0.0).collect();
+    let mut neg: Vec<f32> = values.iter().copied().filter(|v| *v < 0.0).collect();
+    let kp = (pos.len() as f64 * zeta).floor() as usize;
+    let kn = (neg.len() as f64 * zeta).floor() as usize;
+    let pos_cut = if kp == 0 || pos.is_empty() {
+        0.0
+    } else {
+        let idx = kp - 1;
+        let (_, v, _) = pos.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        *v
+    };
+    let neg_cut = if kn == 0 || neg.is_empty() {
+        0.0
+    } else {
+        // largest negatives = closest to zero = descending order
+        let idx = kn - 1;
+        let (_, v, _) = neg.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        *v
+    };
+    (pos_cut, neg_cut)
+}
+
+/// One SET evolution step on a single layer: prune + random regrow.
+pub fn evolve_layer(
+    layer: &mut SparseLayer,
+    cfg: &EvolutionConfig,
+    rng: &mut Rng,
+) -> Result<EvolutionStats> {
+    let (pos_cut, neg_cut) = prune_thresholds(&layer.weights.values, cfg.zeta);
+    let values = layer.weights.values.clone();
+    let pruned = layer.retain_entries(|k| {
+        let v = values[k];
+        // keep when outside the prune bands and non-zero
+        (v > pos_cut) || (v < neg_cut)
+    });
+
+    // regrow the same amount at random empty positions
+    let (n_in, n_out) = (layer.n_in(), layer.n_out());
+    let capacity = n_in * n_out - layer.weights.nnz();
+    let to_grow = pruned.min(capacity);
+    let mut additions: Vec<(u32, u32, f32)> = Vec::with_capacity(to_grow);
+    let mut chosen = std::collections::HashSet::with_capacity(to_grow * 2);
+    let mut attempts = 0usize;
+    let max_attempts = to_grow.saturating_mul(200) + 1000;
+    while additions.len() < to_grow && attempts < max_attempts {
+        attempts += 1;
+        let i = rng.below_usize(n_in) as u32;
+        let j = rng.below_usize(n_out) as u32;
+        if chosen.contains(&(i, j)) || layer.weights.find(i as usize, j).is_some() {
+            continue;
+        }
+        chosen.insert((i, j));
+        additions.push((i, j, cfg.init.sample(rng, n_in, n_out)));
+    }
+    let regrown = additions.len();
+    layer.insert_entries(additions)?;
+    Ok(EvolutionStats { pruned, regrown })
+}
+
+/// Evolution step over every layer of the model.
+pub fn evolve_model(
+    mlp: &mut SparseMlp,
+    cfg: &EvolutionConfig,
+    rng: &mut Rng,
+) -> Result<Vec<EvolutionStats>> {
+    mlp.layers
+        .iter_mut()
+        .map(|l| evolve_layer(l, cfg, rng))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+
+    fn layer(seed: u64) -> SparseLayer {
+        let mut rng = Rng::new(seed);
+        SparseLayer::erdos_renyi(
+            40,
+            30,
+            6.0,
+            Activation::Relu,
+            &WeightInit::Normal(0.5),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn thresholds_split_by_sign() {
+        let values = vec![-4.0, -3.0, -0.1, 0.2, 1.0, 5.0, 0.3];
+        let (p, n) = prune_thresholds(&values, 0.34);
+        // 3 positives -> kp=1 -> smallest positive 0.2
+        assert_eq!(p, 0.2);
+        // 3 negatives -> kn=1 -> largest negative -0.1
+        assert_eq!(n, -0.1);
+    }
+
+    #[test]
+    fn thresholds_zeta_zero_prunes_nothing() {
+        let (p, n) = prune_thresholds(&[1.0, -1.0], 0.0);
+        assert_eq!((p, n), (0.0, 0.0));
+    }
+
+    #[test]
+    fn evolve_preserves_nnz_and_validity() {
+        let mut l = layer(1);
+        let before = l.weights.nnz();
+        let stats = evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(2)).unwrap();
+        l.weights.validate().unwrap();
+        assert_eq!(l.weights.nnz(), before - stats.pruned + stats.regrown);
+        assert_eq!(stats.pruned, stats.regrown);
+        assert!(stats.pruned > 0);
+        assert_eq!(l.velocity.len(), l.weights.nnz());
+    }
+
+    #[test]
+    fn evolve_prunes_small_magnitudes() {
+        let mut l = layer(3);
+        // inject extreme values that must survive
+        let k = l.weights.nnz();
+        l.weights.values[0] = 100.0;
+        l.weights.values[k - 1] = -100.0;
+        evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(4)).unwrap();
+        let has_big_pos = l.weights.values.iter().any(|&v| v == 100.0);
+        let has_big_neg = l.weights.values.iter().any(|&v| v == -100.0);
+        assert!(has_big_pos && has_big_neg);
+    }
+
+    #[test]
+    fn regrown_links_have_zero_velocity() {
+        let mut l = layer(5);
+        for v in l.velocity.iter_mut() {
+            *v = 7.0;
+        }
+        let stats = evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(6)).unwrap();
+        let zeros = l.velocity.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros >= stats.regrown);
+    }
+
+    #[test]
+    fn evolution_is_deterministic() {
+        let mut a = layer(7);
+        let mut b = layer(7);
+        evolve_layer(&mut a, &EvolutionConfig::default(), &mut Rng::new(9)).unwrap();
+        evolve_layer(&mut b, &EvolutionConfig::default(), &mut Rng::new(9)).unwrap();
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn evolve_model_touches_all_layers() {
+        let mut rng = Rng::new(11);
+        let mut mlp = SparseMlp::new(
+            &[20, 30, 20, 5],
+            4.0,
+            Activation::Relu,
+            &WeightInit::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        let stats = evolve_model(&mut mlp, &EvolutionConfig::default(), &mut rng).unwrap();
+        assert_eq!(stats.len(), 3);
+        for (l, s) in mlp.layers.iter().zip(stats.iter()) {
+            l.weights.validate().unwrap();
+            assert!(s.pruned > 0);
+        }
+    }
+
+    #[test]
+    fn nearly_full_layer_regrows_up_to_capacity() {
+        // dense-ish layer: capacity constrains regrowth
+        let mut rng = Rng::new(13);
+        let mut l = SparseLayer::erdos_renyi(
+            4,
+            4,
+            100.0, // density clamps to 1.0
+            Activation::Relu,
+            &WeightInit::Normal(0.5),
+            &mut rng,
+        );
+        let stats = evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(14)).unwrap();
+        assert!(stats.regrown <= stats.pruned);
+        l.weights.validate().unwrap();
+    }
+}

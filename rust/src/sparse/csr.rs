@@ -1,0 +1,433 @@
+//! CSR sparse weight matrices — the truly-sparse substrate.
+//!
+//! A layer's weights `W ∈ R^{n_in × n_out}` are stored row-major CSR with
+//! **rows = input neurons**. This orientation serves every hot operation:
+//!
+//! * forward  `z[b,:]  += x[b,i] · row_i`         (stream rows, write one
+//!   contiguous output row per sample)
+//! * grad-W   `dW[i,j] += x[b,i] · dz[b,j]`        (aligned with `values`,
+//!   so gradients exist *only* on existing links — the paper's point)
+//! * grad-X   `dx[b,i]  = Σ_j w[i,j] · dz[b,j]`    (row dot)
+//!
+//! Column indices within a row are kept sorted; all structural mutations
+//! (SET prune/regrow, importance pruning) rebuild in one pass and report
+//! an old-index mapping so aligned optimizer state (momentum) survives.
+
+use crate::error::{Result, TsnnError};
+
+/// Sparse weight matrix in CSR layout (rows = inputs, cols = outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Number of rows (input neurons / fan-in dimension).
+    pub n_rows: usize,
+    /// Number of columns (output neurons / fan-out dimension).
+    pub n_cols: usize,
+    /// Row start offsets, length `n_rows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index of each stored entry, sorted within each row.
+    pub col_idx: Vec<u32>,
+    /// Weight value of each stored entry, aligned with `col_idx`.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Empty matrix with the given shape (no stored entries).
+    pub fn empty(n_rows: usize, n_cols: usize) -> Self {
+        CsrMatrix {
+            n_rows,
+            n_cols,
+            row_ptr: vec![0; n_rows + 1],
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Build from COO triplets (row, col, value). Duplicates are rejected.
+    pub fn from_coo(
+        n_rows: usize,
+        n_cols: usize,
+        mut triplets: Vec<(u32, u32, f32)>,
+    ) -> Result<Self> {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        for w in triplets.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                return Err(TsnnError::Sparse(format!(
+                    "duplicate entry at ({}, {})",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        let mut row_ptr = vec![0usize; n_rows + 1];
+        let mut col_idx = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        for &(r, c, v) in &triplets {
+            if r as usize >= n_rows || c as usize >= n_cols {
+                return Err(TsnnError::Sparse(format!(
+                    "entry ({r}, {c}) out of bounds for {n_rows}x{n_cols}"
+                )));
+            }
+            row_ptr[r as usize + 1] += 1;
+            col_idx.push(c);
+            values.push(v);
+        }
+        for i in 0..n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Ok(CsrMatrix {
+            n_rows,
+            n_cols,
+            row_ptr,
+            col_idx,
+            values,
+        })
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of possible entries that are stored.
+    pub fn density(&self) -> f64 {
+        if self.n_rows == 0 || self.n_cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Column/value slices of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    /// Storage index of entry `(i, j)` if present (binary search).
+    #[inline]
+    pub fn find(&self, i: usize, j: u32) -> Option<usize> {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        self.col_idx[s..e].binary_search(&j).ok().map(|k| s + k)
+    }
+
+    /// Value of entry `(i, j)`, or 0.0 if absent.
+    pub fn get(&self, i: usize, j: u32) -> f32 {
+        self.find(i, j).map(|k| self.values[k]).unwrap_or(0.0)
+    }
+
+    /// Iterate all `(row, col, value)` triplets in order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u32, f32)> + '_ {
+        (0..self.n_rows).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter()
+                .zip(vals.iter())
+                .map(move |(&c, &v)| (i, c, v))
+        })
+    }
+
+    /// Dense materialisation (row-major) — test/debug helper.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut d = vec![0.0f32; self.n_rows * self.n_cols];
+        for (i, j, v) in self.iter() {
+            d[i * self.n_cols + j as usize] = v;
+        }
+        d
+    }
+
+    /// Sum of |w| per column — the paper's neuron importance (Eq. 4):
+    /// `I_j = Σ_i |w_ij|` over incoming connections of output neuron j.
+    pub fn column_abs_sums(&self) -> Vec<f32> {
+        let mut sums = vec![0.0f32; self.n_cols];
+        for (&j, &v) in self.col_idx.iter().zip(self.values.iter()) {
+            sums[j as usize] += v.abs();
+        }
+        sums
+    }
+
+    /// Number of stored entries per column (in-degree of output neurons).
+    pub fn column_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_cols];
+        for &j in &self.col_idx {
+            counts[j as usize] += 1;
+        }
+        counts
+    }
+
+    /// Validate structural invariants (sorted unique cols, monotone ptrs).
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.n_rows + 1 {
+            return Err(TsnnError::Sparse("row_ptr length".into()));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err(TsnnError::Sparse("row_ptr ends".into()));
+        }
+        if self.col_idx.len() != self.values.len() {
+            return Err(TsnnError::Sparse("col/val length mismatch".into()));
+        }
+        for i in 0..self.n_rows {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                return Err(TsnnError::Sparse(format!("row_ptr not monotone at {i}")));
+            }
+            let (cols, _) = self.row(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(TsnnError::Sparse(format!(
+                        "row {i} cols not sorted-unique"
+                    )));
+                }
+            }
+            if let Some(&last) = cols.last() {
+                if last as usize >= self.n_cols {
+                    return Err(TsnnError::Sparse(format!("row {i} col out of range")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Keep only entries where `keep(storage_index)` is true. Returns the
+    /// old storage index of each surviving entry (aligned to new `values`)
+    /// so callers can remap aligned optimizer state.
+    pub fn retain(&mut self, mut keep: impl FnMut(usize) -> bool) -> Vec<usize> {
+        let mut kept = Vec::with_capacity(self.nnz());
+        let mut new_ptr = vec![0usize; self.n_rows + 1];
+        let mut w = 0usize;
+        for i in 0..self.n_rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for k in s..e {
+                if keep(k) {
+                    self.col_idx[w] = self.col_idx[k];
+                    self.values[w] = self.values[k];
+                    kept.push(k);
+                    w += 1;
+                }
+            }
+            new_ptr[i + 1] = w;
+        }
+        self.col_idx.truncate(w);
+        self.values.truncate(w);
+        self.row_ptr = new_ptr;
+        kept
+    }
+
+    /// Insert new entries given as `(row, col, value)`; positions must be
+    /// currently empty and unique. Returns the new storage indices of the
+    /// *pre-existing* entries (aligned old→new) so aligned state can be
+    /// remapped; inserted entries occupy the remaining slots.
+    pub fn insert(&mut self, mut additions: Vec<(u32, u32, f32)>) -> Result<Vec<usize>> {
+        if additions.is_empty() {
+            return Ok((0..self.nnz()).collect());
+        }
+        additions.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        for w in additions.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                return Err(TsnnError::Sparse(format!(
+                    "duplicate insertion at ({}, {})",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        for &(r, c, _) in &additions {
+            if r as usize >= self.n_rows || c as usize >= self.n_cols {
+                return Err(TsnnError::Sparse("insertion out of bounds".into()));
+            }
+            if self.find(r as usize, c).is_some() {
+                return Err(TsnnError::Sparse(format!(
+                    "insertion at occupied position ({r}, {c})"
+                )));
+            }
+        }
+        let new_nnz = self.nnz() + additions.len();
+        let mut col_idx = Vec::with_capacity(new_nnz);
+        let mut values = Vec::with_capacity(new_nnz);
+        let mut row_ptr = vec![0usize; self.n_rows + 1];
+        let mut old_to_new = vec![0usize; self.nnz()];
+        let mut a = 0usize; // cursor into additions
+        for i in 0..self.n_rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let mut k = s;
+            // merge sorted existing row with sorted additions for this row
+            while k < e || (a < additions.len() && additions[a].0 as usize == i) {
+                let take_add = if k >= e {
+                    true
+                } else if a >= additions.len() || additions[a].0 as usize != i {
+                    false
+                } else {
+                    additions[a].1 < self.col_idx[k]
+                };
+                if take_add {
+                    col_idx.push(additions[a].1);
+                    values.push(additions[a].2);
+                    a += 1;
+                } else {
+                    old_to_new[k] = col_idx.len();
+                    col_idx.push(self.col_idx[k]);
+                    values.push(self.values[k]);
+                    k += 1;
+                }
+            }
+            row_ptr[i + 1] = col_idx.len();
+        }
+        self.col_idx = col_idx;
+        self.values = values;
+        self.row_ptr = row_ptr;
+        Ok(old_to_new)
+    }
+
+    /// Transposed copy (rows ↔ cols). Used by tests and analysis tools.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut row_ptr = vec![0usize; self.n_cols + 1];
+        for &j in &self.col_idx {
+            row_ptr[j as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            row_ptr[j + 1] += row_ptr[j];
+        }
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        let mut cursor = row_ptr.clone();
+        for (i, j, v) in self.iter() {
+            let p = cursor[j as usize];
+            col_idx[p] = i as u32;
+            values[p] = v;
+            cursor[j as usize] += 1;
+        }
+        CsrMatrix {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Memory footprint of the stored representation in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<u32>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // 3x4:
+        // [1 0 2 0]
+        // [0 0 0 3]
+        // [0 4 0 5]
+        CsrMatrix::from_coo(
+            3,
+            4,
+            vec![(0, 0, 1.0), (0, 2, 2.0), (1, 3, 3.0), (2, 1, 4.0), (2, 3, 5.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_coo_builds_sorted_csr() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row_ptr, vec![0, 2, 3, 5]);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0f32, 2.0][..]));
+    }
+
+    #[test]
+    fn from_coo_rejects_duplicates_and_oob() {
+        assert!(CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]).is_err());
+        assert!(CsrMatrix::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
+        assert!(CsrMatrix::from_coo(2, 2, vec![(0, 5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn get_and_find() {
+        let m = sample();
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.find(2, 3), Some(4));
+        assert_eq!(m.find(1, 0), None);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(
+            d,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 0.0, 4.0, 0.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn column_abs_sums_match_definition() {
+        let m = sample();
+        assert_eq!(m.column_abs_sums(), vec![1.0, 4.0, 2.0, 8.0]);
+        assert_eq!(m.column_counts(), vec![1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn retain_keeps_mapping() {
+        let mut m = sample();
+        // drop all entries with value < 3
+        let vals = m.values.clone();
+        let kept = m.retain(|k| vals[k] >= 3.0);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(kept, vec![2, 3, 4]);
+        assert_eq!(m.values, vec![3.0, 4.0, 5.0]);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn insert_merges_sorted() {
+        let mut m = sample();
+        let old_to_new = m
+            .insert(vec![(0, 1, 9.0), (1, 0, 8.0), (2, 0, 7.0)])
+            .unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 8);
+        assert_eq!(m.get(0, 1), 9.0);
+        assert_eq!(m.get(1, 0), 8.0);
+        // old entry 0 was (0,0): still storage index 0; old entry 1 was
+        // (0,2): shifted by inserted (0,1)
+        assert_eq!(old_to_new[0], 0);
+        assert_eq!(old_to_new[1], 2);
+        assert_eq!(m.values[old_to_new[4]], 5.0);
+    }
+
+    #[test]
+    fn insert_rejects_occupied_and_duplicates() {
+        let mut m = sample();
+        assert!(m.insert(vec![(0, 0, 1.0)]).is_err());
+        let mut m2 = sample();
+        assert!(m2.insert(vec![(1, 1, 1.0), (1, 1, 2.0)]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.n_rows, 4);
+        assert_eq!(t.get(3, 1), 3.0);
+        assert_eq!(t.transpose().to_dense(), m.to_dense());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::empty(5, 7);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.density(), 0.0);
+        assert_eq!(m.column_abs_sums(), vec![0.0; 7]);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let m = sample();
+        assert_eq!(m.memory_bytes(), 4 * 8 + 5 * 4 + 5 * 4);
+    }
+}

@@ -1,0 +1,244 @@
+//! Sparse topology + weight initialisation.
+//!
+//! SET initialises each layer as an Erdős–Rényi random bipartite graph
+//! whose expected edge count is `ε · (n_in + n_out)` (Mocanu et al. 2018),
+//! i.e. density `p = ε (n_in + n_out) / (n_in · n_out)`. The paper found
+//! naive entry-by-entry initialisation to be a bottleneck at scale
+//! ("Matrix initialisation time", §2.4) — we build rows in one pass with
+//! per-row sampled counts, which is O(nnz) rather than O(n_in · n_out).
+
+use super::csr::CsrMatrix;
+use crate::util::Rng;
+
+/// Weight initialisation scheme (Table 7: normal / xavier / he_uniform).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeightInit {
+    /// N(0, std²).
+    Normal(f32),
+    /// U(-lim, lim) with lim = sqrt(6 / (fan_in + fan_out)).
+    Xavier,
+    /// U(-lim, lim) with lim = sqrt(6 / fan_in).
+    HeUniform,
+}
+
+impl WeightInit {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<WeightInit> {
+        match s {
+            "normal" => Some(WeightInit::Normal(0.05)),
+            "xavier" => Some(WeightInit::Xavier),
+            "he_uniform" | "he" => Some(WeightInit::HeUniform),
+            _ => None,
+        }
+    }
+
+    /// Draw one weight for a layer with the given fan-in/out.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng, fan_in: usize, fan_out: usize) -> f32 {
+        match *self {
+            WeightInit::Normal(std) => rng.normal_ms(0.0, std),
+            WeightInit::Xavier => {
+                let lim = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                rng.uniform(-lim, lim)
+            }
+            WeightInit::HeUniform => {
+                let lim = (6.0 / fan_in as f32).sqrt();
+                rng.uniform(-lim, lim)
+            }
+        }
+    }
+}
+
+/// Density implied by the SET epsilon parameter for an `n_in × n_out`
+/// layer: `min(1, ε (n_in + n_out) / (n_in n_out))`.
+pub fn epsilon_density(epsilon: f64, n_in: usize, n_out: usize) -> f64 {
+    if n_in == 0 || n_out == 0 {
+        return 0.0;
+    }
+    (epsilon * (n_in + n_out) as f64 / (n_in as f64 * n_out as f64)).min(1.0)
+}
+
+/// Sample a Binomial(n, p) count.
+///
+/// Exact inversion for small n, normal approximation for large n·p —
+/// initialisation only needs the aggregate degree distribution to be
+/// right, and this keeps 50M-neuron init O(nnz).
+pub fn binomial(rng: &mut Rng, n: usize, p: f64) -> usize {
+    if p <= 0.0 || n == 0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    let np = n as f64 * p;
+    if n < 64 {
+        let mut c = 0usize;
+        for _ in 0..n {
+            if rng.bernoulli(p) {
+                c += 1;
+            }
+        }
+        c
+    } else if np < 12.0 {
+        // Poisson-style inversion on the binomial pmf.
+        let q = 1.0 - p;
+        let mut pmf = q.powi(n as i32);
+        if pmf <= 0.0 {
+            // underflow guard: fall back to normal approximation
+            return binomial_normal(rng, n, p);
+        }
+        let mut cdf = pmf;
+        let u = rng.f64();
+        let mut k = 0usize;
+        while u > cdf && k < n {
+            k += 1;
+            pmf *= (n - k + 1) as f64 / k as f64 * (p / q);
+            cdf += pmf;
+        }
+        k
+    } else {
+        binomial_normal(rng, n, p)
+    }
+}
+
+fn binomial_normal(rng: &mut Rng, n: usize, p: f64) -> usize {
+    let mean = n as f64 * p;
+    let std = (n as f64 * p * (1.0 - p)).sqrt();
+    let v = mean + std * rng.normal() as f64;
+    v.round().clamp(0.0, n as f64) as usize
+}
+
+/// Erdős–Rényi sparse matrix with the given density; weights drawn from
+/// `init`. Row degrees are Binomial(n_cols, density), columns sampled
+/// without replacement and sorted — O(nnz log deg) total.
+pub fn erdos_renyi(
+    n_rows: usize,
+    n_cols: usize,
+    density: f64,
+    rng: &mut Rng,
+    init: &WeightInit,
+) -> CsrMatrix {
+    let mut row_ptr = Vec::with_capacity(n_rows + 1);
+    row_ptr.push(0usize);
+    let mut col_idx: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let expected = (density * n_rows as f64 * n_cols as f64) as usize;
+    col_idx.reserve(expected + n_rows);
+    values.reserve(expected + n_rows);
+    for _ in 0..n_rows {
+        let k = binomial(rng, n_cols, density);
+        let mut cols = rng.sample_indices(n_cols, k);
+        cols.sort_unstable();
+        for c in cols {
+            col_idx.push(c as u32);
+            values.push(init.sample(rng, n_rows, n_cols));
+        }
+        row_ptr.push(col_idx.len());
+    }
+    CsrMatrix {
+        n_rows,
+        n_cols,
+        row_ptr,
+        col_idx,
+        values,
+    }
+}
+
+/// Erdős–Rényi from a SET epsilon (the paper's knob).
+pub fn erdos_renyi_epsilon(
+    n_rows: usize,
+    n_cols: usize,
+    epsilon: f64,
+    rng: &mut Rng,
+    init: &WeightInit,
+) -> CsrMatrix {
+    erdos_renyi(n_rows, n_cols, epsilon_density(epsilon, n_rows, n_cols), rng, init)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_density_formula() {
+        // ε=10, 100x100 -> 10*200/10000 = 0.2
+        assert!((epsilon_density(10.0, 100, 100) - 0.2).abs() < 1e-12);
+        assert_eq!(epsilon_density(1e9, 10, 10), 1.0); // clamped
+        assert_eq!(epsilon_density(1.0, 0, 10), 0.0);
+    }
+
+    #[test]
+    fn er_density_is_close() {
+        let mut rng = Rng::new(1);
+        let m = erdos_renyi(200, 300, 0.1, &mut rng, &WeightInit::Normal(0.05));
+        m.validate().unwrap();
+        let d = m.density();
+        assert!((d - 0.1).abs() < 0.01, "density {d}");
+    }
+
+    #[test]
+    fn er_epsilon_expected_nnz() {
+        let mut rng = Rng::new(2);
+        let m = erdos_renyi_epsilon(500, 400, 10.0, &mut rng, &WeightInit::Xavier);
+        let expected = 10.0 * (500.0 + 400.0);
+        let got = m.nnz() as f64;
+        assert!((got - expected).abs() / expected < 0.1, "nnz {got} vs {expected}");
+    }
+
+    #[test]
+    fn er_is_deterministic_per_seed() {
+        let a = erdos_renyi(50, 50, 0.2, &mut Rng::new(9), &WeightInit::HeUniform);
+        let b = erdos_renyi(50, 50, 0.2, &mut Rng::new(9), &WeightInit::HeUniform);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn binomial_moments() {
+        let mut rng = Rng::new(3);
+        // small-n exact path
+        let n = 40;
+        let p = 0.3;
+        let trials = 20_000;
+        let mean: f64 =
+            (0..trials).map(|_| binomial(&mut rng, n, p) as f64).sum::<f64>() / trials as f64;
+        assert!((mean - n as f64 * p).abs() < 0.2, "mean {mean}");
+        // large-n normal path
+        let mean2: f64 = (0..2_000)
+            .map(|_| binomial(&mut rng, 10_000, 0.05) as f64)
+            .sum::<f64>()
+            / 2_000.0;
+        assert!((mean2 - 500.0).abs() < 5.0, "mean2 {mean2}");
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut rng = Rng::new(4);
+        assert_eq!(binomial(&mut rng, 10, 0.0), 0);
+        assert_eq!(binomial(&mut rng, 10, 1.0), 10);
+        assert_eq!(binomial(&mut rng, 0, 0.5), 0);
+    }
+
+    #[test]
+    fn weight_init_ranges() {
+        let mut rng = Rng::new(5);
+        let he = WeightInit::HeUniform;
+        let lim = (6.0f32 / 100.0).sqrt();
+        for _ in 0..1000 {
+            let v = he.sample(&mut rng, 100, 50);
+            assert!(v.abs() <= lim);
+        }
+        let xa = WeightInit::Xavier;
+        let lim2 = (6.0f32 / 150.0).sqrt();
+        for _ in 0..1000 {
+            assert!(xa.sample(&mut rng, 100, 50).abs() <= lim2);
+        }
+    }
+
+    #[test]
+    fn weight_init_parse() {
+        assert_eq!(WeightInit::parse("normal"), Some(WeightInit::Normal(0.05)));
+        assert_eq!(WeightInit::parse("xavier"), Some(WeightInit::Xavier));
+        assert_eq!(WeightInit::parse("he_uniform"), Some(WeightInit::HeUniform));
+        assert_eq!(WeightInit::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,14 @@
+//! Truly-sparse matrix substrate.
+//!
+//! Everything the paper's "customised and modularized software framework
+//! for sparse neural networks" needs at the matrix level: CSR storage
+//! ([`csr`]), the three training kernels ([`ops`]), and Erdős–Rényi /
+//! weight initialisation ([`init`]). No dense weight matrix is ever
+//! materialised on the training path.
+
+pub mod csr;
+pub mod init;
+pub mod ops;
+
+pub use csr::CsrMatrix;
+pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};

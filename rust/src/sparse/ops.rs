@@ -1,0 +1,296 @@
+//! Truly-sparse compute kernels: the L3 hot path.
+//!
+//! All three training kernels stream CSR rows with one contiguous dense
+//! row per sample, no allocation, no atomics:
+//!
+//! * [`spmm_forward`]      z = x · W          (B×n_in · n_in×n_out)
+//! * [`spmm_grad_input`]   dx = dz · Wᵀ
+//! * [`spmm_grad_weights`] dW = xᵀ · dz  restricted to W's pattern
+//!
+//! The activation-sparsity shortcut (skip `x[b,i] == 0`, which ReLU-family
+//! activations produce in volume) is what makes the truly-sparse engine
+//! beat masked-dense at equal FLOP budgets.
+
+use super::csr::CsrMatrix;
+
+/// Forward: `out[b, :] += Σ_i x[b, i] * W.row(i)`, with `out` pre-zeroed by
+/// the caller (lets callers fuse bias init into the zeroing pass).
+///
+/// Shapes: `x: [batch, n_in]`, `out: [batch, n_out]`, both row-major.
+pub fn spmm_forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(out.len(), batch * n_out);
+    debug_assert!(w.validate().is_ok());
+    let row_ptr = w.row_ptr.as_slice();
+    let col_idx = w.col_idx.as_slice();
+    let values = w.values.as_slice();
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let bl = (batch - b0).min(BLOCK);
+        for i in 0..n_in {
+            // gather this input across the block; skip fully-zero columns
+            // (activation sparsity shortcut, now block-wide)
+            let mut xv = [0.0f32; BLOCK];
+            let mut any = false;
+            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
+                let v = x[(b0 + t) * n_in + i];
+                *xvt = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            // SAFETY: row_ptr has n_rows+1 entries and is monotone; every
+            // col_idx < n_cols (validated CSR invariant), so all indexing
+            // below is in-bounds. Unchecked access removes the bounds
+            // checks that dominate this scatter loop (§Perf changes 1+2:
+            // unchecked + batch-blocked so each W row streams once per
+            // block instead of once per sample).
+            unsafe {
+                let s = *row_ptr.get_unchecked(i);
+                let e = *row_ptr.get_unchecked(i + 1);
+                for k in s..e {
+                    let j = *col_idx.get_unchecked(k) as usize;
+                    let v = *values.get_unchecked(k);
+                    for t in 0..bl {
+                        *out.get_unchecked_mut((b0 + t) * n_out + j) +=
+                            *xv.get_unchecked(t) * v;
+                    }
+                }
+            }
+        }
+        b0 += bl;
+    }
+}
+
+/// Input gradient: `dx[b, i] = Σ_j W[i, j] * dz[b, j]`.
+/// Samples per block in the batch-blocked kernels: each W row is
+/// streamed once per block instead of once per sample, cutting weight
+/// traffic `BLOCK`-fold for layers larger than L2 (§Perf change 2).
+const BLOCK: usize = 4;
+
+pub fn spmm_grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(dz.len(), batch * n_out);
+    assert_eq!(dx.len(), batch * n_in);
+    debug_assert!(w.validate().is_ok());
+    let row_ptr = w.row_ptr.as_slice();
+    let col_idx = w.col_idx.as_slice();
+    let values = w.values.as_slice();
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let bl = (batch - b0).min(BLOCK);
+        for i in 0..n_in {
+            // SAFETY: validated CSR invariants (see spmm_forward).
+            unsafe {
+                let s = *row_ptr.get_unchecked(i);
+                let e = *row_ptr.get_unchecked(i + 1);
+                let mut acc = [0.0f32; BLOCK];
+                for k in s..e {
+                    let j = *col_idx.get_unchecked(k) as usize;
+                    let v = *values.get_unchecked(k);
+                    for t in 0..bl {
+                        acc[t] += v * *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for t in 0..bl {
+                    *dx.get_unchecked_mut((b0 + t) * n_in + i) = acc[t];
+                }
+            }
+        }
+        b0 += bl;
+    }
+}
+
+/// Weight gradient restricted to W's sparsity pattern:
+/// `dw[k] = Σ_b x[b, row(k)] * dz[b, col(k)]`, `dw` aligned with
+/// `w.values` and pre-zeroed by the caller.
+pub fn spmm_grad_weights(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dw: &mut [f32],
+) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(dz.len(), batch * n_out);
+    assert_eq!(dw.len(), w.nnz());
+    debug_assert!(w.validate().is_ok());
+    let row_ptr = w.row_ptr.as_slice();
+    let col_idx = w.col_idx.as_slice();
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let bl = (batch - b0).min(BLOCK);
+        for i in 0..n_in {
+            let mut xv = [0.0f32; BLOCK];
+            let mut any = false;
+            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
+                let v = x[(b0 + t) * n_in + i];
+                *xvt = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            // SAFETY: validated CSR invariants (see spmm_forward); dw is
+            // asserted to be nnz-length above.
+            unsafe {
+                let s = *row_ptr.get_unchecked(i);
+                let e = *row_ptr.get_unchecked(i + 1);
+                for k in s..e {
+                    let j = *col_idx.get_unchecked(k) as usize;
+                    let mut acc = 0.0f32;
+                    for t in 0..bl {
+                        acc += *xv.get_unchecked(t) * *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                    *dw.get_unchecked_mut(k) += acc;
+                }
+            }
+        }
+        b0 += bl;
+    }
+}
+
+/// Bias gradient: `db[j] = Σ_b dz[b, j]` (pre-zeroed `db`).
+pub fn bias_grad(dz: &[f32], batch: usize, n_out: usize, db: &mut [f32]) {
+    debug_assert_eq!(dz.len(), batch * n_out);
+    debug_assert_eq!(db.len(), n_out);
+    for b in 0..batch {
+        let dzrow = &dz[b * n_out..(b + 1) * n_out];
+        for (j, &g) in dzrow.iter().enumerate() {
+            db[j] += g;
+        }
+    }
+}
+
+/// Dense reference matmul for the test oracle: `x[batch, n_in] @ w_dense`.
+pub fn dense_matmul(x: &[f32], batch: usize, w: &[f32], n_in: usize, n_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * n_out];
+    for b in 0..batch {
+        for i in 0..n_in {
+            let xv = x[b * n_in + i];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..n_out {
+                out[b * n_out + j] += xv * w[i * n_out + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::init;
+    use crate::util::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn random_x(rng: &mut Rng, batch: usize, n: usize, zero_frac: f64) -> Vec<f32> {
+        (0..batch * n)
+            .map(|_| {
+                if rng.bernoulli(zero_frac) {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::new(1);
+        let w = init::erdos_renyi(17, 13, 0.3, &mut rng, &init::WeightInit::Normal(0.5));
+        let x = random_x(&mut rng, 5, 17, 0.3);
+        let mut out = vec![0.0f32; 5 * 13];
+        spmm_forward(&x, 5, &w, &mut out);
+        let dense = dense_matmul(&x, 5, &w.to_dense(), 17, 13);
+        close(&out, &dense, 1e-5);
+    }
+
+    #[test]
+    fn grad_input_matches_dense_transpose() {
+        let mut rng = Rng::new(2);
+        let w = init::erdos_renyi(9, 11, 0.4, &mut rng, &init::WeightInit::Normal(1.0));
+        let dz = random_x(&mut rng, 4, 11, 0.0);
+        let mut dx = vec![0.0f32; 4 * 9];
+        spmm_grad_input(&dz, 4, &w, &mut dx);
+        // oracle: dz @ W^T via dense
+        let wt = w.transpose();
+        let dense = dense_matmul(&dz, 4, &wt.to_dense(), 11, 9);
+        close(&dx, &dense, 1e-5);
+    }
+
+    #[test]
+    fn grad_weights_matches_dense_outer_product() {
+        let mut rng = Rng::new(3);
+        let w = init::erdos_renyi(8, 6, 0.5, &mut rng, &init::WeightInit::Normal(1.0));
+        let x = random_x(&mut rng, 7, 8, 0.2);
+        let dz = random_x(&mut rng, 7, 6, 0.0);
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_grad_weights(&x, &dz, 7, &w, &mut dw);
+        // oracle: full dense dW = x^T dz, then read pattern positions
+        for (k, (i, j, _)) in w.iter().enumerate() {
+            let mut acc = 0.0f32;
+            for b in 0..7 {
+                acc += x[b * 8 + i] * dz[b * 6 + j as usize];
+            }
+            assert!((dw[k] - acc).abs() < 1e-4, "k={k}");
+        }
+    }
+
+    #[test]
+    fn bias_grad_sums_batch() {
+        let dz = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let mut db = vec![0.0f32; 3];
+        bias_grad(&dz, 2, 3, &mut db);
+        assert_eq!(db, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn zero_input_produces_zero_everything() {
+        let mut rng = Rng::new(4);
+        let w = init::erdos_renyi(6, 6, 0.5, &mut rng, &init::WeightInit::Normal(1.0));
+        let x = vec![0.0f32; 3 * 6];
+        let mut out = vec![0.0f32; 3 * 6];
+        spmm_forward(&x, 3, &w, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_grad_weights(&x, &out, 3, &w, &mut dw);
+        assert!(dw.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_matrix_is_noop() {
+        let w = CsrMatrix::empty(4, 5);
+        let x = vec![1.0f32; 2 * 4];
+        let mut out = vec![0.0f32; 2 * 5];
+        spmm_forward(&x, 2, &w, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batch_one_consistency() {
+        // result for a stacked batch equals per-sample results
+        let mut rng = Rng::new(5);
+        let w = init::erdos_renyi(10, 7, 0.35, &mut rng, &init::WeightInit::Normal(1.0));
+        let x = random_x(&mut rng, 3, 10, 0.0);
+        let mut full = vec![0.0f32; 3 * 7];
+        spmm_forward(&x, 3, &w, &mut full);
+        for b in 0..3 {
+            let mut one = vec![0.0f32; 7];
+            spmm_forward(&x[b * 10..(b + 1) * 10], 1, &w, &mut one);
+            close(&one, &full[b * 7..(b + 1) * 7], 1e-6);
+        }
+    }
+}

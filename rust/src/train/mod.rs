@@ -1,0 +1,358 @@
+//! Sequential training driver (the paper's §2.2 engine).
+//!
+//! One CPU core, truly-sparse SET training with optional All-ReLU and
+//! Importance Pruning — the configuration space of Table 2. Records the
+//! learning curves (Fig. 6/7), parameter trajectories (Fig. 4) and phase
+//! timings (Table 4 columns) as it goes.
+
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::gradflow::GradFlowTracker;
+use crate::importance;
+use crate::model::{Batcher, SparseMlp};
+use crate::nn::Dropout;
+use crate::set;
+use crate::util::{PhaseTimes, Rng, Timer};
+
+/// Per-epoch record (drives Figs. 4, 6, 7).
+#[derive(Debug, Clone, Copy)]
+pub struct EpochLog {
+    /// Epoch index (0-based).
+    pub epoch: usize,
+    /// Mean training loss over the epoch's batches.
+    pub train_loss: f32,
+    /// Mean training accuracy over the epoch's batches.
+    pub train_accuracy: f32,
+    /// Test loss (NaN when not evaluated this epoch).
+    pub test_loss: f32,
+    /// Test accuracy (NaN when not evaluated this epoch).
+    pub test_accuracy: f32,
+    /// Stored weights after this epoch (tracks Importance Pruning).
+    pub weight_count: usize,
+    /// Wall seconds spent in this epoch (train only).
+    pub seconds: f64,
+}
+
+/// Result of a full training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    /// The trained model.
+    pub model: SparseMlp,
+    /// Per-epoch logs.
+    pub epochs: Vec<EpochLog>,
+    /// Weights at start of training (`start_n^W` of Table 2).
+    pub start_weights: usize,
+    /// Weights at end (`end_n^W`).
+    pub end_weights: usize,
+    /// Best test accuracy observed.
+    pub best_test_accuracy: f32,
+    /// Final test accuracy.
+    pub final_test_accuracy: f32,
+    /// Phase timings: init / train / test / evolution / importance.
+    pub phases: PhaseTimes,
+    /// Gradient-flow series (present when tracking enabled).
+    pub gradflow: Option<GradFlowTracker>,
+}
+
+impl TrainReport {
+    /// Learning-curve CSV: Fig. 6/7 series.
+    pub fn curves_csv(&self) -> String {
+        let mut s = String::from(
+            "epoch,train_loss,train_acc,test_loss,test_acc,weights,seconds\n",
+        );
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                e.epoch,
+                e.train_loss,
+                e.train_accuracy,
+                e.test_loss,
+                e.test_accuracy,
+                e.weight_count,
+                e.seconds
+            ));
+        }
+        s
+    }
+}
+
+/// Options beyond `TrainConfig` used by instrumentation-heavy benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainOptions {
+    /// Sample gradient flow on the train set every N epochs (0 = off).
+    pub gradflow_every: usize,
+    /// Print progress lines via `log`.
+    pub verbose: bool,
+}
+
+/// Train a fresh model per the config — the sequential baseline.
+pub fn train_sequential(cfg: &TrainConfig, data: &Dataset, rng: &mut Rng) -> Result<TrainReport> {
+    train_sequential_opts(cfg, data, rng, TrainOptions::default())
+}
+
+/// [`train_sequential`] with instrumentation options.
+pub fn train_sequential_opts(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    rng: &mut Rng,
+    opts: TrainOptions,
+) -> Result<TrainReport> {
+    let mut phases = PhaseTimes::new();
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let mut model = phases.time("init", || {
+        SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, rng)
+    })?;
+    let report = train_model(cfg, data, &mut model, rng, opts, &mut phases)?;
+    Ok(report)
+}
+
+/// Train an existing model (used by the coordinator's phase 2 and by
+/// ablations that reuse initial topologies).
+pub fn train_model(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    model: &mut SparseMlp,
+    rng: &mut Rng,
+    opts: TrainOptions,
+    phases: &mut PhaseTimes,
+) -> Result<TrainReport> {
+    let start_weights = model.weight_count();
+    let mut ws = model.alloc_workspace(cfg.batch);
+    let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
+    let dropout = if cfg.dropout > 0.0 {
+        Some(Dropout::new(cfg.dropout))
+    } else {
+        None
+    };
+    let mut gradflow = if opts.gradflow_every > 0 {
+        Some(GradFlowTracker::new())
+    } else {
+        None
+    };
+
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut best_test = 0.0f32;
+    let mut final_test = f32::NAN;
+
+    for epoch in 0..cfg.epochs {
+        let lr = cfg.lr.at(epoch);
+        let timer = Timer::start();
+        batcher.reset(rng);
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut n_batches = 0usize;
+        while let Some((x, y)) = batcher.next_batch(&data.x_train, &data.y_train) {
+            let stats =
+                model.train_step(x, y, &cfg.optimizer, lr, dropout.as_ref(), &mut ws, rng);
+            loss_sum += stats.loss as f64;
+            acc_sum += stats.accuracy as f64;
+            n_batches += 1;
+        }
+        let train_secs = timer.secs();
+        phases.add("train", train_secs);
+
+        // gradient-flow probe (before evolution, like the paper's Fig. 5)
+        if let Some(gf) = gradflow.as_mut() {
+            if epoch % opts.gradflow_every == 0 {
+                phases.time("gradflow", || {
+                    gf.measure(
+                        model,
+                        epoch,
+                        &data.x_train,
+                        &data.y_train,
+                        cfg.batch,
+                        4,
+                        &mut ws,
+                    )
+                });
+            }
+        }
+
+        // importance pruning (Algorithm 2: before the prune-regrow cycle)
+        if let Some(imp) = &cfg.importance {
+            if imp.due(epoch) {
+                let removed = phases.time("importance", || importance::prune_model(model, imp));
+                if opts.verbose {
+                    log::info!("epoch {epoch}: importance pruning removed {removed}");
+                }
+            }
+        }
+
+        // SET weight pruning-regrowing cycle (skip after the final epoch so
+        // the evaluated model matches the trained weights, as in SET)
+        if let Some(evo) = &cfg.evolution {
+            if epoch + 1 < cfg.epochs {
+                phases.time("evolution", || set::evolve_model(model, evo, rng))?;
+            }
+        }
+
+        // evaluation
+        let (mut test_loss, mut test_acc) = (f32::NAN, f32::NAN);
+        if cfg.eval_every > 0 && (epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs) {
+            let (l, a) = phases.time("test", || {
+                model.evaluate(&data.x_test, &data.y_test, cfg.batch.max(256), &mut ws)
+            });
+            test_loss = l;
+            test_acc = a;
+            best_test = best_test.max(a);
+            final_test = a;
+        }
+
+        let log_entry = EpochLog {
+            epoch,
+            train_loss: (loss_sum / n_batches.max(1) as f64) as f32,
+            train_accuracy: (acc_sum / n_batches.max(1) as f64) as f32,
+            test_loss,
+            test_accuracy: test_acc,
+            weight_count: model.weight_count(),
+            seconds: train_secs,
+        };
+        if opts.verbose {
+            log::info!(
+                "epoch {:>4}  loss {:.4}  train_acc {:.4}  test_acc {:.4}  weights {}",
+                epoch,
+                log_entry.train_loss,
+                log_entry.train_accuracy,
+                log_entry.test_accuracy,
+                log_entry.weight_count
+            );
+        }
+        epochs.push(log_entry);
+    }
+
+    Ok(TrainReport {
+        end_weights: model.weight_count(),
+        start_weights,
+        best_test_accuracy: best_test,
+        final_test_accuracy: final_test,
+        epochs,
+        phases: std::mem::take(phases),
+        gradflow,
+        model: model.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetSpec;
+    use crate::data::datasets;
+    use crate::importance::ImportanceConfig;
+
+    fn quick_cfg() -> TrainConfig {
+        // Short-horizon test config: SET regrowth (ζ=0.3/epoch) injects
+        // fresh random weights every epoch, so a 12-epoch run at the
+        // paper's η=0.01 bounces; a larger η lets the test converge fast
+        // while still exercising the full evolution path.
+        TrainConfig {
+            hidden: vec![64, 32],
+            epsilon: 8.0,
+            epochs: 20,
+            batch: 64,
+            dropout: 0.0,
+            lr: crate::nn::LrSchedule::Constant(0.05),
+            ..TrainConfig::default()
+        }
+    }
+
+    fn quick_data() -> crate::data::Dataset {
+        let spec = DatasetSpec {
+            name: "toy".into(),
+            generator: "madelon".into(),
+            n_features: 60,
+            n_classes: 2,
+            n_train: 500,
+            n_test: 200,
+        };
+        datasets::generate(&spec, &mut Rng::new(1)).unwrap()
+    }
+
+    #[test]
+    fn sequential_training_learns() {
+        let data = quick_data();
+        let report = train_sequential(&quick_cfg(), &data, &mut Rng::new(2)).unwrap();
+        assert_eq!(report.epochs.len(), 20);
+        let first = report.epochs.first().unwrap().train_loss;
+        let last = report.epochs.last().unwrap().train_loss;
+        assert!(last < first, "loss {first} -> {last}");
+        assert!(report.best_test_accuracy > 0.55, "{}", report.best_test_accuracy);
+        assert!(report.phases.get("train") > 0.0);
+        assert!(report.phases.get("evolution") > 0.0);
+    }
+
+    #[test]
+    fn importance_pruning_reduces_weights() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.importance = Some(ImportanceConfig {
+            start_epoch: 4,
+            period: 2,
+            percentile: 10.0,
+            min_connections: 8,
+        });
+        let base = train_sequential(&quick_cfg(), &data, &mut Rng::new(3)).unwrap();
+        let pruned = train_sequential(&cfg, &data, &mut Rng::new(3)).unwrap();
+        assert!(
+            pruned.end_weights < base.end_weights,
+            "{} vs {}",
+            pruned.end_weights,
+            base.end_weights
+        );
+        // pruning shouldn't destroy the model
+        assert!(pruned.best_test_accuracy > 0.5);
+    }
+
+    #[test]
+    fn static_sparsity_keeps_weight_count() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.evolution = None;
+        let report = train_sequential(&cfg, &data, &mut Rng::new(4)).unwrap();
+        assert_eq!(report.start_weights, report.end_weights);
+    }
+
+    #[test]
+    fn gradflow_tracking_records_points() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.epochs = 6;
+        let report = train_sequential_opts(
+            &cfg,
+            &data,
+            &mut Rng::new(5),
+            TrainOptions {
+                gradflow_every: 2,
+                verbose: false,
+            },
+        )
+        .unwrap();
+        let gf = report.gradflow.unwrap();
+        assert_eq!(gf.points.len(), 3);
+    }
+
+    #[test]
+    fn curves_csv_shape() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.epochs = 3;
+        let report = train_sequential(&cfg, &data, &mut Rng::new(6)).unwrap();
+        let csv = report.curves_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.epochs = 4;
+        let a = train_sequential(&cfg, &data, &mut Rng::new(7)).unwrap();
+        let b = train_sequential(&cfg, &data, &mut Rng::new(7)).unwrap();
+        assert_eq!(
+            a.epochs.last().unwrap().train_loss,
+            b.epochs.last().unwrap().train_loss
+        );
+        assert_eq!(a.end_weights, b.end_weights);
+    }
+}

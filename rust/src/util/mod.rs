@@ -1,0 +1,14 @@
+//! Self-contained utilities: PRNG, JSON, timing, logging.
+//!
+//! The offline build environment pins us to a small vendored crate set
+//! (no rand/serde/criterion), so these modules provide the equivalents
+//! the rest of the crate builds on. Each has its own unit tests.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::{cpu_time_secs, peak_rss_mib, rss_mib, PhaseTimes, Timer};

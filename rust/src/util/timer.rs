@@ -1,0 +1,164 @@
+//! Wall-clock timing and process resource sampling for the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a timer now.
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed duration.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn millis(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates per-phase timings (init/train/test/evolution — Table 4 rows).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    /// New empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to phase `name` (creates it on first use).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    /// Total seconds recorded for `name`.
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// All phases in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(n, s)| (n.as_str(), *s))
+    }
+
+    /// Run `f`, folding its wall time into phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.secs());
+        out
+    }
+}
+
+/// Current resident set size in MiB (linux /proc; 0.0 if unavailable).
+pub fn rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(pages) = s.split_whitespace().nth(1) {
+            if let Ok(p) = pages.parse::<f64>() {
+                return p * 4096.0 / (1024.0 * 1024.0);
+            }
+        }
+    }
+    0.0
+}
+
+/// Peak RSS in MiB from /proc/self/status (VmHWM), 0.0 if unavailable.
+pub fn peak_rss_mib() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+/// Total CPU time (user+sys) consumed by this process, in seconds.
+pub fn cpu_time_secs() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/stat") {
+        // fields 14 (utime) and 15 (stime), 1-indexed, after comm which may
+        // contain spaces — find the closing paren first.
+        if let Some(close) = s.rfind(')') {
+            let rest: Vec<&str> = s[close + 1..].split_whitespace().collect();
+            if rest.len() > 13 {
+                let utime: f64 = rest[11].parse().unwrap_or(0.0);
+                let stime: f64 = rest[12].parse().unwrap_or(0.0);
+                let hz = 100.0; // CLK_TCK on linux
+                return (utime + stime) / hz;
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("train", 1.0);
+        p.add("train", 2.0);
+        p.add("test", 0.5);
+        assert_eq!(p.get("train"), 3.0);
+        assert_eq!(p.get("test"), 0.5);
+        assert_eq!(p.get("missing"), 0.0);
+        assert_eq!(p.iter().count(), 2);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseTimes::new();
+        let v = p.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(p.get("x") >= 0.0);
+    }
+
+    #[test]
+    fn rss_sampling_positive_on_linux() {
+        assert!(rss_mib() > 0.0);
+        assert!(peak_rss_mib() > 0.0);
+        assert!(cpu_time_secs() >= 0.0);
+    }
+}

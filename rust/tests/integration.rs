@@ -1,0 +1,237 @@
+//! Cross-module integration tests: data → training → pruning →
+//! checkpointing → parallel coordination → XLA runtime, exercised
+//! together the way the examples and benches use them.
+
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::coordinator::{run_parallel, ParallelConfig};
+use tsnn::importance::ImportanceConfig;
+use tsnn::nn::LrSchedule;
+use tsnn::prelude::*;
+use tsnn::train::train_sequential;
+
+fn toy_data(seed: u64) -> tsnn::data::Dataset {
+    let spec = DatasetSpec {
+        name: "toy".into(),
+        generator: "madelon".into(),
+        n_features: 60,
+        n_classes: 2,
+        n_train: 600,
+        n_test: 200,
+    };
+    datasets::generate(&spec, &mut Rng::new(seed)).unwrap()
+}
+
+fn toy_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        hidden: vec![64, 32],
+        epsilon: 8.0,
+        epochs,
+        batch: 64,
+        dropout: 0.0,
+        lr: LrSchedule::Constant(0.05),
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn full_pipeline_train_checkpoint_reload_evaluate() {
+    let data = toy_data(1);
+    let cfg = toy_cfg(15);
+    let report = train_sequential(&cfg, &data, &mut Rng::new(2)).unwrap();
+    assert!(report.best_test_accuracy > 0.55);
+
+    let path = std::env::temp_dir().join("tsnn_integration.tsnn");
+    tsnn::model::checkpoint::save(&report.model, &path).unwrap();
+    let reloaded = tsnn::model::checkpoint::load(&path).unwrap();
+    let mut ws = reloaded.alloc_workspace(128);
+    let (_, acc) = reloaded.evaluate(&data.x_test, &data.y_test, 128, &mut ws);
+    assert!((acc - report.final_test_accuracy).abs() < 1e-6);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sequential_and_parallel_reach_similar_accuracy() {
+    let data = toy_data(3);
+    let cfg = toy_cfg(16);
+    let seq = train_sequential(&cfg, &data, &mut Rng::new(4)).unwrap();
+    let par = run_parallel(
+        &cfg,
+        &ParallelConfig {
+            workers: 3,
+            phase1_epochs: 12,
+            phase2_epochs: 4,
+            synchronous: false,
+            hot_start: true,
+            grad_clip: 5.0,
+        },
+        &data,
+        &mut Rng::new(4),
+    )
+    .unwrap();
+    // parallel training must land in the same accuracy regime
+    assert!(
+        (seq.best_test_accuracy - par.final_test_accuracy).abs() < 0.25,
+        "seq {} vs par {}",
+        seq.best_test_accuracy,
+        par.final_test_accuracy
+    );
+}
+
+#[test]
+fn importance_pruning_integrates_with_evolution_and_parallel() {
+    let data = toy_data(5);
+    let mut cfg = toy_cfg(14);
+    cfg.importance = Some(ImportanceConfig {
+        start_epoch: 6,
+        period: 3,
+        percentile: 10.0,
+        min_connections: 16,
+    });
+    let par = run_parallel(
+        &cfg,
+        &ParallelConfig {
+            workers: 2,
+            phase1_epochs: 10,
+            phase2_epochs: 4,
+            synchronous: true,
+            hot_start: true,
+            grad_clip: 5.0,
+        },
+        &data,
+        &mut Rng::new(6),
+    )
+    .unwrap();
+    assert!(par.end_weights < par.start_weights);
+    for layer in &par.model.layers {
+        layer.weights.validate().unwrap();
+        assert_eq!(layer.velocity.len(), layer.weights.nnz());
+    }
+}
+
+#[test]
+fn evolution_preserves_learning_across_long_runs() {
+    // the SET cycle (prune+regrow every epoch) must not break the model
+    // structure over many generations
+    let data = toy_data(7);
+    let mut cfg = toy_cfg(30);
+    cfg.evolution = Some(tsnn::set::EvolutionConfig {
+        zeta: 0.4,
+        ..Default::default()
+    });
+    let report = train_sequential(&cfg, &data, &mut Rng::new(8)).unwrap();
+    for layer in &report.model.layers {
+        layer.weights.validate().unwrap();
+    }
+    assert!(report.best_test_accuracy > 0.55);
+    // weight budget stays roughly constant under evolution
+    let ratio = report.end_weights as f64 / report.start_weights as f64;
+    assert!((0.9..=1.1).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn masked_dense_runtime_agrees_with_truly_sparse_on_same_topology() {
+    // Cross-engine consistency: run the XLA fwd executable against the
+    // truly-sparse forward on an identical (dense-ified) topology.
+    let dir = tsnn::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = tsnn::runtime::Manifest::load(&dir).unwrap();
+    let Some(arch) = manifest.get("small") else { return };
+
+    // build a sparse model with matching sizes
+    let mut rng = Rng::new(9);
+    let model = SparseMlp::new(
+        &arch.sizes,
+        6.0,
+        Activation::AllRelu { alpha: arch.alpha as f32 },
+        &WeightInit::HeUniform,
+        &mut rng,
+    )
+    .unwrap();
+
+    // densify into (w, b, mask) literals for the XLA engine
+    let exe = tsnn::runtime::HloExecutable::load(&arch.forward_hlo).unwrap();
+    let batch = arch.batch;
+    let x: Vec<f32> = (0..batch * arch.sizes[0]).map(|_| rng.normal()).collect();
+    let mut inputs = vec![tsnn::runtime::engine::literal_f32(
+        &x,
+        &[batch as i64, arch.sizes[0] as i64],
+    )
+    .unwrap()];
+    for layer in &model.layers {
+        let (ni, no) = (layer.n_in(), layer.n_out());
+        let mut w = vec![0.0f32; ni * no];
+        let mut m = vec![0.0f32; ni * no];
+        for (i, j, v) in layer.weights.iter() {
+            w[i * no + j as usize] = v;
+            m[i * no + j as usize] = 1.0;
+        }
+        inputs.push(
+            tsnn::runtime::engine::literal_f32(&w, &[ni as i64, no as i64]).unwrap(),
+        );
+        inputs
+            .push(tsnn::runtime::engine::literal_f32(&layer.bias, &[no as i64]).unwrap());
+        inputs.push(
+            tsnn::runtime::engine::literal_f32(&m, &[ni as i64, no as i64]).unwrap(),
+        );
+    }
+    let out = exe.run(&inputs).unwrap();
+    let xla_logits = tsnn::runtime::engine::to_vec_f32(&out[0]).unwrap();
+
+    let mut ws = model.alloc_workspace(batch);
+    let sparse_logits = model.forward(&x, batch, &mut ws, None);
+
+    assert_eq!(xla_logits.len(), sparse_logits.len());
+    for (k, (a, b)) in xla_logits.iter().zip(sparse_logits.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "logit {k}: xla {a} vs sparse {b}"
+        );
+    }
+}
+
+#[test]
+fn config_file_roundtrip_drives_training() {
+    let dir = std::env::temp_dir();
+    let cfg_path = dir.join("tsnn_itest.cfg");
+    std::fs::write(
+        &cfg_path,
+        "epochs = 5\nhidden = 32x16\nlr = 0.05\ndropout = 0\nactivation = allrelu:0.6\n",
+    )
+    .unwrap();
+    let mut cfg = TrainConfig::default();
+    cfg.apply_file(&std::fs::read_to_string(&cfg_path).unwrap()).unwrap();
+    assert_eq!(cfg.epochs, 5);
+    assert_eq!(cfg.hidden, vec![32, 16]);
+    let data = toy_data(11);
+    let report = train_sequential(&cfg, &data, &mut Rng::new(12)).unwrap();
+    assert_eq!(report.epochs.len(), 5);
+    std::fs::remove_file(&cfg_path).ok();
+}
+
+#[test]
+fn gradflow_instrumentation_composes_with_pruning() {
+    let data = toy_data(13);
+    let mut cfg = toy_cfg(12);
+    cfg.importance = Some(ImportanceConfig {
+        start_epoch: 4,
+        period: 2,
+        percentile: 15.0,
+        min_connections: 16,
+    });
+    let report = tsnn::train::train_sequential_opts(
+        &cfg,
+        &data,
+        &mut Rng::new(14),
+        tsnn::train::TrainOptions {
+            gradflow_every: 3,
+            verbose: false,
+        },
+    )
+    .unwrap();
+    let gf = report.gradflow.unwrap();
+    assert!(gf.points.len() >= 3);
+    assert!(gf.points.iter().all(|p| p.grad_norm_sq.is_finite()));
+}

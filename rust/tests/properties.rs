@@ -1,0 +1,277 @@
+//! Property-based tests over the sparse substrate and training
+//! invariants. The offline vendor set has no proptest, so this uses the
+//! same discipline by hand: generate many random cases from seeded RNG
+//! streams, check the invariant, and report the failing seed (re-run
+//! reproducibly with that seed to debug).
+
+use tsnn::nn::{Activation, MomentumSgd};
+use tsnn::prelude::*;
+use tsnn::set::{evolve_layer, prune_thresholds, EvolutionConfig};
+use tsnn::sparse::{epsilon_density, erdos_renyi, ops, CsrMatrix};
+
+const CASES: u64 = 60;
+
+fn rand_csr(rng: &mut Rng) -> CsrMatrix {
+    let n_rows = 1 + rng.below_usize(40);
+    let n_cols = 1 + rng.below_usize(40);
+    let density = rng.f64() * 0.6;
+    erdos_renyi(n_rows, n_cols, density, rng, &WeightInit::Normal(1.0))
+}
+
+#[test]
+fn prop_csr_structure_valid_after_random_construction() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let m = rand_csr(&mut rng);
+        m.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // round-trip through dense preserves everything
+        let d = m.to_dense();
+        let nnz_dense = d.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz_dense <= m.nnz(), "seed {seed}"); // zeros may be stored
+    }
+}
+
+#[test]
+fn prop_transpose_is_involution() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let m = rand_csr(&mut rng);
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_spmm_forward_matches_dense_oracle() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let w = rand_csr(&mut rng);
+        let batch = 1 + rng.below_usize(8);
+        let x: Vec<f32> = (0..batch * w.n_rows)
+            .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+            .collect();
+        let mut out = vec![0.0f32; batch * w.n_cols];
+        ops::spmm_forward(&x, batch, &w, &mut out);
+        let oracle = ops::dense_matmul(&x, batch, &w.to_dense(), w.n_rows, w.n_cols);
+        for (k, (a, b)) in out.iter().zip(oracle.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "seed {seed} idx {k}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_grad_input_is_transpose_forward() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let w = rand_csr(&mut rng);
+        let batch = 1 + rng.below_usize(6);
+        let dz: Vec<f32> = (0..batch * w.n_cols).map(|_| rng.normal()).collect();
+        let mut dx = vec![0.0f32; batch * w.n_rows];
+        ops::spmm_grad_input(&dz, batch, &w, &mut dx);
+        let wt = w.transpose();
+        let mut oracle = vec![0.0f32; batch * w.n_rows];
+        ops::spmm_forward(&dz, batch, &wt, &mut oracle);
+        for (k, (a, b)) in dx.iter().zip(oracle.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "seed {seed} idx {k}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_retain_insert_roundtrip_preserves_survivors() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let mut m = rand_csr(&mut rng);
+        if m.nnz() == 0 {
+            continue;
+        }
+        let original = m.clone();
+        // drop a random half
+        let drop: Vec<bool> = (0..m.nnz()).map(|_| rng.bernoulli(0.5)).collect();
+        let kept = m.retain(|k| !drop[k]);
+        m.validate().unwrap();
+        // every survivor keeps its value
+        for (new_idx, &old_idx) in kept.iter().enumerate() {
+            assert_eq!(m.values[new_idx], original.values[old_idx], "seed {seed}");
+        }
+        // re-insert what was dropped
+        let mut additions = Vec::new();
+        for (k, (i, j, v)) in original.iter().enumerate() {
+            if drop[k] {
+                additions.push((i as u32, j, v));
+            }
+        }
+        m.insert(additions).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m, original, "seed {seed}: retain+insert roundtrip");
+    }
+}
+
+#[test]
+fn prop_epsilon_density_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let n_in = 1 + rng.below_usize(5000);
+        let n_out = 1 + rng.below_usize(5000);
+        let eps = rng.f64() * 50.0;
+        let d = epsilon_density(eps, n_in, n_out);
+        assert!((0.0..=1.0).contains(&d), "seed {seed}: {d}");
+    }
+}
+
+#[test]
+fn prop_evolution_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let n_in = 4 + rng.below_usize(30);
+        let n_out = 4 + rng.below_usize(30);
+        let mut layer = tsnn::model::SparseLayer::erdos_renyi(
+            n_in,
+            n_out,
+            2.0 + rng.f64() * 6.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        );
+        let before = layer.weights.nnz();
+        let zeta = rng.f64() * 0.5;
+        let stats = evolve_layer(
+            &mut layer,
+            &EvolutionConfig {
+                zeta,
+                init: WeightInit::Normal(1.0),
+            },
+            &mut rng,
+        )
+        .unwrap();
+        layer.weights.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // invariant 1: regrown <= pruned (capacity may bind)
+        assert!(stats.regrown <= stats.pruned, "seed {seed}");
+        // invariant 2: nnz conserved up to capacity shortfall
+        assert_eq!(
+            layer.weights.nnz(),
+            before - stats.pruned + stats.regrown,
+            "seed {seed}"
+        );
+        // invariant 3: velocity stays aligned
+        assert_eq!(layer.velocity.len(), layer.weights.nnz(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_prune_thresholds_split_fraction() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let n = 10 + rng.below_usize(500);
+        let values: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let zeta = rng.f64() * 0.9;
+        let (pos_cut, neg_cut) = prune_thresholds(&values, zeta);
+        let pos: Vec<f32> = values.iter().copied().filter(|v| *v > 0.0).collect();
+        let neg: Vec<f32> = values.iter().copied().filter(|v| *v < 0.0).collect();
+        let pruned_pos = pos.iter().filter(|&&v| v <= pos_cut).count();
+        let pruned_neg = neg.iter().filter(|&&v| v >= neg_cut && v < 0.0).count();
+        // prune counts land within one duplicate-cluster of zeta fraction
+        let kp = (pos.len() as f64 * zeta).floor() as usize;
+        let kn = (neg.len() as f64 * zeta).floor() as usize;
+        assert!(pruned_pos >= kp.min(pos.len()), "seed {seed}");
+        assert!(pruned_neg >= kn.min(neg.len()), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_importance_pruning_only_removes_weak_neurons() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let mut layer = tsnn::model::SparseLayer::erdos_renyi(
+            10 + rng.below_usize(20),
+            10 + rng.below_usize(20),
+            3.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        );
+        let importance = tsnn::importance::neuron_importance(&layer);
+        let threshold = 0.5;
+        tsnn::importance::prune_neurons_below(&mut layer, threshold);
+        let counts = layer.weights.column_counts();
+        for (j, &c) in counts.iter().enumerate() {
+            if importance[j] >= threshold {
+                continue;
+            }
+            assert_eq!(c, 0, "seed {seed}: weak neuron {j} kept connections");
+        }
+        layer.weights.validate().unwrap();
+    }
+}
+
+#[test]
+fn prop_training_never_produces_nonfinite_state() {
+    for seed in 0..12 {
+        let mut rng = Rng::new(9000 + seed);
+        let mut model = SparseMlp::new(
+            &[10, 24, 12, 3],
+            6.0,
+            Activation::AllRelu { alpha: 0.75 },
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+        .unwrap();
+        let mut ws = model.alloc_workspace(16);
+        let opt = MomentumSgd::default();
+        let x: Vec<f32> = (0..16 * 10).map(|_| rng.normal() * 3.0).collect();
+        let y: Vec<u32> = (0..16).map(|i| (i % 3) as u32).collect();
+        for step in 0..50 {
+            // lr chosen inside the stable region for this scale of inputs;
+            // divergence at hot rates is legitimate SGD behaviour, not a
+            // finiteness bug.
+            let stats = model.train_step(&x, &y, &opt, 0.02, None, &mut ws, &mut rng);
+            assert!(stats.loss.is_finite(), "seed {seed} step {step}");
+        }
+        for layer in &model.layers {
+            assert!(layer.weights.values.iter().all(|v| v.is_finite()), "seed {seed}");
+            assert!(layer.velocity.iter().all(|v| v.is_finite()), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_model_averaging_bounded_by_inputs() {
+    // averaged value of a link never exceeds the max of contributors
+    for seed in 0..CASES {
+        let mut rng = Rng::new(10_000 + seed);
+        let mk = |r: &mut Rng| {
+            SparseMlp::new(
+                &[8, 12, 3],
+                4.0,
+                Activation::Relu,
+                &WeightInit::Normal(1.0),
+                r,
+            )
+            .unwrap()
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let targets: Vec<usize> = a.layers.iter().map(|l| l.weights.nnz()).collect();
+        let avg =
+            tsnn::coordinator::average_and_resparsify(&[a.clone(), b.clone()], &targets).unwrap();
+        let max_abs = |m: &SparseMlp| -> f32 {
+            m.layers
+                .iter()
+                .flat_map(|l| l.weights.values.iter())
+                .fold(0.0f32, |acc, v| acc.max(v.abs()))
+        };
+        assert!(
+            max_abs(&avg) <= max_abs(&a).max(max_abs(&b)) + 1e-6,
+            "seed {seed}"
+        );
+        for (l, layer) in avg.layers.iter().enumerate() {
+            assert!(layer.weights.nnz() <= targets[l], "seed {seed}");
+        }
+    }
+}
