@@ -1,0 +1,132 @@
+//! §Perf — sequential vs worker-sharded sparse kernels (DESIGN.md §4).
+//!
+//! Measures all three hot-path kernels across a batch × density × thread
+//! grid, printing per-kernel speedups plus a combined fwd+bwd row (the
+//! acceptance gate: ≥ 2× fwd+bwd throughput at batch 128 with 4+ threads
+//! on a 4+-core host). The sharded kernels produce exactly the sequential
+//! results, so each timed pair is also cross-checked for agreement.
+//!
+//! Knobs: TSNN_ITERS (default 12), TSNN_BATCHES (csv, default 32,128,256),
+//! TSNN_THREADS (csv, default 2,4,<cores>).
+
+use tsnn::bench::{env_usize, time_it, Table};
+use tsnn::prelude::*;
+use tsnn::sparse::{erdos_renyi_epsilon, ops};
+
+fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = match std::env::var(name) {
+        Ok(s) => s.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    };
+    v.retain(|&t| t >= 1);
+    v.sort_unstable();
+    v.dedup();
+    if v.is_empty() {
+        v.push(1);
+    }
+    v
+}
+
+fn main() {
+    let iters = env_usize("TSNN_ITERS", 12);
+    let batches = env_csv("TSNN_BATCHES", &[32, 128, 256]);
+    let cores = ops::available_threads();
+    let threads_grid = env_csv("TSNN_THREADS", &[2, 4, cores]);
+
+    println!(
+        "host: {cores} cores; crossover PAR_MIN_WORK = {} MACs\n",
+        ops::PAR_MIN_WORK
+    );
+
+    let mut table = Table::new(
+        "§Perf — sequential vs worker-sharded sparse kernels",
+        &["kernel", "shape", "eps", "batch", "threads", "seq ms", "par ms", "speedup"],
+    );
+
+    // (n_in, n_out, ε): fashion hidden, cifar-in, wide symmetric (≈2×
+    // density), extreme-scale input layer.
+    for &(n_in, n_out, eps) in &[
+        (1000usize, 1000usize, 20.0f64),
+        (3072, 4000, 20.0),
+        (4000, 4000, 40.0),
+        (65536, 4096, 5.0),
+    ] {
+        let mut rng = Rng::new(1);
+        let w = erdos_renyi_epsilon(n_in, n_out, eps, &mut rng, &WeightInit::HeUniform);
+        let nnz = w.nnz();
+        let shape = format!("{n_in}x{n_out}");
+        for &batch in &batches {
+            let x: Vec<f32> = (0..batch * n_in).map(|_| rng.normal()).collect();
+            let dz: Vec<f32> = (0..batch * n_out).map(|_| rng.normal()).collect();
+            let mut out = vec![0.0f32; batch * n_out];
+            let mut dx = vec![0.0f32; batch * n_in];
+            let mut dw = vec![0.0f32; nnz];
+
+            // sequential reference timings
+            let (fwd_seq, _) = time_it(2, iters, || {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_forward(&x, batch, &w, &mut out);
+            });
+            let fwd_ref = out.clone();
+            let (din_seq, _) = time_it(2, iters, || {
+                ops::spmm_grad_input(&dz, batch, &w, &mut dx);
+            });
+            let din_ref = dx.clone();
+            let (dwt_seq, _) = time_it(2, iters, || {
+                dw.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_grad_weights(&x, &dz, batch, &w, &mut dw);
+            });
+            let dwt_ref = dw.clone();
+
+            for &threads in &threads_grid {
+                let (fwd_par, _) = time_it(2, iters, || {
+                    out.iter_mut().for_each(|v| *v = 0.0);
+                    ops::spmm_forward_threaded(&x, batch, &w, &mut out, threads);
+                });
+                assert_eq!(out, fwd_ref, "forward parity {shape} b{batch} t{threads}");
+                let (din_par, _) = time_it(2, iters, || {
+                    ops::spmm_grad_input_threaded(&dz, batch, &w, &mut dx, threads);
+                });
+                assert_eq!(dx, din_ref, "grad_input parity {shape} b{batch} t{threads}");
+                let (dwt_par, _) = time_it(2, iters, || {
+                    dw.iter_mut().for_each(|v| *v = 0.0);
+                    ops::spmm_grad_weights_threaded(&x, &dz, batch, &w, &mut dw, threads);
+                });
+                assert_eq!(dw, dwt_ref, "grad_weights parity {shape} b{batch} t{threads}");
+
+                for (kernel, seq, par) in [
+                    ("spmm_forward", fwd_seq, fwd_par),
+                    ("spmm_grad_input", din_seq, din_par),
+                    ("spmm_grad_weights", dwt_seq, dwt_par),
+                    ("fwd+bwd", fwd_seq + din_seq + dwt_seq, fwd_par + din_par + dwt_par),
+                ] {
+                    table.row(vec![
+                        kernel.into(),
+                        shape.clone(),
+                        format!("{eps}"),
+                        batch.to_string(),
+                        threads.to_string(),
+                        format!("{:.3}", seq * 1e3),
+                        format!("{:.3}", par * 1e3),
+                        format!("{:.2}x", seq / par.max(1e-12)),
+                    ]);
+                }
+            }
+        }
+    }
+
+    table.emit("perf_parallel_kernels.csv");
+
+    // Acceptance summary: best fwd+bwd speedup at batch 128 with ≥4 threads.
+    if cores >= 4 {
+        println!(
+            "acceptance gate: look for the `fwd+bwd` rows at batch 128, threads >= 4 \
+             — target >= 2.00x on a 4+-core host."
+        );
+    } else {
+        println!(
+            "note: this host exposes {cores} cores; the >= 2x acceptance gate \
+             needs a 4+-core machine."
+        );
+    }
+}

@@ -168,6 +168,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Evaluate on test set every `eval_every` epochs.
     pub eval_every: usize,
+    /// Worker budget for the sharded sparse kernels (DESIGN.md §4):
+    /// `0` = one per available core, `1` = always sequential, `n` = at
+    /// most n threads per kernel call. Results are identical at any
+    /// setting; this only trades wall-clock for cores.
+    pub kernel_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -186,6 +191,7 @@ impl Default for TrainConfig {
             importance: None,
             seed: 42,
             eval_every: 1,
+            kernel_threads: 0,
         }
     }
 }
@@ -277,7 +283,7 @@ impl TrainConfig {
     /// keys: epochs, batch, epsilon, lr, seed, dropout, alpha, activation,
     /// init, hidden (e.g. `hidden=256x256x128`), zeta, importance
     /// (on/off), importance_start, importance_period, importance_pct,
-    /// eval_every, momentum, weight_decay.
+    /// eval_every, momentum, weight_decay, kernel_threads.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let bad = |k: &str, v: &str| TsnnError::Config(format!("bad value '{v}' for '{k}'"));
         match key {
@@ -287,6 +293,9 @@ impl TrainConfig {
             "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
             "dropout" => self.dropout = value.parse().map_err(|_| bad(key, value))?,
             "eval_every" => self.eval_every = value.parse().map_err(|_| bad(key, value))?,
+            "kernel_threads" => {
+                self.kernel_threads = value.parse().map_err(|_| bad(key, value))?
+            }
             "lr" => {
                 let eta: f32 = value.parse().map_err(|_| bad(key, value))?;
                 self.lr = LrSchedule::Constant(eta);
@@ -411,6 +420,9 @@ mod tests {
         c.set("importance", "on").unwrap();
         c.set("importance_pct", "10").unwrap();
         c.set("zeta", "0.25").unwrap();
+        c.set("kernel_threads", "4").unwrap();
+        assert_eq!(c.kernel_threads, 4);
+        assert!(c.set("kernel_threads", "many").is_err());
         assert_eq!(c.epochs, 7);
         assert_eq!(c.hidden, vec![32, 16]);
         assert_eq!(c.activation, Activation::Relu);

@@ -106,6 +106,14 @@ pub struct ParallelReport {
     pub phases: PhaseTimes,
 }
 
+/// Kernel-shard budget per coordinator worker: the machine's thread
+/// budget (the config's `kernel_threads` knob, `0` = all cores) divided
+/// across the K data-parallel workers, so phase-1/2 workers running
+/// sharded kernels (DESIGN.md §4) never oversubscribe the host.
+fn worker_kernel_threads(cfg: &TrainConfig, workers: usize) -> usize {
+    (crate::sparse::ops::resolve_threads(cfg.kernel_threads) / workers.max(1)).max(1)
+}
+
 fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
     let per = n / workers;
     let lo = k * per;
@@ -201,6 +209,7 @@ pub fn run_parallel(
                 let mut local_cfg = cfg.clone();
                 local_cfg.epochs = pcfg.phase2_epochs;
                 local_cfg.eval_every = 0; // no test eval inside workers
+                local_cfg.kernel_threads = worker_kernel_threads(cfg, pcfg.workers);
                 let mut local_model = phase1_model.clone();
                 let mut local_rng = Rng::new(cfg.seed).split(1000 + k as u64);
                 handles.push(scope.spawn(move || -> Result<SparseMlp> {
@@ -262,6 +271,7 @@ fn run_phase1_async(
         },
         other => other,
     };
+    let kernel_threads = worker_kernel_threads(cfg, pcfg.workers);
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for k in 0..pcfg.workers {
@@ -275,7 +285,7 @@ fn run_phase1_async(
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut batcher = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
                 batcher.reset(&mut rng);
-                let mut ws = crate::model::Workspace::default();
+                let mut ws = crate::model::Workspace::with_threads(kernel_threads);
                 loop {
                     let epoch = ps.epoch();
                     if epoch >= pcfg.phase1_epochs {
@@ -350,6 +360,7 @@ fn run_phase1_sync(
     } else {
         None
     };
+    let kernel_threads = worker_kernel_threads(cfg, k);
 
     for epoch in 0..pcfg.phase1_epochs {
         let lr = schedule.at(epoch);
@@ -375,7 +386,7 @@ fn run_phase1_sync(
                                 batcher.next_batch(&data.x_train, &data.y_train).unwrap()
                             }
                         };
-                        let mut ws = crate::model::Workspace::default();
+                        let mut ws = crate::model::Workspace::with_threads(kernel_threads);
                         model.compute_gradients(batch.0, batch.1, dref, &mut ws, rng);
                         (ws.grad_w, ws.grad_b)
                     }));

@@ -265,11 +265,15 @@ mod tests {
 
     #[test]
     fn validation_rejects_bad_specs() {
-        let mut s = SynthSpec::default();
-        s.n_informative = 25; // > n_features
+        let s = SynthSpec {
+            n_informative: 25, // > n_features
+            ..Default::default()
+        };
         assert!(s.validate().is_err());
-        let mut s2 = SynthSpec::default();
-        s2.n_classes = 1;
+        let s2 = SynthSpec {
+            n_classes: 1,
+            ..Default::default()
+        };
         assert!(s2.validate().is_err());
     }
 

@@ -1,41 +1,71 @@
 //! Error types for the tsnn crate.
+//!
+//! Hand-implemented `Display`/`Error`/`From` (the offline build has no
+//! `thiserror`; see DESIGN.md §3 Substitutions) with the same variant
+//! messages a `#[derive(Error)]` would produce.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type across the sparse engine, coordinator and runtime.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum TsnnError {
     /// Shape mismatch between tensors / layers.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid configuration value.
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// Dataset generation / loading problem.
-    #[error("data error: {0}")]
     Data(String),
 
     /// Sparse-matrix structural invariant violated.
-    #[error("sparse structure error: {0}")]
     Sparse(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / parallel-training failure.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Checkpoint serialization problems.
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
 
     /// IO wrapper.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for TsnnError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TsnnError::Shape(m) => write!(f, "shape mismatch: {m}"),
+            TsnnError::Config(m) => write!(f, "invalid config: {m}"),
+            TsnnError::Data(m) => write!(f, "data error: {m}"),
+            TsnnError::Sparse(m) => write!(f, "sparse structure error: {m}"),
+            TsnnError::Runtime(m) => write!(f, "runtime error: {m}"),
+            TsnnError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            TsnnError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            // transparent: delegate straight to the wrapped error
+            TsnnError::Io(e) => fmt::Display::fmt(e, f),
+        }
+    }
+}
+
+impl std::error::Error for TsnnError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // transparent: Display already delegates to the inner error, so
+            // forward its *source* (not the error itself) to keep chain
+            // walkers from printing the same message twice.
+            TsnnError::Io(e) => std::error::Error::source(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TsnnError {
+    fn from(e: std::io::Error) -> Self {
+        TsnnError::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -45,5 +75,31 @@ impl TsnnError {
     /// Helper for shape errors with formatted context.
     pub fn shape(msg: impl Into<String>) -> Self {
         TsnnError::Shape(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_keep_prefixes() {
+        assert_eq!(
+            TsnnError::Config("bad".into()).to_string(),
+            "invalid config: bad"
+        );
+        assert_eq!(
+            TsnnError::shape("a vs b").to_string(),
+            "shape mismatch: a vs b"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_stay_transparent() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: TsnnError = io.into();
+        assert_eq!(e.to_string(), "gone");
+        // transparent chain: the message appears once, not again via source()
+        assert!(std::error::Error::source(&e).is_none());
     }
 }

@@ -91,8 +91,7 @@ pub fn prune_low_importance(layer: &mut SparseLayer, cfg: &ImportanceConfig) -> 
         return 0;
     }
     let thr = percentile_value(&active, cfg.percentile);
-    let removed = prune_neurons_below(layer, thr);
-    removed
+    prune_neurons_below(layer, thr)
 }
 
 /// During-training importance pruning across hidden layers (all layers

@@ -15,6 +15,42 @@
 //!   HLO text in `artifacts/`, executed via [`runtime`].
 //! - L1: `python/compile/kernels/` — Pallas masked-matmul + fused
 //!   All-ReLU kernel, folded into the L2 artifacts.
+//!
+//! The three hot-path CSR kernels additionally ship worker-sharded
+//! parallel variants (DESIGN.md §4): disjoint-write sharding over scoped
+//! OS threads, exact-match deterministic, selected end to end by the
+//! `kernel_threads` config knob.
+//!
+//! ## Quick example
+//!
+//! Build a truly-sparse MLP, run a forward pass, and take one training
+//! step — no dense weight matrix is ever materialised:
+//!
+//! ```
+//! use tsnn::prelude::*;
+//! use tsnn::nn::MomentumSgd;
+//!
+//! let mut rng = Rng::new(7);
+//! let mut mlp = SparseMlp::new(
+//!     &[4, 16, 3],                       // sizes: 4 features -> 3 classes
+//!     2.0,                               // SET sparsity knob ε
+//!     Activation::AllRelu { alpha: 0.6 },
+//!     &WeightInit::HeUniform,
+//!     &mut rng,
+//! )
+//! .unwrap();
+//! assert!(mlp.weight_count() < 4 * 16 + 16 * 3); // truly sparse
+//!
+//! let mut ws = mlp.alloc_workspace(2);
+//! ws.kernel_threads = 1; // 0 = one kernel worker per core (default)
+//! let x = vec![0.5f32; 2 * 4];
+//! let logits = mlp.forward(&x, 2, &mut ws, None);
+//! assert_eq!(logits.len(), 2 * 3);
+//!
+//! let labels = vec![0u32, 2];
+//! let stats = mlp.train_step(&x, &labels, &MomentumSgd::default(), 0.1, None, &mut ws, &mut rng);
+//! assert!(stats.loss.is_finite());
+//! ```
 
 pub mod bench;
 pub mod cli;

@@ -72,7 +72,8 @@ fn print_help() {
          options: --paper --seed N --save PATH --workers K --sync\n\
          \x20        --phase1 N --phase2 N --verbose --gradflow N\n\
          overrides: epochs= batch= epsilon= lr= alpha= activation= init=\n\
-         \x20          hidden=AxBxC zeta= dropout= importance=on|off ...\n\
+         \x20          hidden=AxBxC zeta= dropout= importance=on|off\n\
+         \x20          kernel_threads=N (0=all cores, 1=sequential) ...\n\
          datasets: {DATASETS:?}"
     );
 }

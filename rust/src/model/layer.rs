@@ -2,7 +2,7 @@
 //! state + activation.
 
 use crate::nn::{remap_aligned, Activation, MomentumSgd, SRelu};
-use crate::sparse::{erdos_renyi_epsilon, CsrMatrix, WeightInit};
+use crate::sparse::{erdos_renyi_epsilon, ops, CsrMatrix, WeightInit};
 use crate::util::Rng;
 
 /// One sparse layer of the MLP (`n_in × n_out` CSR weights).
@@ -59,6 +59,40 @@ impl SparseLayer {
         self.weights.nnz()
             + self.bias.len()
             + self.srelu.as_ref().map(|s| s.param_count()).unwrap_or(0)
+    }
+
+    /// Linear part of the forward pass: `pre = x · W + b` (bias broadcast
+    /// into `pre` here, fused with the kernel's pre-zero requirement).
+    /// `threads` is the kernel-shard budget (`0` = one per available core,
+    /// `1` = sequential); dispatch and crossover live in [`ops`].
+    pub fn forward_into(&self, x: &[f32], batch: usize, pre: &mut [f32], threads: usize) {
+        let n_out = self.n_out();
+        for b in 0..batch {
+            pre[b * n_out..(b + 1) * n_out].copy_from_slice(&self.bias);
+        }
+        ops::spmm_forward_threaded(x, batch, &self.weights, pre, threads);
+    }
+
+    /// Input gradient through this layer: `dx = dz · Wᵀ` (overwrites `dx`).
+    pub fn grad_input_into(&self, dz: &[f32], batch: usize, dx: &mut [f32], threads: usize) {
+        ops::spmm_grad_input_threaded(dz, batch, &self.weights, dx, threads);
+    }
+
+    /// Pattern-aligned weight gradient and bias gradient for a batch
+    /// (`grad_w` aligned with `weights.values`; both buffers zeroed here).
+    pub fn grads_into(
+        &self,
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        grad_w: &mut [f32],
+        grad_b: &mut [f32],
+        threads: usize,
+    ) {
+        grad_w.iter_mut().for_each(|v| *v = 0.0);
+        grad_b.iter_mut().for_each(|v| *v = 0.0);
+        ops::spmm_grad_weights_threaded(x, dz, batch, &self.weights, grad_w, threads);
+        ops::bias_grad(dz, batch, self.n_out(), grad_b);
     }
 
     /// Apply the optimizer to this layer's weights and biases.
@@ -168,6 +202,37 @@ mod tests {
         assert_eq!(l.weights.get(i as usize, j), 0.123);
         let new_sum: f32 = l.velocity.iter().sum();
         assert_eq!(old_sum, new_sum); // inserted entry has zero velocity
+    }
+
+    #[test]
+    fn forward_into_matches_manual_bias_plus_spmm() {
+        let mut l = layer();
+        for (j, b) in l.bias.iter_mut().enumerate() {
+            *b = j as f32 * 0.1;
+        }
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * l.n_in()).map(|i| (i % 5) as f32 - 2.0).collect();
+        let mut pre = vec![7.0f32; batch * l.n_out()]; // stale garbage
+        l.forward_into(&x, batch, &mut pre, 1);
+        let mut oracle = vec![0.0f32; batch * l.n_out()];
+        for b in 0..batch {
+            oracle[b * l.n_out()..(b + 1) * l.n_out()].copy_from_slice(&l.bias);
+        }
+        ops::spmm_forward(&x, batch, &l.weights, &mut oracle);
+        assert_eq!(pre, oracle);
+    }
+
+    #[test]
+    fn grads_into_zeroes_buffers_first() {
+        let l = layer();
+        let batch = 2;
+        let x = vec![0.0f32; batch * l.n_in()];
+        let dz = vec![0.0f32; batch * l.n_out()];
+        let mut gw = vec![3.0f32; l.weights.nnz()];
+        let mut gb = vec![3.0f32; l.n_out()];
+        l.grads_into(&x, &dz, batch, &mut gw, &mut gb, 1);
+        assert!(gw.iter().all(|&v| v == 0.0));
+        assert!(gb.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use crate::error::{Result, TsnnError};
 use crate::nn::{accuracy, softmax_cross_entropy, Activation, Dropout, MomentumSgd};
-use crate::sparse::{ops, WeightInit};
+use crate::sparse::WeightInit;
 use crate::util::Rng;
 
 use super::layer::SparseLayer;
@@ -42,6 +42,24 @@ pub struct Workspace {
     pub srelu_grads: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
     /// Loss-gradient buffer (reused across steps; §Perf change 4).
     dlogits: Vec<f32>,
+    /// Worker budget for the sharded sparse kernels: `0` = one per
+    /// available core, `1` = sequential, `n` = at most n threads. The
+    /// sharded kernels produce exactly the sequential results (DESIGN.md
+    /// §4), so this is a pure speed knob. Coordinator workers set it to
+    /// their share of the machine so K workers × kernel threads never
+    /// oversubscribes cores.
+    pub kernel_threads: usize,
+}
+
+impl Workspace {
+    /// Empty workspace with a kernel-shard budget (`0` = one worker per
+    /// available core); buffers are sized lazily on first use.
+    pub fn with_threads(kernel_threads: usize) -> Self {
+        Workspace {
+            kernel_threads,
+            ..Default::default()
+        }
+    }
 }
 
 /// One train-step report.
@@ -167,19 +185,16 @@ impl SparseMlp {
         self.resize_workspace(ws, batch);
         ws.act[0].copy_from_slice(x);
         let n_layers = self.n_layers();
+        let kt = ws.kernel_threads;
         let mut drop = dropout;
         for (l, layer) in self.layers.iter().enumerate() {
             let n_out = layer.n_out();
-            // z = x W + b  (bias folded into the zero-init pass)
+            // z = x W + b  (bias folded into the kernel's pre-zero pass)
             {
                 // `act` and `pre` are disjoint fields, so the split borrow
                 // is safe and allocation-free.
                 let (act, pre) = (&ws.act, &mut ws.pre);
-                let pre_l = &mut pre[l];
-                for b in 0..batch {
-                    pre_l[b * n_out..(b + 1) * n_out].copy_from_slice(&layer.bias);
-                }
-                ops::spmm_forward(&act[l], batch, &layer.weights, pre_l);
+                layer.forward_into(&act[l], batch, &mut pre[l], kt);
             }
             // activation into act[l+1]
             ws.act[l + 1].copy_from_slice(&ws.pre[l]);
@@ -211,36 +226,26 @@ impl SparseMlp {
         let n_layers = self.n_layers();
         debug_assert_eq!(dlogits.len(), batch * self.n_classes());
         ws.delta_a[..dlogits.len()].copy_from_slice(dlogits);
+        let kt = ws.kernel_threads;
         let mut grad_sq = 0.0f32;
         for l in (0..n_layers).rev() {
             let layer = &self.layers[l];
             let (n_in, n_out) = (layer.n_in(), layer.n_out());
             let delta_len = batch * n_out;
-            // bias grad
-            let gb = &mut ws.grad_b[l];
-            gb.iter_mut().for_each(|v| *v = 0.0);
-            ops::bias_grad(&ws.delta_a[..delta_len], batch, n_out, gb);
-            // weight grad (aligned with CSR values)
+            // weight grad (aligned with CSR values) + bias grad
             let gw = &mut ws.grad_w[l];
-            gw.iter_mut().for_each(|v| *v = 0.0);
-            ops::spmm_grad_weights(
-                &ws.act[l],
-                &ws.delta_a[..delta_len],
-                batch,
-                &layer.weights,
-                gw,
-            );
+            let gb = &mut ws.grad_b[l];
+            layer.grads_into(&ws.act[l], &ws.delta_a[..delta_len], batch, gw, gb, kt);
             grad_sq += gw.iter().map(|g| g * g).sum::<f32>();
             grad_sq += gb.iter().map(|g| g * g).sum::<f32>();
             if l > 0 {
-                // input gradient into delta_b
+                // input gradient into delta_b (overwritten by the kernel)
                 let dx_len = batch * n_in;
-                ws.delta_b[..dx_len].iter_mut().for_each(|v| *v = 0.0);
-                ops::spmm_grad_input(
+                layer.grad_input_into(
                     &ws.delta_a[..delta_len],
                     batch,
-                    &layer.weights,
                     &mut ws.delta_b[..dx_len],
+                    kt,
                 );
                 // through dropout of layer l-1's output (mask recorded at
                 // forward time; empty mask means dropout was off)
@@ -482,6 +487,25 @@ mod tests {
         assert_eq!(l1, l2);
         assert_eq!(a1, a2);
         assert!(a1 > 0.6, "acc {a1}");
+    }
+
+    #[test]
+    fn kernel_threads_do_not_change_forward_or_gradients() {
+        let (mlp, x, y) = toy();
+        let mut seq_ws = mlp.alloc_workspace(90);
+        seq_ws.kernel_threads = 1;
+        let mut par_ws = mlp.alloc_workspace(90);
+        par_ws.kernel_threads = 8;
+        let mut r1 = Rng::new(0);
+        let mut r2 = Rng::new(0);
+        let s1 = mlp.compute_gradients(&x, &y, None, &mut seq_ws, &mut r1);
+        let s2 = mlp.compute_gradients(&x, &y, None, &mut par_ws, &mut r2);
+        assert_eq!(s1.loss, s2.loss);
+        assert_eq!(s1.grad_norm_sq, s2.grad_norm_sq);
+        for l in 0..mlp.n_layers() {
+            assert_eq!(seq_ws.grad_w[l], par_ws.grad_w[l], "layer {l} grad_w");
+            assert_eq!(seq_ws.grad_b[l], par_ws.grad_b[l], "layer {l} grad_b");
+        }
     }
 
     #[test]

@@ -43,6 +43,21 @@ impl CsrMatrix {
     }
 
     /// Build from COO triplets (row, col, value). Duplicates are rejected.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use tsnn::sparse::CsrMatrix;
+    ///
+    /// let m = CsrMatrix::from_coo(2, 3, vec![(0, 1, 0.5), (1, 0, -1.0)]).unwrap();
+    /// assert_eq!(m.nnz(), 2);
+    /// assert_eq!(m.get(0, 1), 0.5);
+    /// assert_eq!(m.get(1, 2), 0.0); // absent entry
+    ///
+    /// // duplicate and out-of-bounds entries are rejected
+    /// assert!(CsrMatrix::from_coo(1, 1, vec![(0, 0, 1.0), (0, 0, 2.0)]).is_err());
+    /// assert!(CsrMatrix::from_coo(1, 1, vec![(0, 7, 1.0)]).is_err());
+    /// ```
     pub fn from_coo(
         n_rows: usize,
         n_cols: usize,

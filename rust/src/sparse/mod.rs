@@ -2,9 +2,10 @@
 //!
 //! Everything the paper's "customised and modularized software framework
 //! for sparse neural networks" needs at the matrix level: CSR storage
-//! ([`csr`]), the three training kernels ([`ops`]), and Erdős–Rényi /
-//! weight initialisation ([`init`]). No dense weight matrix is ever
-//! materialised on the training path.
+//! ([`csr`]), the three training kernels ([`ops`]) with their
+//! worker-sharded parallel variants (see `rust/DESIGN.md` §4), and
+//! Erdős–Rényi / weight initialisation ([`init`]). No dense weight matrix
+//! is ever materialised on the training path.
 
 pub mod csr;
 pub mod init;
@@ -12,3 +13,6 @@ pub mod ops;
 
 pub use csr::CsrMatrix;
 pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};
+pub use ops::{
+    spmm_forward_threaded, spmm_grad_input_threaded, spmm_grad_weights_threaded,
+};

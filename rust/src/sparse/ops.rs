@@ -10,6 +10,12 @@
 //! The activation-sparsity shortcut (skip `x[b,i] == 0`, which ReLU-family
 //! activations produce in volume) is what makes the truly-sparse engine
 //! beat masked-dense at equal FLOP budgets.
+//!
+//! Each kernel also has a worker-sharded variant ([`spmm_forward_threaded`],
+//! [`spmm_grad_input_threaded`], [`spmm_grad_weights_threaded`]) that splits
+//! the work across scoped OS threads with **disjoint writes** (no atomics,
+//! no locks) and falls back to the sequential path below a crossover work
+//! threshold — see `rust/DESIGN.md` §4 for the sharding invariants.
 
 use super::csr::CsrMatrix;
 
@@ -17,6 +23,18 @@ use super::csr::CsrMatrix;
 /// the caller (lets callers fuse bias init into the zeroing pass).
 ///
 /// Shapes: `x: [batch, n_in]`, `out: [batch, n_out]`, both row-major.
+///
+/// # Examples
+///
+/// ```
+/// use tsnn::sparse::{ops, CsrMatrix};
+///
+/// // W = [[1, 0], [0, 2]] stored sparse; one sample x = [3, 4].
+/// let w = CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]).unwrap();
+/// let mut out = vec![0.0f32; 2];
+/// ops::spmm_forward(&[3.0, 4.0], 1, &w, &mut out);
+/// assert_eq!(out, vec![3.0, 8.0]);
+/// ```
 pub fn spmm_forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(x.len(), batch * n_in);
@@ -113,17 +131,42 @@ pub fn spmm_grad_weights(
     w: &CsrMatrix,
     dw: &mut [f32],
 ) {
-    let (n_in, n_out) = (w.n_rows, w.n_cols);
-    assert_eq!(x.len(), batch * n_in);
-    assert_eq!(dz.len(), batch * n_out);
+    assert_eq!(x.len(), batch * w.n_rows);
+    assert_eq!(dz.len(), batch * w.n_cols);
     assert_eq!(dw.len(), w.nnz());
     debug_assert!(w.validate().is_ok());
+    grad_weights_rows(x, dz, batch, w, 0, w.n_rows, dw);
+}
+
+/// [`spmm_grad_weights`] restricted to rows `[row0, row1)`; `dw` covers the
+/// value slots of exactly those rows (`row_ptr[row1] - row_ptr[row0]` long).
+/// This is the per-shard core of the sharded weight-gradient kernel: the
+/// batch loop runs in the same `BLOCK` order as the sequential kernel, so a
+/// shard's `dw` slots are filled identically to a full sequential pass.
+///
+/// Callers guarantee `x.len() == batch * n_in`, `dz.len() == batch * n_out`,
+/// `row0 <= row1 <= n_rows`, and a validated CSR `w`.
+fn grad_weights_rows(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    row0: usize,
+    row1: usize,
+    dw: &mut [f32],
+) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    debug_assert!(row0 <= row1 && row1 <= n_in);
+    debug_assert_eq!(x.len(), batch * n_in);
+    debug_assert_eq!(dz.len(), batch * n_out);
     let row_ptr = w.row_ptr.as_slice();
     let col_idx = w.col_idx.as_slice();
+    let base = row_ptr[row0];
+    debug_assert_eq!(dw.len(), row_ptr[row1] - base);
     let mut b0 = 0usize;
     while b0 < batch {
         let bl = (batch - b0).min(BLOCK);
-        for i in 0..n_in {
+        for i in row0..row1 {
             let mut xv = [0.0f32; BLOCK];
             let mut any = false;
             for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
@@ -134,8 +177,9 @@ pub fn spmm_grad_weights(
             if !any {
                 continue;
             }
-            // SAFETY: validated CSR invariants (see spmm_forward); dw is
-            // asserted to be nnz-length above.
+            // SAFETY: validated CSR invariants (see spmm_forward); dw spans
+            // the value slots of rows [row0, row1), so `k - base` is
+            // in-bounds for every k in this row range.
             unsafe {
                 let s = *row_ptr.get_unchecked(i);
                 let e = *row_ptr.get_unchecked(i + 1);
@@ -145,7 +189,7 @@ pub fn spmm_grad_weights(
                     for t in 0..bl {
                         acc += *xv.get_unchecked(t) * *dz.get_unchecked((b0 + t) * n_out + j);
                     }
-                    *dw.get_unchecked_mut(k) += acc;
+                    *dw.get_unchecked_mut(k - base) += acc;
                 }
             }
         }
@@ -163,6 +207,195 @@ pub fn bias_grad(dz: &[f32], batch: usize, n_out: usize, db: &mut [f32]) {
             db[j] += g;
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-sharded parallel backend (DESIGN.md §4).
+//
+// Sharding strategy per kernel:
+//   * spmm_forward / spmm_grad_input — batch-sharded: each worker owns a
+//     contiguous range of samples and therefore a disjoint range of output
+//     rows. Per-sample accumulation order is identical to the sequential
+//     kernel, so results match exactly (not just within tolerance).
+//   * spmm_grad_weights — nnz-range-sharded: W's rows are partitioned into
+//     contiguous ranges of roughly equal nnz; a shard's dw slots
+//     [row_ptr[r0], row_ptr[r1]) are disjoint from every other shard's, and
+//     each worker accumulates its partial sums privately into its own
+//     sub-slice (batch loop order unchanged → exact-match results).
+//
+// Dispatch falls back to the sequential kernel when the work product
+// `batch × nnz` is below [`PAR_MIN_WORK`] — spawning scoped OS threads
+// costs tens of microseconds, which only amortises on large layers.
+
+/// Crossover heuristic: minimum multiply-accumulate count (`batch × nnz`)
+/// at which spawning worker threads beats the sequential kernel. Below
+/// this the `*_threaded` entry points run sequentially on the caller's
+/// thread (≈1 M MACs ≳ 0.5 ms sequential vs ≈50 µs/thread spawn cost).
+pub const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Worker threads the machine can usefully run (1 when unknown). Cached.
+pub fn available_threads() -> usize {
+    static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Resolve a `kernel_threads` knob: `0` = one worker per available core,
+/// anything else is taken literally (`1` = always sequential).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Shard count for a kernel invocation: 1 (sequential) when the caller
+/// asked for one thread, the work is below [`PAR_MIN_WORK`], or the
+/// shardable dimension cannot be split; otherwise `min(threads, max_shards)`.
+fn shard_count(threads: usize, batch: usize, nnz: usize, max_shards: usize) -> usize {
+    if threads <= 1 || max_shards <= 1 {
+        return 1;
+    }
+    if batch.saturating_mul(nnz) < PAR_MIN_WORK {
+        return 1;
+    }
+    threads.min(max_shards)
+}
+
+/// Partition rows into `shards` contiguous ranges of roughly equal nnz.
+/// Returns `shards + 1` monotone bounds with `bounds[0] == 0` and
+/// `bounds[shards] == n_rows`; shard `s` owns rows
+/// `[bounds[s], bounds[s+1])` and value slots
+/// `[row_ptr[bounds[s]], row_ptr[bounds[s+1]])`.
+fn balanced_row_bounds(row_ptr: &[usize], shards: usize) -> Vec<usize> {
+    let n_rows = row_ptr.len() - 1;
+    let nnz = row_ptr[n_rows];
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0usize);
+    for s in 1..shards {
+        let target = (nnz * s).div_ceil(shards);
+        // row_ptr is monotone: first row whose start offset reaches the
+        // cumulative-nnz target, clamped monotone and within [0, n_rows].
+        let r = row_ptr
+            .partition_point(|&p| p < target)
+            .clamp(*bounds.last().unwrap(), n_rows);
+        bounds.push(r);
+    }
+    bounds.push(n_rows);
+    bounds
+}
+
+/// [`spmm_forward`] sharded over the batch dimension across up to
+/// `threads` scoped workers (`0` = one per available core). Each worker
+/// writes a disjoint contiguous range of `out` rows; results are exactly
+/// equal to the sequential kernel. Falls back to [`spmm_forward`] below
+/// the [`PAR_MIN_WORK`] crossover.
+///
+/// # Examples
+///
+/// ```
+/// use tsnn::sparse::{ops, CsrMatrix};
+///
+/// let w = CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]).unwrap();
+/// let x = [3.0, 4.0, 5.0, 6.0]; // two samples
+/// let mut seq = vec![0.0f32; 4];
+/// let mut par = vec![0.0f32; 4];
+/// ops::spmm_forward(&x, 2, &w, &mut seq);
+/// ops::spmm_forward_threaded(&x, 2, &w, &mut par, 4);
+/// assert_eq!(seq, par);
+/// ```
+pub fn spmm_forward_threaded(
+    x: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    out: &mut [f32],
+    threads: usize,
+) {
+    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), batch);
+    if shards <= 1 {
+        return spmm_forward(x, batch, w, out);
+    }
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(out.len(), batch * n_out);
+    // shards > 1 implies batch ≥ 2 and nnz ≥ 1, hence n_in, n_out ≥ 1 and
+    // every chunk length below is non-zero.
+    let rows_per = batch.div_ceil(shards);
+    std::thread::scope(|scope| {
+        for (xc, oc) in x.chunks(rows_per * n_in).zip(out.chunks_mut(rows_per * n_out)) {
+            let b = oc.len() / n_out;
+            scope.spawn(move || spmm_forward(xc, b, w, oc));
+        }
+    });
+}
+
+/// [`spmm_grad_input`] sharded over the batch dimension (disjoint `dx`
+/// rows per worker, exact-match results, sequential fallback below the
+/// crossover). `threads == 0` means one worker per available core.
+pub fn spmm_grad_input_threaded(
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), batch);
+    if shards <= 1 {
+        return spmm_grad_input(dz, batch, w, dx);
+    }
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(dz.len(), batch * n_out);
+    assert_eq!(dx.len(), batch * n_in);
+    let rows_per = batch.div_ceil(shards);
+    std::thread::scope(|scope| {
+        for (zc, xc) in dz.chunks(rows_per * n_out).zip(dx.chunks_mut(rows_per * n_in)) {
+            let b = zc.len() / n_out;
+            scope.spawn(move || spmm_grad_input(zc, b, w, xc));
+        }
+    });
+}
+
+/// [`spmm_grad_weights`] sharded over nnz ranges: W's rows are split into
+/// contiguous ranges of roughly equal nnz and each worker accumulates the
+/// batch reduction for its own disjoint `dw` sub-slice (no atomics, and
+/// the batch loop order matches the sequential kernel, so results are
+/// exactly equal). `threads == 0` means one worker per available core;
+/// falls back to [`spmm_grad_weights`] below the crossover.
+pub fn spmm_grad_weights_threaded(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dw: &mut [f32],
+    threads: usize,
+) {
+    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), w.n_rows);
+    if shards <= 1 {
+        return spmm_grad_weights(x, dz, batch, w, dw);
+    }
+    assert_eq!(x.len(), batch * w.n_rows);
+    assert_eq!(dz.len(), batch * w.n_cols);
+    assert_eq!(dw.len(), w.nnz());
+    debug_assert!(w.validate().is_ok());
+    let bounds = balanced_row_bounds(&w.row_ptr, shards);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = dw;
+        for win in bounds.windows(2) {
+            let (r0, r1) = (win[0], win[1]);
+            let len = w.row_ptr[r1] - w.row_ptr[r0];
+            let slab = std::mem::take(&mut rest);
+            let (head, tail) = slab.split_at_mut(len);
+            rest = tail;
+            if len == 0 {
+                continue; // nnz-heavy row swallowed this shard's budget
+            }
+            scope.spawn(move || grad_weights_rows(x, dz, batch, w, r0, r1, head));
+        }
+    });
 }
 
 /// Dense reference matmul for the test oracle: `x[batch, n_in] @ w_dense`.
@@ -277,6 +510,100 @@ mod tests {
         let mut out = vec![0.0f32; 2 * 5];
         spmm_forward(&x, 2, &w, &mut out);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn balanced_bounds_cover_all_rows_with_disjoint_nnz_ranges() {
+        let mut rng = Rng::new(6);
+        let w = init::erdos_renyi(97, 31, 0.23, &mut rng, &init::WeightInit::Normal(1.0));
+        for shards in [1, 2, 3, 8, 97, 200] {
+            let bounds = balanced_row_bounds(&w.row_ptr, shards);
+            assert_eq!(bounds.len(), shards + 1);
+            assert_eq!(bounds[0], 0);
+            assert_eq!(bounds[shards], w.n_rows);
+            let mut covered = 0usize;
+            for win in bounds.windows(2) {
+                assert!(win[0] <= win[1]);
+                covered += w.row_ptr[win[1]] - w.row_ptr[win[0]];
+            }
+            assert_eq!(covered, w.nnz());
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_fall_back_below_crossover_and_match_exactly() {
+        // Small problem: work ≪ PAR_MIN_WORK, so the threaded entry points
+        // must take the sequential path — and still be exactly equal.
+        let mut rng = Rng::new(7);
+        let w = init::erdos_renyi(23, 17, 0.4, &mut rng, &init::WeightInit::Normal(1.0));
+        let batch = 9;
+        let x = random_x(&mut rng, batch, 23, 0.2);
+        let dz = random_x(&mut rng, batch, 17, 0.0);
+        let (mut a, mut b) = (vec![0.0f32; batch * 17], vec![0.0f32; batch * 17]);
+        spmm_forward(&x, batch, &w, &mut a);
+        spmm_forward_threaded(&x, batch, &w, &mut b, 8);
+        assert_eq!(a, b);
+        let (mut a, mut b) = (vec![0.0f32; batch * 23], vec![0.0f32; batch * 23]);
+        spmm_grad_input(&dz, batch, &w, &mut a);
+        spmm_grad_input_threaded(&dz, batch, &w, &mut b, 8);
+        assert_eq!(a, b);
+        let (mut a, mut b) = (vec![0.0f32; w.nnz()], vec![0.0f32; w.nnz()]);
+        spmm_grad_weights(&x, &dz, batch, &w, &mut a);
+        spmm_grad_weights_threaded(&x, &dz, batch, &w, &mut b, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn threaded_kernels_shard_above_crossover_and_match_exactly() {
+        // 256×512 at density 0.35 ≈ 46k nnz; batch 64 → ~2.9M MACs, which
+        // crosses PAR_MIN_WORK so the sharded path genuinely runs.
+        let mut rng = Rng::new(8);
+        let w = init::erdos_renyi(256, 512, 0.35, &mut rng, &init::WeightInit::Normal(0.5));
+        let batch = 64;
+        assert!(batch * w.nnz() >= PAR_MIN_WORK, "test must cross the threshold");
+        let x = random_x(&mut rng, batch, 256, 0.3);
+        let dz = random_x(&mut rng, batch, 512, 0.0);
+        for threads in [2, 3, 8] {
+            let (mut a, mut b) = (vec![0.0f32; batch * 512], vec![0.0f32; batch * 512]);
+            spmm_forward(&x, batch, &w, &mut a);
+            spmm_forward_threaded(&x, batch, &w, &mut b, threads);
+            assert_eq!(a, b, "forward threads={threads}");
+            let (mut a, mut b) = (vec![0.0f32; batch * 256], vec![0.0f32; batch * 256]);
+            spmm_grad_input(&dz, batch, &w, &mut a);
+            spmm_grad_input_threaded(&dz, batch, &w, &mut b, threads);
+            assert_eq!(a, b, "grad_input threads={threads}");
+            let (mut a, mut b) = (vec![0.0f32; w.nnz()], vec![0.0f32; w.nnz()]);
+            spmm_grad_weights(&x, &dz, batch, &w, &mut a);
+            spmm_grad_weights_threaded(&x, &dz, batch, &w, &mut b, threads);
+            assert_eq!(a, b, "grad_weights threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_handle_empty_matrix_and_zero_batch() {
+        let w = CsrMatrix::empty(4, 5);
+        let x = vec![1.0f32; 2 * 4];
+        let mut out = vec![0.0f32; 2 * 5];
+        spmm_forward_threaded(&x, 2, &w, &mut out, 8);
+        assert!(out.iter().all(|&v| v == 0.0));
+        let mut dw: Vec<f32> = Vec::new();
+        spmm_grad_weights_threaded(&x, &out, 2, &w, &mut dw, 8);
+        // zero-batch: all buffers empty, must not panic
+        let mut rng = Rng::new(9);
+        let w = init::erdos_renyi(6, 6, 0.5, &mut rng, &init::WeightInit::Normal(1.0));
+        spmm_forward_threaded(&[], 0, &w, &mut [], 8);
+        spmm_grad_input_threaded(&[], 0, &w, &mut [], 8);
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_grad_weights_threaded(&[], &[], 0, &w, &mut dw, 8);
+        assert!(dw.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(0), available_threads());
     }
 
     #[test]

@@ -119,6 +119,9 @@ pub fn train_model(
 ) -> Result<TrainReport> {
     let start_weights = model.weight_count();
     let mut ws = model.alloc_workspace(cfg.batch);
+    // Kernel-shard budget rides in the workspace so every forward/backward
+    // below (train, eval, gradflow probes) inherits it.
+    ws.kernel_threads = cfg.kernel_threads;
     let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
     let dropout = if cfg.dropout > 0.0 {
         Some(Dropout::new(cfg.dropout))
@@ -340,6 +343,22 @@ mod tests {
         let csv = report.curves_csv();
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn kernel_threads_setting_preserves_results() {
+        let data = quick_data();
+        let mut cfg = quick_cfg();
+        cfg.epochs = 4;
+        cfg.kernel_threads = 1;
+        let a = train_sequential(&cfg, &data, &mut Rng::new(8)).unwrap();
+        cfg.kernel_threads = 8;
+        let b = train_sequential(&cfg, &data, &mut Rng::new(8)).unwrap();
+        assert_eq!(
+            a.epochs.last().unwrap().train_loss,
+            b.epochs.last().unwrap().train_loss
+        );
+        assert_eq!(a.end_weights, b.end_weights);
     }
 
     #[test]

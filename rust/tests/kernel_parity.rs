@@ -1,0 +1,144 @@
+//! Kernel-parity suite: the worker-sharded kernels (DESIGN.md §4) must
+//! reproduce the sequential kernels across random shapes, densities and
+//! thread counts, including the degenerate edge cases.
+//!
+//! The sharding design guarantees *exact* equality (disjoint writes with
+//! unchanged per-slot accumulation order), so most assertions use `==`;
+//! one oracle check also pins both paths against the dense reference
+//! within 1e-5 to guard against a shared systematic error.
+
+use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit};
+use tsnn::util::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn random_x(rng: &mut Rng, batch: usize, n: usize, zero_frac: f64) -> Vec<f32> {
+    (0..batch * n)
+        .map(|_| if rng.bernoulli(zero_frac) { 0.0 } else { rng.normal() })
+        .collect()
+}
+
+/// Run all three kernels sequentially and sharded at `threads`, asserting
+/// exact agreement on every output buffer.
+fn assert_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    let x = random_x(rng, batch, n_in, 0.3);
+    let dz = random_x(rng, batch, n_out, 0.0);
+    let label = format!("{n_in}x{n_out} nnz={} batch={batch} threads={threads}", w.nnz());
+
+    let mut seq = vec![0.0f32; batch * n_out];
+    let mut par = vec![0.0f32; batch * n_out];
+    ops::spmm_forward(&x, batch, w, &mut seq);
+    ops::spmm_forward_threaded(&x, batch, w, &mut par, threads);
+    assert_eq!(seq, par, "forward mismatch ({label})");
+
+    let mut seq = vec![0.0f32; batch * n_in];
+    let mut par = vec![0.0f32; batch * n_in];
+    ops::spmm_grad_input(&dz, batch, w, &mut seq);
+    ops::spmm_grad_input_threaded(&dz, batch, w, &mut par, threads);
+    assert_eq!(seq, par, "grad_input mismatch ({label})");
+
+    let mut seq = vec![0.0f32; w.nnz()];
+    let mut par = vec![0.0f32; w.nnz()];
+    ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
+    ops::spmm_grad_weights_threaded(&x, &dz, batch, w, &mut par, threads);
+    assert_eq!(seq, par, "grad_weights mismatch ({label})");
+}
+
+#[test]
+fn parity_across_random_shapes_densities_and_threads() {
+    let mut rng = Rng::new(20250729);
+    // (n_in, n_out, density, batch): mixes sub-crossover problems (the
+    // threaded entry points must fall back cleanly) with problems big
+    // enough that the sharded path genuinely runs at threads ≥ 2.
+    let grid = [
+        (17usize, 13usize, 0.3f64, 5usize),
+        (64, 64, 0.1, 32),
+        (128, 96, 0.02, 64),
+        (300, 200, 0.5, 48),
+        (256, 512, 0.35, 64),  // ≥ PAR_MIN_WORK: sharded path active
+        (512, 256, 0.35, 128), // ≥ PAR_MIN_WORK, uneven shard tails
+        (1000, 100, 0.2, 129), // batch not divisible by thread counts
+    ];
+    for &(n_in, n_out, density, batch) in &grid {
+        let w = erdos_renyi(n_in, n_out, density, &mut rng, &WeightInit::Normal(0.5));
+        for threads in THREAD_COUNTS {
+            assert_parity(&w, batch, &mut rng, threads);
+        }
+    }
+}
+
+#[test]
+fn parity_holds_against_dense_oracle_above_crossover() {
+    // Both paths must also agree with the dense reference (within 1e-5),
+    // not merely with each other.
+    let mut rng = Rng::new(31);
+    let (n_in, n_out, batch) = (256usize, 512usize, 64usize);
+    let w = erdos_renyi(n_in, n_out, 0.35, &mut rng, &WeightInit::Normal(0.5));
+    assert!(batch * w.nnz() >= ops::PAR_MIN_WORK);
+    let x = random_x(&mut rng, batch, n_in, 0.3);
+    let dense = ops::dense_matmul(&x, batch, &w.to_dense(), n_in, n_out);
+    let mut par = vec![0.0f32; batch * n_out];
+    ops::spmm_forward_threaded(&x, batch, &w, &mut par, 8);
+    for (i, (&a, &b)) in par.iter().zip(dense.iter()).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+            "idx {i}: sharded {a} vs dense {b}"
+        );
+    }
+}
+
+#[test]
+fn parity_with_empty_matrix() {
+    let mut rng = Rng::new(32);
+    let w = CsrMatrix::empty(40, 50);
+    for threads in THREAD_COUNTS {
+        assert_parity(&w, 7, &mut rng, threads);
+    }
+}
+
+#[test]
+fn parity_with_zero_batch() {
+    let mut rng = Rng::new(33);
+    let w = erdos_renyi(30, 20, 0.4, &mut rng, &WeightInit::Normal(1.0));
+    for threads in THREAD_COUNTS {
+        assert_parity(&w, 0, &mut rng, threads);
+    }
+}
+
+#[test]
+fn parity_with_more_threads_than_batch() {
+    let mut rng = Rng::new(34);
+    // batch 2 with 8 requested threads: work is large enough to shard,
+    // but the batch dimension caps the forward/grad_input shard count.
+    let w = erdos_renyi(1024, 1024, 0.7, &mut rng, &WeightInit::Normal(0.5));
+    assert!(2 * w.nnz() >= ops::PAR_MIN_WORK);
+    assert_parity(&w, 2, &mut rng, 8);
+}
+
+#[test]
+fn parity_with_single_row_matrix() {
+    let mut rng = Rng::new(35);
+    // one CSR row: grad_weights cannot shard (max_shards = n_rows = 1)
+    // and must fall back; batch sharding still applies to the others.
+    let w = erdos_renyi(1, 2048, 0.9, &mut rng, &WeightInit::Normal(0.5));
+    assert_parity(&w, 600, &mut rng, 8);
+}
+
+#[test]
+fn parity_with_highly_irregular_rows() {
+    // Hand-built pattern with one nnz-heavy row and many empty rows, so
+    // the balanced-nnz row partition produces empty shards.
+    let mut triplets = Vec::new();
+    for j in 0..1500u32 {
+        triplets.push((3u32, j, 0.01 * j as f32 - 5.0));
+    }
+    for i in [0u32, 7, 63] {
+        triplets.push((i, 0, 1.0));
+    }
+    let w = CsrMatrix::from_coo(64, 1500, triplets).unwrap();
+    let mut rng = Rng::new(36);
+    for threads in THREAD_COUNTS {
+        assert_parity(&w, 800, &mut rng, threads);
+    }
+}

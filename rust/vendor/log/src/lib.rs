@@ -1,0 +1,252 @@
+//! Minimal offline stand-in for the `log` crate facade.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored crate provides the subset of `log` 0.4's API that `tsnn`
+//! uses (see `rust/DESIGN.md` §3 Substitutions): the five level macros,
+//! the [`Log`] trait, a global logger slot, and the max-level filter.
+//! API signatures mirror the real crate so swapping in upstream `log`
+//! is a one-line `Cargo.toml` change.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Logging severity, most severe first (matches `log::Level`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable errors.
+    Error = 1,
+    /// Recoverable problems worth surfacing.
+    Warn,
+    /// High-level progress (default).
+    Info,
+    /// Developer diagnostics.
+    Debug,
+    /// Very verbose tracing.
+    Trace,
+}
+
+/// Level filter for the global maximum (matches `log::LevelFilter`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// `Error` only.
+    Error,
+    /// `Warn` and above.
+    Warn,
+    /// `Info` and above.
+    Info,
+    /// `Debug` and above.
+    Debug,
+    /// Everything.
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata about a log record (level only in this stand-in).
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    /// The record's severity.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// A single log record: metadata plus the formatted message arguments.
+#[derive(Debug, Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's severity.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    /// The message, ready to be passed to a formatting macro.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A sink for log records (matches `log::Log`).
+pub trait Log: Send + Sync {
+    /// Whether a record with this metadata would be logged.
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    /// Consume a record.
+    fn log(&self, record: &Record);
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger; fails if one is already set.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// The installed logger, if any.
+pub fn logger() -> Option<&'static dyn Log> {
+    LOGGER.get().copied()
+}
+
+/// Set the global maximum level; records above it are skipped.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro back-end: filter by max level, then hand to the logger.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments) {
+    if level <= max_level() {
+        if let Some(l) = logger() {
+            let record = Record {
+                metadata: Metadata { level },
+                args,
+            };
+            if l.enabled(record.metadata()) {
+                l.log(&record);
+            }
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static SEEN: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{}", record.args());
+            SEEN.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_compare_against_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Trace > LevelFilter::Off);
+    }
+
+    #[test]
+    fn logger_filters_and_counts() {
+        static COUNTER: Counter = Counter;
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Info);
+        let before = SEEN.load(Ordering::Relaxed);
+        crate::info!("hello {}", 1);
+        crate::debug!("filtered out");
+        let after = SEEN.load(Ordering::Relaxed);
+        assert_eq!(after - before, 1);
+        assert!(logger().is_some());
+    }
+}

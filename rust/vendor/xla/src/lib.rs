@@ -1,0 +1,245 @@
+//! Offline stub of the `xla` (PJRT) binding surface used by `tsnn`.
+//!
+//! The real `xla` crate links libxla/PJRT, which cannot be built in the
+//! offline container (see `rust/DESIGN.md` §3 Substitutions). This stub
+//! keeps the API shape so `tsnn::runtime` compiles unchanged:
+//!
+//! * [`Literal`] is a real in-memory tensor container — building,
+//!   reshaping and reading literals works, so shape plumbing stays
+//!   testable without a backend;
+//! * everything that would execute XLA ([`PjRtClient::cpu`],
+//!   `compile`, `execute`) returns an "unavailable in offline build"
+//!   [`Error`], which callers already handle (the masked-dense baseline
+//!   is optional and skipped when artifacts/backends are missing).
+//!
+//! Swapping the real crate back in is a one-line `Cargo.toml` change.
+
+use std::fmt;
+use std::path::Path;
+
+/// XLA/PJRT error (stub: carries a message only).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT backend unavailable in the offline build \
+         (stub crate; see rust/DESIGN.md §3 Substitutions)"
+    )))
+}
+
+/// Element storage for [`Literal`] (implementation detail).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    /// f32 elements.
+    F32(Vec<f32>),
+    /// i32 elements.
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn into_data(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// In-memory tensor literal (fully functional in the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::into_data(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    /// Reshape to `dims`; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let expect: i64 = dims.iter().product();
+        if expect < 0 || expect as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?} wants {expect} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Shape of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy elements out; errors on element-type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// First element; errors on empty literal or type mismatch.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Decompose a tuple literal — tuples only come out of `execute`,
+    /// which the stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU PJRT client — unavailable offline.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation — unreachable in the stub (no client can
+    /// exist), kept for API parity.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — unavailable offline.
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, Error> {
+        unavailable(&format!("HloModuleProto::from_text_file({})", path.display()))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub: never produced).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy device buffer to a host literal — unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Loaded executable handle (stub: never produced).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs — unreachable in the stub.
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_build_reshape_read() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7.0).get_first_element::<f32>().unwrap(), 7.0);
+        let i = Literal::vec1(&[1i32, 2]);
+        assert!(i.to_vec::<f32>().is_err());
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope.hlo")).is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("offline"));
+    }
+}
