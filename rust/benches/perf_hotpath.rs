@@ -3,6 +3,7 @@
 //!
 //! Measures, across layer shapes and ε values:
 //!   * spmm_forward / spmm_grad_input / spmm_grad_weights (L3 kernels)
+//!   * spmm_backward_fused (one-pass dx+dw; DESIGN.md §5) and bias_grad
 //!   * full train_step (fwd + loss + bwd + update)
 //!   * SET evolution step and Erdős–Rényi init
 //!   * masked-dense XLA train step (L2 path) when artifacts exist
@@ -79,6 +80,35 @@ fn main() {
             nnz.to_string(),
             format!("{:.3}", mean * 1e3),
             format!("{:.2}", flops / mean / 1e9),
+        ]);
+
+        // fused one-pass backward (dx + dw in one CSR traversal): compare
+        // its single-core roofline against grad_input + grad_weights
+        let (mean, _) = time_it(2, iters, || {
+            dw.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, 1);
+        });
+        table.row(vec![
+            "spmm_backward_fused (1 thread)".into(),
+            shape.clone(),
+            format!("{eps}"),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", 2.0 * flops / mean / 1e9),
+        ]);
+
+        let mut db = vec![0.0f32; n_out];
+        let (mean, _) = time_it(2, iters, || {
+            db.iter_mut().for_each(|v| *v = 0.0);
+            ops::bias_grad(&dz, batch, n_out, &mut db);
+        });
+        table.row(vec![
+            "bias_grad".into(),
+            shape.clone(),
+            format!("{eps}"),
+            nnz.to_string(),
+            format!("{:.3}", mean * 1e3),
+            format!("{:.2}", batch as f64 * n_out as f64 / mean / 1e9),
         ]);
     }
 

@@ -1,17 +1,30 @@
-//! §Perf — sequential vs worker-sharded sparse kernels (DESIGN.md §4).
+//! §Perf — sequential vs worker-sharded sparse kernels, and the fused
+//! one-pass backward vs the two-kernel baseline (DESIGN.md §4–§5).
 //!
-//! Measures all three hot-path kernels across a batch × density × thread
-//! grid, printing per-kernel speedups plus a combined fwd+bwd row (the
-//! acceptance gate: ≥ 2× fwd+bwd throughput at batch 128 with 4+ threads
-//! on a 4+-core host). The sharded kernels produce exactly the sequential
-//! results, so each timed pair is also cross-checked for agreement.
+//! Measures the hot-path kernels across a batch × density × thread grid,
+//! printing per-kernel speedups plus a combined fwd+bwd row, and emits a
+//! machine-readable `BENCH_2.json` at the repository root (per-kernel
+//! ns/step, MACs/s, speedup vs sequential, thread count, shapes) so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Acceptance gates:
+//!   * sharded fwd+bwd ≥ 2× sequential at batch 128 with 4+ threads on a
+//!     4+-core host (PR 1);
+//!   * fused backward ≥ 1.25× the two-kernel backward at batch ≥ 64,
+//!     nnz ≥ 40k on the same thread budget (PR 2) — `backward_fused`
+//!     rows, `speedup` column.
+//!
+//! Every timed pair is also cross-checked for exact agreement (the
+//! sharded and fused kernels are bit-identical to their oracles).
 //!
 //! Knobs: TSNN_ITERS (default 12), TSNN_BATCHES (csv, default 32,128,256),
-//! TSNN_THREADS (csv, default 2,4,<cores>).
+//! TSNN_THREADS (csv, default 2,4,<cores>), TSNN_REPO_ROOT (JSON
+//! destination override).
 
-use tsnn::bench::{env_usize, time_it, Table};
+use tsnn::bench::{env_usize, time_it, write_repo_root_json, Table};
 use tsnn::prelude::*;
 use tsnn::sparse::{erdos_renyi_epsilon, ops};
+use tsnn::util::json::{obj, Json};
 
 fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
     let mut v: Vec<usize> = match std::env::var(name) {
@@ -27,6 +40,35 @@ fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
     v
 }
 
+/// One emitted measurement: kernel × shape × batch × threads.
+#[allow(clippy::too_many_arguments)]
+fn json_row(
+    kernel: &str,
+    n_in: usize,
+    n_out: usize,
+    eps: f64,
+    nnz: usize,
+    batch: usize,
+    threads: usize,
+    baseline_secs: f64,
+    secs: f64,
+    macs: f64,
+) -> Json {
+    obj(vec![
+        ("kernel", kernel.into()),
+        ("n_in", n_in.into()),
+        ("n_out", n_out.into()),
+        ("eps", eps.into()),
+        ("nnz", nnz.into()),
+        ("batch", batch.into()),
+        ("threads", threads.into()),
+        ("baseline_ns_per_step", (baseline_secs * 1e9).into()),
+        ("ns_per_step", (secs * 1e9).into()),
+        ("macs_per_s", (macs / secs.max(1e-12)).into()),
+        ("speedup", (baseline_secs / secs.max(1e-12)).into()),
+    ])
+}
+
 fn main() {
     let iters = env_usize("TSNN_ITERS", 12);
     let batches = env_csv("TSNN_BATCHES", &[32, 128, 256]);
@@ -39,9 +81,10 @@ fn main() {
     );
 
     let mut table = Table::new(
-        "§Perf — sequential vs worker-sharded sparse kernels",
-        &["kernel", "shape", "eps", "batch", "threads", "seq ms", "par ms", "speedup"],
+        "§Perf — sequential vs sharded kernels, fused vs two-kernel backward",
+        &["kernel", "shape", "eps", "batch", "threads", "base ms", "ms", "speedup"],
     );
+    let mut rows: Vec<Json> = Vec::new();
 
     // (n_in, n_out, ε): fashion hidden, cifar-in, wide symmetric (≈2×
     // density), extreme-scale input layer.
@@ -61,6 +104,7 @@ fn main() {
             let mut out = vec![0.0f32; batch * n_out];
             let mut dx = vec![0.0f32; batch * n_in];
             let mut dw = vec![0.0f32; nnz];
+            let macs = nnz as f64 * batch as f64;
 
             // sequential reference timings
             let (fwd_seq, _) = time_it(2, iters, || {
@@ -78,6 +122,27 @@ fn main() {
             });
             let dwt_ref = dw.clone();
 
+            // bias_grad rides the same grid (sequential; O(batch·n_out)
+            // adds, negligible next to the spmm kernels but tracked so a
+            // regression is visible)
+            let mut db = vec![0.0f32; n_out];
+            let (bias_secs, _) = time_it(2, iters, || {
+                db.iter_mut().for_each(|v| *v = 0.0);
+                ops::bias_grad(&dz, batch, n_out, &mut db);
+            });
+            rows.push(json_row(
+                "bias_grad",
+                n_in,
+                n_out,
+                eps,
+                nnz,
+                batch,
+                1,
+                bias_secs,
+                bias_secs,
+                batch as f64 * n_out as f64,
+            ));
+
             for &threads in &threads_grid {
                 let (fwd_par, _) = time_it(2, iters, || {
                     out.iter_mut().for_each(|v| *v = 0.0);
@@ -94,11 +159,27 @@ fn main() {
                 });
                 assert_eq!(dw, dwt_ref, "grad_weights parity {shape} b{batch} t{threads}");
 
-                for (kernel, seq, par) in [
-                    ("spmm_forward", fwd_seq, fwd_par),
-                    ("spmm_grad_input", din_seq, din_par),
-                    ("spmm_grad_weights", dwt_seq, dwt_par),
-                    ("fwd+bwd", fwd_seq + din_seq + dwt_seq, fwd_par + din_par + dwt_par),
+                // fused one-pass backward vs the two-kernel pair on the
+                // SAME thread budget (the PR-2 acceptance comparison)
+                let (fused, _) = time_it(2, iters, || {
+                    dw.iter_mut().for_each(|v| *v = 0.0);
+                    ops::spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, threads);
+                });
+                assert_eq!(dx, din_ref, "fused dx parity {shape} b{batch} t{threads}");
+                assert_eq!(dw, dwt_ref, "fused dw parity {shape} b{batch} t{threads}");
+                let two_kernel = din_par + dwt_par;
+
+                for (kernel, base, secs, m) in [
+                    ("spmm_forward", fwd_seq, fwd_par, macs),
+                    ("spmm_grad_input", din_seq, din_par, macs),
+                    ("spmm_grad_weights", dwt_seq, dwt_par, macs),
+                    ("backward_fused", two_kernel, fused, 2.0 * macs),
+                    (
+                        "fwd+bwd",
+                        fwd_seq + din_seq + dwt_seq,
+                        fwd_par + fused,
+                        3.0 * macs,
+                    ),
                 ] {
                     table.row(vec![
                         kernel.into(),
@@ -106,10 +187,13 @@ fn main() {
                         format!("{eps}"),
                         batch.to_string(),
                         threads.to_string(),
-                        format!("{:.3}", seq * 1e3),
-                        format!("{:.3}", par * 1e3),
-                        format!("{:.2}x", seq / par.max(1e-12)),
+                        format!("{:.3}", base * 1e3),
+                        format!("{:.3}", secs * 1e3),
+                        format!("{:.2}x", base / secs.max(1e-12)),
                     ]);
+                    rows.push(json_row(
+                        kernel, n_in, n_out, eps, nnz, batch, threads, base, secs, m,
+                    ));
                 }
             }
         }
@@ -117,16 +201,45 @@ fn main() {
 
     table.emit("perf_parallel_kernels.csv");
 
-    // Acceptance summary: best fwd+bwd speedup at batch 128 with ≥4 threads.
+    let doc = obj(vec![
+        ("bench", "perf_parallel_kernels".into()),
+        ("pr", 2usize.into()),
+        ("status", "measured".into()),
+        ("host_threads", cores.into()),
+        ("iters", iters.into()),
+        ("par_min_work", ops::PAR_MIN_WORK.into()),
+        ("block", 8usize.into()),
+        (
+            "acceptance",
+            obj(vec![
+                ("backward_fused_min_speedup", Json::from(1.25f64)),
+                ("at_batch_ge", 64usize.into()),
+                ("at_nnz_ge", 40_000usize.into()),
+                (
+                    "note",
+                    "speedup is vs the two-kernel backward at the SAME thread count".into(),
+                ),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_repo_root_json("BENCH_2.json", &doc) {
+        Ok(path) => println!("(json written to {})", path.display()),
+        Err(e) => eprintln!("warn: could not write BENCH_2.json: {e}"),
+    }
+
+    // Acceptance summaries.
     if cores >= 4 {
         println!(
-            "acceptance gate: look for the `fwd+bwd` rows at batch 128, threads >= 4 \
-             — target >= 2.00x on a 4+-core host."
+            "acceptance gates: `fwd+bwd` rows at batch 128, threads >= 4 — target \
+             >= 2.00x; `backward_fused` rows at batch >= 64 — target >= 1.25x \
+             vs the two-kernel backward on the same thread budget."
         );
     } else {
         println!(
-            "note: this host exposes {cores} cores; the >= 2x acceptance gate \
-             needs a 4+-core machine."
+            "note: this host exposes {cores} cores; the >= 2x fwd+bwd gate \
+             needs a 4+-core machine (the >= 1.25x fused gate applies at any \
+             thread count, including 1)."
         );
     }
 }

@@ -124,6 +124,25 @@ pub fn write_artifact(name: &str, content: &str) -> std::io::Result<PathBuf> {
     Ok(path)
 }
 
+/// Repository root (one level above the `rust/` package): where the
+/// cross-PR machine-readable bench trackers (`BENCH_*.json`) live.
+/// `$TSNN_REPO_ROOT` overrides (CI / out-of-tree runs).
+pub fn repo_root() -> PathBuf {
+    std::env::var("TSNN_REPO_ROOT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."))
+}
+
+/// Write a machine-readable bench tracker at the repository root (e.g.
+/// `BENCH_2.json`) for cross-PR perf-trajectory tracking.
+pub fn write_repo_root_json(name: &str, json: &crate::util::Json) -> std::io::Result<PathBuf> {
+    let path = repo_root().join(name);
+    let mut body = json.dump();
+    body.push('\n');
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
 /// Micro-bench: run `f` for `iters` iterations after `warmup`, returning
 /// (mean_secs, min_secs) per iteration.
 pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
@@ -203,6 +222,16 @@ mod tests {
         let (mean, min) = time_it(1, 3, || (0..1000).sum::<usize>());
         assert!(mean >= min);
         assert!(min >= 0.0);
+    }
+
+    #[test]
+    fn repo_root_points_at_workspace() {
+        // default: one level above the package dir, which contains rust/
+        let root = repo_root();
+        assert!(
+            root.join("rust").join("Cargo.toml").exists()
+                || std::env::var("TSNN_REPO_ROOT").is_ok()
+        );
     }
 
     #[test]

@@ -109,7 +109,9 @@ pub struct ParallelReport {
 /// Kernel-shard budget per coordinator worker: the machine's thread
 /// budget (the config's `kernel_threads` knob, `0` = all cores) divided
 /// across the K data-parallel workers, so phase-1/2 workers running
-/// sharded kernels (DESIGN.md §4) never oversubscribe the host.
+/// sharded kernels — the forward kernel and the fused one-pass backward
+/// their `compute_gradients` calls dispatch (DESIGN.md §4–§5) — never
+/// oversubscribe the host.
 fn worker_kernel_threads(cfg: &TrainConfig, workers: usize) -> usize {
     (crate::sparse::ops::resolve_threads(cfg.kernel_threads) / workers.max(1)).max(1)
 }

@@ -73,13 +73,51 @@ impl SparseLayer {
         ops::spmm_forward_threaded(x, batch, &self.weights, pre, threads);
     }
 
+    /// Full backward pass through this layer in one CSR traversal
+    /// (DESIGN.md §5): zeroes and fills the pattern-aligned weight
+    /// gradient `grad_w` and the bias gradient `grad_b`, and — when `dx`
+    /// is provided — overwrites it with the input gradient `dz · Wᵀ` via
+    /// the fused kernel. Layer 0 passes `None` (no gradient flows below
+    /// the input), which falls back to the weight-gradient-only kernel.
+    ///
+    /// Results are exactly equal to the two-kernel pair
+    /// [`SparseLayer::grads_into`] + [`SparseLayer::grad_input_into`]
+    /// (the parity oracle) at every thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_into(
+        &self,
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        dx: Option<&mut [f32]>,
+        grad_w: &mut [f32],
+        grad_b: &mut [f32],
+        threads: usize,
+    ) {
+        grad_w.iter_mut().for_each(|v| *v = 0.0);
+        grad_b.iter_mut().for_each(|v| *v = 0.0);
+        match dx {
+            Some(dx) => {
+                ops::spmm_backward_fused(x, dz, batch, &self.weights, dx, grad_w, threads)
+            }
+            None => ops::spmm_grad_weights_threaded(x, dz, batch, &self.weights, grad_w, threads),
+        }
+        ops::bias_grad(dz, batch, self.n_out(), grad_b);
+    }
+
     /// Input gradient through this layer: `dx = dz · Wᵀ` (overwrites `dx`).
+    ///
+    /// Parity oracle for the fused path — the hot path is
+    /// [`SparseLayer::backward_into`].
     pub fn grad_input_into(&self, dz: &[f32], batch: usize, dx: &mut [f32], threads: usize) {
         ops::spmm_grad_input_threaded(dz, batch, &self.weights, dx, threads);
     }
 
     /// Pattern-aligned weight gradient and bias gradient for a batch
     /// (`grad_w` aligned with `weights.values`; both buffers zeroed here).
+    ///
+    /// Thin alias for [`SparseLayer::backward_into`] with `dx = None`,
+    /// kept for the parity tests and gradient-only callers.
     pub fn grads_into(
         &self,
         x: &[f32],
@@ -89,10 +127,7 @@ impl SparseLayer {
         grad_b: &mut [f32],
         threads: usize,
     ) {
-        grad_w.iter_mut().for_each(|v| *v = 0.0);
-        grad_b.iter_mut().for_each(|v| *v = 0.0);
-        ops::spmm_grad_weights_threaded(x, dz, batch, &self.weights, grad_w, threads);
-        ops::bias_grad(dz, batch, self.n_out(), grad_b);
+        self.backward_into(x, dz, batch, None, grad_w, grad_b, threads);
     }
 
     /// Apply the optimizer to this layer's weights and biases.
@@ -233,6 +268,38 @@ mod tests {
         l.grads_into(&x, &dz, batch, &mut gw, &mut gb, 1);
         assert!(gw.iter().all(|&v| v == 0.0));
         assert!(gb.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn backward_into_matches_two_kernel_oracle() {
+        let l = layer();
+        let batch = 11; // full block + ragged tail
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..batch * l.n_in())
+            .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() })
+            .collect();
+        let dz: Vec<f32> = (0..batch * l.n_out()).map(|_| rng.normal()).collect();
+        // oracle: two-kernel pair
+        let mut dx_o = vec![0.0f32; batch * l.n_in()];
+        l.grad_input_into(&dz, batch, &mut dx_o, 1);
+        let mut gw_o = vec![0.0f32; l.weights.nnz()];
+        let mut gb_o = vec![0.0f32; l.n_out()];
+        l.grads_into(&x, &dz, batch, &mut gw_o, &mut gb_o, 1);
+        for threads in [1usize, 4] {
+            let mut dx = vec![f32::NAN; batch * l.n_in()];
+            let mut gw = vec![7.0f32; l.weights.nnz()]; // stale: must be zeroed
+            let mut gb = vec![7.0f32; l.n_out()];
+            l.backward_into(&x, &dz, batch, Some(&mut dx), &mut gw, &mut gb, threads);
+            assert_eq!(dx, dx_o, "threads={threads}");
+            assert_eq!(gw, gw_o, "threads={threads}");
+            assert_eq!(gb, gb_o, "threads={threads}");
+            // dx = None: weight/bias grads only (layer-0 path)
+            let mut gw2 = vec![7.0f32; l.weights.nnz()];
+            let mut gb2 = vec![7.0f32; l.n_out()];
+            l.backward_into(&x, &dz, batch, None, &mut gw2, &mut gb2, threads);
+            assert_eq!(gw2, gw_o, "threads={threads}");
+            assert_eq!(gb2, gb_o, "threads={threads}");
+        }
     }
 
     #[test]

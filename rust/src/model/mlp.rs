@@ -4,7 +4,11 @@
 //! loop performs no allocation — one of the §Perf items. The backward
 //! pass produces weight gradients *only on existing links* (aligned with
 //! each layer's CSR values), which is the memory property that separates
-//! truly-sparse training from masked-dense training.
+//! truly-sparse training from masked-dense training; above layer 0 the
+//! weight and input gradients come out of ONE fused CSR traversal per
+//! layer (DESIGN.md §5), and the forward pass applies activations out of
+//! place (`pre[l] → act[l+1]`) so pre-activations survive for backprop
+//! without a copy.
 
 use crate::error::{Result, TsnnError};
 use crate::nn::{accuracy, softmax_cross_entropy, Activation, Dropout, MomentumSgd};
@@ -40,7 +44,8 @@ pub struct Workspace {
     drop_masks: Vec<Vec<f32>>,
     /// SReLU parameter gradients per layer (None for fixed activations).
     pub srelu_grads: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>>,
-    /// Loss-gradient buffer (reused across steps; §Perf change 4).
+    /// Loss-gradient buffer (reused across train steps AND evaluation
+    /// batches — zero steady-state allocation everywhere).
     dlogits: Vec<f32>,
     /// Worker budget for the sharded sparse kernels: `0` = one per
     /// available core, `1` = sequential, `n` = at most n threads. The
@@ -196,12 +201,15 @@ impl SparseMlp {
                 let (act, pre) = (&ws.act, &mut ws.pre);
                 layer.forward_into(&act[l], batch, &mut pre[l], kt);
             }
-            // activation into act[l+1]
-            ws.act[l + 1].copy_from_slice(&ws.pre[l]);
-            if let Some(srelu) = &layer.srelu {
-                srelu.apply(&mut ws.act[l + 1], n_out);
-            } else {
-                layer.activation.apply(&mut ws.act[l + 1], l + 1);
+            // activation out of place, pre[l] → act[l+1]: the
+            // pre-activation survives for backprop without a copy
+            {
+                let (pre, act) = (&ws.pre, &mut ws.act);
+                if let Some(srelu) = &layer.srelu {
+                    srelu.apply(&pre[l], &mut act[l + 1], n_out);
+                } else {
+                    layer.activation.apply(&pre[l], &mut act[l + 1], l + 1);
+                }
             }
             // dropout on hidden layers only
             ws.drop_masks[l].clear();
@@ -220,7 +228,10 @@ impl SparseMlp {
     /// delta buffer (callers use [`SparseMlp::train_step`]; exposed for
     /// the coordinator's gradient-only workers).
     ///
-    /// Fills `ws.grad_w` / `ws.grad_b` (overwritten, not accumulated) and
+    /// Each hidden layer runs the fused one-pass kernel through
+    /// [`SparseLayer::backward_into`]: weight gradient and input gradient
+    /// come out of a single CSR traversal (DESIGN.md §5). Fills
+    /// `ws.grad_w` / `ws.grad_b` (overwritten, not accumulated) and
     /// returns Σ‖∇‖².
     pub fn backward(&self, batch: usize, ws: &mut Workspace, dlogits: &[f32]) -> f32 {
         let n_layers = self.n_layers();
@@ -232,21 +243,26 @@ impl SparseMlp {
             let layer = &self.layers[l];
             let (n_in, n_out) = (layer.n_in(), layer.n_out());
             let delta_len = batch * n_out;
-            // weight grad (aligned with CSR values) + bias grad
-            let gw = &mut ws.grad_w[l];
-            let gb = &mut ws.grad_b[l];
-            layer.grads_into(&ws.act[l], &ws.delta_a[..delta_len], batch, gw, gb, kt);
-            grad_sq += gw.iter().map(|g| g * g).sum::<f32>();
-            grad_sq += gb.iter().map(|g| g * g).sum::<f32>();
+            let dx_len = batch * n_in;
+            // fused backward: dW + bias grad + (above layer 0) dx, one
+            // CSR traversal; delta_a/delta_b/grad_* are disjoint fields,
+            // so the split borrows are safe and allocation-free
+            layer.backward_into(
+                &ws.act[l],
+                &ws.delta_a[..delta_len],
+                batch,
+                if l > 0 {
+                    Some(&mut ws.delta_b[..dx_len])
+                } else {
+                    None
+                },
+                &mut ws.grad_w[l],
+                &mut ws.grad_b[l],
+                kt,
+            );
+            grad_sq += ws.grad_w[l].iter().map(|g| g * g).sum::<f32>();
+            grad_sq += ws.grad_b[l].iter().map(|g| g * g).sum::<f32>();
             if l > 0 {
-                // input gradient into delta_b (overwritten by the kernel)
-                let dx_len = batch * n_in;
-                layer.grad_input_into(
-                    &ws.delta_a[..delta_len],
-                    batch,
-                    &mut ws.delta_b[..dx_len],
-                    kt,
-                );
                 // through dropout of layer l-1's output (mask recorded at
                 // forward time; empty mask means dropout was off)
                 let prev = &self.layers[l - 1];
@@ -339,7 +355,9 @@ impl SparseMlp {
         let mut total_loss = 0.0f64;
         let mut correct = 0.0f64;
         let mut seen = 0usize;
-        let mut dlogits = vec![0.0f32; batch * n_classes];
+        // loss-gradient buffer rides in the workspace like the training
+        // path's: steady-state evaluation performs no allocation either
+        let mut dlogits = std::mem::take(&mut ws.dlogits);
         let mut start = 0usize;
         while start < n {
             let end = (start + batch).min(n);
@@ -355,6 +373,7 @@ impl SparseMlp {
             seen += bsz;
             start = end;
         }
+        ws.dlogits = dlogits;
         (
             (total_loss / seen.max(1) as f64) as f32,
             (correct / seen.max(1) as f64) as f32,

@@ -38,33 +38,32 @@ impl Activation {
         }
     }
 
-    /// Apply in place. `layer_index` is the 1-based layer number (used by
-    /// All-ReLU parity; ignored by the others).
-    pub fn apply(&self, z: &mut [f32], layer_index: usize) {
+    /// Apply out of place, `out[k] = f(z[k])` — the pre-activation buffer
+    /// `z` stays intact for backprop, so the forward pass needs no
+    /// pre-activation copy (the old in-place form forced
+    /// `copy_from_slice` before every activation). `layer_index` is the
+    /// 1-based layer number (used by All-ReLU parity; ignored by the
+    /// others).
+    pub fn apply(&self, z: &[f32], out: &mut [f32], layer_index: usize) {
+        debug_assert_eq!(z.len(), out.len());
         match *self {
             Activation::Relu => {
-                for v in z.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
+                for (o, &v) in out.iter_mut().zip(z.iter()) {
+                    *o = if v < 0.0 { 0.0 } else { v };
                 }
             }
             Activation::LeakyRelu { alpha } => {
-                for v in z.iter_mut() {
-                    if *v < 0.0 {
-                        *v *= alpha;
-                    }
+                for (o, &v) in out.iter_mut().zip(z.iter()) {
+                    *o = if v < 0.0 { v * alpha } else { v };
                 }
             }
             Activation::AllRelu { alpha } => {
                 let slope = if layer_index % 2 == 0 { -alpha } else { alpha };
-                for v in z.iter_mut() {
-                    if *v <= 0.0 {
-                        *v *= slope;
-                    }
+                for (o, &v) in out.iter_mut().zip(z.iter()) {
+                    *o = if v <= 0.0 { v * slope } else { v };
                 }
             }
-            Activation::Linear => {}
+            Activation::Linear => out.copy_from_slice(z),
         }
     }
 
@@ -133,15 +132,20 @@ impl SRelu {
         4 * self.tl.len()
     }
 
-    /// Forward in place over a [batch, n] buffer.
-    pub fn apply(&self, z: &mut [f32], n: usize) {
-        for (k, v) in z.iter_mut().enumerate() {
+    /// Forward out of place over a [batch, n] buffer: `out[k] = f(z[k])`
+    /// (pre-activations stay intact for backprop — no copy needed in the
+    /// forward pass).
+    pub fn apply(&self, z: &[f32], out: &mut [f32], n: usize) {
+        debug_assert_eq!(z.len(), out.len());
+        for (k, (o, &v)) in out.iter_mut().zip(z.iter()).enumerate() {
             let j = k % n;
-            if *v <= self.tl[j] {
-                *v = self.tl[j] + self.al[j] * (*v - self.tl[j]);
-            } else if *v >= self.tr[j] {
-                *v = self.tr[j] + self.ar[j] * (*v - self.tr[j]);
-            }
+            *o = if v <= self.tl[j] {
+                self.tl[j] + self.al[j] * (v - self.tl[j])
+            } else if v >= self.tr[j] {
+                self.tr[j] + self.ar[j] * (v - self.tr[j])
+            } else {
+                v
+            };
         }
     }
 
@@ -194,34 +198,36 @@ impl SRelu {
 mod tests {
     use super::*;
 
+    /// Out-of-place apply into a fresh buffer (test convenience).
+    fn applied(act: Activation, z: &[f32], layer: usize) -> Vec<f32> {
+        let mut out = vec![f32::NAN; z.len()];
+        act.apply(z, &mut out, layer);
+        out
+    }
+
     #[test]
     fn relu_clamps_negative() {
-        let mut z = vec![-1.0, 0.0, 2.0];
-        Activation::Relu.apply(&mut z, 1);
-        assert_eq!(z, vec![0.0, 0.0, 2.0]);
+        let z = vec![-1.0, 0.0, 2.0];
+        assert_eq!(applied(Activation::Relu, &z, 1), vec![0.0, 0.0, 2.0]);
+        // pre-activations untouched by the out-of-place form
+        assert_eq!(z, vec![-1.0, 0.0, 2.0]);
     }
 
     #[test]
     fn allrelu_parity_flips_sign() {
         // paper Eq.3: even layer -> -alpha * x on negative side
-        let mut even = vec![-2.0, 1.0];
-        Activation::AllRelu { alpha: 0.5 }.apply(&mut even, 2);
-        assert_eq!(even, vec![1.0, 1.0]);
-        let mut odd = vec![-2.0, 1.0];
-        Activation::AllRelu { alpha: 0.5 }.apply(&mut odd, 1);
-        assert_eq!(odd, vec![-1.0, 1.0]);
+        let a = Activation::AllRelu { alpha: 0.5 };
+        assert_eq!(applied(a, &[-2.0, 1.0], 2), vec![1.0, 1.0]);
+        assert_eq!(applied(a, &[-2.0, 1.0], 1), vec![-1.0, 1.0]);
     }
 
     #[test]
     fn allrelu_matches_python_ref_semantics() {
         // mirror python ref: parity = layer % 2; even->-alpha, odd->+alpha
         let z = [-2.0f32, -1.0, 0.0, 1.0];
-        let mut e = z;
-        Activation::AllRelu { alpha: 0.5 }.apply(&mut e, 0);
-        assert_eq!(e.to_vec(), vec![1.0, 0.5, 0.0, 1.0]);
-        let mut o = z;
-        Activation::AllRelu { alpha: 0.5 }.apply(&mut o, 1);
-        assert_eq!(o.to_vec(), vec![-1.0, -0.5, 0.0, 1.0]);
+        let a = Activation::AllRelu { alpha: 0.5 };
+        assert_eq!(applied(a, &z, 0), vec![1.0, 0.5, 0.0, 1.0]);
+        assert_eq!(applied(a, &z, 1), vec![-1.0, -0.5, 0.0, 1.0]);
     }
 
     #[test]
@@ -237,10 +243,8 @@ mod tests {
             for layer in 1..=2 {
                 for &z0 in &zs {
                     let eps = 1e-3f32;
-                    let mut zp = vec![z0 + eps];
-                    let mut zm = vec![z0 - eps];
-                    act.apply(&mut zp, layer);
-                    act.apply(&mut zm, layer);
+                    let zp = applied(act, &[z0 + eps], layer);
+                    let zm = applied(act, &[z0 - eps], layer);
                     let fd = (zp[0] - zm[0]) / (2.0 * eps);
                     let mut d = vec![1.0f32];
                     act.backprop(&[z0], &mut d, layer);
@@ -271,20 +275,21 @@ mod tests {
     #[test]
     fn srelu_identity_region() {
         let s = SRelu::new(2);
-        let mut z = vec![0.5, 0.9, 0.1, 0.2];
-        let orig = z.clone();
-        s.apply(&mut z, 2);
-        assert_eq!(z, orig);
+        let z = vec![0.5, 0.9, 0.1, 0.2];
+        let mut out = vec![f32::NAN; 4];
+        s.apply(&z, &mut out, 2);
+        assert_eq!(out, z);
     }
 
     #[test]
     fn srelu_saturates_and_backprops() {
         let s = SRelu::new(1);
-        let mut z = vec![-2.0f32, 3.0];
-        s.apply(&mut z, 1);
+        let z = vec![-2.0f32, 3.0];
+        let mut out = vec![f32::NAN; 2];
+        s.apply(&z, &mut out, 1);
         // left: 0 + 0.2*(-2-0) = -0.4 ; right: 1 + 0.2*(3-1) = 1.4
-        assert!((z[0] + 0.4).abs() < 1e-6);
-        assert!((z[1] - 1.4).abs() < 1e-6);
+        assert!((out[0] + 0.4).abs() < 1e-6);
+        assert!((out[1] - 1.4).abs() < 1e-6);
         let mut dz = vec![1.0f32, 1.0];
         let grads = s.backprop(&[-2.0, 3.0], &mut dz, 1);
         assert!((dz[0] - 0.2).abs() < 1e-6);

@@ -2,8 +2,9 @@
 //!
 //! Everything the paper's "customised and modularized software framework
 //! for sparse neural networks" needs at the matrix level: CSR storage
-//! ([`csr`]), the three training kernels ([`ops`]) with their
-//! worker-sharded parallel variants (see `rust/DESIGN.md` §4), and
+//! ([`csr`]), the training kernels ([`ops`]) — forward, the fused
+//! one-pass backward, and the two-kernel parity oracles — with their
+//! worker-sharded parallel variants (see `rust/DESIGN.md` §4–§5), and
 //! Erdős–Rényi / weight initialisation ([`init`]). No dense weight matrix
 //! is ever materialised on the training path.
 
@@ -14,5 +15,6 @@ pub mod ops;
 pub use csr::CsrMatrix;
 pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};
 pub use ops::{
-    spmm_forward_threaded, spmm_grad_input_threaded, spmm_grad_weights_threaded,
+    spmm_backward_fused, spmm_forward_threaded, spmm_grad_input_threaded,
+    spmm_grad_weights_threaded,
 };

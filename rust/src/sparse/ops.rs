@@ -1,23 +1,64 @@
 //! Truly-sparse compute kernels: the L3 hot path.
 //!
-//! All three training kernels stream CSR rows with one contiguous dense
-//! row per sample, no allocation, no atomics:
+//! All kernels stream CSR rows with one contiguous dense row per sample,
+//! no allocation, no atomics:
 //!
-//! * [`spmm_forward`]      z = x · W          (B×n_in · n_in×n_out)
-//! * [`spmm_grad_input`]   dx = dz · Wᵀ
-//! * [`spmm_grad_weights`] dW = xᵀ · dz  restricted to W's pattern
+//! * [`spmm_forward`]        z = x · W          (B×n_in · n_in×n_out)
+//! * [`spmm_backward_fused`] dx = dz · Wᵀ **and** dW = xᵀ · dz (pattern-
+//!   restricted) in ONE traversal of W's rows — the hot backward path
+//! * [`spmm_grad_input`]     dx = dz · Wᵀ          (parity oracle)
+//! * [`spmm_grad_weights`]   dW = xᵀ · dz restricted (parity oracle, and
+//!   still the layer-0 path where no input gradient is needed)
 //!
 //! The activation-sparsity shortcut (skip `x[b,i] == 0`, which ReLU-family
 //! activations produce in volume) is what makes the truly-sparse engine
 //! beat masked-dense at equal FLOP budgets.
 //!
-//! Each kernel also has a worker-sharded variant ([`spmm_forward_threaded`],
-//! [`spmm_grad_input_threaded`], [`spmm_grad_weights_threaded`]) that splits
-//! the work across scoped OS threads with **disjoint writes** (no atomics,
-//! no locks) and falls back to the sequential path below a crossover work
-//! threshold — see `rust/DESIGN.md` §4 for the sharding invariants.
+//! The forward and fused-backward kernels run a monomorphized
+//! [`BLOCK`]-sample microkernel on full blocks (fixed trip counts the
+//! autovectorizer can unroll into SIMD lanes) plus a monomorphized
+//! remainder dispatch for the ragged tail — see `rust/DESIGN.md` §5.
+//!
+//! Each kernel also has (or embeds) a worker-sharded variant
+//! ([`spmm_forward_threaded`], [`spmm_grad_input_threaded`],
+//! [`spmm_grad_weights_threaded`]; [`spmm_backward_fused`] takes its
+//! thread budget directly) that splits the work across scoped OS threads
+//! with **disjoint writes** (no atomics, no locks) and falls back to the
+//! sequential path below a crossover work threshold — see
+//! `rust/DESIGN.md` §4–§5 for the sharding invariants.
 
 use super::csr::CsrMatrix;
+
+/// Samples per block in the batch-blocked kernels: each W row is streamed
+/// once per block instead of once per sample, cutting weight traffic
+/// `BLOCK`-fold for layers larger than L2. Widened from 4 to 8 so the
+/// monomorphized inner loops fill a full 256-bit SIMD register of f32
+/// lanes (see DESIGN.md §5); [`tail_dispatch!`] enumerates 1..BLOCK and
+/// must be extended if BLOCK grows.
+const BLOCK: usize = 8;
+
+// Compile-time guard: tail_dispatch! enumerates widths 1..8 only, so a
+// larger BLOCK must extend the macro (or this becomes a runtime panic
+// on the first ragged batch).
+const _: () = assert!(BLOCK == 8, "extend tail_dispatch! before growing BLOCK");
+
+/// Dispatch a `const BL: usize` microkernel over a runtime tail size in
+/// `1..BLOCK`, monomorphizing every remainder width so even ragged
+/// batches run fixed-trip-count inner loops.
+macro_rules! tail_dispatch {
+    ($bl:expr, $f:ident ( $($args:expr),* $(,)? )) => {
+        match $bl {
+            1 => $f::<1>($($args),*),
+            2 => $f::<2>($($args),*),
+            3 => $f::<3>($($args),*),
+            4 => $f::<4>($($args),*),
+            5 => $f::<5>($($args),*),
+            6 => $f::<6>($($args),*),
+            7 => $f::<7>($($args),*),
+            _ => unreachable!("tail size must be in 1..BLOCK"),
+        }
+    };
+}
 
 /// Forward: `out[b, :] += Σ_i x[b, i] * W.row(i)`, with `out` pre-zeroed by
 /// the caller (lets callers fuse bias init into the zeroing pass).
@@ -40,54 +81,67 @@ pub fn spmm_forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(out.len(), batch * n_out);
     debug_assert!(w.validate().is_ok());
+    // SAFETY: row_ptr has n_rows+1 monotone entries and every
+    // col_idx < n_cols (validated CSR invariants), and the length asserts
+    // above bound every `(b0 + t) * n_in + i` / `(b0 + t) * n_out + j`
+    // access for `b0 + BL <= batch` — the microkernel contract.
+    unsafe {
+        let mut b0 = 0usize;
+        while b0 + BLOCK <= batch {
+            forward_block::<BLOCK>(x, b0, w, out);
+            b0 += BLOCK;
+        }
+        let tail = batch - b0;
+        if tail > 0 {
+            tail_dispatch!(tail, forward_block(x, b0, w, out));
+        }
+    }
+}
+
+/// Forward microkernel over exactly `BL` samples starting at `b0`: the
+/// fixed trip count lets the inner scatter loop autovectorize. Blocks of
+/// [`BLOCK`] take the monomorphized fast path; the ragged tail goes
+/// through [`tail_dispatch!`].
+///
+/// # Safety
+/// Caller guarantees a validated CSR `w`, `b0 + BL <= batch`,
+/// `x.len() == batch * w.n_rows` and `out.len() == batch * w.n_cols`.
+#[inline(always)]
+unsafe fn forward_block<const BL: usize>(x: &[f32], b0: usize, w: &CsrMatrix, out: &mut [f32]) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
     let row_ptr = w.row_ptr.as_slice();
     let col_idx = w.col_idx.as_slice();
     let values = w.values.as_slice();
-    let mut b0 = 0usize;
-    while b0 < batch {
-        let bl = (batch - b0).min(BLOCK);
-        for i in 0..n_in {
-            // gather this input across the block; skip fully-zero columns
-            // (activation sparsity shortcut, now block-wide)
-            let mut xv = [0.0f32; BLOCK];
-            let mut any = false;
-            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
-                let v = x[(b0 + t) * n_in + i];
-                *xvt = v;
-                any |= v != 0.0;
-            }
-            if !any {
-                continue;
-            }
-            // SAFETY: row_ptr has n_rows+1 entries and is monotone; every
-            // col_idx < n_cols (validated CSR invariant), so all indexing
-            // below is in-bounds. Unchecked access removes the bounds
-            // checks that dominate this scatter loop (§Perf changes 1+2:
-            // unchecked + batch-blocked so each W row streams once per
-            // block instead of once per sample).
-            unsafe {
-                let s = *row_ptr.get_unchecked(i);
-                let e = *row_ptr.get_unchecked(i + 1);
-                for k in s..e {
-                    let j = *col_idx.get_unchecked(k) as usize;
-                    let v = *values.get_unchecked(k);
-                    for t in 0..bl {
-                        *out.get_unchecked_mut((b0 + t) * n_out + j) +=
-                            *xv.get_unchecked(t) * v;
-                    }
-                }
+    for i in 0..n_in {
+        // gather this input across the block; skip fully-zero columns
+        // (activation sparsity shortcut, block-wide)
+        let mut xv = [0.0f32; BL];
+        let mut any = false;
+        for (t, xvt) in xv.iter_mut().enumerate() {
+            let v = *x.get_unchecked((b0 + t) * n_in + i);
+            *xvt = v;
+            any |= v != 0.0;
+        }
+        if !any {
+            continue;
+        }
+        let s = *row_ptr.get_unchecked(i);
+        let e = *row_ptr.get_unchecked(i + 1);
+        for k in s..e {
+            let j = *col_idx.get_unchecked(k) as usize;
+            let v = *values.get_unchecked(k);
+            for t in 0..BL {
+                *out.get_unchecked_mut((b0 + t) * n_out + j) += xv[t] * v;
             }
         }
-        b0 += bl;
     }
 }
 
 /// Input gradient: `dx[b, i] = Σ_j W[i, j] * dz[b, j]`.
-/// Samples per block in the batch-blocked kernels: each W row is
-/// streamed once per block instead of once per sample, cutting weight
-/// traffic `BLOCK`-fold for layers larger than L2 (§Perf change 2).
-const BLOCK: usize = 4;
-
+///
+/// Parity oracle for (and sequential fallback of) the input-gradient half
+/// of [`spmm_backward_fused`]; kept runtime-blocked — the hot path is the
+/// fused kernel.
 pub fn spmm_grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(dz.len(), batch * n_out);
@@ -124,6 +178,10 @@ pub fn spmm_grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) 
 /// Weight gradient restricted to W's sparsity pattern:
 /// `dw[k] = Σ_b x[b, row(k)] * dz[b, col(k)]`, `dw` aligned with
 /// `w.values` and pre-zeroed by the caller.
+///
+/// Parity oracle for the weight-gradient half of
+/// [`spmm_backward_fused`], and still the layer-0 backward path (no
+/// input gradient exists below the first layer).
 pub fn spmm_grad_weights(
     x: &[f32],
     dz: &[f32],
@@ -197,14 +255,236 @@ fn grad_weights_rows(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused one-pass backward (DESIGN.md §5).
+//
+// The two-kernel backward streams every layer's CSR arrays twice per step
+// (grad-weights pass, then grad-input pass). Both outputs are row-local —
+// W row `i` fully determines dw slots [row_ptr[i], row_ptr[i+1]) AND dx
+// column `i` — so one traversal of W's rows can produce both, halving CSR
+// traffic per backward layer and eliminating one threaded dispatch per
+// layer per step. Row sharding (balanced_row_bounds) then gives disjoint
+// writes for BOTH outputs with no atomics: dw splits into contiguous
+// value-slot ranges, dx into disjoint column ranges of the [batch, n_in]
+// buffer (strided, hence the raw-pointer shard handle below).
+
+/// Raw shard handle for `dx`: row-sharded workers write disjoint column
+/// ranges of the same `[batch, n_in]` buffer, which cannot be expressed
+/// as `split_at_mut` sub-slices. Workers receive a copy of the base
+/// pointer and only ever write `dx[b * n_in + i]` for rows `i` inside
+/// their own `[row0, row1)` range — disjoint by construction (§5 proof
+/// sketch in DESIGN.md).
+#[derive(Clone, Copy)]
+struct DxPtr(*mut f32);
+// SAFETY: the pointed-to buffer outlives the thread scope and sharded
+// writers touch pairwise-disjoint column sets (see DxPtr docs).
+unsafe impl Send for DxPtr {}
+
+/// Fused backward: computes the input gradient `dx = dz · Wᵀ`
+/// (overwritten) **and** the pattern-aligned weight gradient
+/// `dw[k] += Σ_b x[b, row(k)] · dz[b, col(k)]` (`dw` pre-zeroed by the
+/// caller, aligned with `w.values`) in a single traversal of W's rows.
+///
+/// `threads` is the worker budget (`0` = one per available core, `1` =
+/// sequential); above the crossover the rows are nnz-balance-sharded and
+/// each worker owns disjoint `dw` slots and disjoint `dx` columns.
+/// Results are **exactly equal** (`==`, not tolerance) to the sequential
+/// [`spmm_grad_input`] + [`spmm_grad_weights`] pair at every thread
+/// count: per-slot accumulation order is identical (see DESIGN.md §5).
+///
+/// # Examples
+///
+/// ```
+/// use tsnn::sparse::{ops, CsrMatrix};
+///
+/// let w = CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]).unwrap();
+/// let (x, dz) = ([3.0, 4.0], [0.5, -1.0]); // one sample
+/// let mut dx = [0.0f32; 2];
+/// let mut dw = vec![0.0f32; w.nnz()];
+/// ops::spmm_backward_fused(&x, &dz, 1, &w, &mut dx, &mut dw, 1);
+/// assert_eq!(dx, [0.5, -2.0]);           // dz · Wᵀ
+/// assert_eq!(dw, vec![1.5, -4.0]);       // xᵀ · dz on W's pattern
+/// ```
+pub fn spmm_backward_fused(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    threads: usize,
+) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(dz.len(), batch * n_out);
+    assert_eq!(dx.len(), batch * n_in);
+    assert_eq!(dw.len(), w.nnz());
+    debug_assert!(w.validate().is_ok());
+    // The fused kernel does ~2 MACs per (slot, sample) — count both when
+    // judging the spawn crossover.
+    let shards = shard_count(
+        resolve_threads(threads),
+        batch,
+        w.nnz().saturating_mul(2),
+        w.n_rows,
+    );
+    let dx_ptr = DxPtr(dx.as_mut_ptr());
+    if shards <= 1 {
+        // SAFETY: buffer lengths asserted above; full row range.
+        unsafe { backward_fused_rows(x, dz, batch, w, 0, w.n_rows, dx_ptr, dw) };
+        return;
+    }
+    let bounds = balanced_row_bounds(&w.row_ptr, shards);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = dw;
+        for win in bounds.windows(2) {
+            let (r0, r1) = (win[0], win[1]);
+            let len = w.row_ptr[r1] - w.row_ptr[r0];
+            let slab = std::mem::take(&mut rest);
+            let (head, tail) = slab.split_at_mut(len);
+            rest = tail;
+            if r0 == r1 {
+                continue; // nnz-heavy row swallowed this shard's budget
+            }
+            // NOTE: a shard with rows but len == 0 (all-empty rows) must
+            // still run — it owns those rows' dx columns.
+            // SAFETY: disjoint dw sub-slices by split_at_mut; disjoint dx
+            // columns because row ranges are disjoint; buffers outlive
+            // the scope.
+            scope.spawn(move || unsafe {
+                backward_fused_rows(x, dz, batch, w, r0, r1, dx_ptr, head)
+            });
+        }
+    });
+}
+
+/// Fused-backward core over rows `[row0, row1)`: batch-blocked like the
+/// oracle kernels (full [`BLOCK`]s then a monomorphized tail), so every
+/// `dw` slot sees batch blocks in the exact order of
+/// [`spmm_grad_weights`] and every `dx[b, i]` reduction runs in the exact
+/// `k` order of [`spmm_grad_input`].
+///
+/// # Safety
+/// Caller guarantees a validated CSR `w`, `row0 <= row1 <= w.n_rows`,
+/// `x.len() == batch * w.n_rows`, `dz.len() == batch * w.n_cols`, `dw`
+/// spanning exactly the value slots of rows `[row0, row1)`, and `dx`
+/// pointing at a live `[batch, w.n_rows]` buffer whose columns
+/// `[row0, row1)` are not written by anyone else for the duration of the
+/// call.
+#[allow(clippy::too_many_arguments)]
+unsafe fn backward_fused_rows(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    row0: usize,
+    row1: usize,
+    dx: DxPtr,
+    dw: &mut [f32],
+) {
+    debug_assert!(row0 <= row1 && row1 <= w.n_rows);
+    debug_assert_eq!(dw.len(), w.row_ptr[row1] - w.row_ptr[row0]);
+    let mut b0 = 0usize;
+    while b0 + BLOCK <= batch {
+        backward_fused_block::<BLOCK>(x, dz, b0, w, row0, row1, dx, dw);
+        b0 += BLOCK;
+    }
+    let tail = batch - b0;
+    if tail > 0 {
+        tail_dispatch!(tail, backward_fused_block(x, dz, b0, w, row0, row1, dx, dw));
+    }
+}
+
+/// Fused-backward microkernel over exactly `BL` samples starting at `b0`
+/// for rows `[row0, row1)`. One pass over each row's slots accumulates
+/// the `dx` block reduction and the `dw` partial sums together — dz is
+/// loaded once per (slot, sample) instead of twice.
+///
+/// # Safety
+/// Same contract as [`backward_fused_rows`], plus `b0 + BL <= batch`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn backward_fused_block<const BL: usize>(
+    x: &[f32],
+    dz: &[f32],
+    b0: usize,
+    w: &CsrMatrix,
+    row0: usize,
+    row1: usize,
+    dx: DxPtr,
+    dw: &mut [f32],
+) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    let row_ptr = w.row_ptr.as_slice();
+    let col_idx = w.col_idx.as_slice();
+    let values = w.values.as_slice();
+    let base = *row_ptr.get_unchecked(row0);
+    for i in row0..row1 {
+        // gather x across the block: the activation-sparsity shortcut
+        // applies to the dw half only (dx needs the row either way)
+        let mut xv = [0.0f32; BL];
+        let mut any = false;
+        for (t, xvt) in xv.iter_mut().enumerate() {
+            let v = *x.get_unchecked((b0 + t) * n_in + i);
+            *xvt = v;
+            any |= v != 0.0;
+        }
+        let s = *row_ptr.get_unchecked(i);
+        let e = *row_ptr.get_unchecked(i + 1);
+        let mut acc = [0.0f32; BL];
+        if any {
+            for k in s..e {
+                let j = *col_idx.get_unchecked(k) as usize;
+                let v = *values.get_unchecked(k);
+                let mut gacc = 0.0f32;
+                for t in 0..BL {
+                    let dzv = *dz.get_unchecked((b0 + t) * n_out + j);
+                    acc[t] += v * dzv;
+                    gacc += xv[t] * dzv;
+                }
+                *dw.get_unchecked_mut(k - base) += gacc;
+            }
+        } else {
+            // all-zero x block: dw untouched (matches the oracle's skip),
+            // dx still reduced
+            for k in s..e {
+                let j = *col_idx.get_unchecked(k) as usize;
+                let v = *values.get_unchecked(k);
+                for t in 0..BL {
+                    acc[t] += v * *dz.get_unchecked((b0 + t) * n_out + j);
+                }
+            }
+        }
+        for (t, &a) in acc.iter().enumerate() {
+            *dx.0.add((b0 + t) * n_in + i) = a;
+        }
+    }
+}
+
 /// Bias gradient: `db[j] = Σ_b dz[b, j]` (pre-zeroed `db`).
+///
+/// Column accumulation runs over zipped row slices (no per-element bounds
+/// checks, so the column loop autovectorizes) and folds two `dz` rows per
+/// pass, halving `db` read/write traffic.
 pub fn bias_grad(dz: &[f32], batch: usize, n_out: usize, db: &mut [f32]) {
-    debug_assert_eq!(dz.len(), batch * n_out);
     debug_assert_eq!(db.len(), n_out);
-    for b in 0..batch {
-        let dzrow = &dz[b * n_out..(b + 1) * n_out];
-        for (j, &g) in dzrow.iter().enumerate() {
-            db[j] += g;
+    if n_out == 0 || batch == 0 {
+        return;
+    }
+    // honour `batch` even when the caller hands a capacity-slack buffer
+    // (the pre-rewrite loop read exactly batch rows)
+    let dz = &dz[..batch * n_out];
+    let mut rows = dz.chunks_exact(2 * n_out);
+    for pair in rows.by_ref() {
+        let (r0, r1) = pair.split_at(n_out);
+        for ((d, &a), &b) in db.iter_mut().zip(r0).zip(r1) {
+            *d += a + b;
+        }
+    }
+    let rem = rows.remainder();
+    if !rem.is_empty() {
+        for (d, &g) in db.iter_mut().zip(rem) {
+            *d += g;
         }
     }
 }
@@ -222,6 +502,8 @@ pub fn bias_grad(dz: &[f32], batch: usize, n_out: usize, db: &mut [f32]) {
 //     [row_ptr[r0], row_ptr[r1]) are disjoint from every other shard's, and
 //     each worker accumulates its partial sums privately into its own
 //     sub-slice (batch loop order unchanged → exact-match results).
+//   * spmm_backward_fused — same nnz-balanced row sharding, with each
+//     shard owning its rows' dw slots AND dx columns (DESIGN.md §5).
 //
 // Dispatch falls back to the sequential kernel when the work product
 // `batch × nnz` is below [`PAR_MIN_WORK`] — spawning scoped OS threads
@@ -488,6 +770,130 @@ mod tests {
         let mut db = vec![0.0f32; 3];
         bias_grad(&dz, 2, 3, &mut db);
         assert_eq!(db, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn bias_grad_handles_odd_batches_and_degenerate_shapes() {
+        // odd batch exercises the single-row remainder of the 2-row pass
+        let dz = vec![1.0f32, 2.0, 10.0, 20.0, 100.0, 200.0]; // 3x2
+        let mut db = vec![0.0f32; 2];
+        bias_grad(&dz, 3, 2, &mut db);
+        assert_eq!(db, vec![111.0, 222.0]);
+        // batch 1: pure remainder path
+        let mut db = vec![0.5f32; 2];
+        bias_grad(&[3.0, 4.0], 1, 2, &mut db);
+        assert_eq!(db, vec![3.5, 4.5]);
+        // zero batch / zero width: no-ops, no panic
+        bias_grad(&[], 0, 2, &mut [0.0, 0.0]);
+        bias_grad(&[], 5, 0, &mut []);
+    }
+
+    /// Sequential two-kernel oracle for the fused backward.
+    fn oracle_backward(
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        w: &CsrMatrix,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut dx = vec![0.0f32; batch * w.n_rows];
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_grad_input(dz, batch, w, &mut dx);
+        spmm_grad_weights(x, dz, batch, w, &mut dw);
+        (dx, dw)
+    }
+
+    #[test]
+    fn fused_backward_matches_two_kernel_oracle_exactly() {
+        let mut rng = Rng::new(40);
+        // batches chosen to hit full-block-only, tail-only and mixed
+        // paths: batch % 8 ∈ {5, 0, 2, 4, 3, 6} here; widths 1 and 7 are
+        // covered by the kernel_parity integration grid
+        for &(n_in, n_out, density, batch) in &[
+            (17usize, 13usize, 0.3f64, 5usize),
+            (64, 48, 0.2, 8),
+            (64, 48, 0.2, 10),
+            (64, 48, 0.2, 12),
+            (90, 70, 0.4, 19),
+            (90, 70, 0.4, 22),
+        ] {
+            let w = erdos_renyi_like(n_in, n_out, density, &mut rng);
+            let x = random_x(&mut rng, batch, n_in, 0.3);
+            let dz = random_x(&mut rng, batch, n_out, 0.0);
+            let (dx_o, dw_o) = oracle_backward(&x, &dz, batch, &w);
+            for threads in [1usize, 2, 8] {
+                let mut dx = vec![f32::NAN; batch * n_in]; // must be overwritten
+                let mut dw = vec![0.0f32; w.nnz()];
+                spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, threads);
+                assert_eq!(dx, dx_o, "dx {n_in}x{n_out} b{batch} t{threads}");
+                assert_eq!(dw, dw_o, "dw {n_in}x{n_out} b{batch} t{threads}");
+            }
+        }
+    }
+
+    fn erdos_renyi_like(n_in: usize, n_out: usize, density: f64, rng: &mut Rng) -> CsrMatrix {
+        init::erdos_renyi(n_in, n_out, density, rng, &init::WeightInit::Normal(0.5))
+    }
+
+    #[test]
+    fn fused_backward_shards_above_crossover_and_matches_exactly() {
+        let mut rng = Rng::new(41);
+        let w = erdos_renyi_like(256, 512, 0.35, &mut rng);
+        let batch = 64;
+        assert!(batch * w.nnz() >= PAR_MIN_WORK, "test must cross the threshold");
+        let x = random_x(&mut rng, batch, 256, 0.3);
+        let dz = random_x(&mut rng, batch, 512, 0.0);
+        let (dx_o, dw_o) = oracle_backward(&x, &dz, batch, &w);
+        for threads in [2usize, 3, 8] {
+            let mut dx = vec![f32::NAN; batch * 256];
+            let mut dw = vec![0.0f32; w.nnz()];
+            spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, threads);
+            assert_eq!(dx, dx_o, "dx threads={threads}");
+            assert_eq!(dw, dw_o, "dw threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_backward_zeroes_dx_for_empty_rows() {
+        // rows 1 and 3 carry no links: their dx columns must still be
+        // written (zeroed), including on the sharded path
+        let w = CsrMatrix::from_coo(
+            4,
+            3,
+            vec![(0u32, 0u32, 2.0f32), (2, 1, -1.0), (2, 2, 0.5)],
+        )
+        .unwrap();
+        let batch = 9; // full block + tail
+        let mut rng = Rng::new(42);
+        let x = random_x(&mut rng, batch, 4, 0.2);
+        let dz = random_x(&mut rng, batch, 3, 0.0);
+        let (dx_o, dw_o) = oracle_backward(&x, &dz, batch, &w);
+        for threads in [1usize, 8] {
+            let mut dx = vec![f32::NAN; batch * 4];
+            let mut dw = vec![0.0f32; w.nnz()];
+            spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, threads);
+            assert_eq!(dx, dx_o, "threads={threads}");
+            assert_eq!(dw, dw_o, "threads={threads}");
+            for b in 0..batch {
+                assert_eq!(dx[b * 4 + 1], 0.0);
+                assert_eq!(dx[b * 4 + 3], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_backward_handles_empty_matrix_and_zero_batch() {
+        let w = CsrMatrix::empty(4, 5);
+        let x = vec![1.0f32; 2 * 4];
+        let dz = vec![1.0f32; 2 * 5];
+        let mut dx = vec![f32::NAN; 2 * 4];
+        let mut dw: Vec<f32> = Vec::new();
+        spmm_backward_fused(&x, &dz, 2, &w, &mut dx, &mut dw, 8);
+        assert!(dx.iter().all(|&v| v == 0.0));
+        let mut rng = Rng::new(43);
+        let w = erdos_renyi_like(6, 6, 0.5, &mut rng);
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_backward_fused(&[], &[], 0, &w, &mut [], &mut dw, 8);
+        assert!(dw.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -119,8 +119,9 @@ pub fn train_model(
 ) -> Result<TrainReport> {
     let start_weights = model.weight_count();
     let mut ws = model.alloc_workspace(cfg.batch);
-    // Kernel-shard budget rides in the workspace so every forward/backward
-    // below (train, eval, gradflow probes) inherits it.
+    // Kernel-shard budget rides in the workspace so every forward and
+    // every fused backward (`SparseLayer::backward_into`, DESIGN.md §5)
+    // below — train steps, eval, gradflow probes — inherits it.
     ws.kernel_threads = cfg.kernel_threads;
     let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
     let dropout = if cfg.dropout > 0.0 {

@@ -1,11 +1,12 @@
-//! Kernel-parity suite: the worker-sharded kernels (DESIGN.md §4) must
-//! reproduce the sequential kernels across random shapes, densities and
-//! thread counts, including the degenerate edge cases.
+//! Kernel-parity suite: the worker-sharded kernels (DESIGN.md §4) and
+//! the fused one-pass backward (DESIGN.md §5) must reproduce the
+//! sequential kernels across random shapes, densities and thread counts,
+//! including the degenerate edge cases.
 //!
-//! The sharding design guarantees *exact* equality (disjoint writes with
-//! unchanged per-slot accumulation order), so most assertions use `==`;
-//! one oracle check also pins both paths against the dense reference
-//! within 1e-5 to guard against a shared systematic error.
+//! The sharding and fusion designs guarantee *exact* equality (disjoint
+//! writes with unchanged per-slot accumulation order), so most assertions
+//! use `==`; one oracle check also pins both paths against the dense
+//! reference within 1e-5 to guard against a shared systematic error.
 
 use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit};
 use tsnn::util::Rng;
@@ -43,6 +44,29 @@ fn assert_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
     ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
     ops::spmm_grad_weights_threaded(&x, &dz, batch, w, &mut par, threads);
     assert_eq!(seq, par, "grad_weights mismatch ({label})");
+}
+
+/// Run the fused one-pass backward at `threads` against the sequential
+/// two-kernel oracle (`spmm_grad_input` + `spmm_grad_weights`), asserting
+/// exact agreement on both outputs. `dx` starts NaN-poisoned so any slot
+/// the fused kernel fails to overwrite (e.g. an all-empty row's column)
+/// trips the comparison.
+fn assert_fused_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    let x = random_x(rng, batch, n_in, 0.3);
+    let dz = random_x(rng, batch, n_out, 0.0);
+    let label = format!("{n_in}x{n_out} nnz={} batch={batch} threads={threads}", w.nnz());
+
+    let mut dx_oracle = vec![0.0f32; batch * n_in];
+    let mut dw_oracle = vec![0.0f32; w.nnz()];
+    ops::spmm_grad_input(&dz, batch, w, &mut dx_oracle);
+    ops::spmm_grad_weights(&x, &dz, batch, w, &mut dw_oracle);
+
+    let mut dx = vec![f32::NAN; batch * n_in];
+    let mut dw = vec![0.0f32; w.nnz()];
+    ops::spmm_backward_fused(&x, &dz, batch, w, &mut dx, &mut dw, threads);
+    assert_eq!(dx, dx_oracle, "fused dx mismatch ({label})");
+    assert_eq!(dw, dw_oracle, "fused dw mismatch ({label})");
 }
 
 #[test]
@@ -140,5 +164,106 @@ fn parity_with_highly_irregular_rows() {
     let mut rng = Rng::new(36);
     for threads in THREAD_COUNTS {
         assert_parity(&w, 800, &mut rng, threads);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused one-pass backward vs the sequential two-kernel oracle (DESIGN.md §5).
+
+#[test]
+fn fused_parity_across_random_shapes_densities_threads_and_ragged_batches() {
+    let mut rng = Rng::new(20260729);
+    // (n_in, n_out, density, batch): sub-crossover problems (sequential
+    // fused path), problems big enough to row-shard at threads ≥ 2, and
+    // ragged batches hitting assorted remainder widths of the BLOCK=8
+    // microkernel (batch % 8 ∈ {0, 1, 5, 7}; the remaining widths are
+    // covered by the unit tests in sparse/ops.rs and model/layer.rs).
+    let grid = [
+        (17usize, 13usize, 0.3f64, 5usize),
+        (64, 64, 0.1, 33),
+        (128, 96, 0.02, 63),
+        (300, 200, 0.5, 48),
+        (256, 512, 0.35, 64),  // ≥ PAR_MIN_WORK: sharded path active
+        (512, 256, 0.35, 129), // ≥ PAR_MIN_WORK, ragged tail of 1
+        (1000, 100, 0.2, 135), // batch not divisible by thread counts
+    ];
+    for &(n_in, n_out, density, batch) in &grid {
+        let w = erdos_renyi(n_in, n_out, density, &mut rng, &WeightInit::Normal(0.5));
+        for threads in THREAD_COUNTS {
+            assert_fused_parity(&w, batch, &mut rng, threads);
+        }
+    }
+}
+
+#[test]
+fn fused_parity_with_empty_matrix() {
+    // no stored weights: dw is empty and every dx slot must still be
+    // overwritten with 0.0 (the NaN poison in the helper catches misses)
+    let mut rng = Rng::new(37);
+    let w = CsrMatrix::empty(40, 50);
+    for threads in THREAD_COUNTS {
+        assert_fused_parity(&w, 7, &mut rng, threads);
+    }
+}
+
+#[test]
+fn fused_parity_with_zero_batch() {
+    let mut rng = Rng::new(38);
+    let w = erdos_renyi(30, 20, 0.4, &mut rng, &WeightInit::Normal(1.0));
+    for threads in THREAD_COUNTS {
+        assert_fused_parity(&w, 0, &mut rng, threads);
+    }
+}
+
+#[test]
+fn fused_parity_with_single_row_matrix() {
+    // one CSR row: the row dimension cannot shard, so the fused kernel
+    // must fall back to its sequential core at any thread count
+    let mut rng = Rng::new(39);
+    let w = erdos_renyi(1, 2048, 0.9, &mut rng, &WeightInit::Normal(0.5));
+    for threads in THREAD_COUNTS {
+        assert_fused_parity(&w, 600, &mut rng, threads);
+    }
+}
+
+#[test]
+fn fused_parity_with_highly_irregular_rows() {
+    // one nnz-heavy row plus many empty rows: the balanced-nnz partition
+    // produces shards whose rows carry zero nnz — they still own (and
+    // must zero) their dx columns on the sharded path
+    let mut triplets = Vec::new();
+    for j in 0..1500u32 {
+        triplets.push((3u32, j, 0.01 * j as f32 - 5.0));
+    }
+    for i in [0u32, 7, 63] {
+        triplets.push((i, 0, 1.0));
+    }
+    let w = CsrMatrix::from_coo(64, 1500, triplets).unwrap();
+    let mut rng = Rng::new(36);
+    for threads in THREAD_COUNTS {
+        assert_fused_parity(&w, 800, &mut rng, threads);
+    }
+}
+
+#[test]
+fn fused_parity_against_dense_oracle_above_crossover() {
+    // The fused dx must also agree with the dense reference (within
+    // 1e-5), not merely with the sparse oracle.
+    let mut rng = Rng::new(44);
+    let (n_in, n_out, batch) = (256usize, 512usize, 64usize);
+    let w = erdos_renyi(n_in, n_out, 0.35, &mut rng, &WeightInit::Normal(0.5));
+    assert!(batch * w.nnz() >= ops::PAR_MIN_WORK);
+    let x = random_x(&mut rng, batch, n_in, 0.3);
+    let dz = random_x(&mut rng, batch, n_out, 0.0);
+    let wt = w.transpose();
+    let dense = ops::dense_matmul(&dz, batch, &wt.to_dense(), n_out, n_in);
+    let mut dx = vec![f32::NAN; batch * n_in];
+    let mut dw = vec![0.0f32; w.nnz()];
+    ops::spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, 8);
+    for (i, (&a, &b)) in dx.iter().zip(dense.iter()).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+            "idx {i}: fused {a} vs dense {b}"
+        );
     }
 }
