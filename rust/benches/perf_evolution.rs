@@ -1,0 +1,253 @@
+//! §Perf — topology-evolution step: the in-place worker-sharded engine
+//! (DESIGN.md §8) vs the sequential SET oracle, across layer shapes ×
+//! thread counts, plus the fused importance+SET epoch vs the two-call
+//! oracle. Emits a machine-readable `BENCH_3.json` at the repository
+//! root (evolution-step ns/epoch, speedup vs the sequential oracle) so
+//! the perf trajectory is tracked across PRs.
+//!
+//! Acceptance gate (PR 3): engine evolution epoch ≥ 1.5× the sequential
+//! oracle at nnz ≥ 100k with 4+ threads — and bit-exact parity at every
+//! thread count, asserted here before any timing.
+//!
+//! Knobs: TSNN_ITERS (default 10), TSNN_THREADS (csv, default
+//! 1,2,4,<cores>), TSNN_REPO_ROOT (JSON destination override).
+
+use tsnn::bench::{env_usize, time_it, write_repo_root_json, Table};
+use tsnn::importance::{self, ImportanceConfig};
+use tsnn::nn::Activation;
+use tsnn::prelude::*;
+use tsnn::set::{self, EvolutionConfig, EvolutionEngine};
+use tsnn::sparse::ops;
+use tsnn::util::json::{obj, Json};
+
+fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = match std::env::var(name) {
+        Ok(s) => s.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    };
+    v.retain(|&t| t >= 1);
+    v.sort_unstable();
+    v.dedup();
+    if v.is_empty() {
+        v.push(1);
+    }
+    v
+}
+
+/// One emitted measurement: op × shape × threads.
+#[allow(clippy::too_many_arguments)]
+fn json_row(
+    op: &str,
+    n_in: usize,
+    n_out: usize,
+    eps: f64,
+    nnz: usize,
+    threads: usize,
+    baseline_secs: f64,
+    secs: f64,
+) -> Json {
+    obj(vec![
+        ("op", op.into()),
+        ("n_in", n_in.into()),
+        ("n_out", n_out.into()),
+        ("eps", eps.into()),
+        ("nnz", nnz.into()),
+        ("threads", threads.into()),
+        ("baseline_ns_per_epoch", (baseline_secs * 1e9).into()),
+        ("ns_per_epoch", (secs * 1e9).into()),
+        ("speedup", (baseline_secs / secs.max(1e-12)).into()),
+    ])
+}
+
+fn single_layer(n_in: usize, n_out: usize, eps: f64, seed: u64) -> SparseMlp {
+    let mut rng = Rng::new(seed);
+    SparseMlp::new(
+        &[n_in, n_out],
+        eps,
+        Activation::Relu,
+        &WeightInit::HeUniform,
+        &mut rng,
+    )
+    .unwrap()
+}
+
+fn assert_engine_matches_oracle(
+    base: &SparseMlp,
+    cfg: &EvolutionConfig,
+    threads: usize,
+    label: &str,
+) {
+    let (mut a, mut b) = (base.clone(), base.clone());
+    let (mut ra, mut rb) = (Rng::new(7), Rng::new(7));
+    set::evolve_model(&mut a, cfg, &mut ra).unwrap();
+    let mut engine = EvolutionEngine::new();
+    engine.evolve_model(&mut b, cfg, &mut rb, threads).unwrap();
+    for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.weights, lb.weights, "parity {label} layer {l} weights");
+        assert_eq!(la.velocity, lb.velocity, "parity {label} layer {l} velocity");
+    }
+}
+
+fn main() {
+    let iters = env_usize("TSNN_ITERS", 10);
+    let cores = ops::available_threads();
+    let threads_grid = env_csv("TSNN_THREADS", &[1, 2, 4, cores]);
+    let cfg = EvolutionConfig {
+        zeta: 0.3,
+        init: WeightInit::HeUniform,
+    };
+
+    println!("host: {cores} cores; ζ = {}\n", cfg.zeta);
+
+    let mut table = Table::new(
+        "§Perf — evolution step: sequential oracle vs in-place sharded engine",
+        &["op", "shape", "eps", "nnz", "threads", "oracle ms", "engine ms", "speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    // (n_in, n_out, ε): fashion hidden, cifar-in, wide symmetric,
+    // extreme-scale input layer — the perf_parallel_kernels shapes.
+    for &(n_in, n_out, eps) in &[
+        (1000usize, 1000usize, 20.0f64),
+        (3072, 4000, 20.0),
+        (4000, 4000, 40.0),
+        (65536, 4096, 5.0),
+    ] {
+        let base = single_layer(n_in, n_out, eps, 1);
+        let nnz = base.weight_count();
+        let shape = format!("{n_in}x{n_out}");
+
+        // bit-exact parity before any timing, at every thread count
+        for &threads in &threads_grid {
+            assert_engine_matches_oracle(&base, &cfg, threads, &format!("{shape} t{threads}"));
+        }
+
+        // sequential oracle: evolve the same model repeatedly — nnz is
+        // stationary under SET, so every iteration is a steady-state epoch
+        let mut om = base.clone();
+        let mut orng = Rng::new(2);
+        let (oracle_secs, _) = time_it(1, iters, || {
+            set::evolve_model(&mut om, &cfg, &mut orng).unwrap();
+        });
+
+        for &threads in &threads_grid {
+            let mut m = base.clone();
+            let mut engine = EvolutionEngine::new();
+            let mut erng = Rng::new(2);
+            let (engine_secs, _) = time_it(1, iters, || {
+                engine.evolve_model(&mut m, &cfg, &mut erng, threads).unwrap();
+            });
+            table.row(vec![
+                "evolve_epoch".into(),
+                shape.clone(),
+                format!("{eps}"),
+                nnz.to_string(),
+                threads.to_string(),
+                format!("{:.3}", oracle_secs * 1e3),
+                format!("{:.3}", engine_secs * 1e3),
+                format!("{:.2}x", oracle_secs / engine_secs.max(1e-12)),
+            ]);
+            rows.push(json_row(
+                "evolve_epoch",
+                n_in,
+                n_out,
+                eps,
+                nnz,
+                threads,
+                oracle_secs,
+                engine_secs,
+            ));
+        }
+    }
+
+    // fused importance+SET epoch vs the two-call oracle, one deep model
+    {
+        let mut rng = Rng::new(3);
+        let base = SparseMlp::new(
+            &[3072, 4000, 4000, 1000, 10],
+            20.0,
+            Activation::Relu,
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+        .unwrap();
+        let nnz = base.weight_count();
+        let imp = ImportanceConfig {
+            start_epoch: 0,
+            period: 1,
+            percentile: 5.0,
+            min_connections: 16,
+        };
+        // two-call oracle: prune_model + evolve_model, fresh clone per
+        // iteration (the oracle path mutates nnz downward via importance)
+        let (oracle_secs, _) = time_it(1, iters.min(6), || {
+            let mut m = base.clone();
+            importance::prune_model(&mut m, &imp);
+            set::evolve_model(&mut m, &cfg, &mut Rng::new(4)).unwrap();
+        });
+        for &threads in &threads_grid {
+            let mut engine = EvolutionEngine::new();
+            let (engine_secs, _) = time_it(1, iters.min(6), || {
+                let mut m = base.clone();
+                engine
+                    .evolve_epoch(&mut m, Some(&cfg), Some(&imp), &mut Rng::new(4), threads)
+                    .unwrap();
+            });
+            table.row(vec![
+                "evolve_epoch+importance".into(),
+                "3072-4000x2-1000-10".into(),
+                "20".into(),
+                nnz.to_string(),
+                threads.to_string(),
+                format!("{:.3}", oracle_secs * 1e3),
+                format!("{:.3}", engine_secs * 1e3),
+                format!("{:.2}x", oracle_secs / engine_secs.max(1e-12)),
+            ]);
+            rows.push(json_row(
+                "evolve_epoch+importance",
+                3072,
+                10,
+                20.0,
+                nnz,
+                threads,
+                oracle_secs,
+                engine_secs,
+            ));
+        }
+    }
+
+    table.emit("perf_evolution.csv");
+
+    let doc = obj(vec![
+        ("bench", "perf_evolution".into()),
+        ("pr", 3usize.into()),
+        ("status", "measured".into()),
+        ("host_threads", cores.into()),
+        ("iters", iters.into()),
+        ("zeta", Json::from(0.3f64)),
+        (
+            "acceptance",
+            obj(vec![
+                ("engine_min_speedup_vs_oracle", Json::from(1.5f64)),
+                ("at_threads_ge", 4usize.into()),
+                ("at_nnz_ge", 100_000usize.into()),
+                (
+                    "note",
+                    "bit-exact engine/oracle parity asserted at every thread count before timing"
+                        .into(),
+                ),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_repo_root_json("BENCH_3.json", &doc) {
+        Ok(path) => println!("(json written to {})", path.display()),
+        Err(e) => eprintln!("warn: could not write BENCH_3.json: {e}"),
+    }
+
+    println!(
+        "acceptance gate: `evolve_epoch` rows at nnz >= 100k, threads >= 4 — target \
+         >= 1.50x vs the sequential oracle (allocation-free single-pass rebuild \
+         plus layer- and row-level sharding)."
+    );
+}

@@ -14,7 +14,7 @@
 use tsnn::bench::{env_usize, time_it, Table};
 use tsnn::nn::MomentumSgd;
 use tsnn::prelude::*;
-use tsnn::set::{evolve_layer, EvolutionConfig};
+use tsnn::set::{evolve_layer, EvolutionConfig, EvolutionEngine};
 use tsnn::sparse::{erdos_renyi_epsilon, ops};
 
 fn main() {
@@ -148,10 +148,29 @@ fn main() {
             evolve_layer(&mut l, &EvolutionConfig::default(), &mut rng).unwrap();
         });
         table.row(vec![
-            "evolve_layer (clone incl.)".into(),
+            "evolve_layer oracle (clone incl.)".into(),
             "1000x1000".into(),
             "20".into(),
             model.layers[1].weights.nnz().to_string(),
+            format!("{:.3}", mean * 1e3),
+            "-".into(),
+        ]);
+
+        // the in-place engine on the full model, workspace reused across
+        // iterations (the steady-state training-loop configuration;
+        // DESIGN.md §8) — sequential budget so the row stays a
+        // single-core roofline like the rest of this bench
+        let mut evolver = EvolutionEngine::new();
+        let (mean, _) = time_it(1, iters.min(10), || {
+            evolver
+                .evolve_model(&mut model, &EvolutionConfig::default(), &mut rng, 1)
+                .unwrap();
+        });
+        table.row(vec![
+            "evolution engine (in-place, t=1)".into(),
+            "784-1000x3-10".into(),
+            "20".into(),
+            model.weight_count().to_string(),
             format!("{:.3}", mean * 1e3),
             "-".into(),
         ]);

@@ -11,7 +11,7 @@ use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, Mutex};
 
 use crate::error::Result;
-use crate::importance::{self, ImportanceConfig};
+use crate::importance::ImportanceConfig;
 use crate::model::SparseMlp;
 use crate::nn::MomentumSgd;
 use crate::set::{self, EvolutionConfig};
@@ -45,6 +45,10 @@ pub struct SparseGradient {
 
 struct ServerState {
     model: SparseMlp,
+    /// In-place topology-evolution engine (DESIGN.md §8); lives under
+    /// the state lock so its per-layer workspaces are reused across the
+    /// server's evolution epochs.
+    evolver: set::EvolutionEngine,
     snapshot: Arc<SparseMlp>,
     gen: u64,
     step: u64,
@@ -102,6 +106,7 @@ impl ParameterServer {
         ParameterServer {
             state: Mutex::new(ServerState {
                 model,
+                evolver: set::EvolutionEngine::new(),
                 snapshot,
                 gen: 0,
                 step: 0,
@@ -134,6 +139,32 @@ impl ParameterServer {
     /// Current epoch (workers poll this to decide when to stop).
     pub fn epoch(&self) -> usize {
         self.state.lock().unwrap().epoch
+    }
+
+    /// Algorithm 1 line 16: every n÷B pushes (= one "epoch"), run the
+    /// fused evolution epoch on the in-place engine — bit-identical to
+    /// `prune_model` + `evolve_model` but one structural pass per layer
+    /// with workspace reuse, minimising time under the state lock. The
+    /// kernel budget stays sequential: the data-parallel workers own the
+    /// cores while the server evolves. Shared by [`ParameterServer::push`]
+    /// and [`ParameterServer::apply_aligned`] so the two update paths
+    /// cannot drift.
+    fn end_of_epoch_evolution(&self, st: &mut ServerState) -> Result<()> {
+        if st.pushes_since_evolution < self.pushes_per_epoch {
+            return Ok(());
+        }
+        st.pushes_since_evolution = 0;
+        st.epoch += 1;
+        let mut rng = self.evo_rng.lock().unwrap();
+        let imp_due = self.importance.as_ref().filter(|imp| imp.due(st.epoch));
+        if self.evolution.is_some() || imp_due.is_some() {
+            st.evolver
+                .evolve_epoch(&mut st.model, self.evolution.as_ref(), imp_due, &mut rng, 1)?;
+        }
+        if self.evolution.is_some() {
+            st.gen += 1;
+        }
+        Ok(())
     }
 
     /// Atomic write: push a gradient; the server applies valid entries
@@ -196,21 +227,7 @@ impl ParameterServer {
         st.step += 1;
         st.pushes_since_evolution += 1;
 
-        // Algorithm 1 line 16: evolution every n÷B pushes = 1 "epoch"
-        if st.pushes_since_evolution >= self.pushes_per_epoch {
-            st.pushes_since_evolution = 0;
-            st.epoch += 1;
-            let mut rng = self.evo_rng.lock().unwrap();
-            if let Some(imp) = &self.importance {
-                if imp.due(st.epoch) {
-                    importance::prune_model(&mut st.model, imp);
-                }
-            }
-            if let Some(evo) = &self.evolution {
-                set::evolve_model(&mut st.model, evo, &mut rng)?;
-                st.gen += 1;
-            }
-        }
+        self.end_of_epoch_evolution(&mut st)?;
         // publish a fresh snapshot for subsequent fetches
         st.snapshot = Arc::new(st.model.clone());
         Ok(())
@@ -225,20 +242,7 @@ impl ParameterServer {
         }
         st.step += 1;
         st.pushes_since_evolution += 1;
-        if st.pushes_since_evolution >= self.pushes_per_epoch {
-            st.pushes_since_evolution = 0;
-            st.epoch += 1;
-            let mut rng = self.evo_rng.lock().unwrap();
-            if let Some(imp) = &self.importance {
-                if imp.due(st.epoch) {
-                    importance::prune_model(&mut st.model, imp);
-                }
-            }
-            if let Some(evo) = &self.evolution {
-                set::evolve_model(&mut st.model, evo, &mut rng)?;
-                st.gen += 1;
-            }
-        }
+        self.end_of_epoch_evolution(&mut st)?;
         st.snapshot = Arc::new(st.model.clone());
         Ok(())
     }

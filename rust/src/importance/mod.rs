@@ -57,13 +57,44 @@ impl ImportanceConfig {
 /// The value at the given percentile (0–100) of `xs` (linear selection,
 /// no interpolation — matches numpy's "lower" method).
 pub fn percentile_value(xs: &[f32], pct: f64) -> f32 {
+    let mut v: Vec<f32> = xs.to_vec();
+    percentile_value_mut(&mut v, pct)
+}
+
+/// [`percentile_value`] operating in place (the slice is reordered) — the
+/// allocation-free variant the evolution engine's workspace path uses.
+pub fn percentile_value_mut(xs: &mut [f32], pct: f64) -> f32 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f32> = xs.to_vec();
-    let idx = ((pct / 100.0) * (v.len() - 1) as f64).floor() as usize;
-    let (_, val, _) = v.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let idx = ((pct / 100.0) * (xs.len() - 1) as f64).floor() as usize;
+    let (_, val, _) = xs.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
     *val
+}
+
+/// The pruning threshold [`prune_low_importance`] would apply, given
+/// precomputed importances: `None` when the layer is at (or below) the
+/// `min_connections` floor or has no active neuron. `scratch` receives
+/// the active (> 0) importances (a reusable buffer — the engine's
+/// workspace path passes one with reserved capacity).
+///
+/// Factored out so the fused evolution engine (DESIGN.md §8) and the
+/// sequential oracle cannot drift apart in threshold semantics.
+pub fn importance_threshold_from(
+    imp: &[f32],
+    nnz: usize,
+    cfg: &ImportanceConfig,
+    scratch: &mut Vec<f32>,
+) -> Option<f32> {
+    if nnz <= cfg.min_connections {
+        return None;
+    }
+    scratch.clear();
+    scratch.extend(imp.iter().copied().filter(|&v| v > 0.0));
+    if scratch.is_empty() {
+        return None;
+    }
+    Some(percentile_value_mut(scratch, cfg.percentile))
 }
 
 /// Remove all incoming connections of output neurons with importance
@@ -82,16 +113,19 @@ pub fn prune_neurons_below(layer: &mut SparseLayer, threshold: f32) -> usize {
 /// remaining connections. Returns connections removed.
 pub fn prune_low_importance(layer: &mut SparseLayer, cfg: &ImportanceConfig) -> usize {
     if layer.weights.nnz() <= cfg.min_connections {
-        return 0;
+        return 0; // at the floor: skip the O(nnz) importance scan entirely
     }
     let imp = neuron_importance(layer);
-    // only consider neurons that have connections at all
-    let active: Vec<f32> = imp.iter().copied().filter(|&v| v > 0.0).collect();
-    if active.is_empty() {
-        return 0;
+    let mut active = Vec::new();
+    match importance_threshold_from(&imp, layer.weights.nnz(), cfg, &mut active) {
+        Some(thr) => {
+            // reuse the importances already computed for the threshold
+            // (prune_neurons_below would rescan the CSR to rebuild them)
+            let cols = layer.weights.col_idx.clone();
+            layer.retain_entries(|k| imp[cols[k] as usize] >= thr)
+        }
+        None => 0,
     }
-    let thr = percentile_value(&active, cfg.percentile);
-    prune_neurons_below(layer, thr)
 }
 
 /// During-training importance pruning across hidden layers (all layers
@@ -167,6 +201,36 @@ mod tests {
         assert_eq!(percentile_value(&xs, 100.0), 5.0);
         assert_eq!(percentile_value(&xs, 50.0), 3.0);
         assert_eq!(percentile_value(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn threshold_helper_mirrors_prune_low_importance_gates() {
+        let cfg = ImportanceConfig {
+            start_epoch: 0,
+            period: 1,
+            percentile: 50.0,
+            min_connections: 4,
+        };
+        let mut scratch = Vec::new();
+        // at/below the floor: no threshold
+        assert_eq!(
+            importance_threshold_from(&[1.0, 2.0], 4, &cfg, &mut scratch),
+            None
+        );
+        // no active neuron: no threshold
+        assert_eq!(
+            importance_threshold_from(&[0.0, 0.0], 10, &cfg, &mut scratch),
+            None
+        );
+        // zeros are excluded from the percentile population
+        assert_eq!(
+            importance_threshold_from(&[0.0, 5.0, 1.0, 3.0], 10, &cfg, &mut scratch),
+            Some(3.0)
+        );
+        // in-place variant agrees with the copying one
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        let mut ys = xs;
+        assert_eq!(percentile_value(&xs, 50.0), percentile_value_mut(&mut ys, 50.0));
     }
 
     #[test]

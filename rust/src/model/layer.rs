@@ -159,6 +159,31 @@ impl SparseLayer {
         before - self.weights.nnz()
     }
 
+    /// Swap in fully-rebuilt storage (`row_ptr`/`col_idx`/`values` plus
+    /// the aligned `velocity`) produced by the evolution engine's
+    /// workspace (DESIGN.md §8), leaving the previous arrays in the
+    /// passed buffers for reuse next epoch — no clone, no COO rebuild.
+    ///
+    /// Callers guarantee the new arrays form a valid CSR for this layer's
+    /// shape with `velocity` aligned to `values` (checked in debug
+    /// builds).
+    pub fn swap_storage(
+        &mut self,
+        row_ptr: &mut Vec<usize>,
+        col_idx: &mut Vec<u32>,
+        values: &mut Vec<f32>,
+        velocity: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(row_ptr.len(), self.weights.n_rows + 1);
+        debug_assert_eq!(col_idx.len(), values.len());
+        debug_assert_eq!(velocity.len(), values.len());
+        std::mem::swap(&mut self.weights.row_ptr, row_ptr);
+        std::mem::swap(&mut self.weights.col_idx, col_idx);
+        std::mem::swap(&mut self.weights.values, values);
+        std::mem::swap(&mut self.velocity, velocity);
+        debug_assert!(self.weights.validate().is_ok());
+    }
+
     /// Insert new links (currently-empty positions), giving them zero
     /// velocity and the provided weight values.
     pub fn insert_entries(&mut self, additions: Vec<(u32, u32, f32)>) -> crate::error::Result<()> {
@@ -237,6 +262,27 @@ mod tests {
         assert_eq!(l.weights.get(i as usize, j), 0.123);
         let new_sum: f32 = l.velocity.iter().sum();
         assert_eq!(old_sum, new_sum); // inserted entry has zero velocity
+    }
+
+    #[test]
+    fn swap_storage_exchanges_arrays_and_keeps_alignment() {
+        let mut l = layer();
+        let (mut rp, mut ci, mut va) = (
+            l.weights.row_ptr.clone(),
+            l.weights.col_idx.clone(),
+            l.weights.values.clone(),
+        );
+        for v in va.iter_mut() {
+            *v += 1.0;
+        }
+        let mut vel = vec![2.5f32; va.len()];
+        let old_values = l.weights.values.clone();
+        l.swap_storage(&mut rp, &mut ci, &mut va, &mut vel);
+        l.weights.validate().unwrap();
+        assert_eq!(l.velocity, vec![2.5f32; l.weights.nnz()]);
+        // the buffers now hold the layer's previous arrays
+        assert_eq!(va, old_values);
+        assert_eq!(vel.len(), old_values.len());
     }
 
     #[test]

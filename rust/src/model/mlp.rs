@@ -148,6 +148,31 @@ impl SparseMlp {
             .sum()
     }
 
+    /// Validate every layer: CSR structural invariants plus aligned-state
+    /// lengths (velocity ↔ nnz, bias/bias-velocity ↔ n_out). Used by the
+    /// topology-evolution tests after structural mutations.
+    pub fn validate(&self) -> Result<()> {
+        for (l, layer) in self.layers.iter().enumerate() {
+            layer
+                .weights
+                .validate()
+                .map_err(|e| TsnnError::Sparse(format!("layer {l}: {e}")))?;
+            if layer.velocity.len() != layer.weights.nnz() {
+                return Err(TsnnError::Sparse(format!(
+                    "layer {l}: velocity length {} != nnz {}",
+                    layer.velocity.len(),
+                    layer.weights.nnz()
+                )));
+            }
+            if layer.bias.len() != layer.n_out() || layer.bias_velocity.len() != layer.n_out() {
+                return Err(TsnnError::Sparse(format!(
+                    "layer {l}: bias state length mismatch"
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Size a workspace for `batch` samples.
     pub fn alloc_workspace(&self, batch: usize) -> Workspace {
         let mut ws = Workspace::default();
@@ -525,6 +550,14 @@ mod tests {
             assert_eq!(seq_ws.grad_w[l], par_ws.grad_w[l], "layer {l} grad_w");
             assert_eq!(seq_ws.grad_b[l], par_ws.grad_b[l], "layer {l} grad_b");
         }
+    }
+
+    #[test]
+    fn validate_accepts_fresh_and_rejects_misaligned() {
+        let (mut mlp, _, _) = toy();
+        mlp.validate().unwrap();
+        mlp.layers[1].velocity.pop();
+        assert!(mlp.validate().is_err());
     }
 
     #[test]

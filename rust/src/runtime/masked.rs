@@ -14,7 +14,7 @@
 use crate::data::Dataset;
 use crate::error::{Result, TsnnError};
 use crate::nn;
-use crate::set::prune_thresholds;
+use crate::set::{prune_thresholds, sample_gap_ordinals};
 use crate::util::{Rng, Timer};
 
 use super::engine::{literal_f32, literal_i32, literal_scalar, to_scalar_f32, to_vec_f32, HloExecutable};
@@ -250,18 +250,29 @@ impl MaskedDenseTrainer {
                     }
                 }
             }
-            // regrow
+            // regrow by gap sampling over the masked-out set — exactly
+            // min(pruned, capacity) links, like the sparse path (no
+            // rejection loop, no attempt cap)
             let lim = (6.0f32 / l.n_in as f32).sqrt();
-            let total = l.w.len();
-            let mut grown = 0usize;
-            let mut attempts = 0usize;
-            while grown < pruned && attempts < pruned * 200 + 1000 {
-                attempts += 1;
-                let k = rng.below_usize(total);
+            let empty = l.m.iter().filter(|&&m| m == 0.0).count();
+            let to_grow = pruned.min(empty);
+            let mut ordinals = Vec::with_capacity(to_grow);
+            let mut seen = std::collections::HashSet::with_capacity(to_grow * 2);
+            sample_gap_ordinals(rng, empty, to_grow, &mut ordinals, &mut seen);
+            ordinals.sort_unstable();
+            let mut oi = 0usize;
+            let mut gap = 0usize;
+            for k in 0..l.w.len() {
+                if oi >= ordinals.len() {
+                    break;
+                }
                 if l.m[k] == 0.0 {
-                    l.m[k] = 1.0;
-                    l.w[k] = rng.uniform(-lim, lim);
-                    grown += 1;
+                    if ordinals[oi] == gap {
+                        l.m[k] = 1.0;
+                        l.w[k] = rng.uniform(-lim, lim);
+                        oi += 1;
+                    }
+                    gap += 1;
                 }
             }
         }

@@ -1,0 +1,733 @@
+//! The worker-sharded, in-place topology-evolution engine (DESIGN.md §8).
+//!
+//! One "evolution epoch" — importance pruning (paper Eq. 4 / Algorithm 2)
+//! plus the SET prune–regrow cycle — touches each layer's CSR arrays
+//! **once**: a single structural rebuild per layer replaces the oracle's
+//! `values.clone()` + `retain` + COO-merge `insert` (three O(nnz) array
+//! rebuilds and several transient allocations per layer per epoch).
+//!
+//! Parallel structure:
+//! * **layer-level**: each layer evolves on its own scoped worker with an
+//!   independent RNG stream (`root.split(layer_index)`, the exact layout
+//!   of the sequential oracle [`super::evolve_model`]);
+//! * **row-level**: inside a layer, the rebuild pass is sharded over
+//!   contiguous, nnz-balanced row ranges ([`ops::balanced_row_bounds`]) —
+//!   a row range owns the contiguous output slots
+//!   `[new_row_ptr[r0], new_row_ptr[r1])` for columns, values AND the
+//!   remapped velocity, so workers write disjoint sub-slices obtained by
+//!   `split_at_mut` (no atomics, no locks).
+//!
+//! All randomness (gap-ordinal sampling + regrown-weight draws) happens
+//! in the sequential per-layer planning step, so results are **invariant
+//! to the thread count** and bit-exact against the sequential oracle —
+//! the contract `rust/tests/evolution_parity.rs` pins.
+//!
+//! The engine owns per-layer workspace buffers that are reused across
+//! epochs (capacity is reserved once at the first epoch's nnz, and nnz
+//! never grows under SET since `regrown <= pruned`), so steady-state
+//! evolution performs **zero heap allocation**; a growth counter
+//! ([`EvolutionEngine::buffer_growth_events`]) lets tests verify it.
+
+use std::collections::HashSet;
+
+use crate::error::Result;
+use crate::importance::{importance_threshold_from, ImportanceConfig};
+use crate::model::{SparseLayer, SparseMlp};
+use crate::sparse::{ops, CsrMatrix};
+use crate::util::Rng;
+
+use super::{partition_signs, sample_gap_ordinals, thresholds_from_partition, EvolutionConfig};
+
+/// Minimum layer nnz at which the rebuild pass shards rows across worker
+/// threads. The rebuild is a memory-bound copy (~16 bytes per slot), so
+/// below ~10⁵ slots the scoped-thread spawn cost (tens of µs) dominates.
+const EVOLVE_PAR_MIN_NNZ: usize = 1 << 17;
+
+/// Per-layer outcome of one fused evolution epoch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EpochStats {
+    /// Connections removed because their output neuron's importance fell
+    /// below the layer threshold (0 when importance pruning is off or
+    /// skipped for this layer).
+    pub importance_pruned: usize,
+    /// Connections removed by SET magnitude pruning.
+    pub pruned: usize,
+    /// Connections regrown at random empty positions
+    /// (`min(pruned, capacity)` — exact, no rejection sampling).
+    pub regrown: usize,
+}
+
+/// Reusable per-layer workspace. Buffers are sized on first use and kept
+/// across epochs; `grows` counts capacity-growth events (the steady-state
+/// zero-allocation test hook).
+#[derive(Debug, Default)]
+struct LayerWs {
+    /// Sign-partition scratch for the SET thresholds.
+    part: Vec<f32>,
+    /// Column importance sums (Eq. 4), length n_out.
+    imp_sums: Vec<f32>,
+    /// Active (> 0) importances for the percentile selection.
+    imp_active: Vec<f32>,
+    /// Per-row survivor counts after the fused keep predicate.
+    keep_counts: Vec<usize>,
+    /// Per-row regrowth counts.
+    grow_counts: Vec<usize>,
+    /// Prefix sums of per-row empty counts (gap-ordinal space).
+    gap_prefix: Vec<usize>,
+    /// Prefix sums of `grow_counts`.
+    grow_ptr: Vec<usize>,
+    /// Sampled gap ordinals (sorted).
+    ordinals: Vec<usize>,
+    /// Floyd-sampling membership set.
+    seen: HashSet<usize>,
+    /// Regrown columns, aligned with sorted ordinals (global order).
+    grow_cols: Vec<u32>,
+    /// Regrown weights, aligned with `grow_cols`.
+    grow_vals: Vec<f32>,
+    /// Output CSR row pointers (swapped into the layer).
+    new_row_ptr: Vec<usize>,
+    /// Output CSR columns (swapped into the layer).
+    out_col: Vec<u32>,
+    /// Output CSR values (swapped into the layer).
+    out_val: Vec<f32>,
+    /// Output velocity, remapped through the same merge (swapped in).
+    out_vel: Vec<f32>,
+    /// Buffer capacity-growth events (test hook).
+    grows: usize,
+}
+
+/// Clear `buf`, growing its capacity to at least `cap_hint` (counted in
+/// `grows`) and resizing it to `len` zero-initialised elements.
+fn ensure_vec<T: Copy + Default>(buf: &mut Vec<T>, len: usize, cap_hint: usize, grows: &mut usize) {
+    buf.clear();
+    let want = len.max(cap_hint);
+    if buf.capacity() < want {
+        *grows += 1;
+        buf.reserve(want);
+    }
+    buf.resize(len, T::default());
+}
+
+/// Clear `seen`, growing its capacity to hold `want` entries (counted).
+fn ensure_set(seen: &mut HashSet<usize>, want: usize, grows: &mut usize) {
+    seen.clear();
+    if seen.capacity() < want {
+        *grows += 1;
+        seen.reserve(want);
+    }
+}
+
+/// The fused keep predicate of one evolution epoch: an entry survives
+/// when its output neuron's importance clears the layer threshold AND its
+/// magnitude lies outside the SET prune bands. Plain copyable data so the
+/// planning, mapping and sharded rebuild passes all evaluate the exact
+/// same predicate.
+#[derive(Clone, Copy)]
+struct KeepSpec<'a> {
+    /// `(importance_sums, threshold)` when importance pruning is active.
+    imp: Option<(&'a [f32], f32)>,
+    pos_cut: f32,
+    neg_cut: f32,
+    /// False when SET pruning is off (importance-only epoch).
+    set_active: bool,
+}
+
+impl KeepSpec<'_> {
+    #[inline]
+    fn imp_ok(&self, col: u32) -> bool {
+        match self.imp {
+            Some((imp, thr)) => imp[col as usize] >= thr,
+            None => true,
+        }
+    }
+
+    #[inline]
+    fn set_ok(&self, v: f32) -> bool {
+        !self.set_active || v > self.pos_cut || v < self.neg_cut
+    }
+
+    #[inline]
+    fn keep(&self, col: u32, v: f32) -> bool {
+        self.imp_ok(col) && self.set_ok(v)
+    }
+}
+
+/// Worker-sharded in-place topology evolution (DESIGN.md §8).
+///
+/// Reproduces the sequential oracles bit-for-bit at every thread count:
+/// [`super::evolve_model`] (SET only) and
+/// `importance::prune_model` + [`super::evolve_model`] (fused epoch).
+///
+/// # Examples
+///
+/// ```
+/// use tsnn::prelude::*;
+/// use tsnn::set::{EvolutionConfig, EvolutionEngine};
+///
+/// let mut rng = Rng::new(1);
+/// let mut mlp = SparseMlp::new(
+///     &[8, 16, 3],
+///     4.0,
+///     Activation::Relu,
+///     &WeightInit::HeUniform,
+///     &mut rng,
+/// )
+/// .unwrap();
+/// let before = mlp.weight_count();
+/// let mut engine = EvolutionEngine::new();
+/// let stats = engine
+///     .evolve_model(&mut mlp, &EvolutionConfig::default(), &mut rng, 2)
+///     .unwrap();
+/// assert_eq!(stats.len(), 2);
+/// assert_eq!(
+///     mlp.weight_count(),
+///     before - stats.iter().map(|s| s.pruned - s.regrown).sum::<usize>()
+/// );
+/// ```
+#[derive(Debug, Default)]
+pub struct EvolutionEngine {
+    per_layer: Vec<LayerWs>,
+}
+
+impl EvolutionEngine {
+    /// Engine with empty workspaces (sized lazily on first epoch).
+    pub fn new() -> Self {
+        EvolutionEngine::default()
+    }
+
+    /// Total workspace-buffer capacity-growth events so far. Constant
+    /// across steady-state epochs — the zero-allocation test hook.
+    pub fn buffer_growth_events(&self) -> usize {
+        self.per_layer.iter().map(|ws| ws.grows).sum()
+    }
+
+    /// SET evolution step over every layer — the in-place, worker-sharded
+    /// equivalent of the sequential oracle [`super::evolve_model`]
+    /// (bit-exact at every `threads` value; `0` = one worker per core,
+    /// `1` = fully sequential).
+    pub fn evolve_model(
+        &mut self,
+        mlp: &mut SparseMlp,
+        cfg: &EvolutionConfig,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> Result<Vec<EpochStats>> {
+        self.evolve_epoch(mlp, Some(cfg), None, rng, threads)
+    }
+
+    /// One fused evolution epoch: importance pruning (when `imp` is set;
+    /// the final classifier layer is always exempt, as in Algorithm 2)
+    /// and SET prune+regrow (when `evo` is set), in ONE structural pass
+    /// per layer.
+    ///
+    /// Equivalent to `importance::prune_model` followed by
+    /// [`super::evolve_model`] — exactly, including the caller-RNG
+    /// consumption (one `u64` when `evo` is set, none otherwise).
+    pub fn evolve_epoch(
+        &mut self,
+        mlp: &mut SparseMlp,
+        evo: Option<&EvolutionConfig>,
+        imp: Option<&ImportanceConfig>,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> Result<Vec<EpochStats>> {
+        let n_layers = mlp.layers.len();
+        if evo.is_none() && imp.is_none() {
+            return Ok(vec![EpochStats::default(); n_layers]);
+        }
+        if self.per_layer.len() < n_layers {
+            self.per_layer.resize_with(n_layers, LayerWs::default);
+        }
+        // one caller draw seeds the root stream (oracle layout); an
+        // importance-only epoch consumes nothing, like prune_model
+        let root = match evo {
+            Some(_) => Rng::new(rng.next_u64()),
+            None => Rng::new(0),
+        };
+        let threads = ops::resolve_threads(threads);
+        let mut stats = Vec::with_capacity(n_layers);
+        if threads <= 1 {
+            for (l, (layer, ws)) in mlp
+                .layers
+                .iter_mut()
+                .zip(self.per_layer.iter_mut())
+                .enumerate()
+            {
+                let imp_l = if l + 1 == n_layers { None } else { imp };
+                let layer_rng = root.split(l as u64);
+                stats.push(evolve_layer_ws(layer, evo, imp_l, layer_rng, ws, 1));
+            }
+        } else {
+            // Layer-level parallelism capped at the requested budget: at
+            // most `concurrent` layer workers run at once (a deep model
+            // never oversubscribes a small kernel_threads setting).
+            // Layers are scheduled heaviest-first and each batch's spare
+            // budget (threads - batch size) goes to its heaviest layer's
+            // row-sharded rebuild — real models are nnz-skewed, so an
+            // even split would leave the dominant layer unsharded while
+            // tiny-layer workers idle.
+            stats.resize(n_layers, EpochStats::default());
+            let concurrent = threads.min(n_layers);
+            let mut work: Vec<(usize, &mut SparseLayer, &mut LayerWs)> = mlp
+                .layers
+                .iter_mut()
+                .zip(self.per_layer.iter_mut())
+                .enumerate()
+                .map(|(l, (layer, ws))| (l, layer, ws))
+                .collect();
+            work.sort_by_key(|(_, layer, _)| std::cmp::Reverse(layer.weights.nnz()));
+            for batch in work.chunks_mut(concurrent) {
+                let spare = threads - batch.len();
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(batch.len());
+                    for (pos, (l, layer, ws)) in batch.iter_mut().enumerate() {
+                        let l = *l;
+                        let inner = if pos == 0 { 1 + spare } else { 1 };
+                        let imp_l = if l + 1 == n_layers { None } else { imp };
+                        let layer_rng = root.split(l as u64);
+                        let layer: &mut SparseLayer = layer;
+                        let ws: &mut LayerWs = ws;
+                        handles.push((
+                            l,
+                            scope.spawn(move || {
+                                evolve_layer_ws(layer, evo, imp_l, layer_rng, ws, inner)
+                            }),
+                        ));
+                    }
+                    for (l, h) in handles {
+                        stats[l] = h.join().expect("evolution worker panicked");
+                    }
+                });
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// One layer's fused evolution epoch: plan sequentially (thresholds,
+/// survivor counts, gap sampling, weight draws — all on the layer's own
+/// RNG stream), then rebuild the CSR + velocity in one sharded pass and
+/// swap the result into the layer.
+fn evolve_layer_ws(
+    layer: &mut SparseLayer,
+    evo: Option<&EvolutionConfig>,
+    imp: Option<&ImportanceConfig>,
+    mut rng: Rng,
+    ws: &mut LayerWs,
+    threads: usize,
+) -> EpochStats {
+    let (n_in, n_out) = (layer.n_in(), layer.n_out());
+    let nnz0 = layer.weights.nnz();
+    let LayerWs {
+        part,
+        imp_sums,
+        imp_active,
+        keep_counts,
+        grow_counts,
+        gap_prefix,
+        grow_ptr,
+        ordinals,
+        seen,
+        grow_cols,
+        grow_vals,
+        new_row_ptr,
+        out_col,
+        out_val,
+        out_vel,
+        grows,
+    } = ws;
+
+    // --- importance threshold (Eq. 4), mirroring prune_low_importance
+    //     (including its free min_connections early-out) ---
+    let imp_thr: Option<f32> = match imp {
+        Some(cfg) if nnz0 > cfg.min_connections => {
+            ensure_vec(imp_sums, n_out, n_out, grows);
+            for (&j, &v) in layer.weights.col_idx.iter().zip(layer.weights.values.iter()) {
+                imp_sums[j as usize] += v.abs();
+            }
+            ensure_vec(imp_active, 0, n_out, grows);
+            importance_threshold_from(imp_sums, nnz0, cfg, imp_active)
+        }
+        _ => None,
+    };
+    if evo.is_none() && imp_thr.is_none() {
+        // Provable no-op for this layer (importance-exempt final layer,
+        // min_connections floor, or no active neuron, with SET off):
+        // skip the rebuild entirely — exactly what the prune_model
+        // oracle does, and no RNG is consumed on this path either way.
+        return EpochStats::default();
+    }
+    let imp_view: Option<(&[f32], f32)> = match imp_thr {
+        Some(thr) => Some((imp_sums.as_slice(), thr)),
+        None => None,
+    };
+
+    // --- SET prune cuts over the importance-surviving values (one pass,
+    //     identical value sequence to the oracle's post-importance scan) ---
+    let (pos_cut, neg_cut, set_active) = match evo {
+        Some(cfg) => {
+            ensure_vec(part, 0, nnz0, grows);
+            let (lo, hi) = partition_signs(
+                layer
+                    .weights
+                    .col_idx
+                    .iter()
+                    .zip(layer.weights.values.iter())
+                    .filter(|(&j, _)| match imp_view {
+                        Some((imp_s, thr)) => imp_s[j as usize] >= thr,
+                        None => true,
+                    })
+                    .map(|(_, &v)| v),
+                nnz0,
+                part,
+            );
+            let (front, back) = part.split_at_mut(hi);
+            let (p, n) = thresholds_from_partition(&mut front[..lo], back, cfg.zeta);
+            (p, n, true)
+        }
+        None => (0.0, 0.0, false),
+    };
+    let keep = KeepSpec {
+        imp: imp_view,
+        pos_cut,
+        neg_cut,
+        set_active,
+    };
+
+    // --- pass 1: per-row survivor counts + removal tallies ---
+    let w = &layer.weights;
+    ensure_vec(keep_counts, n_in, n_in, grows);
+    let (mut total_kept, mut imp_pruned, mut set_pruned) = (0usize, 0usize, 0usize);
+    for i in 0..n_in {
+        let (s, e) = (w.row_ptr[i], w.row_ptr[i + 1]);
+        let mut kept = 0usize;
+        for k in s..e {
+            if !keep.imp_ok(w.col_idx[k]) {
+                imp_pruned += 1;
+            } else if !keep.set_ok(w.values[k]) {
+                set_pruned += 1;
+            } else {
+                kept += 1;
+            }
+        }
+        keep_counts[i] = kept;
+        total_kept += kept;
+    }
+
+    // --- regrowth plan: sample gap ordinals over the post-prune empty
+    //     set, map them to (row, col), draw the new weights ---
+    let capacity = n_in * n_out - total_kept;
+    let to_grow = if set_active {
+        set_pruned.min(capacity)
+    } else {
+        0
+    };
+    ensure_vec(gap_prefix, n_in + 1, n_in + 1, grows);
+    gap_prefix[0] = 0;
+    for i in 0..n_in {
+        gap_prefix[i + 1] = gap_prefix[i] + (n_out - keep_counts[i]);
+    }
+    debug_assert_eq!(gap_prefix[n_in], capacity);
+
+    ensure_vec(ordinals, 0, nnz0, grows);
+    ensure_set(seen, nnz0, grows);
+    sample_gap_ordinals(&mut rng, capacity, to_grow, ordinals, seen);
+    ordinals.sort_unstable();
+
+    ensure_vec(grow_counts, n_in, n_in, grows);
+    ensure_vec(grow_cols, 0, nnz0, grows);
+    ensure_vec(grow_vals, 0, nnz0, grows);
+    let mut oi = 0usize;
+    for i in 0..n_in {
+        if oi >= ordinals.len() {
+            break;
+        }
+        let hi = gap_prefix[i + 1];
+        if ordinals[oi] >= hi {
+            continue;
+        }
+        let lo = gap_prefix[i];
+        let (s, e) = (w.row_ptr[i], w.row_ptr[i + 1]);
+        let row_start = grow_cols.len();
+        // two-pointer gap selection over this row's (virtual) survivors:
+        // the g-th empty column is g + #survivors c_t with c_t - t <= g
+        let mut t = 0usize; // survivors consumed so far
+        let mut k = s; // cursor into the old slots
+        let mut next_surv: Option<usize> = None;
+        while oi < ordinals.len() && ordinals[oi] < hi {
+            let g = ordinals[oi] - lo;
+            loop {
+                if next_surv.is_none() {
+                    while k < e {
+                        if keep.keep(w.col_idx[k], w.values[k]) {
+                            next_surv = Some(w.col_idx[k] as usize);
+                            break;
+                        }
+                        k += 1;
+                    }
+                }
+                match next_surv {
+                    Some(c) if c - t <= g => {
+                        t += 1;
+                        k += 1;
+                        next_surv = None;
+                    }
+                    _ => break,
+                }
+            }
+            grow_cols.push((g + t) as u32);
+            oi += 1;
+        }
+        grow_counts[i] = grow_cols.len() - row_start;
+    }
+    debug_assert_eq!(grow_cols.len(), to_grow);
+    // weights drawn in sorted (row, col) order — the oracle's exact order
+    if let Some(cfg) = evo {
+        for _ in 0..to_grow {
+            grow_vals.push(cfg.init.sample(&mut rng, n_in, n_out));
+        }
+    }
+
+    ensure_vec(grow_ptr, n_in + 1, n_in + 1, grows);
+    grow_ptr[0] = 0;
+    ensure_vec(new_row_ptr, n_in + 1, n_in + 1, grows);
+    new_row_ptr[0] = 0;
+    for i in 0..n_in {
+        grow_ptr[i + 1] = grow_ptr[i] + grow_counts[i];
+        new_row_ptr[i + 1] = new_row_ptr[i] + keep_counts[i] + grow_counts[i];
+    }
+    let new_nnz = new_row_ptr[n_in];
+    debug_assert_eq!(new_nnz, total_kept + to_grow);
+
+    // --- pass 2 (row-sharded): compact survivors + merge regrowth into
+    //     the output arrays, velocity remapped through the same merge ---
+    ensure_vec(out_col, new_nnz, nnz0, grows);
+    ensure_vec(out_val, new_nnz, nnz0, grows);
+    ensure_vec(out_vel, new_nnz, nnz0, grows);
+    let old_vel = layer.velocity.as_slice();
+    let shards = evolve_shard_count(threads, nnz0.max(new_nnz), n_in);
+    if shards <= 1 {
+        rebuild_rows(
+            w,
+            old_vel,
+            keep,
+            grow_cols,
+            grow_vals,
+            grow_ptr,
+            new_row_ptr,
+            0,
+            n_in,
+            out_col,
+            out_val,
+            out_vel,
+        );
+    } else {
+        let bounds = ops::balanced_row_bounds(&w.row_ptr, shards);
+        // shared views of the plan buffers for the worker closures
+        let gc: &[u32] = grow_cols;
+        let gv: &[f32] = grow_vals;
+        let gp: &[usize] = grow_ptr;
+        let nrp: &[usize] = new_row_ptr;
+        std::thread::scope(|scope| {
+            let mut rest_c: &mut [u32] = out_col;
+            let mut rest_v: &mut [f32] = out_val;
+            let mut rest_l: &mut [f32] = out_vel;
+            for win in bounds.windows(2) {
+                let (r0, r1) = (win[0], win[1]);
+                let len = nrp[r1] - nrp[r0];
+                let (hc, tc) = std::mem::take(&mut rest_c).split_at_mut(len);
+                let (hv, tv) = std::mem::take(&mut rest_v).split_at_mut(len);
+                let (hl, tl) = std::mem::take(&mut rest_l).split_at_mut(len);
+                rest_c = tc;
+                rest_v = tv;
+                rest_l = tl;
+                if len == 0 {
+                    continue; // all-empty rows (or an nnz-heavy neighbour)
+                }
+                scope.spawn(move || {
+                    rebuild_rows(w, old_vel, keep, gc, gv, gp, nrp, r0, r1, hc, hv, hl)
+                });
+            }
+        });
+    }
+
+    // --- swap the rebuilt storage into the layer (previous arrays stay
+    //     in the workspace as next epoch's buffers) ---
+    layer.swap_storage(new_row_ptr, out_col, out_val, out_vel);
+    debug_assert!(layer.weights.validate().is_ok());
+    debug_assert_eq!(layer.velocity.len(), layer.weights.nnz());
+    EpochStats {
+        importance_pruned: imp_pruned,
+        pruned: set_pruned,
+        regrown: to_grow,
+    }
+}
+
+/// Shard count for the rebuild pass: sequential below the copy-bound
+/// crossover or when the row dimension cannot split.
+fn evolve_shard_count(threads: usize, nnz: usize, n_rows: usize) -> usize {
+    if threads <= 1 || n_rows <= 1 || nnz < EVOLVE_PAR_MIN_NNZ {
+        return 1;
+    }
+    threads.min(n_rows)
+}
+
+/// Rebuild rows `[r0, r1)`: stream the old slots once, keep survivors
+/// (carrying their velocity), merge the pre-planned regrowth columns in
+/// sorted order (zero velocity, pre-drawn weights). The output slices
+/// span exactly `[new_row_ptr[r0], new_row_ptr[r1])` — contiguous and
+/// disjoint across shards, so the sharded pass needs no synchronisation.
+#[allow(clippy::too_many_arguments)]
+fn rebuild_rows(
+    w: &CsrMatrix,
+    old_vel: &[f32],
+    keep: KeepSpec<'_>,
+    grow_cols: &[u32],
+    grow_vals: &[f32],
+    grow_ptr: &[usize],
+    new_row_ptr: &[usize],
+    r0: usize,
+    r1: usize,
+    out_col: &mut [u32],
+    out_val: &mut [f32],
+    out_vel: &mut [f32],
+) {
+    let base = new_row_ptr[r0];
+    let mut wcur = 0usize;
+    for i in r0..r1 {
+        debug_assert_eq!(wcur, new_row_ptr[i] - base);
+        let (s, e) = (w.row_ptr[i], w.row_ptr[i + 1]);
+        let (gs, ge) = (grow_ptr[i], grow_ptr[i + 1]);
+        let mut k = s;
+        let mut g = gs;
+        loop {
+            // next surviving old entry
+            while k < e && !keep.keep(w.col_idx[k], w.values[k]) {
+                k += 1;
+            }
+            let take_grow = if k >= e {
+                g < ge
+            } else if g >= ge {
+                false
+            } else {
+                // regrowth targets empty positions, so strict `<` suffices
+                grow_cols[g] < w.col_idx[k]
+            };
+            if take_grow {
+                out_col[wcur] = grow_cols[g];
+                out_val[wcur] = grow_vals[g];
+                out_vel[wcur] = 0.0;
+                g += 1;
+            } else if k < e {
+                out_col[wcur] = w.col_idx[k];
+                out_val[wcur] = w.values[k];
+                out_vel[wcur] = old_vel[k];
+                k += 1;
+            } else {
+                break;
+            }
+            wcur += 1;
+        }
+        debug_assert_eq!(g, ge);
+    }
+    debug_assert_eq!(wcur, new_row_ptr[r1] - base);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::set;
+    use crate::sparse::WeightInit;
+
+    fn model(sizes: &[usize], seed: u64) -> SparseMlp {
+        let mut rng = Rng::new(seed);
+        let mut m = SparseMlp::new(
+            sizes,
+            6.0,
+            Activation::Relu,
+            &WeightInit::Normal(0.5),
+            &mut rng,
+        )
+        .unwrap();
+        for layer in m.layers.iter_mut() {
+            for (k, v) in layer.velocity.iter_mut().enumerate() {
+                *v = 0.25 * (k + 1) as f32;
+            }
+        }
+        m
+    }
+
+    fn assert_same(a: &SparseMlp, b: &SparseMlp, label: &str) {
+        for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+            assert_eq!(la.weights, lb.weights, "{label}: layer {l} weights");
+            assert_eq!(la.velocity, lb.velocity, "{label}: layer {l} velocity");
+        }
+    }
+
+    #[test]
+    fn engine_matches_oracle_at_one_and_many_threads() {
+        let base = model(&[24, 36, 8], 3);
+        let cfg = EvolutionConfig::default();
+        let mut oracle = base.clone();
+        set::evolve_model(&mut oracle, &cfg, &mut Rng::new(5)).unwrap();
+        for threads in [1usize, 4] {
+            let mut m = base.clone();
+            let mut engine = EvolutionEngine::new();
+            let stats = engine
+                .evolve_model(&mut m, &cfg, &mut Rng::new(5), threads)
+                .unwrap();
+            assert_same(&oracle, &m, &format!("threads {threads}"));
+            assert!(stats.iter().all(|s| s.importance_pruned == 0));
+            assert!(stats.iter().any(|s| s.pruned > 0));
+        }
+    }
+
+    #[test]
+    fn importance_only_epoch_matches_prune_model() {
+        let base = model(&[20, 30, 30, 5], 4);
+        let imp = ImportanceConfig {
+            start_epoch: 0,
+            period: 1,
+            percentile: 30.0,
+            min_connections: 0,
+        };
+        let mut oracle = base.clone();
+        let removed = crate::importance::prune_model(&mut oracle, &imp);
+        assert!(removed > 0);
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut rng = Rng::new(6);
+        let before = rng.clone();
+        let stats = engine
+            .evolve_epoch(&mut m, None, Some(&imp), &mut rng, 4)
+            .unwrap();
+        assert_same(&oracle, &m, "importance-only");
+        let total: usize = stats.iter().map(|s| s.importance_pruned).sum();
+        assert_eq!(total, removed);
+        assert!(stats.iter().all(|s| s.pruned == 0 && s.regrown == 0));
+        // importance-only epochs consume no caller randomness
+        assert_eq!(rng.clone().next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn no_op_epoch_returns_defaults() {
+        let base = model(&[10, 10], 7);
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let stats = engine
+            .evolve_epoch(&mut m, None, None, &mut Rng::new(1), 4)
+            .unwrap();
+        assert_eq!(stats, vec![EpochStats::default()]);
+        assert_same(&base, &m, "no-op");
+    }
+
+    #[test]
+    fn shard_count_respects_crossover() {
+        assert_eq!(evolve_shard_count(1, usize::MAX, 100), 1);
+        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ - 1, 100), 1);
+        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 100), 8);
+        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 1), 1);
+        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 3), 3);
+    }
+}

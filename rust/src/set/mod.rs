@@ -9,13 +9,42 @@
 //! 3. regrows the same number of connections at uniformly-random empty
 //!    positions with freshly-initialised weights and zero velocity.
 //!
-//! The prune thresholds are found with select-nth (O(nnz)), the regrowth
-//! by rejection sampling against the CSR structure (O(k log deg)).
+//! The prune thresholds are found with select-nth over a one-pass sign
+//! partition (O(nnz), one scratch allocation). Regrowth samples the empty
+//! set **directly**: Floyd sampling draws exactly `min(pruned, capacity)`
+//! distinct *gap ordinals* — indices into the row-major enumeration of
+//! the post-prune empty positions — which are then mapped to `(row, col)`
+//! through the CSR structure. No rejection against the matrix, no
+//! `max_attempts` cap: a near-dense layer regrows exactly its entitled
+//! link count with a bounded number of RNG draws.
+//!
+//! [`evolve_layer`] / [`evolve_model`] are the **sequential oracles**:
+//! simple, allocation-heavy reference implementations whose observable
+//! behaviour defines correctness. The training hot path is
+//! [`EvolutionEngine`] (see [`engine`], DESIGN.md §8) — the
+//! worker-sharded, in-place, workspace-reusing engine that reproduces
+//! the oracles bit-for-bit at every thread count
+//! (`rust/tests/evolution_parity.rs`), mirroring the fused-backward
+//! vs two-kernel-oracle pattern of DESIGN.md §5.
+//!
+//! RNG stream layout (shared by oracle and engine): [`evolve_model`]
+//! draws ONE `u64` from the caller's generator to seed a root stream;
+//! layer `l` then evolves on the independent stream `root.split(l)`.
+//! All of a layer's draws (gap ordinals first, then one weight per
+//! regrown link in sorted position order) happen on its own stream, so
+//! results are invariant to layer order *and* to the engine's thread
+//! count.
+
+use std::collections::HashSet;
 
 use crate::error::Result;
 use crate::model::{SparseLayer, SparseMlp};
 use crate::sparse::WeightInit;
 use crate::util::Rng;
+
+pub mod engine;
+
+pub use engine::{EpochStats, EvolutionEngine};
 
 /// Topology-evolution hyperparameters.
 #[derive(Debug, Clone, Copy)]
@@ -44,24 +73,52 @@ pub struct EvolutionStats {
     pub regrown: usize,
 }
 
-/// Magnitude-prune thresholds: remove the ζ-fraction smallest positive
-/// values and the ζ-fraction of negatives closest to zero.
+/// Partition a value stream by sign into one reusable buffer: positives
+/// fill the front (`buf[..lo]` in stream order), negatives fill the back
+/// (`buf[hi..]` in *reverse* stream order); zeros are dropped. `n_upper`
+/// is an upper bound on the stream length (the buffer is resized to it).
+/// Returns `(lo, hi)`.
 ///
-/// Returns `(pos_cut, neg_cut)`: prune entries with `0 < v <= pos_cut` or
-/// `neg_cut <= v < 0`. Zero-valued entries are always pruned.
-pub fn prune_thresholds(values: &[f32], zeta: f64) -> (f32, f32) {
-    let mut pos: Vec<f32> = values.iter().copied().filter(|v| *v > 0.0).collect();
-    let mut neg: Vec<f32> = values.iter().copied().filter(|v| *v < 0.0).collect();
+/// One pass, one (reusable) allocation — shared by [`prune_thresholds`]
+/// and the engine's workspace path so both see identical slices.
+pub(crate) fn partition_signs<I: Iterator<Item = f32>>(
+    values: I,
+    n_upper: usize,
+    buf: &mut Vec<f32>,
+) -> (usize, usize) {
+    buf.clear();
+    buf.resize(n_upper, 0.0);
+    let (mut lo, mut hi) = (0usize, n_upper);
+    for v in values {
+        if v > 0.0 {
+            buf[lo] = v;
+            lo += 1;
+        } else if v < 0.0 {
+            hi -= 1;
+            buf[hi] = v;
+        }
+    }
+    (lo, hi)
+}
+
+/// Select the prune cuts from an already sign-partitioned value set:
+/// `pos` holds the positive values, `neg` the negative ones (any order —
+/// selection is by rank). Both slices are reordered in place.
+pub(crate) fn thresholds_from_partition(
+    pos: &mut [f32],
+    neg: &mut [f32],
+    zeta: f64,
+) -> (f32, f32) {
     let kp = (pos.len() as f64 * zeta).floor() as usize;
     let kn = (neg.len() as f64 * zeta).floor() as usize;
-    let pos_cut = if kp == 0 || pos.is_empty() {
+    let pos_cut = if kp == 0 {
         0.0
     } else {
         let idx = kp - 1;
         let (_, v, _) = pos.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
         *v
     };
-    let neg_cut = if kn == 0 || neg.is_empty() {
+    let neg_cut = if kn == 0 {
         0.0
     } else {
         // largest negatives = closest to zero = descending order
@@ -72,7 +129,48 @@ pub fn prune_thresholds(values: &[f32], zeta: f64) -> (f32, f32) {
     (pos_cut, neg_cut)
 }
 
-/// One SET evolution step on a single layer: prune + random regrow.
+/// Magnitude-prune thresholds: remove the ζ-fraction smallest positive
+/// values and the ζ-fraction of negatives closest to zero.
+///
+/// Returns `(pos_cut, neg_cut)`: prune entries with `0 < v <= pos_cut` or
+/// `neg_cut <= v < 0`. Zero-valued entries are always pruned.
+pub fn prune_thresholds(values: &[f32], zeta: f64) -> (f32, f32) {
+    let mut buf = Vec::new();
+    let (lo, hi) = partition_signs(values.iter().copied(), values.len(), &mut buf);
+    let (front, back) = buf.split_at_mut(hi);
+    thresholds_from_partition(&mut front[..lo], back, zeta)
+}
+
+/// Draw `k` distinct ordinals from `[0, n)` — Robert Floyd's sampling,
+/// exactly `k` RNG draws, uniform without replacement. `out` receives the
+/// ordinals in insertion order (callers sort); `seen` is the reusable
+/// membership set. This is the ONLY randomness in a layer's regrowth
+/// besides the weight draws, and both the sequential oracle and the
+/// parallel engine call it with identical arguments, which is what makes
+/// their RNG streams line up exactly.
+pub(crate) fn sample_gap_ordinals(
+    rng: &mut Rng,
+    n: usize,
+    k: usize,
+    out: &mut Vec<usize>,
+    seen: &mut HashSet<usize>,
+) {
+    debug_assert!(k <= n, "cannot sample {k} from {n}");
+    out.clear();
+    seen.clear();
+    for j in (n - k)..n {
+        let t = rng.below_usize(j + 1);
+        let v = if seen.contains(&t) { j } else { t };
+        seen.insert(v);
+        out.push(v);
+    }
+}
+
+/// One SET evolution step on a single layer: prune + gap-sampled regrow.
+///
+/// This is the sequential oracle (simple and allocation-heavy by design);
+/// the training hot path is [`EvolutionEngine`], which reproduces this
+/// function bit-for-bit at every thread count.
 pub fn evolve_layer(
     layer: &mut SparseLayer,
     cfg: &EvolutionConfig,
@@ -86,38 +184,62 @@ pub fn evolve_layer(
         (v > pos_cut) || (v < neg_cut)
     });
 
-    // regrow the same amount at random empty positions
+    // Regrow the same amount at uniformly-random empty positions: sample
+    // gap ordinals over the post-prune empty set, then map each ordinal
+    // to its (row, col) through the CSR structure.
     let (n_in, n_out) = (layer.n_in(), layer.n_out());
     let capacity = n_in * n_out - layer.weights.nnz();
     let to_grow = pruned.min(capacity);
+    let mut ordinals = Vec::with_capacity(to_grow);
+    let mut seen = HashSet::with_capacity(to_grow * 2);
+    sample_gap_ordinals(rng, capacity, to_grow, &mut ordinals, &mut seen);
+    ordinals.sort_unstable();
+
     let mut additions: Vec<(u32, u32, f32)> = Vec::with_capacity(to_grow);
-    let mut chosen = std::collections::HashSet::with_capacity(to_grow * 2);
-    let mut attempts = 0usize;
-    let max_attempts = to_grow.saturating_mul(200) + 1000;
-    while additions.len() < to_grow && attempts < max_attempts {
-        attempts += 1;
-        let i = rng.below_usize(n_in) as u32;
-        let j = rng.below_usize(n_out) as u32;
-        if chosen.contains(&(i, j)) || layer.weights.find(i as usize, j).is_some() {
-            continue;
+    let mut empties_before = 0usize;
+    let mut oi = 0usize;
+    for i in 0..n_in {
+        if oi >= ordinals.len() {
+            break;
         }
-        chosen.insert((i, j));
-        additions.push((i, j, cfg.init.sample(rng, n_in, n_out)));
+        let row_nnz = layer.weights.row_ptr[i + 1] - layer.weights.row_ptr[i];
+        let hi = empties_before + (n_out - row_nnz);
+        while oi < ordinals.len() && ordinals[oi] < hi {
+            let g = ordinals[oi] - empties_before;
+            let col = layer.weights.nth_empty_in_row(i, g);
+            additions.push((i as u32, col, 0.0));
+            oi += 1;
+        }
+        empties_before = hi;
+    }
+    debug_assert_eq!(additions.len(), to_grow);
+    // weights drawn in sorted (row, col) order — the engine draws in the
+    // same order, keeping the RNG streams identical
+    for a in additions.iter_mut() {
+        a.2 = cfg.init.sample(rng, n_in, n_out);
     }
     let regrown = additions.len();
     layer.insert_entries(additions)?;
     Ok(EvolutionStats { pruned, regrown })
 }
 
-/// Evolution step over every layer of the model.
+/// Evolution step over every layer of the model (sequential oracle).
+///
+/// Draws one `u64` from `rng` to seed a root stream; layer `l` evolves on
+/// `root.split(l)` — the stream layout [`EvolutionEngine`] reproduces.
 pub fn evolve_model(
     mlp: &mut SparseMlp,
     cfg: &EvolutionConfig,
     rng: &mut Rng,
 ) -> Result<Vec<EvolutionStats>> {
+    let root = Rng::new(rng.next_u64());
     mlp.layers
         .iter_mut()
-        .map(|l| evolve_layer(l, cfg, rng))
+        .enumerate()
+        .map(|(l, layer)| {
+            let mut layer_rng = root.split(l as u64);
+            evolve_layer(layer, cfg, &mut layer_rng)
+        })
         .collect()
 }
 
@@ -142,7 +264,7 @@ mod tests {
     fn thresholds_split_by_sign() {
         let values = vec![-4.0, -3.0, -0.1, 0.2, 1.0, 5.0, 0.3];
         let (p, n) = prune_thresholds(&values, 0.34);
-        // 3 positives -> kp=1 -> smallest positive 0.2
+        // 4 positives -> kp=1 -> smallest positive 0.2
         assert_eq!(p, 0.2);
         // 3 negatives -> kn=1 -> largest negative -0.1
         assert_eq!(n, -0.1);
@@ -152,6 +274,30 @@ mod tests {
     fn thresholds_zeta_zero_prunes_nothing() {
         let (p, n) = prune_thresholds(&[1.0, -1.0], 0.0);
         assert_eq!((p, n), (0.0, 0.0));
+    }
+
+    #[test]
+    fn partition_signs_splits_and_orders() {
+        let mut buf = Vec::new();
+        let vals = [1.0f32, -2.0, 0.0, 3.0, -4.0];
+        let (lo, hi) = partition_signs(vals.iter().copied(), vals.len(), &mut buf);
+        assert_eq!(&buf[..lo], &[1.0, 3.0]);
+        assert_eq!(&buf[hi..], &[-4.0, -2.0]); // back-filled, reverse order
+        assert!(lo <= hi);
+    }
+
+    #[test]
+    fn gap_sampler_draws_exactly_k_distinct() {
+        let mut rng = Rng::new(5);
+        let mut out = Vec::new();
+        let mut seen = HashSet::new();
+        for (n, k) in [(10usize, 10usize), (100, 7), (1, 1), (5, 0)] {
+            sample_gap_ordinals(&mut rng, n, k, &mut out, &mut seen);
+            assert_eq!(out.len(), k);
+            let distinct: HashSet<_> = out.iter().collect();
+            assert_eq!(distinct.len(), k);
+            assert!(out.iter().all(|&v| v < n));
+        }
     }
 
     #[test]
@@ -187,7 +333,7 @@ mod tests {
         }
         let stats = evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(6)).unwrap();
         let zeros = l.velocity.iter().filter(|&&v| v == 0.0).count();
-        assert!(zeros >= stats.regrown);
+        assert_eq!(zeros, stats.regrown);
     }
 
     #[test]
@@ -219,8 +365,27 @@ mod tests {
     }
 
     #[test]
-    fn nearly_full_layer_regrows_up_to_capacity() {
-        // dense-ish layer: capacity constrains regrowth
+    fn evolve_model_consumes_one_caller_draw() {
+        // the per-layer streams come from a root seeded by a single u64,
+        // so the caller's generator advances identically regardless of
+        // the model's depth
+        let mut rng_small = Rng::new(13);
+        let mut rng_deep = Rng::new(13);
+        let mk = |sizes: &[usize], r: &mut Rng| {
+            SparseMlp::new(sizes, 4.0, Activation::Relu, &WeightInit::Normal(0.5), r).unwrap()
+        };
+        let mut small = mk(&[10, 10], &mut Rng::new(1));
+        let mut deep = mk(&[10, 10, 10, 10, 10], &mut Rng::new(1));
+        evolve_model(&mut small, &EvolutionConfig::default(), &mut rng_small).unwrap();
+        evolve_model(&mut deep, &EvolutionConfig::default(), &mut rng_deep).unwrap();
+        assert_eq!(rng_small.next_u64(), rng_deep.next_u64());
+    }
+
+    #[test]
+    fn fully_dense_layer_regrows_exactly_pruned() {
+        // Dense layer: the post-prune empty set is exactly the pruned
+        // slots, so gap sampling regrows exactly `pruned` links. The old
+        // rejection sampler could exhaust max_attempts here.
         let mut rng = Rng::new(13);
         let mut l = SparseLayer::erdos_renyi(
             4,
@@ -230,8 +395,10 @@ mod tests {
             &WeightInit::Normal(0.5),
             &mut rng,
         );
+        assert_eq!(l.weights.nnz(), 16);
         let stats = evolve_layer(&mut l, &EvolutionConfig::default(), &mut Rng::new(14)).unwrap();
-        assert!(stats.regrown <= stats.pruned);
+        assert_eq!(stats.regrown, stats.pruned);
+        assert_eq!(l.weights.nnz(), 16);
         l.weights.validate().unwrap();
     }
 }

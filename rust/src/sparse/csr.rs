@@ -168,6 +168,43 @@ impl CsrMatrix {
         counts
     }
 
+    /// Column index of the `g`-th (0-based) **empty** position of row `i`,
+    /// counting empty columns in ascending order — the gap-selection
+    /// primitive of SET regrowth (binary search over the row's stored
+    /// columns, O(log deg)).
+    ///
+    /// `g` must be less than the row's empty count
+    /// (`n_cols - row degree`); checked in debug builds only.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use tsnn::sparse::CsrMatrix;
+    ///
+    /// // row 0 stores columns {1, 3}; empties are {0, 2, 4}
+    /// let m = CsrMatrix::from_coo(1, 5, vec![(0, 1, 1.0), (0, 3, 1.0)]).unwrap();
+    /// assert_eq!(m.nth_empty_in_row(0, 0), 0);
+    /// assert_eq!(m.nth_empty_in_row(0, 1), 2);
+    /// assert_eq!(m.nth_empty_in_row(0, 2), 4);
+    /// ```
+    pub fn nth_empty_in_row(&self, i: usize, g: usize) -> u32 {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        let cols = &self.col_idx[s..e];
+        debug_assert!(g < self.n_cols - cols.len(), "gap ordinal out of range");
+        // count stored columns c_t with c_t - t <= g: each such column
+        // sits before the g-th empty, shifting it one slot right
+        let (mut lo, mut hi) = (0usize, cols.len());
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cols[mid] as usize - mid <= g {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        (g + lo) as u32
+    }
+
     /// Validate structural invariants (sorted unique cols, monotone ptrs).
     pub fn validate(&self) -> Result<()> {
         if self.row_ptr.len() != self.n_rows + 1 {
@@ -429,6 +466,27 @@ mod tests {
         assert_eq!(t.n_rows, 4);
         assert_eq!(t.get(3, 1), 3.0);
         assert_eq!(t.transpose().to_dense(), m.to_dense());
+    }
+
+    #[test]
+    fn nth_empty_enumerates_all_gaps() {
+        let m = sample(); // row 0: {0, 2} stored -> empties {1, 3}
+        assert_eq!(m.nth_empty_in_row(0, 0), 1);
+        assert_eq!(m.nth_empty_in_row(0, 1), 3);
+        // row 1: {3} stored -> empties {0, 1, 2}
+        for g in 0..3 {
+            assert_eq!(m.nth_empty_in_row(1, g), g as u32);
+        }
+        // exhaustive cross-check against a scan, incl. an empty row
+        let m2 = CsrMatrix::from_coo(3, 7, vec![(0, 0, 1.0), (0, 6, 1.0), (2, 3, 1.0)]).unwrap();
+        for i in 0..3 {
+            let stored: Vec<u32> = m2.row(i).0.to_vec();
+            let empties: Vec<u32> =
+                (0..7u32).filter(|c| !stored.contains(c)).collect();
+            for (g, &c) in empties.iter().enumerate() {
+                assert_eq!(m2.nth_empty_in_row(i, g), c, "row {i} gap {g}");
+            }
+        }
     }
 
     #[test]

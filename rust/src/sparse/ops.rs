@@ -553,7 +553,12 @@ fn shard_count(threads: usize, batch: usize, nnz: usize, max_shards: usize) -> u
 /// `bounds[shards] == n_rows`; shard `s` owns rows
 /// `[bounds[s], bounds[s+1])` and value slots
 /// `[row_ptr[bounds[s]], row_ptr[bounds[s+1]])`.
-fn balanced_row_bounds(row_ptr: &[usize], shards: usize) -> Vec<usize> {
+///
+/// Shared by the grad-weights / fused-backward kernels (DESIGN.md §4–§5)
+/// and the topology-evolution engine's rebuild pass (DESIGN.md §8) —
+/// any per-row output whose slots are contiguous in storage order can
+/// shard on these bounds with disjoint `split_at_mut` sub-slices.
+pub fn balanced_row_bounds(row_ptr: &[usize], shards: usize) -> Vec<usize> {
     let n_rows = row_ptr.len() - 1;
     let nnz = row_ptr[n_rows];
     let mut bounds = Vec::with_capacity(shards + 1);

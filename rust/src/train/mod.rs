@@ -134,6 +134,11 @@ pub fn train_model(
     } else {
         None
     };
+    // Topology evolution runs on the worker-sharded in-place engine
+    // (DESIGN.md §8): importance pruning and the SET prune-regrow cycle
+    // fused into one structural pass per layer, workspace buffers reused
+    // across epochs, sharded on the same kernel_threads budget.
+    let mut evolver = set::EvolutionEngine::new();
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     let mut best_test = 0.0f32;
@@ -173,22 +178,31 @@ pub fn train_model(
             }
         }
 
-        // importance pruning (Algorithm 2: before the prune-regrow cycle)
-        if let Some(imp) = &cfg.importance {
-            if imp.due(epoch) {
+        // Importance pruning (Algorithm 2: before the prune-regrow cycle)
+        // and the SET pruning-regrowing cycle, fused into ONE in-place
+        // structural pass per layer by the evolution engine. SET is
+        // skipped after the final epoch so the evaluated model matches
+        // the trained weights (as in SET); importance-only epochs still
+        // run standalone in that case.
+        let imp_due = cfg.importance.as_ref().filter(|imp| imp.due(epoch));
+        let evo_due = cfg.evolution.as_ref().filter(|_| epoch + 1 < cfg.epochs);
+        match (evo_due, imp_due) {
+            (Some(evo), imp) => {
+                let stats = phases.time("evolution", || {
+                    evolver.evolve_epoch(model, Some(evo), imp, rng, cfg.kernel_threads)
+                })?;
+                if opts.verbose && imp.is_some() {
+                    let removed: usize = stats.iter().map(|s| s.importance_pruned).sum();
+                    log::info!("epoch {epoch}: importance pruning removed {removed}");
+                }
+            }
+            (None, Some(imp)) => {
                 let removed = phases.time("importance", || importance::prune_model(model, imp));
                 if opts.verbose {
                     log::info!("epoch {epoch}: importance pruning removed {removed}");
                 }
             }
-        }
-
-        // SET weight pruning-regrowing cycle (skip after the final epoch so
-        // the evaluated model matches the trained weights, as in SET)
-        if let Some(evo) = &cfg.evolution {
-            if epoch + 1 < cfg.epochs {
-                phases.time("evolution", || set::evolve_model(model, evo, rng))?;
-            }
+            (None, None) => {}
         }
 
         // evaluation

@@ -1,0 +1,18 @@
+//! Helpers shared by the parity suites (`kernel_parity.rs`,
+//! `evolution_parity.rs`).
+
+/// Thread grid for the parity suites: the built-in {1, 2, 8} by
+/// default, or — when the `KERNEL_THREADS` environment variable is set —
+/// exactly that single thread count, so CI can pin every parity
+/// assertion to one budget (it sweeps 1 and 8 on top of the default
+/// unpinned run).
+pub fn thread_counts() -> Vec<usize> {
+    if let Ok(s) = std::env::var("KERNEL_THREADS") {
+        if let Ok(t) = s.trim().parse::<usize>() {
+            if t >= 1 {
+                return vec![t];
+            }
+        }
+    }
+    vec![1, 2, 8]
+}

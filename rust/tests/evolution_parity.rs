@@ -1,0 +1,370 @@
+//! Evolution-parity suite: the worker-sharded in-place evolution engine
+//! (DESIGN.md §8) must reproduce the sequential oracles bit-for-bit —
+//! exact topology, weight values, remapped velocity, bias state and
+//! caller-RNG consumption — at every thread count, across shapes ×
+//! ζ ∈ {0.0, 0.3, 0.9} × threads {1, 2, 8} (plus the `KERNEL_THREADS`
+//! environment override CI sweeps), including the empty-layer,
+//! fully-dense-layer and single-surviving-neuron edge cases.
+//!
+//! Mirrors the fused-backward vs two-kernel-oracle pattern of
+//! `kernel_parity.rs` (DESIGN.md §5): the oracles stay in-tree as the
+//! semantics definition, the engine is the hot path.
+
+use tsnn::importance::{self, ImportanceConfig};
+use tsnn::model::SparseMlp;
+use tsnn::nn::Activation;
+use tsnn::set::{self, EvolutionConfig, EvolutionEngine};
+use tsnn::sparse::WeightInit;
+use tsnn::util::Rng;
+
+mod common;
+use common::thread_counts;
+
+fn assert_models_equal(a: &SparseMlp, b: &SparseMlp, label: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{label}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.weights, lb.weights, "{label}: layer {l} weights");
+        assert_eq!(la.velocity, lb.velocity, "{label}: layer {l} velocity");
+        assert_eq!(la.bias, lb.bias, "{label}: layer {l} bias");
+        assert_eq!(
+            la.bias_velocity, lb.bias_velocity,
+            "{label}: layer {l} bias velocity"
+        );
+    }
+}
+
+/// Model with non-trivial aligned state so a velocity-remap bug cannot
+/// hide behind zeros.
+fn model(sizes: &[usize], eps: f64, seed: u64) -> SparseMlp {
+    let mut rng = Rng::new(seed);
+    let mut m = SparseMlp::new(
+        sizes,
+        eps,
+        Activation::Relu,
+        &WeightInit::Normal(0.5),
+        &mut rng,
+    )
+    .unwrap();
+    for layer in m.layers.iter_mut() {
+        for (k, v) in layer.velocity.iter_mut().enumerate() {
+            *v = 0.01 * (k + 1) as f32;
+        }
+        for (j, b) in layer.bias.iter_mut().enumerate() {
+            *b = 0.1 * (j + 1) as f32;
+        }
+        for (j, b) in layer.bias_velocity.iter_mut().enumerate() {
+            *b = -0.2 * (j + 1) as f32;
+        }
+    }
+    m
+}
+
+/// Engine vs oracle on `base` for one SET epoch at every thread count:
+/// exact model match, stats match, and identical caller-RNG advance.
+fn assert_set_parity(base: &SparseMlp, zeta: f64, seed: u64, label: &str) {
+    let cfg = EvolutionConfig {
+        zeta,
+        init: WeightInit::HeUniform,
+    };
+    let mut oracle = base.clone();
+    let mut r_oracle = Rng::new(seed);
+    let o_stats = set::evolve_model(&mut oracle, &cfg, &mut r_oracle).unwrap();
+    oracle.validate().unwrap();
+    for threads in thread_counts() {
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut r = Rng::new(seed);
+        let stats = engine.evolve_model(&mut m, &cfg, &mut r, threads).unwrap();
+        let label = format!("{label} zeta {zeta} threads {threads}");
+        m.validate().unwrap();
+        assert_models_equal(&oracle, &m, &label);
+        for (l, s) in stats.iter().enumerate() {
+            assert_eq!(s.pruned, o_stats[l].pruned, "{label}: layer {l} pruned");
+            assert_eq!(s.regrown, o_stats[l].regrown, "{label}: layer {l} regrown");
+            assert_eq!(s.importance_pruned, 0, "{label}: layer {l}");
+        }
+        // the caller's generator advanced by exactly the same draws
+        assert_eq!(
+            r.next_u64(),
+            r_oracle.clone().next_u64(),
+            "{label}: caller RNG diverged"
+        );
+    }
+}
+
+#[test]
+fn threaded_evolution_matches_sequential_oracle_exactly() {
+    let shapes: &[&[usize]] = &[
+        &[20, 30, 5],
+        &[64, 48, 32, 10],
+        &[7, 250, 3], // wide hidden layer: row sharding with few classes
+    ];
+    for (si, sizes) in shapes.iter().enumerate() {
+        for zeta in [0.0f64, 0.3, 0.9] {
+            let base = model(sizes, 6.0, 40 + si as u64);
+            assert_set_parity(&base, zeta, 1_000 + si as u64, &format!("sizes {sizes:?}"));
+        }
+    }
+}
+
+#[test]
+fn parity_holds_above_rebuild_shard_crossover() {
+    // big enough that the engine's row-sharded rebuild genuinely runs
+    // rather than falling back to the sequential pass — the crossover is
+    // gated on a SINGLE layer's nnz (2^17), so guard the per-layer max,
+    // not the model total
+    let base = model(&[512, 640, 16], 120.0, 44);
+    let max_layer_nnz = base.layers.iter().map(|l| l.weights.nnz()).max().unwrap();
+    assert!(
+        max_layer_nnz >= 1 << 17,
+        "test must cross the per-layer rebuild crossover, max layer nnz = {max_layer_nnz}"
+    );
+    for zeta in [0.3f64, 0.9] {
+        assert_set_parity(&base, zeta, 2_000, "crossover");
+    }
+}
+
+#[test]
+fn engine_workspace_reuse_stays_exact_across_epochs() {
+    // the engine reuses (and swaps through) its workspace buffers; four
+    // chained epochs must still track the oracle exactly
+    let base = model(&[40, 60, 40, 8], 8.0, 77);
+    let cfg = EvolutionConfig::default();
+    for threads in thread_counts() {
+        let mut oracle = base.clone();
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut r_oracle = Rng::new(5);
+        let mut r = Rng::new(5);
+        for epoch in 0..4 {
+            set::evolve_model(&mut oracle, &cfg, &mut r_oracle).unwrap();
+            engine.evolve_model(&mut m, &cfg, &mut r, threads).unwrap();
+            assert_models_equal(&oracle, &m, &format!("epoch {epoch} threads {threads}"));
+        }
+    }
+}
+
+#[test]
+fn fused_importance_evolution_matches_prune_model_then_evolve() {
+    let imp = ImportanceConfig {
+        start_epoch: 0,
+        period: 1,
+        percentile: 20.0,
+        min_connections: 4,
+    };
+    let cfg = EvolutionConfig {
+        zeta: 0.3,
+        init: WeightInit::HeUniform,
+    };
+    let base = model(&[30, 50, 40, 6], 6.0, 91);
+    let mut oracle = base.clone();
+    let mut r_oracle = Rng::new(9);
+    let removed = importance::prune_model(&mut oracle, &imp);
+    assert!(removed > 0, "test needs a real importance prune");
+    let o_stats = set::evolve_model(&mut oracle, &cfg, &mut r_oracle).unwrap();
+    for threads in thread_counts() {
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut r = Rng::new(9);
+        let stats = engine
+            .evolve_epoch(&mut m, Some(&cfg), Some(&imp), &mut r, threads)
+            .unwrap();
+        let label = format!("fused importance threads {threads}");
+        m.validate().unwrap();
+        assert_models_equal(&oracle, &m, &label);
+        let imp_total: usize = stats.iter().map(|s| s.importance_pruned).sum();
+        assert_eq!(imp_total, removed, "{label}: importance-pruned total");
+        for (l, s) in stats.iter().enumerate() {
+            assert_eq!(s.pruned, o_stats[l].pruned, "{label}: layer {l} pruned");
+            assert_eq!(s.regrown, o_stats[l].regrown, "{label}: layer {l} regrown");
+        }
+        assert_eq!(
+            r.next_u64(),
+            r_oracle.clone().next_u64(),
+            "{label}: caller RNG diverged"
+        );
+    }
+}
+
+#[test]
+fn importance_only_epoch_matches_prune_model() {
+    let imp = ImportanceConfig {
+        start_epoch: 0,
+        period: 1,
+        percentile: 35.0,
+        min_connections: 0,
+    };
+    let base = model(&[25, 40, 40, 5], 5.0, 17);
+    let mut oracle = base.clone();
+    let removed = importance::prune_model(&mut oracle, &imp);
+    assert!(removed > 0);
+    for threads in thread_counts() {
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut rng = Rng::new(3);
+        let probe = rng.clone();
+        let stats = engine
+            .evolve_epoch(&mut m, None, Some(&imp), &mut rng, threads)
+            .unwrap();
+        let label = format!("importance-only threads {threads}");
+        assert_models_equal(&oracle, &m, &label);
+        assert!(stats.iter().all(|s| s.pruned == 0 && s.regrown == 0));
+        // no SET step -> no caller randomness consumed (like prune_model)
+        assert_eq!(rng.next_u64(), probe.clone().next_u64(), "{label}");
+    }
+}
+
+#[test]
+fn empty_layer_edge_case_matches_oracle() {
+    let mut base = model(&[10, 12, 4], 4.0, 55);
+    base.layers[0].retain_entries(|_| false);
+    assert_eq!(base.layers[0].weights.nnz(), 0);
+    for zeta in [0.0f64, 0.3, 0.9] {
+        assert_set_parity(&base, zeta, 21, "empty layer");
+    }
+}
+
+#[test]
+fn fully_dense_layer_regrows_exactly_min_pruned_capacity() {
+    // Fully dense layers: every post-prune empty position is a freshly
+    // pruned slot, so capacity == pruned and gap sampling must regrow
+    // exactly min(pruned, capacity) = pruned links. The old rejection
+    // sampler could exhaust max_attempts here and under-regrow; the
+    // deterministic gap path cannot.
+    let base = model(&[16, 16, 16], 1e9, 60); // ε clamps density to 1.0
+    for layer in &base.layers {
+        assert_eq!(layer.weights.nnz(), layer.n_in() * layer.n_out());
+    }
+    assert_set_parity(&base, 0.3, 22, "dense");
+    for threads in thread_counts() {
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let cfg = EvolutionConfig {
+            zeta: 0.3,
+            init: WeightInit::HeUniform,
+        };
+        let stats = engine
+            .evolve_model(&mut m, &cfg, &mut Rng::new(3), threads)
+            .unwrap();
+        for (l, s) in stats.iter().enumerate() {
+            assert!(s.pruned > 0, "layer {l} must prune");
+            assert_eq!(s.regrown, s.pruned, "layer {l}: dense capacity == pruned");
+            assert_eq!(
+                m.layers[l].weights.nnz(),
+                m.layers[l].n_in() * m.layers[l].n_out(),
+                "layer {l} must return to full density"
+            );
+        }
+        m.validate().unwrap();
+    }
+}
+
+#[test]
+fn single_surviving_neuron_edge_case_matches_oracle() {
+    // importance pruning collapses layer 0 to (essentially) one hub
+    // column; the fused epoch must still match the two-call oracle
+    let mut base = model(&[8, 10, 3], 20.0, 58);
+    {
+        let layer = &mut base.layers[0];
+        let cols = layer.weights.col_idx.clone();
+        for (k, &j) in cols.iter().enumerate() {
+            // hub column 4 dominates; every other importance is distinct
+            // and strictly below it (no percentile ties)
+            layer.weights.values[k] = if j == 4 {
+                5.0 + 0.01 * k as f32
+            } else {
+                1e-4 * (k as f32 + 1.0)
+            };
+        }
+    }
+    let imp = ImportanceConfig {
+        start_epoch: 0,
+        period: 1,
+        percentile: 100.0, // threshold = max importance -> only the hub
+        min_connections: 0,
+    };
+    {
+        let mut only_imp = base.clone();
+        importance::prune_model(&mut only_imp, &imp);
+        let counts = only_imp.layers[0].weights.column_counts();
+        assert_eq!(
+            counts.iter().filter(|&&c| c > 0).count(),
+            1,
+            "importance pruning must leave a single surviving neuron"
+        );
+    }
+    let cfg = EvolutionConfig {
+        zeta: 0.5,
+        init: WeightInit::HeUniform,
+    };
+    let mut oracle = base.clone();
+    let mut r_oracle = Rng::new(12);
+    importance::prune_model(&mut oracle, &imp);
+    set::evolve_model(&mut oracle, &cfg, &mut r_oracle).unwrap();
+    // the hub (and any percentile ties) survive; the layer stays alive
+    assert!(oracle.layers[0].weights.nnz() > 0);
+    for threads in thread_counts() {
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::new();
+        let mut r = Rng::new(12);
+        engine
+            .evolve_epoch(&mut m, Some(&cfg), Some(&imp), &mut r, threads)
+            .unwrap();
+        m.validate().unwrap();
+        assert_models_equal(&oracle, &m, &format!("single-neuron threads {threads}"));
+    }
+}
+
+#[test]
+fn evolve_step_reuses_workspace_buffers_in_steady_state() {
+    // Acceptance gate: zero steady-state heap allocation on the hot path.
+    // The engine counts every workspace-buffer capacity growth; after the
+    // first (warm-up) epoch the count must never move again — nnz only
+    // shrinks under SET, and every buffer reserves its first-epoch bound.
+    let mut m = model(&[50, 80, 60, 10], 8.0, 70);
+    let mut engine = EvolutionEngine::new();
+    let cfg = EvolutionConfig::default();
+    let mut rng = Rng::new(4);
+    engine.evolve_model(&mut m, &cfg, &mut rng, 4).unwrap();
+    let warm = engine.buffer_growth_events();
+    assert!(warm > 0, "first epoch must size the workspace");
+    for _ in 0..6 {
+        engine.evolve_model(&mut m, &cfg, &mut rng, 4).unwrap();
+    }
+    assert_eq!(
+        engine.buffer_growth_events(),
+        warm,
+        "steady-state evolution must not grow workspace buffers"
+    );
+    // the fused importance path rides the same buffers
+    let imp = ImportanceConfig {
+        start_epoch: 0,
+        period: 1,
+        percentile: 10.0,
+        min_connections: 8,
+    };
+    engine
+        .evolve_epoch(&mut m, Some(&cfg), Some(&imp), &mut rng, 4)
+        .unwrap();
+    let warm_imp = engine.buffer_growth_events();
+    for _ in 0..4 {
+        engine
+            .evolve_epoch(&mut m, Some(&cfg), Some(&imp), &mut rng, 4)
+            .unwrap();
+    }
+    assert_eq!(engine.buffer_growth_events(), warm_imp);
+}
+
+#[test]
+fn thread_count_zero_means_auto_and_stays_exact() {
+    let base = model(&[30, 40, 6], 6.0, 33);
+    let cfg = EvolutionConfig::default();
+    let mut oracle = base.clone();
+    set::evolve_model(&mut oracle, &cfg, &mut Rng::new(8)).unwrap();
+    let mut m = base.clone();
+    let mut engine = EvolutionEngine::new();
+    engine
+        .evolve_model(&mut m, &cfg, &mut Rng::new(8), 0)
+        .unwrap();
+    assert_models_equal(&oracle, &m, "threads=0 (auto)");
+}

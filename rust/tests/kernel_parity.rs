@@ -11,7 +11,8 @@
 use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit};
 use tsnn::util::Rng;
 
-const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+mod common;
+use common::thread_counts;
 
 fn random_x(rng: &mut Rng, batch: usize, n: usize, zero_frac: f64) -> Vec<f32> {
     (0..batch * n)
@@ -86,7 +87,7 @@ fn parity_across_random_shapes_densities_and_threads() {
     ];
     for &(n_in, n_out, density, batch) in &grid {
         let w = erdos_renyi(n_in, n_out, density, &mut rng, &WeightInit::Normal(0.5));
-        for threads in THREAD_COUNTS {
+        for threads in thread_counts() {
             assert_parity(&w, batch, &mut rng, threads);
         }
     }
@@ -116,7 +117,7 @@ fn parity_holds_against_dense_oracle_above_crossover() {
 fn parity_with_empty_matrix() {
     let mut rng = Rng::new(32);
     let w = CsrMatrix::empty(40, 50);
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_parity(&w, 7, &mut rng, threads);
     }
 }
@@ -125,7 +126,7 @@ fn parity_with_empty_matrix() {
 fn parity_with_zero_batch() {
     let mut rng = Rng::new(33);
     let w = erdos_renyi(30, 20, 0.4, &mut rng, &WeightInit::Normal(1.0));
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_parity(&w, 0, &mut rng, threads);
     }
 }
@@ -162,7 +163,7 @@ fn parity_with_highly_irregular_rows() {
     }
     let w = CsrMatrix::from_coo(64, 1500, triplets).unwrap();
     let mut rng = Rng::new(36);
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_parity(&w, 800, &mut rng, threads);
     }
 }
@@ -189,7 +190,7 @@ fn fused_parity_across_random_shapes_densities_threads_and_ragged_batches() {
     ];
     for &(n_in, n_out, density, batch) in &grid {
         let w = erdos_renyi(n_in, n_out, density, &mut rng, &WeightInit::Normal(0.5));
-        for threads in THREAD_COUNTS {
+        for threads in thread_counts() {
             assert_fused_parity(&w, batch, &mut rng, threads);
         }
     }
@@ -201,7 +202,7 @@ fn fused_parity_with_empty_matrix() {
     // overwritten with 0.0 (the NaN poison in the helper catches misses)
     let mut rng = Rng::new(37);
     let w = CsrMatrix::empty(40, 50);
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_fused_parity(&w, 7, &mut rng, threads);
     }
 }
@@ -210,7 +211,7 @@ fn fused_parity_with_empty_matrix() {
 fn fused_parity_with_zero_batch() {
     let mut rng = Rng::new(38);
     let w = erdos_renyi(30, 20, 0.4, &mut rng, &WeightInit::Normal(1.0));
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_fused_parity(&w, 0, &mut rng, threads);
     }
 }
@@ -221,7 +222,7 @@ fn fused_parity_with_single_row_matrix() {
     // must fall back to its sequential core at any thread count
     let mut rng = Rng::new(39);
     let w = erdos_renyi(1, 2048, 0.9, &mut rng, &WeightInit::Normal(0.5));
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_fused_parity(&w, 600, &mut rng, threads);
     }
 }
@@ -240,7 +241,7 @@ fn fused_parity_with_highly_irregular_rows() {
     }
     let w = CsrMatrix::from_coo(64, 1500, triplets).unwrap();
     let mut rng = Rng::new(36);
-    for threads in THREAD_COUNTS {
+    for threads in thread_counts() {
         assert_fused_parity(&w, 800, &mut rng, threads);
     }
 }

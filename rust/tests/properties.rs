@@ -6,7 +6,7 @@
 
 use tsnn::nn::{Activation, MomentumSgd};
 use tsnn::prelude::*;
-use tsnn::set::{evolve_layer, prune_thresholds, EvolutionConfig};
+use tsnn::set::{evolve_layer, prune_thresholds, EvolutionConfig, EvolutionEngine};
 use tsnn::sparse::{epsilon_density, erdos_renyi, ops, CsrMatrix};
 
 const CASES: u64 = 60;
@@ -161,6 +161,140 @@ fn prop_evolution_invariants() {
         );
         // invariant 3: velocity stays aligned
         assert_eq!(layer.velocity.len(), layer.weights.nnz(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_optimizer_state_follows_survivors_through_evolution() {
+    // Velocity must ride the survivor remap exactly: every surviving link
+    // keeps its (uniquely tagged) velocity AND its weight at the same
+    // (row, col); every regrown link starts at zero velocity. Bias state
+    // is per-output-neuron and must come through untouched.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let n_in = 4 + rng.below_usize(30);
+        let n_out = 4 + rng.below_usize(30);
+        let mut layer = tsnn::model::SparseLayer::erdos_renyi(
+            n_in,
+            n_out,
+            2.0 + rng.f64() * 6.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        );
+        for (k, v) in layer.velocity.iter_mut().enumerate() {
+            *v = (k + 1) as f32; // unique, non-zero tags
+        }
+        for (j, b) in layer.bias.iter_mut().enumerate() {
+            *b = 0.5 + j as f32;
+        }
+        for (j, b) in layer.bias_velocity.iter_mut().enumerate() {
+            *b = -1.0 - j as f32;
+        }
+        let old: std::collections::HashMap<(usize, u32), (f32, f32)> = layer
+            .weights
+            .iter()
+            .enumerate()
+            .map(|(k, (i, j, v))| ((i, j), (v, layer.velocity[k])))
+            .collect();
+        let bias_before = layer.bias.clone();
+        let bvel_before = layer.bias_velocity.clone();
+        let stats = evolve_layer(
+            &mut layer,
+            &EvolutionConfig {
+                zeta: rng.f64() * 0.6,
+                init: WeightInit::Normal(1.0),
+            },
+            &mut rng,
+        )
+        .unwrap();
+        layer.weights.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let mut survivors = 0usize;
+        for (k, (i, j, v)) in layer.weights.iter().enumerate() {
+            let vel = layer.velocity[k];
+            if vel != 0.0 {
+                let &(ov, ovel) = old
+                    .get(&(i, j))
+                    .unwrap_or_else(|| panic!("seed {seed}: survivor ({i},{j}) not in old"));
+                assert_eq!(v, ov, "seed {seed}: survivor weight moved");
+                assert_eq!(vel, ovel, "seed {seed}: velocity did not follow survivor");
+                survivors += 1;
+            }
+        }
+        assert_eq!(
+            survivors + stats.regrown,
+            layer.weights.nnz(),
+            "seed {seed}: every link is a tagged survivor or a zero-velocity regrow"
+        );
+        assert_eq!(layer.bias, bias_before, "seed {seed}: bias changed");
+        assert_eq!(layer.bias_velocity, bvel_before, "seed {seed}: bias velocity changed");
+    }
+}
+
+#[test]
+fn prop_regrown_entries_never_collide_with_survivors() {
+    // 100 random seeds through the threaded engine: regrown links (zero
+    // velocity) only occupy positions that were empty after pruning —
+    // survivors (tagged velocity) never move and are never overwritten,
+    // and the CSR stays structurally valid (no duplicate positions).
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(12_000 + seed);
+        let sizes = [
+            4 + rng.below_usize(20),
+            4 + rng.below_usize(20),
+            3 + rng.below_usize(10),
+        ];
+        let mut mlp = SparseMlp::new(
+            &sizes,
+            2.0 + rng.f64() * 5.0,
+            Activation::Relu,
+            &WeightInit::Normal(1.0),
+            &mut rng,
+        )
+        .unwrap();
+        for layer in mlp.layers.iter_mut() {
+            for v in layer.velocity.iter_mut() {
+                *v = 7.0;
+            }
+        }
+        let before: Vec<std::collections::HashSet<(usize, u32)>> = mlp
+            .layers
+            .iter()
+            .map(|l| l.weights.iter().map(|(i, j, _)| (i, j)).collect())
+            .collect();
+        let mut engine = EvolutionEngine::new();
+        let stats = engine
+            .evolve_model(
+                &mut mlp,
+                &EvolutionConfig {
+                    zeta: 0.4,
+                    init: WeightInit::Normal(1.0),
+                },
+                &mut Rng::new(100_000 + seed),
+                8,
+            )
+            .unwrap();
+        for (l, layer) in mlp.layers.iter().enumerate() {
+            layer
+                .weights
+                .validate()
+                .unwrap_or_else(|e| panic!("seed {seed} layer {l}: {e}"));
+            let mut regrown = 0usize;
+            for (k, (i, j, _)) in layer.weights.iter().enumerate() {
+                if layer.velocity[k] == 0.0 {
+                    regrown += 1;
+                } else {
+                    assert!(
+                        before[l].contains(&(i, j)),
+                        "seed {seed} layer {l}: survivor ({i},{j}) not in original topology"
+                    );
+                }
+            }
+            assert_eq!(
+                regrown, stats[l].regrown,
+                "seed {seed} layer {l}: regrown count mismatch"
+            );
+        }
     }
 }
 
