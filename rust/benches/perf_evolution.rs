@@ -12,7 +12,7 @@
 //! Knobs: TSNN_ITERS (default 10), TSNN_THREADS (csv, default
 //! 1,2,4,<cores>), TSNN_REPO_ROOT (JSON destination override).
 
-use tsnn::bench::{env_usize, time_it, write_repo_root_json, Table};
+use tsnn::bench::{env_usize, host_info, time_it, write_repo_root_json, Table};
 use tsnn::importance::{self, ImportanceConfig};
 use tsnn::nn::Activation;
 use tsnn::prelude::*;
@@ -222,6 +222,7 @@ fn main() {
         ("bench", "perf_evolution".into()),
         ("pr", 3usize.into()),
         ("status", "measured".into()),
+        ("host", host_info()),
         ("host_threads", cores.into()),
         ("iters", iters.into()),
         ("zeta", Json::from(0.3f64)),

@@ -21,7 +21,7 @@
 //! TSNN_THREADS (csv, default 2,4,<cores>), TSNN_REPO_ROOT (JSON
 //! destination override).
 
-use tsnn::bench::{env_usize, time_it, write_repo_root_json, Table};
+use tsnn::bench::{env_usize, host_info, time_it, write_repo_root_json, Table};
 use tsnn::prelude::*;
 use tsnn::sparse::{erdos_renyi_epsilon, ops};
 use tsnn::util::json::{obj, Json};
@@ -205,6 +205,7 @@ fn main() {
         ("bench", "perf_parallel_kernels".into()),
         ("pr", 2usize.into()),
         ("status", "measured".into()),
+        ("host", host_info()),
         ("host_threads", cores.into()),
         ("iters", iters.into()),
         ("par_min_work", ops::PAR_MIN_WORK.into()),

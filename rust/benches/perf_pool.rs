@@ -1,0 +1,448 @@
+//! §Perf — persistent worker pool vs scoped-spawn dispatch (DESIGN.md
+//! §9): the spawn-once/park pool must make parallel dispatch so cheap
+//! that the old `PAR_MIN_WORK` crossover gap — layers that used to run
+//! sequential because a scoped spawn would eat the win — becomes
+//! parallel territory. Emits a machine-readable `BENCH_4.json` at the
+//! repository root.
+//!
+//! Four measurement families:
+//!   * `dispatch` — raw scatter-gather cost: warm `WorkerPool::run` vs a
+//!     `thread::scope` spawn of the same shard count (no-op shards).
+//!     Acceptance: pool ≥ 10× cheaper at equal shard count.
+//!   * per-kernel rows — all four sharded kernels on layers sized inside
+//!     the OLD sub-crossover gap (`batch·nnz ≈ 2¹⁸ < PAR_MIN_WORK`),
+//!     pooled dispatch vs the sequential kernel the old path fell back
+//!     to. Parity-asserted (exact) before timing.
+//!   * `crossover` — work sweep across 2¹³‥2²² MACs re-deriving
+//!     `POOL_MIN_WORK` (the work level where pooled speedup crosses 1).
+//!   * `epoch` — end-to-end training epochs (train steps + evolution) on
+//!     a layer in the old gap. Acceptance: ≥ 1.2× vs the sequential
+//!     baseline, bit-exact parity asserted first.
+//!
+//! Knobs: TSNN_ITERS (default 20), TSNN_THREADS (csv, default
+//! 2,4,<cores>), TSNN_EPOCHS (default 6), TSNN_REPO_ROOT.
+
+use tsnn::bench::{env_usize, host_info, time_it, write_repo_root_json, Table};
+use tsnn::prelude::*;
+use tsnn::set::{EvolutionConfig, EvolutionEngine};
+use tsnn::sparse::{erdos_renyi_epsilon, ops, Exec, WorkerPool};
+use tsnn::util::json::{obj, Json};
+
+fn env_csv(name: &str, default: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = match std::env::var(name) {
+        Ok(s) => s.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    };
+    v.retain(|&t| t >= 2);
+    v.sort_unstable();
+    v.dedup();
+    if v.is_empty() {
+        v.push(2);
+    }
+    v
+}
+
+fn random_vec(rng: &mut Rng, n: usize, zero_frac: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.bernoulli(zero_frac) {
+                0.0
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+/// One gap-model training epoch: full pass of train steps + one SET
+/// evolution epoch, everything on `ws`'s dispatch budget.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    mlp: &mut SparseMlp,
+    x: &[f32],
+    y: &[u32],
+    n_feat: usize,
+    batch: usize,
+    ws: &mut tsnn::model::Workspace,
+    engine: &mut EvolutionEngine,
+    evo: &EvolutionConfig,
+    rng: &mut Rng,
+    threads: usize,
+) {
+    let opt = MomentumSgd::default();
+    let n = y.len();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + batch).min(n);
+        mlp.train_step(
+            &x[start * n_feat..end * n_feat],
+            &y[start..end],
+            &opt,
+            0.01,
+            None,
+            ws,
+            rng,
+        );
+        start = end;
+    }
+    engine.evolve_model(mlp, evo, rng, threads).unwrap();
+}
+
+fn assert_models_equal(a: &SparseMlp, b: &SparseMlp, label: &str) {
+    for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.weights, lb.weights, "{label}: layer {l} weights");
+        assert_eq!(la.velocity, lb.velocity, "{label}: layer {l} velocity");
+        assert_eq!(la.bias, lb.bias, "{label}: layer {l} bias");
+    }
+}
+
+fn main() {
+    let iters = env_usize("TSNN_ITERS", 20);
+    let epochs = env_usize("TSNN_EPOCHS", 6);
+    let cores = ops::available_threads();
+    let threads_grid = env_csv("TSNN_THREADS", &[2, 4, cores]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    println!(
+        "host: {cores} cores; crossover: POOL_MIN_WORK = {} (warm pool) vs \
+         PAR_MIN_WORK = {} (scoped spawn)\n",
+        ops::POOL_MIN_WORK,
+        ops::PAR_MIN_WORK
+    );
+
+    // ---- 1. dispatch microbenchmark: warm pool vs scoped spawn ----
+    let mut disp = Table::new(
+        "§Perf — dispatch cost: warm pool wakeup vs scoped thread spawn (no-op shards)",
+        &["shards", "spawn µs", "pool µs", "ratio"],
+    );
+    let disp_iters = iters.max(50);
+    for &shards in &threads_grid {
+        let (spawn_secs, _) = time_it(5, disp_iters, || {
+            std::thread::scope(|scope| {
+                for _ in 1..shards {
+                    scope.spawn(|| std::hint::black_box(()));
+                }
+                std::hint::black_box(());
+            });
+        });
+        let pool = WorkerPool::new(shards);
+        let (pool_secs, _) = time_it(5, disp_iters, || {
+            pool.run(shards, |_| {
+                std::hint::black_box(());
+            });
+        });
+        let ratio = spawn_secs / pool_secs.max(1e-12);
+        disp.row(vec![
+            shards.to_string(),
+            format!("{:.2}", spawn_secs * 1e6),
+            format!("{:.2}", pool_secs * 1e6),
+            format!("{ratio:.1}x"),
+        ]);
+        rows.push(obj(vec![
+            ("op", "dispatch".into()),
+            ("shards", shards.into()),
+            ("spawn_ns", (spawn_secs * 1e9).into()),
+            ("pool_ns", (pool_secs * 1e9).into()),
+            ("ratio", ratio.into()),
+        ]));
+    }
+    disp.emit("perf_pool_dispatch.csv");
+
+    // ---- 2. per-kernel speedups inside the OLD sub-crossover gap ----
+    // batch·nnz ≈ 2¹⁸ — the old scoped path fell back to sequential
+    // here, so "pooled vs sequential" is exactly the win the pool opens.
+    let mut gap = Table::new(
+        "§Perf — kernels in the old sub-crossover gap (batch·nnz ≈ 2^18): \
+         sequential (old behaviour) vs pooled dispatch",
+        &["kernel", "shape", "batch", "work", "threads", "seq µs", "pool µs", "speedup"],
+    );
+    for &(n_in, n_out, eps, batch) in &[
+        (1000usize, 1000usize, 20.0f64, 8usize),
+        (512, 512, 20.0, 16),
+        (256, 256, 16.0, 64),
+    ] {
+        let mut rng = Rng::new(1);
+        let w = erdos_renyi_epsilon(n_in, n_out, eps, &mut rng, &WeightInit::HeUniform);
+        let nnz = w.nnz();
+        let work = batch * nnz;
+        assert!(
+            work >= ops::POOL_MIN_WORK && work < ops::PAR_MIN_WORK,
+            "{n_in}x{n_out} b{batch}: work {work} must sit in the old gap"
+        );
+        let shape = format!("{n_in}x{n_out}");
+        let x = random_vec(&mut rng, batch * n_in, 0.3);
+        let dz = random_vec(&mut rng, batch * n_out, 0.0);
+        let mut out = vec![0.0f32; batch * n_out];
+        let mut dx = vec![0.0f32; batch * n_in];
+        let mut dw = vec![0.0f32; nnz];
+
+        // sequential references (+ parity baselines)
+        let (fwd_seq, _) = time_it(2, iters, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_forward(&x, batch, &w, &mut out);
+        });
+        let fwd_ref = out.clone();
+        let (din_seq, _) = time_it(2, iters, || {
+            ops::spmm_grad_input(&dz, batch, &w, &mut dx);
+        });
+        let din_ref = dx.clone();
+        let (dwt_seq, _) = time_it(2, iters, || {
+            dw.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_grad_weights(&x, &dz, batch, &w, &mut dw);
+        });
+        let dwt_ref = dw.clone();
+        let (fused_seq, _) = time_it(2, iters, || {
+            dw.iter_mut().for_each(|v| *v = 0.0);
+            ops::spmm_backward_fused(&x, &dz, batch, &w, &mut dx, &mut dw, 1);
+        });
+
+        for &threads in &threads_grid {
+            let pool = WorkerPool::new(threads);
+            let exec = Exec::pooled(&pool);
+            let (fwd_pool, _) = time_it(2, iters, || {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_forward_exec(&x, batch, &w, &mut out, exec);
+            });
+            assert_eq!(out, fwd_ref, "forward parity {shape} t{threads}");
+            let (din_pool, _) = time_it(2, iters, || {
+                ops::spmm_grad_input_exec(&dz, batch, &w, &mut dx, exec);
+            });
+            assert_eq!(dx, din_ref, "grad_input parity {shape} t{threads}");
+            let (dwt_pool, _) = time_it(2, iters, || {
+                dw.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_grad_weights_exec(&x, &dz, batch, &w, &mut dw, exec);
+            });
+            assert_eq!(dw, dwt_ref, "grad_weights parity {shape} t{threads}");
+            let (fused_pool, _) = time_it(2, iters, || {
+                dw.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_backward_fused_exec(&x, &dz, batch, &w, &mut dx, &mut dw, exec);
+            });
+            assert_eq!(dx, din_ref, "fused dx parity {shape} t{threads}");
+            assert_eq!(dw, dwt_ref, "fused dw parity {shape} t{threads}");
+
+            for (kernel, seq, pooled) in [
+                ("spmm_forward", fwd_seq, fwd_pool),
+                ("spmm_grad_input", din_seq, din_pool),
+                ("spmm_grad_weights", dwt_seq, dwt_pool),
+                ("backward_fused", fused_seq, fused_pool),
+            ] {
+                gap.row(vec![
+                    kernel.into(),
+                    shape.clone(),
+                    batch.to_string(),
+                    work.to_string(),
+                    threads.to_string(),
+                    format!("{:.2}", seq * 1e6),
+                    format!("{:.2}", pooled * 1e6),
+                    format!("{:.2}x", seq / pooled.max(1e-12)),
+                ]);
+                rows.push(obj(vec![
+                    ("op", "gap_kernel".into()),
+                    ("kernel", kernel.into()),
+                    ("n_in", n_in.into()),
+                    ("n_out", n_out.into()),
+                    ("nnz", nnz.into()),
+                    ("batch", batch.into()),
+                    ("work", work.into()),
+                    ("threads", threads.into()),
+                    ("seq_ns", (seq * 1e9).into()),
+                    ("pool_ns", (pooled * 1e9).into()),
+                    ("speedup", (seq / pooled.max(1e-12)).into()),
+                ]));
+            }
+        }
+    }
+    gap.emit("perf_pool_gap_kernels.csv");
+
+    // ---- 3. crossover sweep: where does pooled dispatch start paying? ----
+    let mut sweep = Table::new(
+        "§Perf — pooled-dispatch crossover sweep (forward kernel, 4-thread pool)",
+        &["work (batch·nnz)", "batch", "seq µs", "pool µs", "speedup"],
+    );
+    {
+        let mut rng = Rng::new(2);
+        let w = erdos_renyi_epsilon(256, 256, 16.0, &mut rng, &WeightInit::HeUniform);
+        let nnz = w.nnz();
+        let threads = threads_grid.first().copied().unwrap_or(4).max(4);
+        let pool = WorkerPool::new(threads);
+        let mut batch = 2usize;
+        while batch * nnz <= (1 << 22) {
+            let x = random_vec(&mut rng, batch * 256, 0.3);
+            let mut seq_out = vec![0.0f32; batch * 256];
+            let mut pool_out = vec![0.0f32; batch * 256];
+            let (seq_secs, _) = time_it(2, iters, || {
+                seq_out.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_forward(&x, batch, &w, &mut seq_out);
+            });
+            let exec = Exec::pooled(&pool);
+            let (pool_secs, _) = time_it(2, iters, || {
+                pool_out.iter_mut().for_each(|v| *v = 0.0);
+                ops::spmm_forward_exec(&x, batch, &w, &mut pool_out, exec);
+            });
+            assert_eq!(seq_out, pool_out, "sweep parity b{batch}");
+            let work = batch * nnz;
+            sweep.row(vec![
+                work.to_string(),
+                batch.to_string(),
+                format!("{:.2}", seq_secs * 1e6),
+                format!("{:.2}", pool_secs * 1e6),
+                format!("{:.2}x", seq_secs / pool_secs.max(1e-12)),
+            ]);
+            rows.push(obj(vec![
+                ("op", "crossover".into()),
+                ("work", work.into()),
+                ("batch", batch.into()),
+                ("nnz", nnz.into()),
+                ("threads", threads.into()),
+                ("seq_ns", (seq_secs * 1e9).into()),
+                ("pool_ns", (pool_secs * 1e9).into()),
+                ("speedup", (seq_secs / pool_secs.max(1e-12)).into()),
+            ]));
+            batch *= 2;
+        }
+    }
+    sweep.emit("perf_pool_crossover.csv");
+
+    // ---- 4. end-to-end epochs on a gap-sized layer ----
+    // [1000 → 1000 → 10] at ε = 4 puts the dominant layer at
+    // batch·nnz ≈ 2¹⁸ — squarely in the gap the pool opens up.
+    let mut epoch_table = Table::new(
+        "§Perf — end-to-end training epoch (steps + evolution) on a \
+         sub-crossover-gap model: sequential vs pooled",
+        &["threads", "seq ms/epoch", "pool ms/epoch", "speedup"],
+    );
+    {
+        let sizes = [1000usize, 1000, 10];
+        let (batch, n_samples, n_feat) = (32usize, 512usize, sizes[0]);
+        let evo = EvolutionConfig {
+            zeta: 0.3,
+            init: WeightInit::HeUniform,
+        };
+        let mut rng = Rng::new(3);
+        let base = SparseMlp::new(
+            &sizes,
+            4.0,
+            Activation::AllRelu { alpha: 0.6 },
+            &WeightInit::HeUniform,
+            &mut rng,
+        )
+        .unwrap();
+        let work = batch * base.layers[0].weights.nnz();
+        assert!(
+            work >= ops::POOL_MIN_WORK && work < ops::PAR_MIN_WORK,
+            "epoch model must sit in the old gap, work = {work}"
+        );
+        let x = random_vec(&mut rng, n_samples * n_feat, 0.5);
+        let y: Vec<u32> = (0..n_samples).map(|i| (i % sizes[2]) as u32).collect();
+
+        let time_epochs = |threads: usize| -> f64 {
+            let mut mlp = base.clone();
+            let mut ws = mlp.alloc_workspace(batch);
+            ws.kernel_threads = threads;
+            ws.ensure_pool();
+            let mut engine = match ws.pool() {
+                Some(p) => EvolutionEngine::with_pool(p),
+                None => EvolutionEngine::new(),
+            };
+            let mut rng = Rng::new(11);
+            // one warm epoch (pool spawn, buffer sizing), then timed ones
+            run_epoch(
+                &mut mlp, &x, &y, n_feat, batch, &mut ws, &mut engine, &evo, &mut rng, threads,
+            );
+            let (secs, _) = time_it(0, epochs, || {
+                run_epoch(
+                    &mut mlp, &x, &y, n_feat, batch, &mut ws, &mut engine, &evo, &mut rng,
+                    threads,
+                );
+            });
+            secs
+        };
+
+        // bit-exact parity of the full epoch loop before timing: the
+        // kernel-threads invariance guarantee end to end
+        for &threads in &threads_grid {
+            let run_to_model = |threads: usize| -> SparseMlp {
+                let mut mlp = base.clone();
+                let mut ws = mlp.alloc_workspace(batch);
+                ws.kernel_threads = threads;
+                ws.ensure_pool();
+                let mut engine = match ws.pool() {
+                    Some(p) => EvolutionEngine::with_pool(p),
+                    None => EvolutionEngine::new(),
+                };
+                let mut rng = Rng::new(11);
+                for _ in 0..2 {
+                    run_epoch(
+                        &mut mlp, &x, &y, n_feat, batch, &mut ws, &mut engine, &evo, &mut rng,
+                        threads,
+                    );
+                }
+                mlp
+            };
+            assert_models_equal(
+                &run_to_model(1),
+                &run_to_model(threads),
+                &format!("epoch parity t{threads}"),
+            );
+        }
+
+        let seq_secs = time_epochs(1);
+        for &threads in &threads_grid {
+            let pool_secs = time_epochs(threads);
+            let speedup = seq_secs / pool_secs.max(1e-12);
+            epoch_table.row(vec![
+                threads.to_string(),
+                format!("{:.3}", seq_secs * 1e3),
+                format!("{:.3}", pool_secs * 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(obj(vec![
+                ("op", "epoch".into()),
+                ("work", work.into()),
+                ("batch", batch.into()),
+                ("threads", threads.into()),
+                ("seq_ns", (seq_secs * 1e9).into()),
+                ("pool_ns", (pool_secs * 1e9).into()),
+                ("speedup", speedup.into()),
+            ]));
+        }
+    }
+    epoch_table.emit("perf_pool_epoch.csv");
+
+    let doc = obj(vec![
+        ("bench", "perf_pool".into()),
+        ("pr", 4usize.into()),
+        ("status", "measured".into()),
+        ("host", host_info()),
+        ("host_threads", cores.into()),
+        ("iters", iters.into()),
+        ("pool_min_work", ops::POOL_MIN_WORK.into()),
+        ("par_min_work", ops::PAR_MIN_WORK.into()),
+        (
+            "acceptance",
+            obj(vec![
+                ("pool_dispatch_vs_spawn_min_ratio", Json::from(10.0f64)),
+                ("epoch_min_speedup", Json::from(1.2f64)),
+                ("at_epoch_work", (1usize << 18).into()),
+                (
+                    "note",
+                    "dispatch ratio at equal shard count; epoch speedup vs the sequential \
+                     baseline on a layer in the old sub-crossover gap, parity-asserted \
+                     before timing"
+                        .into(),
+                ),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_repo_root_json("BENCH_4.json", &doc) {
+        Ok(path) => println!("(json written to {})", path.display()),
+        Err(e) => eprintln!("warn: could not write BENCH_4.json: {e}"),
+    }
+
+    println!(
+        "acceptance gates: `dispatch` rows — pool >= 10x cheaper than scoped spawn \
+         at equal shard count; `epoch` rows — >= 1.20x end-to-end vs sequential on \
+         the 2^18-work gap model (old behaviour was sequential there)."
+    );
+}

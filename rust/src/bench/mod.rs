@@ -143,6 +143,32 @@ pub fn write_repo_root_json(name: &str, json: &crate::util::Json) -> std::io::Re
     Ok(path)
 }
 
+/// Host descriptor embedded in every `BENCH_*.json` (core count, CPU
+/// model, OS/arch): CI runs land on heterogeneous machines, so the
+/// perf trajectory is only comparable across PRs when each artifact
+/// says what it was measured on.
+pub fn host_info() -> crate::util::Json {
+    use crate::util::json::obj;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|m| m.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".to_string());
+    obj(vec![
+        ("cores", cores.into()),
+        ("cpu", cpu.into()),
+        ("os", std::env::consts::OS.into()),
+        ("arch", std::env::consts::ARCH.into()),
+    ])
+}
+
 /// Micro-bench: run `f` for `iters` iterations after `warmup`, returning
 /// (mean_secs, min_secs) per iteration.
 pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {

@@ -106,14 +106,22 @@ pub struct ParallelReport {
     pub phases: PhaseTimes,
 }
 
-/// Kernel-shard budget per coordinator worker: the machine's thread
-/// budget (the config's `kernel_threads` knob, `0` = all cores) divided
-/// across the K data-parallel workers, so phase-1/2 workers running
-/// sharded kernels — the forward kernel and the fused one-pass backward
-/// their `compute_gradients` calls dispatch (DESIGN.md §4–§5) — never
-/// oversubscribe the host.
-fn worker_kernel_threads(cfg: &TrainConfig, workers: usize) -> usize {
-    (crate::sparse::ops::resolve_threads(cfg.kernel_threads) / workers.max(1)).max(1)
+/// Per-worker kernel-shard budgets: the machine's thread budget (the
+/// config's `kernel_threads` knob, `0` = all cores) divided across the
+/// K data-parallel workers with the division remainder distributed one
+/// core per worker from the front — so the budgets sum to the resolved
+/// total whenever `K ≤ total` (the old flooring division stranded
+/// `total mod K` cores; e.g. 8 cores / 3 workers gave 2+2+2, leaving 2
+/// idle — now 3+3+2). Each worker's `Workspace` turns its budget into a
+/// persistent kernel sub-pool (DESIGN.md §9.4), so K workers × pool
+/// shards never oversubscribes the host.
+fn worker_kernel_budgets(cfg: &TrainConfig, workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let total = crate::sparse::ops::resolve_threads(cfg.kernel_threads);
+    let (base, rem) = (total / workers, total % workers);
+    (0..workers)
+        .map(|k| (base + usize::from(k < rem)).max(1))
+        .collect()
 }
 
 fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
@@ -203,6 +211,7 @@ pub fn run_parallel(
     let t2 = Timer::start();
     let final_model = if pcfg.phase2_epochs > 0 {
         let mut locals: Vec<SparseMlp> = Vec::with_capacity(pcfg.workers);
+        let budgets = worker_kernel_budgets(cfg, pcfg.workers);
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
             for k in 0..pcfg.workers {
@@ -211,7 +220,7 @@ pub fn run_parallel(
                 let mut local_cfg = cfg.clone();
                 local_cfg.epochs = pcfg.phase2_epochs;
                 local_cfg.eval_every = 0; // no test eval inside workers
-                local_cfg.kernel_threads = worker_kernel_threads(cfg, pcfg.workers);
+                local_cfg.kernel_threads = budgets[k];
                 let mut local_model = phase1_model.clone();
                 let mut local_rng = Rng::new(cfg.seed).split(1000 + k as u64);
                 handles.push(scope.spawn(move || -> Result<SparseMlp> {
@@ -273,11 +282,12 @@ fn run_phase1_async(
         },
         other => other,
     };
-    let kernel_threads = worker_kernel_threads(cfg, pcfg.workers);
+    let budgets = worker_kernel_budgets(cfg, pcfg.workers);
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for k in 0..pcfg.workers {
             let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, k);
+            let kernel_threads = budgets[k];
             let mut rng = Rng::new(cfg.seed).split(k as u64);
             let dropout = if cfg.dropout > 0.0 {
                 Some(crate::nn::Dropout::new(cfg.dropout))
@@ -287,6 +297,9 @@ fn run_phase1_async(
             handles.push(scope.spawn(move || -> Result<()> {
                 let mut batcher = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
                 batcher.reset(&mut rng);
+                // Worker-owned persistent kernel sub-pool for the whole
+                // phase (DESIGN.md §9.4): the workspace spawns it on the
+                // first dispatch and parks it between steps.
                 let mut ws = crate::model::Workspace::with_threads(kernel_threads);
                 loop {
                     let epoch = ps.epoch();
@@ -362,7 +375,15 @@ fn run_phase1_sync(
     } else {
         None
     };
-    let kernel_threads = worker_kernel_threads(cfg, k);
+    // Persistent per-worker workspaces: each carries its kernel sub-pool
+    // (DESIGN.md §9.4) and its forward/backward buffers across ALL steps
+    // of the phase — the old per-step workspace would have re-spawned
+    // pool workers (and reallocated every buffer) every step.
+    let budgets = worker_kernel_budgets(cfg, k);
+    let mut wss: Vec<crate::model::Workspace> = budgets
+        .iter()
+        .map(|&t| crate::model::Workspace::with_threads(t))
+        .collect();
 
     for epoch in 0..pcfg.phase1_epochs {
         let lr = schedule.at(epoch);
@@ -371,16 +392,16 @@ fn run_phase1_sync(
             // Barrier semantics: all K gradients computed against `snap`,
             // then averaged and applied once. Computation itself fans out
             // across scoped threads (real thread-parallelism on multicore
-            // hosts; deterministic aggregation either way).
-            let mut grads: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::with_capacity(k);
+            // hosts; deterministic aggregation either way); gradients
+            // stay in the persistent workspaces — no per-step clones
+            // (a panicked worker propagates at the scope join).
             std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for ((batcher, rng), _) in
-                    batchers.iter_mut().zip(rngs.iter_mut()).zip(0..k)
+                for ((batcher, rng), ws) in
+                    batchers.iter_mut().zip(rngs.iter_mut()).zip(wss.iter_mut())
                 {
                     let model = Arc::clone(&snap.model);
                     let dref = dropout.as_ref();
-                    handles.push(scope.spawn(move || {
+                    scope.spawn(move || {
                         let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
                             Some(b) => b,
                             None => {
@@ -388,38 +409,34 @@ fn run_phase1_sync(
                                 batcher.next_batch(&data.x_train, &data.y_train).unwrap()
                             }
                         };
-                        let mut ws = crate::model::Workspace::with_threads(kernel_threads);
-                        model.compute_gradients(batch.0, batch.1, dref, &mut ws, rng);
-                        (ws.grad_w, ws.grad_b)
-                    }));
-                }
-                for h in handles {
-                    grads.push(h.join().expect("sync worker panicked"));
+                        model.compute_gradients(batch.0, batch.1, dref, ws, rng);
+                    });
                 }
             });
-            // average K aligned gradients
+            // average K aligned gradients into worker 0's buffers (the
+            // next step's backward_into re-zeroes them anyway)
             let inv_k = 1.0f32 / k as f32;
-            let (mut agg_w, mut agg_b) = grads.pop().unwrap();
-            for (gw, gb) in &grads {
-                for (a, g) in agg_w.iter_mut().zip(gw.iter()) {
+            let (agg, rest) = wss.split_first_mut().expect("workers >= 1");
+            for ws in rest.iter() {
+                for (a, g) in agg.grad_w.iter_mut().zip(ws.grad_w.iter()) {
                     for (x, y) in a.iter_mut().zip(g.iter()) {
                         *x += y;
                     }
                 }
-                for (a, g) in agg_b.iter_mut().zip(gb.iter()) {
+                for (a, g) in agg.grad_b.iter_mut().zip(ws.grad_b.iter()) {
                     for (x, y) in a.iter_mut().zip(g.iter()) {
                         *x += y;
                     }
                 }
             }
-            for a in agg_w.iter_mut().flat_map(|v| v.iter_mut()) {
+            for a in agg.grad_w.iter_mut().flat_map(|v| v.iter_mut()) {
                 *a *= inv_k;
             }
-            for a in agg_b.iter_mut().flat_map(|v| v.iter_mut()) {
+            for a in agg.grad_b.iter_mut().flat_map(|v| v.iter_mut()) {
                 *a *= inv_k;
             }
-            clip_gradients(&mut agg_w, &mut agg_b, pcfg.grad_clip);
-            ps.apply_aligned(&agg_w, &agg_b, lr)?;
+            clip_gradients(&mut agg.grad_w, &mut agg.grad_b, pcfg.grad_clip);
+            ps.apply_aligned(&agg.grad_w, &agg.grad_b, lr)?;
         }
     }
     Ok(())
@@ -545,6 +562,29 @@ mod tests {
             ..Default::default()
         };
         assert!(run_parallel(&cfg, &pcfg, &data, &mut Rng::new(5)).is_err());
+    }
+
+    #[test]
+    fn worker_kernel_budgets_distribute_the_remainder() {
+        let with_threads = |kernel_threads: usize| TrainConfig {
+            kernel_threads,
+            ..TrainConfig::default()
+        };
+        // 8 cores / 3 workers: the old flooring gave 2+2+2 (2 stranded);
+        // the remainder now lands one core per worker from the front
+        assert_eq!(worker_kernel_budgets(&with_threads(8), 3), vec![3, 3, 2]);
+        assert_eq!(worker_kernel_budgets(&with_threads(8), 5), vec![2, 2, 2, 1, 1]);
+        assert_eq!(worker_kernel_budgets(&with_threads(8), 8), vec![1; 8]);
+        assert_eq!(worker_kernel_budgets(&with_threads(8), 1), vec![8]);
+        // more workers than cores: everyone keeps the floor of 1
+        assert_eq!(worker_kernel_budgets(&with_threads(8), 12), vec![1; 12]);
+        assert_eq!(worker_kernel_budgets(&with_threads(7), 2), vec![4, 3]);
+        // budgets sum to the resolved total whenever K <= total
+        for (threads, workers) in [(8usize, 3usize), (8, 5), (7, 2), (6, 6), (9, 4)] {
+            let budgets = worker_kernel_budgets(&with_threads(threads), workers);
+            assert_eq!(budgets.iter().sum::<usize>(), threads, "{threads}/{workers}");
+            assert!(budgets.windows(2).all(|w| w[0] >= w[1]));
+        }
     }
 
     #[test]

@@ -17,11 +17,13 @@
 //!   All-ReLU kernel, folded into the L2 artifacts.
 //!
 //! The hot-path CSR kernels additionally ship worker-sharded parallel
-//! variants (DESIGN.md §4) — disjoint-write sharding over scoped OS
-//! threads, exact-match deterministic, selected end to end by the
-//! `kernel_threads` config knob — and the backward pass runs as a fused
-//! one-pass kernel (DESIGN.md §5): input gradient and pattern-aligned
-//! weight gradient in a single CSR traversal per layer.
+//! variants (DESIGN.md §4) — disjoint-write sharding, exact-match
+//! deterministic, selected end to end by the `kernel_threads` config
+//! knob — dispatched on a persistent spawn-once/park worker pool
+//! (DESIGN.md §9) that lives for the whole training run, and the
+//! backward pass runs as a fused one-pass kernel (DESIGN.md §5): input
+//! gradient and pattern-aligned weight gradient in a single CSR
+//! traversal per layer.
 //!
 //! ## Quick example
 //!

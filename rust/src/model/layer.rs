@@ -2,7 +2,7 @@
 //! state + activation.
 
 use crate::nn::{remap_aligned, Activation, MomentumSgd, SRelu};
-use crate::sparse::{erdos_renyi_epsilon, ops, CsrMatrix, WeightInit};
+use crate::sparse::{erdos_renyi_epsilon, ops, CsrMatrix, Exec, WeightInit};
 use crate::util::Rng;
 
 /// One sparse layer of the MLP (`n_in × n_out` CSR weights).
@@ -63,14 +63,15 @@ impl SparseLayer {
 
     /// Linear part of the forward pass: `pre = x · W + b` (bias broadcast
     /// into `pre` here, fused with the kernel's pre-zero requirement).
-    /// `threads` is the kernel-shard budget (`0` = one per available core,
-    /// `1` = sequential); dispatch and crossover live in [`ops`].
-    pub fn forward_into(&self, x: &[f32], batch: usize, pre: &mut [f32], threads: usize) {
+    /// `exec` is the kernel dispatch context — the workspace's persistent
+    /// pool on the hot path, a scoped/sequential fallback otherwise;
+    /// dispatch and crossover live in [`ops`].
+    pub fn forward_into(&self, x: &[f32], batch: usize, pre: &mut [f32], exec: Exec<'_>) {
         let n_out = self.n_out();
         for b in 0..batch {
             pre[b * n_out..(b + 1) * n_out].copy_from_slice(&self.bias);
         }
-        ops::spmm_forward_threaded(x, batch, &self.weights, pre, threads);
+        ops::spmm_forward_exec(x, batch, &self.weights, pre, exec);
     }
 
     /// Full backward pass through this layer in one CSR traversal
@@ -92,15 +93,15 @@ impl SparseLayer {
         dx: Option<&mut [f32]>,
         grad_w: &mut [f32],
         grad_b: &mut [f32],
-        threads: usize,
+        exec: Exec<'_>,
     ) {
         grad_w.iter_mut().for_each(|v| *v = 0.0);
         grad_b.iter_mut().for_each(|v| *v = 0.0);
         match dx {
             Some(dx) => {
-                ops::spmm_backward_fused(x, dz, batch, &self.weights, dx, grad_w, threads)
+                ops::spmm_backward_fused_exec(x, dz, batch, &self.weights, dx, grad_w, exec)
             }
-            None => ops::spmm_grad_weights_threaded(x, dz, batch, &self.weights, grad_w, threads),
+            None => ops::spmm_grad_weights_exec(x, dz, batch, &self.weights, grad_w, exec),
         }
         ops::bias_grad(dz, batch, self.n_out(), grad_b);
     }
@@ -109,8 +110,8 @@ impl SparseLayer {
     ///
     /// Parity oracle for the fused path — the hot path is
     /// [`SparseLayer::backward_into`].
-    pub fn grad_input_into(&self, dz: &[f32], batch: usize, dx: &mut [f32], threads: usize) {
-        ops::spmm_grad_input_threaded(dz, batch, &self.weights, dx, threads);
+    pub fn grad_input_into(&self, dz: &[f32], batch: usize, dx: &mut [f32], exec: Exec<'_>) {
+        ops::spmm_grad_input_exec(dz, batch, &self.weights, dx, exec);
     }
 
     /// Pattern-aligned weight gradient and bias gradient for a batch
@@ -125,9 +126,9 @@ impl SparseLayer {
         batch: usize,
         grad_w: &mut [f32],
         grad_b: &mut [f32],
-        threads: usize,
+        exec: Exec<'_>,
     ) {
-        self.backward_into(x, dz, batch, None, grad_w, grad_b, threads);
+        self.backward_into(x, dz, batch, None, grad_w, grad_b, exec);
     }
 
     /// Apply the optimizer to this layer's weights and biases.
@@ -294,7 +295,7 @@ mod tests {
         let batch = 3;
         let x: Vec<f32> = (0..batch * l.n_in()).map(|i| (i % 5) as f32 - 2.0).collect();
         let mut pre = vec![7.0f32; batch * l.n_out()]; // stale garbage
-        l.forward_into(&x, batch, &mut pre, 1);
+        l.forward_into(&x, batch, &mut pre, Exec::sequential());
         let mut oracle = vec![0.0f32; batch * l.n_out()];
         for b in 0..batch {
             oracle[b * l.n_out()..(b + 1) * l.n_out()].copy_from_slice(&l.bias);
@@ -311,7 +312,7 @@ mod tests {
         let dz = vec![0.0f32; batch * l.n_out()];
         let mut gw = vec![3.0f32; l.weights.nnz()];
         let mut gb = vec![3.0f32; l.n_out()];
-        l.grads_into(&x, &dz, batch, &mut gw, &mut gb, 1);
+        l.grads_into(&x, &dz, batch, &mut gw, &mut gb, Exec::sequential());
         assert!(gw.iter().all(|&v| v == 0.0));
         assert!(gb.iter().all(|&v| v == 0.0));
     }
@@ -327,24 +328,29 @@ mod tests {
         let dz: Vec<f32> = (0..batch * l.n_out()).map(|_| rng.normal()).collect();
         // oracle: two-kernel pair
         let mut dx_o = vec![0.0f32; batch * l.n_in()];
-        l.grad_input_into(&dz, batch, &mut dx_o, 1);
+        l.grad_input_into(&dz, batch, &mut dx_o, Exec::sequential());
         let mut gw_o = vec![0.0f32; l.weights.nnz()];
         let mut gb_o = vec![0.0f32; l.n_out()];
-        l.grads_into(&x, &dz, batch, &mut gw_o, &mut gb_o, 1);
-        for threads in [1usize, 4] {
+        l.grads_into(&x, &dz, batch, &mut gw_o, &mut gb_o, Exec::sequential());
+        let pool = crate::sparse::WorkerPool::new(4);
+        for (label, exec) in [
+            ("scoped-1", Exec::scoped(1)),
+            ("scoped-4", Exec::scoped(4)),
+            ("pooled-4", Exec::pooled(&pool)),
+        ] {
             let mut dx = vec![f32::NAN; batch * l.n_in()];
             let mut gw = vec![7.0f32; l.weights.nnz()]; // stale: must be zeroed
             let mut gb = vec![7.0f32; l.n_out()];
-            l.backward_into(&x, &dz, batch, Some(&mut dx), &mut gw, &mut gb, threads);
-            assert_eq!(dx, dx_o, "threads={threads}");
-            assert_eq!(gw, gw_o, "threads={threads}");
-            assert_eq!(gb, gb_o, "threads={threads}");
+            l.backward_into(&x, &dz, batch, Some(&mut dx), &mut gw, &mut gb, exec);
+            assert_eq!(dx, dx_o, "{label}");
+            assert_eq!(gw, gw_o, "{label}");
+            assert_eq!(gb, gb_o, "{label}");
             // dx = None: weight/bias grads only (layer-0 path)
             let mut gw2 = vec![7.0f32; l.weights.nnz()];
             let mut gb2 = vec![7.0f32; l.n_out()];
-            l.backward_into(&x, &dz, batch, None, &mut gw2, &mut gb2, threads);
-            assert_eq!(gw2, gw_o, "threads={threads}");
-            assert_eq!(gb2, gb_o, "threads={threads}");
+            l.backward_into(&x, &dz, batch, None, &mut gw2, &mut gb2, exec);
+            assert_eq!(gw2, gw_o, "{label}");
+            assert_eq!(gb2, gb_o, "{label}");
         }
     }
 

@@ -10,9 +10,11 @@
 //! place (`pre[l] → act[l+1]`) so pre-activations survive for backprop
 //! without a copy.
 
+use std::sync::Arc;
+
 use crate::error::{Result, TsnnError};
 use crate::nn::{accuracy, softmax_cross_entropy, Activation, Dropout, MomentumSgd};
-use crate::sparse::WeightInit;
+use crate::sparse::{ops, Exec, WeightInit, WorkerPool};
 use crate::util::Rng;
 
 use super::layer::SparseLayer;
@@ -54,16 +56,45 @@ pub struct Workspace {
     /// their share of the machine so K workers × kernel threads never
     /// oversubscribes cores.
     pub kernel_threads: usize,
+    /// Persistent kernel worker pool (DESIGN.md §9) serving every
+    /// sharded dispatch issued through this workspace — forward, fused
+    /// backward, and (shared via the training loop) topology evolution.
+    /// Created once per resolved budget by [`Workspace::ensure_pool`];
+    /// one pool lives for the whole training run.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Workspace {
     /// Empty workspace with a kernel-shard budget (`0` = one worker per
-    /// available core); buffers are sized lazily on first use.
+    /// available core); buffers are sized lazily on first use, the
+    /// worker pool on the first dispatch (or [`Workspace::ensure_pool`]).
     pub fn with_threads(kernel_threads: usize) -> Self {
         Workspace {
             kernel_threads,
             ..Default::default()
         }
+    }
+
+    /// Make the persistent worker pool match the current
+    /// `kernel_threads` budget: created on first use, replaced if the
+    /// budget changed, dropped (workers joined) at budget ≤ 1. Called
+    /// automatically at every forward/backward entry, so the pool spawns
+    /// exactly once per training run.
+    pub fn ensure_pool(&mut self) {
+        let t = ops::resolve_threads(self.kernel_threads);
+        if t <= 1 {
+            self.pool = None;
+        } else if self.pool.as_ref().map(|p| p.threads()) != Some(t) {
+            self.pool = Some(Arc::new(WorkerPool::new(t)));
+        }
+    }
+
+    /// Shared handle to the persistent pool (None until a multi-thread
+    /// budget is set and [`Workspace::ensure_pool`] / a dispatch ran).
+    /// The training loop hands this to the evolution engine so kernels
+    /// and topology evolution share one pool.
+    pub fn pool(&self) -> Option<Arc<WorkerPool>> {
+        self.pool.clone()
     }
 }
 
@@ -213,9 +244,13 @@ impl SparseMlp {
     ) -> &'w [f32] {
         debug_assert_eq!(x.len(), batch * self.sizes[0]);
         self.resize_workspace(ws, batch);
+        ws.ensure_pool();
         ws.act[0].copy_from_slice(x);
         let n_layers = self.n_layers();
-        let kt = ws.kernel_threads;
+        // one Arc clone per forward keeps the pool borrow out of the
+        // workspace's field borrows below
+        let pool = ws.pool.clone();
+        let exec = Exec::with(ws.kernel_threads, pool.as_deref());
         let mut drop = dropout;
         for (l, layer) in self.layers.iter().enumerate() {
             let n_out = layer.n_out();
@@ -224,7 +259,7 @@ impl SparseMlp {
                 // `act` and `pre` are disjoint fields, so the split borrow
                 // is safe and allocation-free.
                 let (act, pre) = (&ws.act, &mut ws.pre);
-                layer.forward_into(&act[l], batch, &mut pre[l], kt);
+                layer.forward_into(&act[l], batch, &mut pre[l], exec);
             }
             // activation out of place, pre[l] → act[l+1]: the
             // pre-activation survives for backprop without a copy
@@ -262,7 +297,9 @@ impl SparseMlp {
         let n_layers = self.n_layers();
         debug_assert_eq!(dlogits.len(), batch * self.n_classes());
         ws.delta_a[..dlogits.len()].copy_from_slice(dlogits);
-        let kt = ws.kernel_threads;
+        ws.ensure_pool();
+        let pool = ws.pool.clone();
+        let exec = Exec::with(ws.kernel_threads, pool.as_deref());
         let mut grad_sq = 0.0f32;
         for l in (0..n_layers).rev() {
             let layer = &self.layers[l];
@@ -283,7 +320,7 @@ impl SparseMlp {
                 },
                 &mut ws.grad_w[l],
                 &mut ws.grad_b[l],
-                kt,
+                exec,
             );
             grad_sq += ws.grad_w[l].iter().map(|g| g * g).sum::<f32>();
             grad_sq += ws.grad_b[l].iter().map(|g| g * g).sum::<f32>();
@@ -550,6 +587,27 @@ mod tests {
             assert_eq!(seq_ws.grad_w[l], par_ws.grad_w[l], "layer {l} grad_w");
             assert_eq!(seq_ws.grad_b[l], par_ws.grad_b[l], "layer {l} grad_b");
         }
+    }
+
+    #[test]
+    fn workspace_installs_one_persistent_pool() {
+        let (mlp, x, y) = toy();
+        let mut ws = mlp.alloc_workspace(90);
+        ws.kernel_threads = 3;
+        assert!(ws.pool().is_none(), "pool is lazy");
+        let mut rng = Rng::new(0);
+        mlp.compute_gradients(&x, &y, None, &mut ws, &mut rng);
+        let pool = ws.pool().expect("pool installed at the first dispatch");
+        assert_eq!(pool.threads(), 3);
+        mlp.compute_gradients(&x, &y, None, &mut ws, &mut rng);
+        assert!(
+            Arc::ptr_eq(&pool, &ws.pool().unwrap()),
+            "one pool lives for the whole run"
+        );
+        // shrinking the budget to sequential retires the pool
+        ws.kernel_threads = 1;
+        mlp.compute_gradients(&x, &y, None, &mut ws, &mut rng);
+        assert!(ws.pool().is_none());
     }
 
     #[test]

@@ -6,16 +6,20 @@
 //! `values.clone()` + `retain` + COO-merge `insert` (three O(nnz) array
 //! rebuilds and several transient allocations per layer per epoch).
 //!
-//! Parallel structure:
-//! * **layer-level**: each layer evolves on its own scoped worker with an
-//!   independent RNG stream (`root.split(layer_index)`, the exact layout
-//!   of the sequential oracle [`super::evolve_model`]);
-//! * **row-level**: inside a layer, the rebuild pass is sharded over
-//!   contiguous, nnz-balanced row ranges ([`ops::balanced_row_bounds`]) —
-//!   a row range owns the contiguous output slots
-//!   `[new_row_ptr[r0], new_row_ptr[r1])` for columns, values AND the
-//!   remapped velocity, so workers write disjoint sub-slices obtained by
-//!   `split_at_mut` (no atomics, no locks).
+//! Parallel structure — both passes dispatch on the persistent kernel
+//! [`WorkerPool`] (DESIGN.md §9; shared with the sparse kernels when the
+//! training loop hands one in via [`EvolutionEngine::with_pool`]):
+//! * **layer-level**: layers are planned in parallel (heaviest first,
+//!   work-stealing balance), each on an independent RNG stream
+//!   (`root.split(layer_index)`, the exact layout of the sequential
+//!   oracle [`super::evolve_model`]); sub-crossover layers rebuild and
+//!   swap inline on their planning worker;
+//! * **row-level**: each remaining heavy layer's rebuild is sharded over
+//!   contiguous, nnz-balanced row ranges ([`ops::balanced_row_bounds`])
+//!   across the whole pool — a row range owns the contiguous output
+//!   slots `[new_row_ptr[r0], new_row_ptr[r1])` for columns, values AND
+//!   the remapped velocity, so shards write pairwise-disjoint sub-slices
+//!   (no atomics, no locks).
 //!
 //! All randomness (gap-ordinal sampling + regrown-weight draws) happens
 //! in the sequential per-layer planning step, so results are **invariant
@@ -29,19 +33,26 @@
 //! ([`EvolutionEngine::buffer_growth_events`]) lets tests verify it.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::importance::{importance_threshold_from, ImportanceConfig};
 use crate::model::{SparseLayer, SparseMlp};
-use crate::sparse::{ops, CsrMatrix};
+use crate::sparse::{ops, CsrMatrix, Exec, WorkerPool};
 use crate::util::Rng;
 
 use super::{partition_signs, sample_gap_ordinals, thresholds_from_partition, EvolutionConfig};
 
-/// Minimum layer nnz at which the rebuild pass shards rows across worker
-/// threads. The rebuild is a memory-bound copy (~16 bytes per slot), so
-/// below ~10⁵ slots the scoped-thread spawn cost (tens of µs) dominates.
+/// Minimum layer nnz at which the rebuild pass shards rows on the COLD
+/// (pool-less, scoped-spawn) path. The rebuild is a memory-bound copy
+/// (~16 bytes per slot), so below ~10⁵ slots the scoped-thread spawn
+/// cost (tens of µs) dominates.
 const EVOLVE_PAR_MIN_NNZ: usize = 1 << 17;
+
+/// Warm-pool rebuild crossover: a parked-pool dispatch costs single-digit
+/// microseconds (~100× below a scoped spawn, DESIGN.md §9.3), so row
+/// sharding pays off from ~2¹⁴ slots (≈ 256 KiB of copies).
+const EVOLVE_POOL_MIN_NNZ: usize = 1 << 14;
 
 /// Per-layer outcome of one fused evolution epoch.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -187,18 +198,48 @@ impl KeepSpec<'_> {
 #[derive(Debug, Default)]
 pub struct EvolutionEngine {
     per_layer: Vec<LayerWs>,
+    /// Persistent worker pool for the layer- and row-level passes
+    /// (DESIGN.md §9.4): shared with the kernel dispatches when built
+    /// via [`EvolutionEngine::with_pool`], else owned and created lazily
+    /// at the first multi-threaded epoch.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl EvolutionEngine {
-    /// Engine with empty workspaces (sized lazily on first epoch).
+    /// Engine with empty workspaces (sized lazily on first epoch) and an
+    /// owned worker pool (spawned lazily at the first parallel epoch).
     pub fn new() -> Self {
         EvolutionEngine::default()
+    }
+
+    /// Engine sharing the training run's persistent kernel pool, so
+    /// kernels and topology evolution dispatch onto the same parked
+    /// workers (one pool for the whole run).
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        EvolutionEngine {
+            per_layer: Vec::new(),
+            pool: Some(pool),
+        }
     }
 
     /// Total workspace-buffer capacity-growth events so far. Constant
     /// across steady-state epochs — the zero-allocation test hook.
     pub fn buffer_growth_events(&self) -> usize {
         self.per_layer.iter().map(|ws| ws.grows).sum()
+    }
+
+    /// The persistent pool serving this engine's dispatches at the
+    /// resolved budget `threads`: the shared/owned pool when its size
+    /// matches, else an owned pool (re)created once per budget change.
+    fn pool_for(&mut self, threads: usize) -> Arc<WorkerPool> {
+        match &self.pool {
+            Some(p) if p.threads() == threads => Arc::clone(p),
+            _ => {
+                let p = Arc::new(WorkerPool::new(threads));
+                self.pool = Some(Arc::clone(&p));
+                p
+            }
+        }
     }
 
     /// SET evolution step over every layer — the in-place, worker-sharded
@@ -245,8 +286,8 @@ impl EvolutionEngine {
             None => Rng::new(0),
         };
         let threads = ops::resolve_threads(threads);
-        let mut stats = Vec::with_capacity(n_layers);
         if threads <= 1 {
+            let mut stats = Vec::with_capacity(n_layers);
             for (l, (layer, ws)) in mlp
                 .layers
                 .iter_mut()
@@ -255,67 +296,125 @@ impl EvolutionEngine {
             {
                 let imp_l = if l + 1 == n_layers { None } else { imp };
                 let layer_rng = root.split(l as u64);
-                stats.push(evolve_layer_ws(layer, evo, imp_l, layer_rng, ws, 1));
+                stats.push(evolve_layer_ws(layer, evo, imp_l, layer_rng, ws, Exec::sequential()));
             }
-        } else {
-            // Layer-level parallelism capped at the requested budget: at
-            // most `concurrent` layer workers run at once (a deep model
-            // never oversubscribes a small kernel_threads setting).
-            // Layers are scheduled heaviest-first and each batch's spare
-            // budget (threads - batch size) goes to its heaviest layer's
-            // row-sharded rebuild — real models are nnz-skewed, so an
-            // even split would leave the dominant layer unsharded while
-            // tiny-layer workers idle.
-            stats.resize(n_layers, EpochStats::default());
-            let concurrent = threads.min(n_layers);
-            let mut work: Vec<(usize, &mut SparseLayer, &mut LayerWs)> = mlp
-                .layers
-                .iter_mut()
-                .zip(self.per_layer.iter_mut())
-                .enumerate()
-                .map(|(l, (layer, ws))| (l, layer, ws))
-                .collect();
-            work.sort_by_key(|(_, layer, _)| std::cmp::Reverse(layer.weights.nnz()));
-            for batch in work.chunks_mut(concurrent) {
-                let spare = threads - batch.len();
-                std::thread::scope(|scope| {
-                    let mut handles = Vec::with_capacity(batch.len());
-                    for (pos, (l, layer, ws)) in batch.iter_mut().enumerate() {
-                        let l = *l;
-                        let inner = if pos == 0 { 1 + spare } else { 1 };
-                        let imp_l = if l + 1 == n_layers { None } else { imp };
-                        let layer_rng = root.split(l as u64);
-                        let layer: &mut SparseLayer = layer;
-                        let ws: &mut LayerWs = ws;
-                        handles.push((
-                            l,
-                            scope.spawn(move || {
-                                evolve_layer_ws(layer, evo, imp_l, layer_rng, ws, inner)
-                            }),
-                        ));
-                    }
-                    for (l, h) in handles {
-                        stats[l] = h.join().expect("evolution worker panicked");
-                    }
-                });
+            return Ok(stats);
+        }
+        // Both evolution passes dispatch on the persistent pool. Phase A
+        // plans every layer in parallel — heaviest first so the pool's
+        // work-stealing claim order starts the dominant layers early —
+        // and rebuilds+swaps the sub-crossover layers inline on their
+        // planning worker (no second dispatch, and a pool worker never
+        // nests a pool dispatch). Phase B then row-shards each remaining
+        // heavy layer's rebuild across the whole pool — real models are
+        // nnz-skewed, and this hands the dominant layers every worker
+        // instead of the old scheme's "one batch-mate plus spare budget".
+        let pool = self.pool_for(threads);
+        let exec = Exec::pooled(&pool);
+        let mut stats = vec![EpochStats::default(); n_layers];
+        let mut items: Vec<Item<'_>> = mlp
+            .layers
+            .iter_mut()
+            .zip(self.per_layer.iter_mut())
+            .enumerate()
+            .map(|(l, (layer, ws))| Item {
+                l,
+                layer,
+                ws,
+                plan: None,
+                done: false,
+            })
+            .collect();
+        items.sort_by_key(|it| std::cmp::Reverse(it.layer.weights.nnz()));
+        let items_ptr = ops::ShardPtr(items.as_mut_ptr());
+        exec.run(items.len(), |s| {
+            // SAFETY: run() hands out every shard index exactly once, so
+            // shard s has exclusive access to items[s]; the Vec outlives
+            // the dispatch (the §9.2 gather is the release point).
+            let it = unsafe { &mut *items_ptr.0.add(s) };
+            let imp_l = if it.l + 1 == n_layers { None } else { imp };
+            let layer_rng = root.split(it.l as u64);
+            let plan = plan_layer(it.layer, evo, imp_l, layer_rng, it.ws);
+            let heavy = !plan.skip
+                && evolve_shard_count(
+                    exec,
+                    it.layer.weights.nnz().max(plan.new_nnz),
+                    it.layer.n_in(),
+                ) > 1;
+            if !plan.skip && !heavy {
+                rebuild_and_swap(it.layer, it.ws, &plan, Exec::sequential());
+                it.done = true;
             }
+            it.plan = Some(plan);
+        });
+        for it in items.iter_mut() {
+            let plan = it.plan.take().expect("phase A planned every layer");
+            if !plan.skip && !it.done {
+                rebuild_and_swap(it.layer, it.ws, &plan, exec);
+            }
+            stats[it.l] = plan.stats;
         }
         Ok(stats)
     }
 }
 
+/// Per-layer work item of a parallel evolution epoch (phase A shard).
+struct Item<'a> {
+    l: usize,
+    layer: &'a mut SparseLayer,
+    ws: &'a mut LayerWs,
+    plan: Option<LayerPlan>,
+    done: bool,
+}
+
+/// Scalar outcome of one layer's sequential planning step. Slice views
+/// (importance sums, regrowth plan, output buffers) stay in the layer's
+/// workspace and are reborrowed at rebuild time, so the plan can cross
+/// the phase A → phase B boundary by value.
+struct LayerPlan {
+    /// Importance threshold participates in the keep predicate.
+    imp_active: bool,
+    imp_thr: f32,
+    pos_cut: f32,
+    neg_cut: f32,
+    set_active: bool,
+    /// Slot count of the rebuilt CSR.
+    new_nnz: usize,
+    /// Provable no-op for this layer: skip the rebuild entirely.
+    skip: bool,
+    stats: EpochStats,
+}
+
 /// One layer's fused evolution epoch: plan sequentially (thresholds,
 /// survivor counts, gap sampling, weight draws — all on the layer's own
-/// RNG stream), then rebuild the CSR + velocity in one sharded pass and
-/// swap the result into the layer.
+/// RNG stream), then rebuild the CSR + velocity in one (optionally
+/// row-sharded) pass and swap the result into the layer.
 fn evolve_layer_ws(
     layer: &mut SparseLayer,
     evo: Option<&EvolutionConfig>,
     imp: Option<&ImportanceConfig>,
+    rng: Rng,
+    ws: &mut LayerWs,
+    exec: Exec<'_>,
+) -> EpochStats {
+    let plan = plan_layer(layer, evo, imp, rng, ws);
+    if !plan.skip {
+        rebuild_and_swap(layer, ws, &plan, exec);
+    }
+    plan.stats
+}
+
+/// The sequential planning step of one layer's epoch: thresholds,
+/// survivor counts, regrowth sampling and weight draws (all of the
+/// layer's randomness), plus sizing of every output buffer — so the
+/// rebuild pass that follows is pure, allocation-free data movement.
+fn plan_layer(
+    layer: &SparseLayer,
+    evo: Option<&EvolutionConfig>,
+    imp: Option<&ImportanceConfig>,
     mut rng: Rng,
     ws: &mut LayerWs,
-    threads: usize,
-) -> EpochStats {
+) -> LayerPlan {
     let (n_in, n_out) = (layer.n_in(), layer.n_out());
     let nnz0 = layer.weights.nnz();
     let LayerWs {
@@ -355,7 +454,16 @@ fn evolve_layer_ws(
         // min_connections floor, or no active neuron, with SET off):
         // skip the rebuild entirely — exactly what the prune_model
         // oracle does, and no RNG is consumed on this path either way.
-        return EpochStats::default();
+        return LayerPlan {
+            imp_active: false,
+            imp_thr: 0.0,
+            pos_cut: 0.0,
+            neg_cut: 0.0,
+            set_active: false,
+            new_nnz: nnz0,
+            skip: true,
+            stats: EpochStats::default(),
+        };
     }
     let imp_view: Option<(&[f32], f32)> = match imp_thr {
         Some(thr) => Some((imp_sums.as_slice(), thr)),
@@ -499,77 +607,126 @@ fn evolve_layer_ws(
     let new_nnz = new_row_ptr[n_in];
     debug_assert_eq!(new_nnz, total_kept + to_grow);
 
-    // --- pass 2 (row-sharded): compact survivors + merge regrowth into
-    //     the output arrays, velocity remapped through the same merge ---
+    // size the rebuild outputs here so the rebuild pass itself is pure,
+    // allocation-free data movement
     ensure_vec(out_col, new_nnz, nnz0, grows);
     ensure_vec(out_val, new_nnz, nnz0, grows);
     ensure_vec(out_vel, new_nnz, nnz0, grows);
-    let old_vel = layer.velocity.as_slice();
-    let shards = evolve_shard_count(threads, nnz0.max(new_nnz), n_in);
-    if shards <= 1 {
-        rebuild_rows(
-            w,
-            old_vel,
-            keep,
-            grow_cols,
-            grow_vals,
-            grow_ptr,
-            new_row_ptr,
-            0,
-            n_in,
-            out_col,
-            out_val,
-            out_vel,
-        );
-    } else {
-        let bounds = ops::balanced_row_bounds(&w.row_ptr, shards);
-        // shared views of the plan buffers for the worker closures
-        let gc: &[u32] = grow_cols;
-        let gv: &[f32] = grow_vals;
-        let gp: &[usize] = grow_ptr;
-        let nrp: &[usize] = new_row_ptr;
-        std::thread::scope(|scope| {
-            let mut rest_c: &mut [u32] = out_col;
-            let mut rest_v: &mut [f32] = out_val;
-            let mut rest_l: &mut [f32] = out_vel;
-            for win in bounds.windows(2) {
-                let (r0, r1) = (win[0], win[1]);
-                let len = nrp[r1] - nrp[r0];
-                let (hc, tc) = std::mem::take(&mut rest_c).split_at_mut(len);
-                let (hv, tv) = std::mem::take(&mut rest_v).split_at_mut(len);
-                let (hl, tl) = std::mem::take(&mut rest_l).split_at_mut(len);
-                rest_c = tc;
-                rest_v = tv;
-                rest_l = tl;
-                if len == 0 {
-                    continue; // all-empty rows (or an nnz-heavy neighbour)
-                }
-                scope.spawn(move || {
-                    rebuild_rows(w, old_vel, keep, gc, gv, gp, nrp, r0, r1, hc, hv, hl)
-                });
-            }
-        });
-    }
-
-    // --- swap the rebuilt storage into the layer (previous arrays stay
-    //     in the workspace as next epoch's buffers) ---
-    layer.swap_storage(new_row_ptr, out_col, out_val, out_vel);
-    debug_assert!(layer.weights.validate().is_ok());
-    debug_assert_eq!(layer.velocity.len(), layer.weights.nnz());
-    EpochStats {
-        importance_pruned: imp_pruned,
-        pruned: set_pruned,
-        regrown: to_grow,
+    LayerPlan {
+        imp_active: imp_thr.is_some(),
+        imp_thr: imp_thr.unwrap_or(0.0),
+        pos_cut,
+        neg_cut,
+        set_active,
+        new_nnz,
+        skip: false,
+        stats: EpochStats {
+            importance_pruned: imp_pruned,
+            pruned: set_pruned,
+            regrown: to_grow,
+        },
     }
 }
 
-/// Shard count for the rebuild pass: sequential below the copy-bound
-/// crossover or when the row dimension cannot split.
-fn evolve_shard_count(threads: usize, nnz: usize, n_rows: usize) -> usize {
-    if threads <= 1 || n_rows <= 1 || nnz < EVOLVE_PAR_MIN_NNZ {
+/// Pass 2 of one layer's epoch: compact survivors + merge regrowth into
+/// the output arrays (velocity remapped through the same merge), row-
+/// sharded on `exec` above the crossover, then swap the rebuilt storage
+/// into the layer (the previous arrays stay in the workspace as next
+/// epoch's buffers).
+fn rebuild_and_swap(layer: &mut SparseLayer, ws: &mut LayerWs, plan: &LayerPlan, exec: Exec<'_>) {
+    let n_in = layer.n_in();
+    let nnz0 = layer.weights.nnz();
+    let LayerWs {
+        imp_sums,
+        grow_cols,
+        grow_vals,
+        grow_ptr,
+        new_row_ptr,
+        out_col,
+        out_val,
+        out_vel,
+        ..
+    } = ws;
+    {
+        let keep = KeepSpec {
+            imp: if plan.imp_active {
+                Some((imp_sums.as_slice(), plan.imp_thr))
+            } else {
+                None
+            },
+            pos_cut: plan.pos_cut,
+            neg_cut: plan.neg_cut,
+            set_active: plan.set_active,
+        };
+        let w = &layer.weights;
+        let old_vel = layer.velocity.as_slice();
+        let shards = evolve_shard_count(exec, nnz0.max(plan.new_nnz), n_in);
+        if shards <= 1 {
+            rebuild_rows(
+                w,
+                old_vel,
+                keep,
+                grow_cols,
+                grow_vals,
+                grow_ptr,
+                new_row_ptr,
+                0,
+                n_in,
+                out_col,
+                out_val,
+                out_vel,
+            );
+        } else {
+            let bounds = ops::balanced_row_bounds(&w.row_ptr, shards);
+            let bounds = bounds.as_slice();
+            // shared views of the plan buffers for the shard closures
+            let gc: &[u32] = grow_cols;
+            let gv: &[f32] = grow_vals;
+            let gp: &[usize] = grow_ptr;
+            let nrp: &[usize] = new_row_ptr;
+            let pc = ops::ShardPtr(out_col.as_mut_ptr());
+            let pv = ops::ShardPtr(out_val.as_mut_ptr());
+            let pl = ops::ShardPtr(out_vel.as_mut_ptr());
+            exec.run(shards, |s| {
+                let (r0, r1) = (bounds[s], bounds[s + 1]);
+                let (o0, o1) = (nrp[r0], nrp[r1]);
+                if o0 == o1 {
+                    return; // all-empty rows (or an nnz-heavy neighbour)
+                }
+                // SAFETY: new_row_ptr is monotone, so disjoint row
+                // ranges own disjoint contiguous output-slot ranges
+                // [o0, o1) of all three arrays (§8.4); the buffers
+                // outlive the dispatch (§9.2 gather).
+                let (hc, hv, hl) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(pc.0.add(o0), o1 - o0),
+                        std::slice::from_raw_parts_mut(pv.0.add(o0), o1 - o0),
+                        std::slice::from_raw_parts_mut(pl.0.add(o0), o1 - o0),
+                    )
+                };
+                rebuild_rows(w, old_vel, keep, gc, gv, gp, nrp, r0, r1, hc, hv, hl);
+            });
+        }
+    }
+    layer.swap_storage(new_row_ptr, out_col, out_val, out_vel);
+    debug_assert!(layer.weights.validate().is_ok());
+    debug_assert_eq!(layer.velocity.len(), layer.weights.nnz());
+}
+
+/// Shard count for the rebuild pass: sequential when the row dimension
+/// cannot split or below the two-tier copy-bound crossover (warm pool
+/// vs cold scoped spawn, mirroring the kernels' [`ops::POOL_MIN_WORK`] /
+/// [`ops::PAR_MIN_WORK`] split).
+fn evolve_shard_count(exec: Exec<'_>, nnz: usize, n_rows: usize) -> usize {
+    let min_nnz = if exec.is_pooled() {
+        EVOLVE_POOL_MIN_NNZ
+    } else {
+        EVOLVE_PAR_MIN_NNZ
+    };
+    if exec.threads() <= 1 || n_rows <= 1 || nnz < min_nnz {
         return 1;
     }
-    threads.min(n_rows)
+    exec.threads().min(n_rows)
 }
 
 /// Rebuild rows `[r0, r1)`: stream the old slots once, keep survivors
@@ -723,11 +880,35 @@ mod tests {
     }
 
     #[test]
-    fn shard_count_respects_crossover() {
-        assert_eq!(evolve_shard_count(1, usize::MAX, 100), 1);
-        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ - 1, 100), 1);
-        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 100), 8);
-        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 1), 1);
-        assert_eq!(evolve_shard_count(8, EVOLVE_PAR_MIN_NNZ, 3), 3);
+    fn shard_count_respects_two_tier_crossover() {
+        let scoped = Exec::scoped(8);
+        assert_eq!(evolve_shard_count(Exec::sequential(), usize::MAX, 100), 1);
+        assert_eq!(evolve_shard_count(scoped, EVOLVE_PAR_MIN_NNZ - 1, 100), 1);
+        assert_eq!(evolve_shard_count(scoped, EVOLVE_PAR_MIN_NNZ, 100), 8);
+        assert_eq!(evolve_shard_count(scoped, EVOLVE_PAR_MIN_NNZ, 1), 1);
+        assert_eq!(evolve_shard_count(scoped, EVOLVE_PAR_MIN_NNZ, 3), 3);
+        // warm pool: the crossover drops by ~8×
+        let pool = WorkerPool::new(8);
+        let pooled = Exec::pooled(&pool);
+        assert_eq!(evolve_shard_count(pooled, EVOLVE_POOL_MIN_NNZ - 1, 100), 1);
+        assert_eq!(evolve_shard_count(pooled, EVOLVE_POOL_MIN_NNZ, 100), 8);
+        assert!(EVOLVE_POOL_MIN_NNZ < EVOLVE_PAR_MIN_NNZ);
+    }
+
+    #[test]
+    fn engine_shares_a_training_run_pool() {
+        let base = model(&[24, 36, 8], 3);
+        let cfg = EvolutionConfig::default();
+        let mut oracle = base.clone();
+        set::evolve_model(&mut oracle, &cfg, &mut Rng::new(5)).unwrap();
+        let pool = Arc::new(WorkerPool::new(4));
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::with_pool(Arc::clone(&pool));
+        engine.evolve_model(&mut m, &cfg, &mut Rng::new(5), 4).unwrap();
+        assert_same(&oracle, &m, "shared pool");
+        // the shared pool (same budget) served the layer pass — no
+        // private pool was created
+        assert!(pool.dispatch_events() > 0);
+        assert!(Arc::ptr_eq(&pool, &engine.pool.clone().unwrap()));
     }
 }

@@ -4,17 +4,21 @@
 //! for sparse neural networks" needs at the matrix level: CSR storage
 //! ([`csr`]), the training kernels ([`ops`]) — forward, the fused
 //! one-pass backward, and the two-kernel parity oracles — with their
-//! worker-sharded parallel variants (see `rust/DESIGN.md` §4–§5), and
-//! Erdős–Rényi / weight initialisation ([`init`]). No dense weight matrix
-//! is ever materialised on the training path.
+//! worker-sharded parallel variants (see `rust/DESIGN.md` §4–§5), the
+//! persistent kernel worker pool that serves every sharded dispatch on
+//! the hot path ([`pool`], `rust/DESIGN.md` §9), and Erdős–Rényi /
+//! weight initialisation ([`init`]). No dense weight matrix is ever
+//! materialised on the training path.
 
 pub mod csr;
 pub mod init;
 pub mod ops;
+pub mod pool;
 
 pub use csr::CsrMatrix;
 pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};
 pub use ops::{
     spmm_backward_fused, spmm_forward_threaded, spmm_grad_input_threaded,
-    spmm_grad_weights_threaded,
+    spmm_grad_weights_threaded, Exec,
 };
+pub use pool::WorkerPool;

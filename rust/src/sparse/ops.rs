@@ -22,12 +22,20 @@
 //! Each kernel also has (or embeds) a worker-sharded variant
 //! ([`spmm_forward_threaded`], [`spmm_grad_input_threaded`],
 //! [`spmm_grad_weights_threaded`]; [`spmm_backward_fused`] takes its
-//! thread budget directly) that splits the work across scoped OS threads
-//! with **disjoint writes** (no atomics, no locks) and falls back to the
-//! sequential path below a crossover work threshold — see
-//! `rust/DESIGN.md` §4–§5 for the sharding invariants.
+//! thread budget directly) that splits the work across disjoint-write
+//! shards (no atomics, no locks) and falls back to the sequential path
+//! below a crossover work threshold — see `rust/DESIGN.md` §4–§5 for
+//! the sharding invariants.
+//!
+//! Sharded work is dispatched through an [`Exec`] context: on the hot
+//! path the shards run on a persistent, parked [`WorkerPool`]
+//! (DESIGN.md §9; crossover [`POOL_MIN_WORK`]); without a pool the cold
+//! fallback spawns scoped OS threads per dispatch as before (crossover
+//! [`PAR_MIN_WORK`]). Results are bit-identical either way.
 
 use super::csr::CsrMatrix;
+use super::pool::WorkerPool;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Samples per block in the batch-blocked kernels: each W row is streamed
 /// once per block instead of once per sample, cutting weight traffic
@@ -268,17 +276,12 @@ fn grad_weights_rows(
 // value-slot ranges, dx into disjoint column ranges of the [batch, n_in]
 // buffer (strided, hence the raw-pointer shard handle below).
 
-/// Raw shard handle for `dx`: row-sharded workers write disjoint column
-/// ranges of the same `[batch, n_in]` buffer, which cannot be expressed
-/// as `split_at_mut` sub-slices. Workers receive a copy of the base
-/// pointer and only ever write `dx[b * n_in + i]` for rows `i` inside
-/// their own `[row0, row1)` range — disjoint by construction (§5 proof
-/// sketch in DESIGN.md).
-#[derive(Clone, Copy)]
-struct DxPtr(*mut f32);
-// SAFETY: the pointed-to buffer outlives the thread scope and sharded
-// writers touch pairwise-disjoint column sets (see DxPtr docs).
-unsafe impl Send for DxPtr {}
+// The fused kernel's `dx` is handed to shards as a raw [`ShardPtr`]
+// base pointer: row-sharded workers write disjoint *column* ranges of
+// the same `[batch, n_in]` buffer, which cannot be expressed as
+// `split_at_mut` sub-slices. A shard only ever writes `dx[b*n_in + i]`
+// for rows `i` inside its own `[row0, row1)` range — disjoint by
+// construction (§5 proof sketch in DESIGN.md).
 
 /// Fused backward: computes the input gradient `dx = dz · Wᵀ`
 /// (overwritten) **and** the pattern-aligned weight gradient
@@ -314,6 +317,20 @@ pub fn spmm_backward_fused(
     dw: &mut [f32],
     threads: usize,
 ) {
+    spmm_backward_fused_exec(x, dz, batch, w, dx, dw, Exec::scoped(threads));
+}
+
+/// [`spmm_backward_fused`] with an explicit execution context.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_backward_fused_exec(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    exec: Exec<'_>,
+) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(dz.len(), batch * n_out);
@@ -321,40 +338,30 @@ pub fn spmm_backward_fused(
     assert_eq!(dw.len(), w.nnz());
     debug_assert!(w.validate().is_ok());
     // The fused kernel does ~2 MACs per (slot, sample) — count both when
-    // judging the spawn crossover.
-    let shards = shard_count(
-        resolve_threads(threads),
-        batch,
-        w.nnz().saturating_mul(2),
-        w.n_rows,
-    );
-    let dx_ptr = DxPtr(dx.as_mut_ptr());
+    // judging the dispatch crossover.
+    let shards = shard_count(exec, batch, w.nnz().saturating_mul(2), w.n_rows);
+    let dx_ptr = ShardPtr(dx.as_mut_ptr());
     if shards <= 1 {
         // SAFETY: buffer lengths asserted above; full row range.
         unsafe { backward_fused_rows(x, dz, batch, w, 0, w.n_rows, dx_ptr, dw) };
         return;
     }
     let bounds = balanced_row_bounds(&w.row_ptr, shards);
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = dw;
-        for win in bounds.windows(2) {
-            let (r0, r1) = (win[0], win[1]);
-            let len = w.row_ptr[r1] - w.row_ptr[r0];
-            let slab = std::mem::take(&mut rest);
-            let (head, tail) = slab.split_at_mut(len);
-            rest = tail;
-            if r0 == r1 {
-                continue; // nnz-heavy row swallowed this shard's budget
-            }
-            // NOTE: a shard with rows but len == 0 (all-empty rows) must
-            // still run — it owns those rows' dx columns.
-            // SAFETY: disjoint dw sub-slices by split_at_mut; disjoint dx
-            // columns because row ranges are disjoint; buffers outlive
-            // the scope.
-            scope.spawn(move || unsafe {
-                backward_fused_rows(x, dz, batch, w, r0, r1, dx_ptr, head)
-            });
+    let bounds = bounds.as_slice();
+    let dw_ptr = ShardPtr(dw.as_mut_ptr());
+    exec.run(shards, |s| {
+        let (r0, r1) = (bounds[s], bounds[s + 1]);
+        if r0 == r1 {
+            return; // nnz-heavy row swallowed this shard's budget
         }
+        // NOTE: a shard with rows but zero nnz (all-empty rows) must
+        // still run — it owns those rows' dx columns.
+        let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+        // SAFETY: disjoint dw slot ranges (monotone row_ptr) and
+        // disjoint dx columns (disjoint row ranges, §5.1); both buffers
+        // outlive the dispatch.
+        let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+        unsafe { backward_fused_rows(x, dz, batch, w, r0, r1, dx_ptr, head) };
     });
 }
 
@@ -379,7 +386,7 @@ unsafe fn backward_fused_rows(
     w: &CsrMatrix,
     row0: usize,
     row1: usize,
-    dx: DxPtr,
+    dx: ShardPtr<f32>,
     dw: &mut [f32],
 ) {
     debug_assert!(row0 <= row1 && row1 <= w.n_rows);
@@ -411,7 +418,7 @@ unsafe fn backward_fused_block<const BL: usize>(
     w: &CsrMatrix,
     row0: usize,
     row1: usize,
-    dx: DxPtr,
+    dx: ShardPtr<f32>,
     dw: &mut [f32],
 ) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
@@ -505,15 +512,26 @@ pub fn bias_grad(dz: &[f32], batch: usize, n_out: usize, db: &mut [f32]) {
 //   * spmm_backward_fused — same nnz-balanced row sharding, with each
 //     shard owning its rows' dw slots AND dx columns (DESIGN.md §5).
 //
-// Dispatch falls back to the sequential kernel when the work product
-// `batch × nnz` is below [`PAR_MIN_WORK`] — spawning scoped OS threads
-// costs tens of microseconds, which only amortises on large layers.
+// Dispatch falls back to the sequential kernel below a two-tier work
+// threshold: [`POOL_MIN_WORK`] when a persistent [`WorkerPool`] serves
+// the dispatch (warm wakeup, ~single-digit µs), [`PAR_MIN_WORK`] on the
+// cold scoped-spawn fallback (tens of µs per worker).
 
-/// Crossover heuristic: minimum multiply-accumulate count (`batch × nnz`)
-/// at which spawning worker threads beats the sequential kernel. Below
-/// this the `*_threaded` entry points run sequentially on the caller's
-/// thread (≈1 M MACs ≳ 0.5 ms sequential vs ≈50 µs/thread spawn cost).
+/// Cold-path crossover: minimum multiply-accumulate count (`batch × nnz`)
+/// at which **spawning scoped worker threads** beats the sequential
+/// kernel. Below this the pool-less `*_threaded` entry points run
+/// sequentially on the caller's thread (≈1 M MACs ≳ 0.5 ms sequential vs
+/// ≈50 µs/thread spawn cost).
 pub const PAR_MIN_WORK: usize = 1 << 20;
+
+/// Warm-path crossover: minimum `batch × nnz` at which dispatching onto
+/// a parked [`WorkerPool`] beats the sequential kernel. A warm-pool
+/// dispatch costs single-digit microseconds (spin-phase wakeup; ~100×
+/// below the scoped-spawn cost, DESIGN.md §9.3), so the threshold drops
+/// accordingly: 2¹⁵ MACs ≈ 30–60 µs of sequential kernel time keeps the
+/// dispatch overhead ≲ 10%. Re-derived by `benches/perf_pool.rs`'s
+/// crossover sweep (`BENCH_4.json`).
+pub const POOL_MIN_WORK: usize = 1 << 15;
 
 /// Worker threads the machine can usefully run (1 when unknown). Cached.
 pub fn available_threads() -> usize {
@@ -535,17 +553,142 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
-/// Shard count for a kernel invocation: 1 (sequential) when the caller
-/// asked for one thread, the work is below [`PAR_MIN_WORK`], or the
-/// shardable dimension cannot be split; otherwise `min(threads, max_shards)`.
-fn shard_count(threads: usize, batch: usize, nnz: usize, max_shards: usize) -> usize {
-    if threads <= 1 || max_shards <= 1 {
+/// Dispatches that fell back to per-call scoped OS-thread spawning
+/// (process-wide). The steady-state training loop must never move this
+/// counter — every hot-path shard runs on a persistent [`WorkerPool`] —
+/// which `rust/tests/pool.rs` pins.
+static SCOPED_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of scoped-spawn (pool-less) sharded dispatches.
+pub fn scoped_dispatch_events() -> u64 {
+    SCOPED_DISPATCHES.load(Ordering::Relaxed)
+}
+
+/// Kernel execution context: a resolved thread budget plus, on the hot
+/// path, the persistent [`WorkerPool`] that serves it (DESIGN.md §9).
+///
+/// `Copy` so it threads freely through the layer/model call chain; the
+/// lifetime ties it to the pool it borrows (a pool-less `Exec` is
+/// `'static`).
+#[derive(Clone, Copy)]
+pub struct Exec<'p> {
+    threads: usize,
+    pool: Option<&'p WorkerPool>,
+}
+
+impl<'p> Exec<'p> {
+    /// Always-sequential context (the `threads = 1` identity).
+    pub fn sequential() -> Exec<'static> {
+        Exec {
+            threads: 1,
+            pool: None,
+        }
+    }
+
+    /// Cold-path context: shards are spawned as scoped OS threads per
+    /// dispatch (`0` = one per available core). Crossover
+    /// [`PAR_MIN_WORK`]. Kept for pool-less callers and as the parity
+    /// oracle of the pooled path.
+    pub fn scoped(threads: usize) -> Exec<'static> {
+        Exec {
+            threads: resolve_threads(threads),
+            pool: None,
+        }
+    }
+
+    /// Hot-path context: shards run on `pool`'s parked workers (plus the
+    /// calling thread). Crossover [`POOL_MIN_WORK`].
+    pub fn pooled(pool: &'p WorkerPool) -> Exec<'p> {
+        Exec {
+            threads: pool.threads(),
+            pool: Some(pool),
+        }
+    }
+
+    /// Context from an optional pool: pooled when available, otherwise
+    /// the scoped fallback at `threads`.
+    pub fn with(threads: usize, pool: Option<&'p WorkerPool>) -> Exec<'p> {
+        match pool {
+            Some(p) => Exec::pooled(p),
+            None => Exec::scoped(threads),
+        }
+    }
+
+    /// Resolved worker budget (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when dispatches run on a persistent pool.
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// The crossover work threshold of this context (two-tier: warm pool
+    /// vs cold scoped spawn).
+    pub fn min_work(&self) -> usize {
+        if self.pool.is_some() {
+            POOL_MIN_WORK
+        } else {
+            PAR_MIN_WORK
+        }
+    }
+
+    /// Scatter-gather `f` over `n_shards` disjoint-write shards: on the
+    /// pool when present, else scoped OS threads (counted in
+    /// [`scoped_dispatch_events`]), inline for `n_shards <= 1`. Exactly
+    /// the contract of [`WorkerPool::run`].
+    pub fn run<F: Fn(usize) + Sync>(&self, n_shards: usize, f: F) {
+        match self.pool {
+            Some(p) if n_shards > 1 => p.run(n_shards, f),
+            _ => {
+                if n_shards > 1 {
+                    SCOPED_DISPATCHES.fetch_add(1, Ordering::Relaxed);
+                    std::thread::scope(|scope| {
+                        let f = &f;
+                        for s in 1..n_shards {
+                            scope.spawn(move || f(s));
+                        }
+                        f(0);
+                    });
+                } else {
+                    for s in 0..n_shards {
+                        f(s);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Raw mutable base pointer handed to shard closures that write
+/// pairwise-disjoint regions of one caller-owned buffer. `Send + Sync`
+/// because pool/scoped shards share the closure by reference; soundness
+/// rests on the disjoint-region contract each call site documents.
+pub(crate) struct ShardPtr<T>(pub(crate) *mut T);
+// manual impls: the pointer is Copy regardless of T (a derive would
+// wrongly bound `T: Copy`)
+impl<T> Clone for ShardPtr<T> {
+    fn clone(&self) -> Self {
+        ShardPtr(self.0)
+    }
+}
+impl<T> Copy for ShardPtr<T> {}
+unsafe impl<T: Send> Send for ShardPtr<T> {}
+unsafe impl<T: Send> Sync for ShardPtr<T> {}
+
+/// Shard count for a kernel invocation: 1 (sequential) when the context
+/// has one thread, the work is below the context's two-tier crossover
+/// ([`Exec::min_work`]), or the shardable dimension cannot be split;
+/// otherwise `min(threads, max_shards)`.
+fn shard_count(exec: Exec<'_>, batch: usize, nnz: usize, max_shards: usize) -> usize {
+    if exec.threads() <= 1 || max_shards <= 1 {
         return 1;
     }
-    if batch.saturating_mul(nnz) < PAR_MIN_WORK {
+    if batch.saturating_mul(nnz) < exec.min_work() {
         return 1;
     }
-    threads.min(max_shards)
+    exec.threads().min(max_shards)
 }
 
 /// Partition rows into `shards` contiguous ranges of roughly equal nnz.
@@ -602,21 +745,36 @@ pub fn spmm_forward_threaded(
     out: &mut [f32],
     threads: usize,
 ) {
-    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), batch);
+    spmm_forward_exec(x, batch, w, out, Exec::scoped(threads));
+}
+
+/// [`spmm_forward_threaded`] with an explicit execution context: pooled
+/// dispatch on the hot path, scoped spawns on the cold fallback
+/// (bit-identical results either way).
+pub fn spmm_forward_exec(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32], exec: Exec<'_>) {
+    let shards = shard_count(exec, batch, w.nnz(), batch);
     if shards <= 1 {
         return spmm_forward(x, batch, w, out);
     }
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(out.len(), batch * n_out);
-    // shards > 1 implies batch ≥ 2 and nnz ≥ 1, hence n_in, n_out ≥ 1 and
-    // every chunk length below is non-zero.
+    // shards > 1 implies batch ≥ 2 and nnz ≥ 1, hence n_in, n_out ≥ 1.
     let rows_per = batch.div_ceil(shards);
-    std::thread::scope(|scope| {
-        for (xc, oc) in x.chunks(rows_per * n_in).zip(out.chunks_mut(rows_per * n_out)) {
-            let b = oc.len() / n_out;
-            scope.spawn(move || spmm_forward(xc, b, w, oc));
+    let out_ptr = ShardPtr(out.as_mut_ptr());
+    exec.run(shards, |s| {
+        let b0 = (s * rows_per).min(batch);
+        let b1 = ((s + 1) * rows_per).min(batch);
+        if b0 >= b1 {
+            return;
         }
+        // SAFETY: shard s writes only out rows [b0, b1) — contiguous,
+        // pairwise-disjoint sample ranges of a buffer that outlives the
+        // dispatch (the run() gather is the release point, §9.2).
+        let oc = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr.0.add(b0 * n_out), (b1 - b0) * n_out)
+        };
+        spmm_forward(&x[b0 * n_in..b1 * n_in], b1 - b0, w, oc);
     });
 }
 
@@ -630,7 +788,18 @@ pub fn spmm_grad_input_threaded(
     dx: &mut [f32],
     threads: usize,
 ) {
-    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), batch);
+    spmm_grad_input_exec(dz, batch, w, dx, Exec::scoped(threads));
+}
+
+/// [`spmm_grad_input_threaded`] with an explicit execution context.
+pub fn spmm_grad_input_exec(
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dx: &mut [f32],
+    exec: Exec<'_>,
+) {
+    let shards = shard_count(exec, batch, w.nnz(), batch);
     if shards <= 1 {
         return spmm_grad_input(dz, batch, w, dx);
     }
@@ -638,11 +807,19 @@ pub fn spmm_grad_input_threaded(
     assert_eq!(dz.len(), batch * n_out);
     assert_eq!(dx.len(), batch * n_in);
     let rows_per = batch.div_ceil(shards);
-    std::thread::scope(|scope| {
-        for (zc, xc) in dz.chunks(rows_per * n_out).zip(dx.chunks_mut(rows_per * n_in)) {
-            let b = zc.len() / n_out;
-            scope.spawn(move || spmm_grad_input(zc, b, w, xc));
+    let dx_ptr = ShardPtr(dx.as_mut_ptr());
+    exec.run(shards, |s| {
+        let b0 = (s * rows_per).min(batch);
+        let b1 = ((s + 1) * rows_per).min(batch);
+        if b0 >= b1 {
+            return;
         }
+        // SAFETY: disjoint contiguous dx sample ranges per shard (see
+        // spmm_forward_exec).
+        let xc = unsafe {
+            std::slice::from_raw_parts_mut(dx_ptr.0.add(b0 * n_in), (b1 - b0) * n_in)
+        };
+        spmm_grad_input(&dz[b0 * n_out..b1 * n_out], b1 - b0, w, xc);
     });
 }
 
@@ -660,7 +837,19 @@ pub fn spmm_grad_weights_threaded(
     dw: &mut [f32],
     threads: usize,
 ) {
-    let shards = shard_count(resolve_threads(threads), batch, w.nnz(), w.n_rows);
+    spmm_grad_weights_exec(x, dz, batch, w, dw, Exec::scoped(threads));
+}
+
+/// [`spmm_grad_weights_threaded`] with an explicit execution context.
+pub fn spmm_grad_weights_exec(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    dw: &mut [f32],
+    exec: Exec<'_>,
+) {
+    let shards = shard_count(exec, batch, w.nnz(), w.n_rows);
     if shards <= 1 {
         return spmm_grad_weights(x, dz, batch, w, dw);
     }
@@ -669,19 +858,19 @@ pub fn spmm_grad_weights_threaded(
     assert_eq!(dw.len(), w.nnz());
     debug_assert!(w.validate().is_ok());
     let bounds = balanced_row_bounds(&w.row_ptr, shards);
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = dw;
-        for win in bounds.windows(2) {
-            let (r0, r1) = (win[0], win[1]);
-            let len = w.row_ptr[r1] - w.row_ptr[r0];
-            let slab = std::mem::take(&mut rest);
-            let (head, tail) = slab.split_at_mut(len);
-            rest = tail;
-            if len == 0 {
-                continue; // nnz-heavy row swallowed this shard's budget
-            }
-            scope.spawn(move || grad_weights_rows(x, dz, batch, w, r0, r1, head));
+    let bounds = bounds.as_slice();
+    let dw_ptr = ShardPtr(dw.as_mut_ptr());
+    exec.run(shards, |s| {
+        let (r0, r1) = (bounds[s], bounds[s + 1]);
+        let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+        if k0 == k1 {
+            return; // nnz-heavy row swallowed this shard's budget
         }
+        // SAFETY: shard s writes only dw slots [k0, k1) — row_ptr is
+        // monotone, so the value-slot ranges of disjoint row ranges are
+        // disjoint (§4.1); the buffer outlives the dispatch.
+        let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+        grad_weights_rows(x, dz, batch, w, r0, r1, head);
     });
 }
 
@@ -1007,6 +1196,84 @@ mod tests {
         let mut dw = vec![0.0f32; w.nnz()];
         spmm_grad_weights_threaded(&[], &[], 0, &w, &mut dw, 8);
         assert!(dw.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pooled_kernels_shard_in_the_old_subcrossover_gap_and_match_exactly() {
+        // POOL_MIN_WORK <= batch·nnz < PAR_MIN_WORK: the pooled context
+        // genuinely shards where the scoped fallback stays sequential —
+        // and both produce bit-identical results.
+        let mut rng = Rng::new(50);
+        let w = init::erdos_renyi(128, 128, 0.25, &mut rng, &init::WeightInit::Normal(0.5));
+        let batch = 64;
+        let work = batch * w.nnz();
+        assert!(
+            (POOL_MIN_WORK..PAR_MIN_WORK).contains(&work),
+            "test must sit in the old sub-crossover gap, work = {work}"
+        );
+        let x = random_x(&mut rng, batch, 128, 0.3);
+        let dz = random_x(&mut rng, batch, 128, 0.0);
+        let pool = WorkerPool::new(4);
+        let exec = Exec::pooled(&pool);
+
+        let (mut a, mut b) = (vec![0.0f32; batch * 128], vec![0.0f32; batch * 128]);
+        spmm_forward(&x, batch, &w, &mut a);
+        spmm_forward_exec(&x, batch, &w, &mut b, exec);
+        assert_eq!(a, b, "forward");
+        let (mut a, mut b) = (vec![0.0f32; batch * 128], vec![0.0f32; batch * 128]);
+        spmm_grad_input(&dz, batch, &w, &mut a);
+        spmm_grad_input_exec(&dz, batch, &w, &mut b, exec);
+        assert_eq!(a, b, "grad_input");
+        let (mut a, mut b) = (vec![0.0f32; w.nnz()], vec![0.0f32; w.nnz()]);
+        spmm_grad_weights(&x, &dz, batch, &w, &mut a);
+        spmm_grad_weights_exec(&x, &dz, batch, &w, &mut b, exec);
+        assert_eq!(a, b, "grad_weights");
+        let (dx_o, dw_o) = oracle_backward(&x, &dz, batch, &w);
+        let mut dx = vec![f32::NAN; batch * 128];
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_backward_fused_exec(&x, &dz, batch, &w, &mut dx, &mut dw, exec);
+        assert_eq!(dx, dx_o, "fused dx");
+        assert_eq!(dw, dw_o, "fused dw");
+        // all four kernels really dispatched onto the pool
+        assert_eq!(pool.dispatch_events(), 4);
+    }
+
+    #[test]
+    fn scoped_dispatch_counter_moves_on_the_cold_path_only() {
+        // The counter is process-global and other tests may add to it
+        // concurrently, so both assertions are monotonic deltas.
+        let mut rng = Rng::new(51);
+        let w = init::erdos_renyi(256, 512, 0.35, &mut rng, &init::WeightInit::Normal(0.5));
+        let batch = 64;
+        assert!(batch * w.nnz() >= PAR_MIN_WORK);
+        let x = random_x(&mut rng, batch, 256, 0.3);
+        let mut out = vec![0.0f32; batch * 512];
+        let before = scoped_dispatch_events();
+        spmm_forward_threaded(&x, batch, &w, &mut out, 4);
+        assert!(
+            scoped_dispatch_events() > before,
+            "pool-less sharded dispatch must count as a scoped spawn"
+        );
+        // pooled dispatch of the same problem moves the pool's counter,
+        // not necessarily the global scoped one (cannot assert equality
+        // under test concurrency, but the pool counter is private)
+        let pool = WorkerPool::new(4);
+        let d0 = pool.dispatch_events();
+        spmm_forward_exec(&x, batch, &w, &mut out, Exec::pooled(&pool));
+        assert_eq!(pool.dispatch_events(), d0 + 1);
+    }
+
+    #[test]
+    fn exec_crossover_is_two_tier() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(Exec::pooled(&pool).min_work(), POOL_MIN_WORK);
+        assert_eq!(Exec::scoped(8).min_work(), PAR_MIN_WORK);
+        assert!(POOL_MIN_WORK < PAR_MIN_WORK);
+        // gap-sized work: pooled shards, scoped falls back
+        let work = 1 << 18;
+        assert_eq!(shard_count(Exec::pooled(&pool), work, 1, 64), 8);
+        assert_eq!(shard_count(Exec::scoped(8), work, 1, 64), 1);
+        assert_eq!(shard_count(Exec::sequential(), usize::MAX, 1, 64), 1);
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Persistent kernel worker pool (DESIGN.md §9).
+//!
+//! Every sharded hot path used to pay a scoped-OS-thread spawn (~50 µs
+//! per worker, §4.3) on **every** forward, fused-backward and evolution
+//! dispatch, which forced the `PAR_MIN_WORK = 2²⁰` crossover and left
+//! small/medium layers sequential. [`WorkerPool`] amortises that cost
+//! across the whole training run: `threads − 1` workers are spawned
+//! once, parked between dispatches on a Mutex+Condvar epoch barrier
+//! (with a bounded spin phase so back-to-back kernel dispatches skip the
+//! futex round-trip entirely), and woken with a single epoch bump.
+//!
+//! [`WorkerPool::run`]`(n_shards, f)` is a scatter-gather primitive with
+//! the exact disjoint-write contract of the `std::thread::scope` blocks
+//! it replaces: `f(s)` is invoked exactly once for every shard index
+//! `s ∈ [0, n_shards)` (distributed over the workers *and* the calling
+//! thread by an atomic claim counter), and `run` does not return until
+//! every worker has checked out of the epoch — so shard closures may
+//! borrow from the caller's stack frame even though the workers are
+//! long-lived OS threads. No per-dispatch allocation is performed
+//! (pinned by `rust/tests/pool_alloc.rs`).
+//!
+//! Memory-ordering argument for the disjoint-write handoff: a shard
+//! closure's writes happen-before the caller's return from `run` because
+//! every worker ends its epoch with a `Release` decrement of the active
+//! counter, and the gather side reads that counter with `Acquire` (spin
+//! phase) or under the same mutex the decrement's condvar notification
+//! holds (park phase). Job publication is ordered by the state mutex:
+//! workers only read the task pointer after acquiring the lock that the
+//! dispatcher held while writing it. See DESIGN.md §9.2.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Bounded spin before parking (workers waiting for the next epoch) or
+/// before blocking (the dispatcher gathering an epoch). Back-to-back
+/// kernel dispatches — the steady-state training loop issues several per
+/// step — land well inside this window, so the hot path never touches
+/// the futex; an idle pool parks after a few microseconds.
+const SPIN_LIMIT: u32 = 1 << 12;
+
+/// A dispatch's shard closure, lifetime-erased. Safe because `run` never
+/// returns (even by unwinding) until every worker has checked out of the
+/// epoch, so the erased reference cannot outlive the real closure.
+type Task = &'static (dyn Fn(usize) + Sync);
+
+/// The published job of the current epoch.
+#[derive(Clone, Copy)]
+struct Job {
+    task: Task,
+    n_shards: usize,
+}
+
+/// Mutex-protected barrier state.
+struct State {
+    /// Current epoch; a bump (always paired with a fresh `job`) wakes
+    /// the workers.
+    epoch: u64,
+    /// The job of the current epoch (`None` between dispatches).
+    job: Option<Job>,
+    /// Set once by `Drop`; workers exit at the next wakeup.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between epochs.
+    work_cv: Condvar,
+    /// The dispatcher parks here waiting for the epoch to drain.
+    done_cv: Condvar,
+    /// Next unclaimed shard index of the current epoch (work-stealing
+    /// distribution: whichever thread gets there first takes the shard).
+    next_shard: AtomicUsize,
+    /// Workers that have not yet checked out of the current epoch.
+    active: AtomicUsize,
+    /// Lock-free copy of `state.epoch` for the workers' spin phase.
+    epoch_hint: AtomicU64,
+    /// A shard closure panicked on a worker (re-raised on the caller).
+    panicked: AtomicBool,
+    /// Re-entrance / concurrent-dispatch guard (a pool serves exactly
+    /// one dispatch at a time; nesting would corrupt the barrier).
+    dispatching: AtomicBool,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        // -- spin-then-park until the epoch moves past `seen` --
+        let mut spins = 0u32;
+        while shared.epoch_hint.load(Ordering::Acquire) == seen && spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+            spins += 1;
+        }
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            st.job.expect("epoch advanced without a published job")
+        };
+        // -- claim-and-run shards until the epoch's supply drains --
+        let ran = catch_unwind(AssertUnwindSafe(|| loop {
+            let s = shared.next_shard.fetch_add(1, Ordering::Relaxed);
+            if s >= job.n_shards {
+                break;
+            }
+            (job.task)(s);
+        }));
+        if ran.is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        // -- check out: the Release pairs with the gather side's Acquire,
+        //    publishing this worker's shard writes to the caller --
+        if shared.active.fetch_sub(1, Ordering::Release) == 1 {
+            // Last one out wakes the dispatcher if it parked. Taking the
+            // mutex before notifying closes the lost-wakeup window: the
+            // gather side re-checks `active` under this same mutex before
+            // waiting.
+            let _st = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Close out an epoch: block until every worker has checked out, retire
+/// the erased task reference, consume the panic flag, and only THEN
+/// reopen the pool for the next dispatch — the strict ordering
+/// guarantees a worker panic can never be erased by a subsequent
+/// dispatch before the current caller has observed it. Returns whether
+/// a worker shard panicked during the epoch.
+fn gather(shared: &Shared) -> bool {
+    let mut spins = 0u32;
+    while shared.active.load(Ordering::Acquire) != 0 {
+        if spins < SPIN_LIMIT {
+            std::hint::spin_loop();
+            spins += 1;
+        } else {
+            let mut st = shared.state.lock().unwrap();
+            while shared.active.load(Ordering::Acquire) != 0 {
+                st = shared.done_cv.wait(st).unwrap();
+            }
+            break;
+        }
+    }
+    shared.state.lock().unwrap().job = None;
+    let panicked = shared.panicked.swap(false, Ordering::AcqRel);
+    shared.dispatching.store(false, Ordering::Release);
+    panicked
+}
+
+/// Unwind-safety net around the caller's own shard loop: if the
+/// caller's shard closure panics, `Drop` still runs [`gather`] before
+/// the closure (which the workers borrow) is dropped off the unwinding
+/// stack. Disarmed on the normal path, where `run` gathers explicitly
+/// so it can observe the worker-panic flag.
+struct Gather<'a> {
+    shared: &'a Shared,
+    armed: bool,
+}
+
+impl Drop for Gather<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // already unwinding — swallow any worker-panic flag
+            gather(self.shared);
+        }
+    }
+}
+
+/// Spawn-once / park-between-dispatches worker pool serving every
+/// sharded kernel and evolution pass of a training run (DESIGN.md §9).
+///
+/// A pool of `threads` has `threads − 1` parked OS workers; the calling
+/// thread is always the remaining participant, so a `threads = 1` pool
+/// owns no workers and [`WorkerPool::run`] degenerates to an inline
+/// sequential loop.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use tsnn::sparse::WorkerPool;
+///
+/// let pool = WorkerPool::new(4);
+/// let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+/// pool.run(32, |s| {
+///     hits[s].fetch_add(1, Ordering::Relaxed);
+/// });
+/// assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+/// ```
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    dispatches: AtomicU64,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("dispatches", &self.dispatches.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Pool with a total budget of `threads` participants (`0` = one per
+    /// available core): the caller plus `threads − 1` spawned workers.
+    pub fn new(threads: usize) -> Self {
+        let threads = super::ops::resolve_threads(threads).max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_shard: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            epoch_hint: AtomicU64::new(0),
+            panicked: AtomicBool::new(false),
+            dispatching: AtomicBool::new(false),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("tsnn-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+            dispatches: AtomicU64::new(0),
+        }
+    }
+
+    /// Total participant budget (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Dispatches that actually woke the workers (test hook; inline
+    /// sequential fallbacks for `n_shards <= 1` are not counted).
+    pub fn dispatch_events(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Scatter-gather: invoke `f(s)` exactly once for every shard index
+    /// `s ∈ [0, n_shards)`, distributed over the parked workers and the
+    /// calling thread, returning only when all shards have completed and
+    /// every worker has checked out of the epoch.
+    ///
+    /// The disjoint-write contract matches the `thread::scope` blocks
+    /// this replaces: distinct shard indices may write disjoint regions
+    /// of caller-owned buffers without synchronisation, and all shard
+    /// writes happen-before the return (§9.2).
+    ///
+    /// Panics if a shard closure panics (on any thread), and on nested /
+    /// concurrent dispatch of the same pool — a pool serves one dispatch
+    /// at a time (coordinator workers own separate sub-pools, §9.4).
+    pub fn run<F: Fn(usize) + Sync>(&self, n_shards: usize, f: F) {
+        if n_shards <= 1 || self.handles.is_empty() {
+            for s in 0..n_shards {
+                f(s);
+            }
+            return;
+        }
+        if self.shared.dispatching.swap(true, Ordering::AcqRel) {
+            panic!("WorkerPool::run is not re-entrant (nested or concurrent dispatch)");
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let task: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only — the Gather guard below keeps
+        // this function from returning (or unwinding past `f`) until
+        // every worker has checked out, so no worker can observe the
+        // reference after `f` is dead.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.next_shard.store(0, Ordering::Relaxed);
+            self.shared.active.store(self.handles.len(), Ordering::Relaxed);
+            st.job = Some(Job { task, n_shards });
+            st.epoch += 1;
+            self.shared.epoch_hint.store(st.epoch, Ordering::Release);
+            self.shared.work_cv.notify_all();
+        }
+        // guard first: see Gather docs
+        let mut guard = Gather {
+            shared: &self.shared,
+            armed: true,
+        };
+        // the calling thread is a full participant
+        loop {
+            let s = self.shared.next_shard.fetch_add(1, Ordering::Relaxed);
+            if s >= n_shards {
+                break;
+            }
+            f(s);
+        }
+        guard.armed = false;
+        if gather(&self.shared) {
+            panic!("WorkerPool: a shard task panicked on a pool worker");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            // knock spinning workers out of the lock-free phase too
+            self.shared.epoch_hint.fetch_add(1, Ordering::Release);
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for &n in &[0usize, 1, 2, 3, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "shard {s} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline_sequential() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        // order is deterministic (caller runs all shards in sequence)
+        let order = Mutex::new(Vec::new());
+        pool.run(5, |s| order.lock().unwrap().push(s));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(pool.dispatch_events(), 0);
+    }
+
+    #[test]
+    fn reuse_across_many_dispatches() {
+        let pool = WorkerPool::new(3);
+        let sum = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(8, |s| {
+                sum.fetch_add(s + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 200 * (1..=8).sum::<usize>());
+        assert_eq!(pool.dispatch_events(), 200);
+    }
+
+    #[test]
+    fn shard_writes_are_visible_after_run() {
+        // the §9.2 handoff: plain (non-atomic) disjoint writes must be
+        // visible to the caller once run() returns
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0u64; 1024];
+        let ptr = buf.as_mut_ptr() as usize;
+        pool.run(16, |s| {
+            for i in 0..64 {
+                // SAFETY: shard s writes only [s*64, (s+1)*64)
+                unsafe { *(ptr as *mut u64).add(s * 64 + i) = (s * 64 + i) as u64 };
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |s| {
+                if s % 2 == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // the pool must still serve subsequent dispatches
+        let n = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_cores() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), super::super::ops::available_threads());
+    }
+}

@@ -121,8 +121,11 @@ pub fn train_model(
     let mut ws = model.alloc_workspace(cfg.batch);
     // Kernel-shard budget rides in the workspace so every forward and
     // every fused backward (`SparseLayer::backward_into`, DESIGN.md §5)
-    // below — train steps, eval, gradflow probes — inherits it.
+    // below — train steps, eval, gradflow probes — inherits it. The
+    // persistent worker pool (DESIGN.md §9) spawns once here and serves
+    // every sharded dispatch of the whole run.
     ws.kernel_threads = cfg.kernel_threads;
+    ws.ensure_pool();
     let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
     let dropout = if cfg.dropout > 0.0 {
         Some(Dropout::new(cfg.dropout))
@@ -137,8 +140,12 @@ pub fn train_model(
     // Topology evolution runs on the worker-sharded in-place engine
     // (DESIGN.md §8): importance pruning and the SET prune-regrow cycle
     // fused into one structural pass per layer, workspace buffers reused
-    // across epochs, sharded on the same kernel_threads budget.
-    let mut evolver = set::EvolutionEngine::new();
+    // across epochs — dispatched on the SAME persistent pool as the
+    // kernels, so the steady-state loop never spawns a thread.
+    let mut evolver = match ws.pool() {
+        Some(pool) => set::EvolutionEngine::with_pool(pool),
+        None => set::EvolutionEngine::new(),
+    };
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     let mut best_test = 0.0f32;

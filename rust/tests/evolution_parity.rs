@@ -356,6 +356,35 @@ fn evolve_step_reuses_workspace_buffers_in_steady_state() {
 }
 
 #[test]
+fn engine_with_shared_training_pool_matches_oracle() {
+    // the train loop hands its kernel pool to the engine
+    // (EvolutionEngine::with_pool) — evolution dispatched on that shared
+    // pool must still be bit-exact at every pool size
+    use std::sync::Arc;
+    use tsnn::sparse::WorkerPool;
+
+    let base = model(&[30, 60, 40, 6], 6.0, 123);
+    let cfg = EvolutionConfig::default();
+    let mut oracle = base.clone();
+    set::evolve_model(&mut oracle, &cfg, &mut Rng::new(9)).unwrap();
+    for threads in thread_counts() {
+        let pool = Arc::new(WorkerPool::new(threads));
+        let mut m = base.clone();
+        let mut engine = EvolutionEngine::with_pool(Arc::clone(&pool));
+        engine
+            .evolve_model(&mut m, &cfg, &mut Rng::new(9), threads)
+            .unwrap();
+        assert_models_equal(&oracle, &m, &format!("shared pool threads {threads}"));
+        if threads > 1 {
+            assert!(
+                pool.dispatch_events() > 0,
+                "threads {threads}: the layer pass must dispatch on the shared pool"
+            );
+        }
+    }
+}
+
+#[test]
 fn thread_count_zero_means_auto_and_stays_exact() {
     let base = model(&[30, 40, 6], 6.0, 33);
     let cfg = EvolutionConfig::default();

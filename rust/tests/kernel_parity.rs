@@ -7,8 +7,13 @@
 //! writes with unchanged per-slot accumulation order), so most assertions
 //! use `==`; one oracle check also pins both paths against the dense
 //! reference within 1e-5 to guard against a shared systematic error.
+//!
+//! Every parity assertion runs the sharded kernels on BOTH dispatch
+//! backends — the cold scoped-spawn fallback and a persistent
+//! [`WorkerPool`] of the same size (DESIGN.md §9) — across pool sizes
+//! {1, 2, 8} (or the single `KERNEL_THREADS` budget CI pins).
 
-use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit};
+use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit, WorkerPool};
 use tsnn::util::Rng;
 
 mod common;
@@ -20,54 +25,73 @@ fn random_x(rng: &mut Rng, batch: usize, n: usize, zero_frac: f64) -> Vec<f32> {
         .collect()
 }
 
-/// Run all three kernels sequentially and sharded at `threads`, asserting
-/// exact agreement on every output buffer.
+/// Run all three kernels sequentially and sharded at `threads` — on the
+/// scoped fallback AND on a pool of the same size — asserting exact
+/// agreement on every output buffer.
 fn assert_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     let x = random_x(rng, batch, n_in, 0.3);
     let dz = random_x(rng, batch, n_out, 0.0);
-    let label = format!("{n_in}x{n_out} nnz={} batch={batch} threads={threads}", w.nnz());
+    let pool = WorkerPool::new(threads);
+    for (path, exec) in [
+        ("scoped", ops::Exec::scoped(threads)),
+        ("pooled", ops::Exec::pooled(&pool)),
+    ] {
+        let label = format!(
+            "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path}",
+            w.nnz()
+        );
 
-    let mut seq = vec![0.0f32; batch * n_out];
-    let mut par = vec![0.0f32; batch * n_out];
-    ops::spmm_forward(&x, batch, w, &mut seq);
-    ops::spmm_forward_threaded(&x, batch, w, &mut par, threads);
-    assert_eq!(seq, par, "forward mismatch ({label})");
+        let mut seq = vec![0.0f32; batch * n_out];
+        let mut par = vec![0.0f32; batch * n_out];
+        ops::spmm_forward(&x, batch, w, &mut seq);
+        ops::spmm_forward_exec(&x, batch, w, &mut par, exec);
+        assert_eq!(seq, par, "forward mismatch ({label})");
 
-    let mut seq = vec![0.0f32; batch * n_in];
-    let mut par = vec![0.0f32; batch * n_in];
-    ops::spmm_grad_input(&dz, batch, w, &mut seq);
-    ops::spmm_grad_input_threaded(&dz, batch, w, &mut par, threads);
-    assert_eq!(seq, par, "grad_input mismatch ({label})");
+        let mut seq = vec![0.0f32; batch * n_in];
+        let mut par = vec![0.0f32; batch * n_in];
+        ops::spmm_grad_input(&dz, batch, w, &mut seq);
+        ops::spmm_grad_input_exec(&dz, batch, w, &mut par, exec);
+        assert_eq!(seq, par, "grad_input mismatch ({label})");
 
-    let mut seq = vec![0.0f32; w.nnz()];
-    let mut par = vec![0.0f32; w.nnz()];
-    ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
-    ops::spmm_grad_weights_threaded(&x, &dz, batch, w, &mut par, threads);
-    assert_eq!(seq, par, "grad_weights mismatch ({label})");
+        let mut seq = vec![0.0f32; w.nnz()];
+        let mut par = vec![0.0f32; w.nnz()];
+        ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
+        ops::spmm_grad_weights_exec(&x, &dz, batch, w, &mut par, exec);
+        assert_eq!(seq, par, "grad_weights mismatch ({label})");
+    }
 }
 
-/// Run the fused one-pass backward at `threads` against the sequential
-/// two-kernel oracle (`spmm_grad_input` + `spmm_grad_weights`), asserting
-/// exact agreement on both outputs. `dx` starts NaN-poisoned so any slot
-/// the fused kernel fails to overwrite (e.g. an all-empty row's column)
-/// trips the comparison.
+/// Run the fused one-pass backward at `threads` — scoped and pooled —
+/// against the sequential two-kernel oracle (`spmm_grad_input` +
+/// `spmm_grad_weights`), asserting exact agreement on both outputs. `dx`
+/// starts NaN-poisoned so any slot the fused kernel fails to overwrite
+/// (e.g. an all-empty row's column) trips the comparison.
 fn assert_fused_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     let x = random_x(rng, batch, n_in, 0.3);
     let dz = random_x(rng, batch, n_out, 0.0);
-    let label = format!("{n_in}x{n_out} nnz={} batch={batch} threads={threads}", w.nnz());
 
     let mut dx_oracle = vec![0.0f32; batch * n_in];
     let mut dw_oracle = vec![0.0f32; w.nnz()];
     ops::spmm_grad_input(&dz, batch, w, &mut dx_oracle);
     ops::spmm_grad_weights(&x, &dz, batch, w, &mut dw_oracle);
 
-    let mut dx = vec![f32::NAN; batch * n_in];
-    let mut dw = vec![0.0f32; w.nnz()];
-    ops::spmm_backward_fused(&x, &dz, batch, w, &mut dx, &mut dw, threads);
-    assert_eq!(dx, dx_oracle, "fused dx mismatch ({label})");
-    assert_eq!(dw, dw_oracle, "fused dw mismatch ({label})");
+    let pool = WorkerPool::new(threads);
+    for (path, exec) in [
+        ("scoped", ops::Exec::scoped(threads)),
+        ("pooled", ops::Exec::pooled(&pool)),
+    ] {
+        let label = format!(
+            "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path}",
+            w.nnz()
+        );
+        let mut dx = vec![f32::NAN; batch * n_in];
+        let mut dw = vec![0.0f32; w.nnz()];
+        ops::spmm_backward_fused_exec(&x, &dz, batch, w, &mut dx, &mut dw, exec);
+        assert_eq!(dx, dx_oracle, "fused dx mismatch ({label})");
+        assert_eq!(dw, dw_oracle, "fused dw mismatch ({label})");
+    }
 }
 
 #[test]

@@ -1,0 +1,188 @@
+//! Pool-specific integration suite (DESIGN.md §9): barrier correctness
+//! under reuse, clean shutdown, coordinator-style sub-pool nesting, and
+//! the PR-4 acceptance pin — the steady-state training loop (forward,
+//! fused backward, topology evolution) issues ZERO scoped-thread spawns
+//! once the persistent pool is warm.
+//!
+//! Every test is `pool_`-prefixed so CI's wakeup-race stress job can
+//! re-run exactly this surface 20× (`cargo test --release pool_ --
+//! --test-threads=1`).
+//!
+//! NOTE: `pool_steady_state_train_loop_spawns_no_scoped_threads` asserts
+//! a ZERO delta of the process-global scoped-dispatch counter, so no
+//! other test in this binary may trigger a scoped (pool-less) sharded
+//! dispatch — everything here dispatches on pools only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use tsnn::model::SparseMlp;
+use tsnn::nn::{Activation, MomentumSgd};
+use tsnn::set::{EvolutionConfig, EvolutionEngine};
+use tsnn::sparse::{ops, WeightInit, WorkerPool};
+use tsnn::util::Rng;
+
+mod common;
+use common::thread_counts;
+
+#[test]
+fn pool_runs_every_shard_exactly_once_at_every_size() {
+    for threads in thread_counts() {
+        let pool = WorkerPool::new(threads);
+        for &n in &[0usize, 1, 2, threads, 3 * threads + 1, 97] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, |s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    1,
+                    "shard {s} of {n} (pool size {threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_across_hundreds_of_dispatches_stays_exact() {
+    // same pool, alternating shard counts and shapes — the barrier must
+    // not leak state between epochs (wakeup-race stress surface)
+    let pool = WorkerPool::new(4);
+    let mut total = 0usize;
+    let sum = AtomicUsize::new(0);
+    for round in 0..300 {
+        let n = 2 + (round % 7);
+        pool.run(n, |s| {
+            sum.fetch_add(s + 1, Ordering::Relaxed);
+        });
+        total += (1..=n).sum::<usize>();
+    }
+    assert_eq!(sum.load(Ordering::Relaxed), total);
+    assert_eq!(pool.dispatch_events(), 300);
+}
+
+#[test]
+fn pool_drop_joins_workers_cleanly() {
+    // churn pools (with and without intervening dispatches): every drop
+    // must join its workers without hanging or panicking
+    for i in 0..40 {
+        let pool = WorkerPool::new(1 + (i % 5));
+        if i % 2 == 0 {
+            let n = AtomicUsize::new(0);
+            pool.run(8, |_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 8);
+        }
+        drop(pool);
+    }
+}
+
+#[test]
+fn pool_nested_coordinator_subpools_do_not_deadlock() {
+    // coordinator topology: K scoped data-parallel workers, each owning
+    // a private kernel sub-pool (DESIGN.md §9.4), all dispatching at once
+    std::thread::scope(|scope| {
+        for k in 0..3 {
+            scope.spawn(move || {
+                let pool = WorkerPool::new(2);
+                let mut rng = Rng::new(k as u64);
+                let mlp = SparseMlp::new(
+                    &[64, 128, 8],
+                    8.0,
+                    Activation::Relu,
+                    &WeightInit::HeUniform,
+                    &mut rng,
+                )
+                .unwrap();
+                let mut ws = mlp.alloc_workspace(16);
+                ws.kernel_threads = 2;
+                let x: Vec<f32> = (0..16 * 64).map(|_| rng.normal()).collect();
+                let y: Vec<u32> = (0..16).map(|i| (i % 8) as u32).collect();
+                for _ in 0..50 {
+                    pool.run(4, |_| std::hint::black_box(()));
+                    let mut r = Rng::new(1);
+                    mlp.compute_gradients(&x, &y, None, &mut ws, &mut r);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pool_steady_state_train_loop_spawns_no_scoped_threads() {
+    // PR-4 acceptance pin: all four sharded kernel entry points AND both
+    // evolution passes dispatch through the shared pool — the warm
+    // steady-state loop never moves the scoped-spawn counter.
+    let mut rng = Rng::new(7);
+    let mut mlp = SparseMlp::new(
+        &[256, 512, 64, 10],
+        30.0,
+        Activation::AllRelu { alpha: 0.6 },
+        &WeightInit::HeUniform,
+        &mut rng,
+    )
+    .unwrap();
+    let batch = 64;
+    // the first hidden layer must clear even the old scoped crossover so
+    // this loop genuinely exercises sharded dispatch, and the rebuild
+    // must clear the pooled evolution crossover
+    let nnz0 = mlp.layers[0].weights.nnz();
+    assert!(batch * nnz0 >= ops::PAR_MIN_WORK, "nnz0 = {nnz0}");
+    let x: Vec<f32> = (0..batch * 256).map(|_| rng.normal()).collect();
+    let y: Vec<u32> = (0..batch).map(|i| (i % 10) as u32).collect();
+
+    let mut ws = mlp.alloc_workspace(batch);
+    ws.kernel_threads = 4;
+    ws.ensure_pool();
+    let pool = ws.pool().expect("multi-thread budget installs a pool");
+    let mut evolver = EvolutionEngine::with_pool(Arc::clone(&pool));
+    let opt = MomentumSgd::default();
+    let evo = EvolutionConfig::default();
+
+    // warm up: first dispatches, workspace sizing, engine buffers
+    for _ in 0..2 {
+        mlp.train_step(&x, &y, &opt, 0.01, None, &mut ws, &mut rng);
+    }
+    evolver.evolve_model(&mut mlp, &evo, &mut rng, 4).unwrap();
+
+    let scoped_before = ops::scoped_dispatch_events();
+    let pool_before = pool.dispatch_events();
+    for _ in 0..3 {
+        for _ in 0..2 {
+            mlp.train_step(&x, &y, &opt, 0.01, None, &mut ws, &mut rng);
+        }
+        evolver.evolve_model(&mut mlp, &evo, &mut rng, 4).unwrap();
+    }
+    assert_eq!(
+        ops::scoped_dispatch_events(),
+        scoped_before,
+        "steady-state train loop must not spawn scoped threads"
+    );
+    let pool_dispatches = pool.dispatch_events() - pool_before;
+    // per step: forward shards layer 0 (and possibly layer 1) + fused
+    // backward ditto; per evolution: the layer pass + heavy rebuilds —
+    // at minimum the 6 train steps and 3 evolution layer passes all hit
+    // the pool
+    assert!(
+        pool_dispatches >= 6 + 3,
+        "expected the hot loop on the pool, saw {pool_dispatches} dispatches"
+    );
+}
+
+#[test]
+fn pool_kernel_threads_env_budget_is_exercised() {
+    // KERNEL_THREADS pins thread_counts(); make sure the pinned budget
+    // builds a working pool (CI sweeps 1/4/8)
+    for threads in thread_counts() {
+        let pool = WorkerPool::new(threads);
+        assert_eq!(pool.threads(), ops::resolve_threads(threads));
+        let n = AtomicUsize::new(0);
+        pool.run(2 * threads, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 2 * threads);
+    }
+}

@@ -1,0 +1,67 @@
+//! Zero-allocation gate for the pool's dispatch path (DESIGN.md §9): a
+//! warm [`WorkerPool`] must serve ≥ 100 scatter-gather dispatches
+//! without a single heap allocation — the growth-counter pattern of the
+//! evolution engine (PR 3), applied at the allocator level because the
+//! pool owns no growable buffers to count.
+//!
+//! Lives in its own integration binary so the process-global counting
+//! allocator sees no concurrent allocations from unrelated tests (this
+//! file deliberately contains exactly one test).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use tsnn::sparse::WorkerPool;
+
+/// System allocator with a process-global allocation-event counter.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers to the System allocator for every operation.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn pool_dispatch_allocates_nothing_after_warmup() {
+    let pool = WorkerPool::new(4);
+    let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+    // warm up: worker stacks, lazy TLS, condvar internals
+    for _ in 0..20 {
+        pool.run(16, |s| {
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for _ in 0..150 {
+        pool.run(16, |s| {
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let grown = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        grown, 0,
+        "warm pool dispatch must be allocation-free (saw {grown} allocation events \
+         across 150 dispatches)"
+    );
+    // and the dispatches really ran
+    assert_eq!(hits[0].load(Ordering::Relaxed), 170);
+}
