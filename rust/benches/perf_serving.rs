@@ -1,0 +1,325 @@
+//! §Perf — sparse inference serving (DESIGN.md §10): closed-loop
+//! traffic replay against a [`ServeEngine`] sweeping offered QPS to
+//! saturation. Emits a machine-readable `BENCH_5.json` at the
+//! repository root.
+//!
+//! Three measurement families:
+//!   * `format_crossover` — one 256×256 layer served CSR vs forced
+//!     dense across a density grid (bit-parity asserted first), deriving
+//!     the measured density knee that motivates the default
+//!     `DENSE_CROSSOVER_DENSITY` layout knob.
+//!   * `qps_step` — the tentpole protocol: a trained model goes through
+//!     the real save→`ServeModel::load` path (formats asserted: the
+//!     ε-sparse hidden layers stay CSR, the dense output layer falls
+//!     back), then `serve::loadgen::sweep` replays paced traffic at
+//!     geometrically growing offered QPS until the engine saturates —
+//!     once through a batching front end (`max_batch` 32) and once
+//!     batch-1 — recording p50/p95/p99 latency and achieved throughput
+//!     per step.
+//!   * `peak` — the knee of each sweep. Acceptance: adaptive batching
+//!     must buy ≥ 1.5× peak throughput over the batch-1 front end.
+//!
+//! Knobs: TSNN_REQUESTS (per step, default 400), TSNN_QPS0 (default
+//! 250), TSNN_STEPS (default 8), TSNN_ITERS (crossover timing, default
+//! 30), TSNN_THREADS (batcher kernel budget, default 0 = all cores),
+//! TSNN_REPO_ROOT.
+
+use std::time::Duration;
+
+use tsnn::bench::{env_f64, env_usize, host_info, time_it, write_repo_root_json, Table};
+use tsnn::prelude::*;
+use tsnn::serve::{sweep, LayerFormat, LayoutOptions, ServeWorkspace, SweepConfig};
+use tsnn::sparse::erdos_renyi;
+use tsnn::util::json::{obj, Json};
+
+fn random_x(rng: &mut Rng, n: usize, zero_frac: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.bernoulli(zero_frac) {
+                0.0
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+/// Single-layer model with an exact density (the crossover family needs
+/// direct control, not the ε scaling of `SparseMlp::new`).
+fn single_layer_mlp(n: usize, density: f64, seed: u64) -> SparseMlp {
+    let mut rng = Rng::new(seed);
+    let weights = erdos_renyi(n, n, density, &mut rng, &WeightInit::Normal(0.3));
+    let layer = SparseLayer {
+        bias: (0..n).map(|_| rng.normal() * 0.1).collect(),
+        velocity: vec![0.0; weights.nnz()],
+        bias_velocity: vec![0.0; n],
+        weights,
+        activation: Activation::Linear,
+        srelu: None,
+    };
+    SparseMlp {
+        sizes: vec![n, n],
+        layers: vec![layer],
+    }
+}
+
+/// Training-path logits (sequential oracle for the parity asserts).
+fn training_logits(mlp: &SparseMlp, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut ws = mlp.alloc_workspace(batch);
+    ws.kernel_threads = 1;
+    mlp.forward(x, batch, &mut ws, None).to_vec()
+}
+
+fn fmt_name(f: LayerFormat) -> &'static str {
+    match f {
+        LayerFormat::Csr => "csr",
+        LayerFormat::Dense => "dense",
+    }
+}
+
+fn main() {
+    let iters = env_usize("TSNN_ITERS", 30);
+    let threads = env_usize("TSNN_THREADS", 0);
+    let sweep_cfg = SweepConfig {
+        start_qps: env_f64("TSNN_QPS0", 250.0),
+        growth: 2.0,
+        max_steps: env_usize("TSNN_STEPS", 8),
+        requests_per_step: env_usize("TSNN_REQUESTS", 400).max(1),
+        saturation_ratio: 0.9,
+    };
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- 1. format crossover: CSR vs dense-fallback serving ----
+    let mut xover = Table::new(
+        "§Perf — serving format crossover (256×256 layer, batch 32): CSR vs dense-fallback",
+        &["density", "nnz", "csr µs", "dense µs", "dense/csr", "faster"],
+    );
+    let mut measured_knee: Option<f64> = None;
+    {
+        let (n, batch) = (256usize, 32usize);
+        let force_csr = LayoutOptions { dense_crossover: 2.0 };
+        let force_dense = LayoutOptions { dense_crossover: 0.0 };
+        let mut rng = Rng::new(17);
+        for &density in &[0.02f64, 0.05, 0.1, 0.2, 0.4, 0.8] {
+            let mlp = single_layer_mlp(n, density, 100 + (density * 1000.0) as u64);
+            let nnz = mlp.layers[0].weights.nnz();
+            let as_csr = ServeModel::from_mlp(&mlp, &force_csr);
+            let as_dense = ServeModel::from_mlp(&mlp, &force_dense);
+            assert_eq!(as_csr.layers[0].format(), LayerFormat::Csr);
+            assert_eq!(as_dense.layers[0].format(), LayerFormat::Dense);
+            let x = random_x(&mut rng, batch * n, 0.3);
+            // bit-parity of both formats vs the training path, then
+            // against each other, before any timing
+            let oracle = training_logits(&mlp, &x, batch);
+            let mut ws = ServeWorkspace::with_threads(1);
+            assert_eq!(oracle, as_csr.forward(&x, batch, &mut ws), "csr parity d={density}");
+            assert_eq!(oracle, as_dense.forward(&x, batch, &mut ws), "dense parity d={density}");
+            let (csr_secs, _) = time_it(3, iters, || {
+                std::hint::black_box(as_csr.forward(&x, batch, &mut ws).len());
+            });
+            let (dense_secs, _) = time_it(3, iters, || {
+                std::hint::black_box(as_dense.forward(&x, batch, &mut ws).len());
+            });
+            let ratio = dense_secs / csr_secs.max(1e-12);
+            if ratio <= 1.0 && measured_knee.is_none() {
+                measured_knee = Some(density);
+            }
+            xover.row(vec![
+                format!("{density:.2}"),
+                nnz.to_string(),
+                format!("{:.2}", csr_secs * 1e6),
+                format!("{:.2}", dense_secs * 1e6),
+                format!("{ratio:.2}"),
+                if ratio <= 1.0 { "dense" } else { "csr" }.into(),
+            ]);
+            rows.push(obj(vec![
+                ("op", "format_crossover".into()),
+                ("n", n.into()),
+                ("batch", batch.into()),
+                ("density", density.into()),
+                ("nnz", nnz.into()),
+                ("csr_ns", (csr_secs * 1e9).into()),
+                ("dense_ns", (dense_secs * 1e9).into()),
+                ("dense_vs_csr", ratio.into()),
+            ]));
+        }
+    }
+    xover.emit("perf_serving_crossover.csv");
+    let knee = measured_knee.unwrap_or(1.0);
+    println!(
+        "measured dense-fallback knee: density ≈ {knee:.2} (layout default {})\n",
+        tsnn::serve::DENSE_CROSSOVER_DENSITY
+    );
+    rows.push(obj(vec![
+        ("op", "crossover_derived".into()),
+        ("measured_knee_density", knee.into()),
+        ("default_knob", tsnn::serve::DENSE_CROSSOVER_DENSITY.into()),
+    ]));
+
+    // ---- 2. the served model: train-shaped, checkpointed, reloaded ----
+    // [512 → 1024 → 512 → 10] at ε = 20: hidden layers land at ~6%
+    // density (CSR), the 512→10 head crosses the knee (dense fallback).
+    let mut rng = Rng::new(23);
+    let mlp = SparseMlp::new(
+        &[512, 1024, 512, 10],
+        20.0,
+        Activation::AllRelu { alpha: 0.6 },
+        &WeightInit::HeUniform,
+        &mut rng,
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join("tsnn_perf_serving");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model.tsnn");
+    tsnn::model::checkpoint::save(&mlp, &ckpt).unwrap();
+    let model = ServeModel::load(&ckpt, &LayoutOptions::default()).unwrap();
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut fmt_table = Table::new(
+        "§Perf — served layout (save → ServeModel::load)",
+        &["layer", "shape", "density", "nnz", "format", "KiB"],
+    );
+    for (l, layer) in model.layers.iter().enumerate() {
+        fmt_table.row(vec![
+            l.to_string(),
+            format!("{}x{}", layer.n_in(), layer.n_out()),
+            format!("{:.3}", layer.density),
+            layer.nnz().to_string(),
+            fmt_name(layer.format()).into(),
+            format!("{:.1}", layer.memory_bytes() as f64 / 1024.0),
+        ]);
+    }
+    fmt_table.emit("perf_serving_layout.csv");
+    let formats: Vec<LayerFormat> = model.layers.iter().map(|l| l.format()).collect();
+    assert_eq!(
+        formats,
+        [LayerFormat::Csr, LayerFormat::Csr, LayerFormat::Dense],
+        "ε=20 model must exercise both serving formats"
+    );
+    // end-to-end parity of the reloaded layout before any load testing
+    {
+        let x = random_x(&mut rng, 8 * 512, 0.3);
+        let oracle = training_logits(&mlp, &x, 8);
+        for t in [1usize, threads] {
+            let mut ws = ServeWorkspace::with_threads(t);
+            assert_eq!(oracle, model.forward(&x, 8, &mut ws), "serving parity t{t}");
+        }
+    }
+
+    // ---- 3. QPS sweep: batched vs batch-1 front end ----
+    let n_feat = model.n_features();
+    let features = random_x(&mut rng, 64 * n_feat, 0.3);
+    let mut qps_table = Table::new(
+        "§Perf — offered-QPS sweep to saturation (closed-loop replay)",
+        &["mode", "offered", "achieved", "p50 µs", "p95 µs", "p99 µs", "rejected", "sat"],
+    );
+    let mut peaks: Vec<(&str, f64)> = Vec::new();
+    for (mode, max_batch) in [("batched", 32usize), ("batch1", 1usize)] {
+        let cfg = ServeConfig {
+            max_batch,
+            max_queue: 1024,
+            max_wait: Duration::from_millis(2),
+            kernel_threads: threads,
+            latency_window: sweep_cfg.requests_per_step,
+        };
+        let mut engine = ServeEngine::new(model.clone(), cfg);
+        let reports = sweep(&engine, &features, n_feat, &sweep_cfg);
+        engine.shutdown();
+        let mut peak = 0.0f64;
+        for r in &reports {
+            peak = peak.max(r.achieved_qps);
+            qps_table.row(vec![
+                mode.into(),
+                format!("{:.0}", r.offered_qps),
+                format!("{:.0}", r.achieved_qps),
+                format!("{:.1}", r.latency.p50_ns as f64 / 1e3),
+                format!("{:.1}", r.latency.p95_ns as f64 / 1e3),
+                format!("{:.1}", r.latency.p99_ns as f64 / 1e3),
+                r.rejected.to_string(),
+                if r.saturated { "*" } else { "" }.into(),
+            ]);
+            rows.push(obj(vec![
+                ("op", "qps_step".into()),
+                ("mode", mode.into()),
+                ("threads", threads.into()),
+                ("offered_qps", r.offered_qps.into()),
+                ("achieved_qps", r.achieved_qps.into()),
+                ("completed", (r.completed as usize).into()),
+                ("rejected", (r.rejected as usize).into()),
+                ("p50_us", (r.latency.p50_ns as f64 / 1e3).into()),
+                ("p95_us", (r.latency.p95_ns as f64 / 1e3).into()),
+                ("p99_us", (r.latency.p99_ns as f64 / 1e3).into()),
+                ("mean_us", (r.latency.mean_ns / 1e3).into()),
+                ("saturated", r.saturated.into()),
+            ]));
+        }
+        peaks.push((mode, peak));
+        rows.push(obj(vec![
+            ("op", "peak".into()),
+            ("mode", mode.into()),
+            ("peak_qps", peak.into()),
+        ]));
+    }
+    qps_table.emit("perf_serving_qps.csv");
+
+    let batched_peak = peaks.iter().find(|(m, _)| *m == "batched").unwrap().1;
+    let batch1_peak = peaks.iter().find(|(m, _)| *m == "batch1").unwrap().1;
+    let peak_ratio = batched_peak / batch1_peak.max(1e-9);
+    println!(
+        "peak throughput: batched {batched_peak:.0} qps vs batch-1 {batch1_peak:.0} qps \
+         ({peak_ratio:.2}x)\n"
+    );
+
+    let doc = obj(vec![
+        ("bench", "perf_serving".into()),
+        ("pr", 5usize.into()),
+        ("status", "measured".into()),
+        ("host", host_info()),
+        ("threads", threads.into()),
+        ("requests_per_step", sweep_cfg.requests_per_step.into()),
+        ("start_qps", sweep_cfg.start_qps.into()),
+        (
+            "model",
+            obj(vec![
+                (
+                    "sizes",
+                    Json::Arr(model.sizes.iter().map(|&s| s.into()).collect()),
+                ),
+                (
+                    "formats",
+                    Json::Arr(formats.iter().map(|&f| fmt_name(f).into()).collect()),
+                ),
+                ("serve_bytes", model.memory_bytes().into()),
+                ("training_bytes", mlp.memory_bytes().into()),
+            ]),
+        ),
+        ("batched_peak_qps", batched_peak.into()),
+        ("batch1_peak_qps", batch1_peak.into()),
+        ("peak_ratio", peak_ratio.into()),
+        ("measured_knee_density", knee.into()),
+        (
+            "acceptance",
+            obj(vec![
+                ("batched_peak_vs_batch1_min_ratio", Json::from(1.5f64)),
+                (
+                    "note",
+                    "serving forward bit-exact vs the training path (asserted before \
+                     timing, both formats); adaptive batching must buy >= 1.5x peak \
+                     throughput over the batch-1 front end on the reloaded checkpoint"
+                        .into(),
+                ),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_repo_root_json("BENCH_5.json", &doc) {
+        Ok(path) => println!("(json written to {})", path.display()),
+        Err(e) => eprintln!("warn: could not write BENCH_5.json: {e}"),
+    }
+
+    println!(
+        "acceptance gates: `peak` rows — batched front end >= 1.50x batch-1 peak \
+         throughput; parity asserted bit-exact (training path vs both serving \
+         formats) before every timed family."
+    );
+}

@@ -30,6 +30,9 @@ pub enum TsnnError {
     /// Checkpoint serialization problems.
     Checkpoint(String),
 
+    /// Inference serving-engine failure.
+    Serve(String),
+
     /// IO wrapper.
     Io(std::io::Error),
 }
@@ -44,6 +47,7 @@ impl fmt::Display for TsnnError {
             TsnnError::Runtime(m) => write!(f, "runtime error: {m}"),
             TsnnError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             TsnnError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            TsnnError::Serve(m) => write!(f, "serving error: {m}"),
             // transparent: delegate straight to the wrapped error
             TsnnError::Io(e) => fmt::Display::fmt(e, f),
         }

@@ -25,6 +25,11 @@
 //! gradient and pattern-aligned weight gradient in a single CSR
 //! traversal per layer.
 //!
+//! Trained checkpoints are served by the [`serve`] subsystem
+//! (DESIGN.md §10): a weights-only inference layout with per-layer
+//! CSR/dense format selection, a bounded-queue request-batching front
+//! end on the same worker pool, and p50/p95/p99 latency accounting.
+//!
 //! ## Quick example
 //!
 //! Build a truly-sparse MLP, run a forward pass, and take one training
@@ -67,6 +72,7 @@ pub mod importance;
 pub mod model;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod set;
 pub mod sparse;
 pub mod train;
@@ -79,6 +85,7 @@ pub mod prelude {
     pub use crate::error::{Result, TsnnError};
     pub use crate::model::{Batcher, SparseLayer, SparseMlp, Workspace};
     pub use crate::nn::{Activation, Dropout, LrSchedule, MomentumSgd};
+    pub use crate::serve::{ServeConfig, ServeEngine, ServeModel};
     pub use crate::sparse::{CsrMatrix, WeightInit};
     pub use crate::train::{train_sequential, TrainReport};
     pub use crate::util::Rng;

@@ -6,9 +6,12 @@
 //!   parallel <dataset> [k=v ...]     WASAP/WASSP parallel training (§2.3)
 //!   baseline <arch> [k=v ...]        masked-dense XLA baseline ("Keras")
 //!   inspect <checkpoint>             print a checkpoint's structure
+//!   serve-bench [checkpoint]         serving QPS sweep (DESIGN.md §10)
 //!
 //! Common options: --paper (full paper-scale dataset), --seed N,
 //! --save PATH, --workers K, --sync, --phase1 N, --phase2 N, --verbose.
+
+use std::time::Duration;
 
 use tsnn::bench::fmt_duration;
 use tsnn::cli::Args;
@@ -18,6 +21,9 @@ use tsnn::data::datasets;
 use tsnn::error::{Result, TsnnError};
 use tsnn::prelude::Rng;
 use tsnn::runtime::{default_artifacts_dir, Manifest, MaskedDenseTrainer};
+use tsnn::serve::{
+    sweep, LayerFormat, LayoutOptions, ServeConfig, ServeEngine, ServeModel, SweepConfig,
+};
 use tsnn::train::{train_sequential_opts, TrainOptions};
 use tsnn::util::logging;
 
@@ -49,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         "parallel" => cmd_parallel(args),
         "baseline" => cmd_baseline(args),
         "inspect" => cmd_inspect(args),
+        "serve-bench" => cmd_serve_bench(args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -68,7 +75,10 @@ fn print_help() {
          \x20 train <dataset> [k=v ...]     sequential SET training\n\
          \x20 parallel <dataset> [k=v ...]  WASAP/WASSP parallel training\n\
          \x20 baseline <arch> [k=v ...]     masked-dense XLA baseline\n\
-         \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\n\
+         \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\
+         \x20 serve-bench [checkpoint]      serving layout + offered-QPS sweep\n\
+         \x20   (--qps N --steps N --requests N --batch N --queue N\n\
+         \x20    --wait-us N --threads N)\n\n\
          options: --paper --seed N --save PATH --workers K --sync\n\
          \x20        --phase1 N --phase2 N --verbose --gradflow N\n\
          overrides: epochs= batch= epsilon= lr= alpha= activation= init=\n\
@@ -199,9 +209,9 @@ fn cmd_parallel(args: &Args) -> Result<()> {
             .opt_parse("phase1", cfg.epochs.saturating_sub(cfg.epochs / 5).max(1))?,
         phase2_epochs: args.opt_parse("phase2", (cfg.epochs / 5).max(1))?,
         synchronous: args.flag("sync"),
-            hot_start: true,
-            grad_clip: 5.0,
-        };
+        hot_start: true,
+        grad_clip: 5.0,
+    };
     let mut rng = Rng::new(cfg.seed);
     let data = datasets::generate(&spec, &mut rng)?;
     log::info!(
@@ -296,19 +306,110 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| TsnnError::Config("inspect needs a checkpoint path".into()))?;
     let model = tsnn::model::checkpoint::load(std::path::Path::new(path))?;
+    let serve = ServeModel::from_mlp(&model, &LayoutOptions::default());
     println!("sizes: {:?}", model.sizes);
     println!("neurons: {}", model.neuron_count());
     println!("weights: {}", model.weight_count());
     println!("memory: {} KiB", model.memory_bytes() / 1024);
+    println!("serve memory: {} KiB (weights-only layout)", serve.memory_bytes() / 1024);
     for (l, layer) in model.layers.iter().enumerate() {
         println!(
-            "  layer {l}: {}x{} nnz={} density={:.4} act={:?}",
+            "  layer {l}: {}x{} nnz={} density={:.4} act={:?} serve={}",
             layer.n_in(),
             layer.n_out(),
             layer.weights.nnz(),
             layer.weights.density(),
-            layer.activation
+            layer.activation,
+            format_name(serve.layers[l].format())
         );
+    }
+    Ok(())
+}
+
+fn format_name(f: LayerFormat) -> &'static str {
+    match f {
+        LayerFormat::Csr => "csr",
+        LayerFormat::Dense => "dense",
+    }
+}
+
+/// Serving layout + closed-loop offered-QPS sweep on a checkpoint (or a
+/// synthetic ε-sparse model when no path is given) — the CLI face of
+/// `benches/perf_serving.rs`.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let opts = LayoutOptions::default();
+    let model = match args.positional.first() {
+        Some(path) => ServeModel::load(std::path::Path::new(path), &opts)?,
+        None => {
+            let mut rng = Rng::new(args.opt_parse("seed", 42u64)?);
+            let mlp = tsnn::model::SparseMlp::new(
+                &[256, 512, 10],
+                20.0,
+                tsnn::nn::Activation::AllRelu { alpha: 0.6 },
+                &tsnn::sparse::WeightInit::HeUniform,
+                &mut rng,
+            )?;
+            ServeModel::from_mlp(&mlp, &opts)
+        }
+    };
+    println!("serving layout ({} KiB):", model.memory_bytes() / 1024);
+    for (l, layer) in model.layers.iter().enumerate() {
+        println!(
+            "  layer {l}: {}x{} nnz={} density={:.4} format={}",
+            layer.n_in(),
+            layer.n_out(),
+            layer.nnz(),
+            layer.density,
+            format_name(layer.format())
+        );
+    }
+
+    let requests = args.opt_parse("requests", 200usize)?.max(1);
+    let sweep_cfg = SweepConfig {
+        start_qps: args.opt_parse("qps", 200.0f64)?,
+        growth: 2.0,
+        max_steps: args.opt_parse("steps", 6usize)?,
+        requests_per_step: requests,
+        saturation_ratio: 0.9,
+    };
+    let cfg = ServeConfig {
+        max_batch: args.opt_parse("batch", 32usize)?,
+        max_queue: args.opt_parse("queue", 1024usize)?,
+        max_wait: Duration::from_micros(args.opt_parse("wait-us", 2000u64)?),
+        kernel_threads: args.opt_parse("threads", 0usize)?,
+        latency_window: requests,
+    };
+    let n_feat = model.n_features();
+    let mut rng = Rng::new(7);
+    let features: Vec<f32> = (0..64 * n_feat)
+        .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+        .collect();
+
+    let mut engine = ServeEngine::new(model, cfg);
+    let reports = sweep(&engine, &features, n_feat, &sweep_cfg);
+    engine.shutdown();
+
+    let mut table = tsnn::bench::Table::new(
+        "serving sweep — offered QPS to saturation",
+        &["offered", "achieved", "completed", "rejected", "p50 µs", "p95 µs", "p99 µs", "sat"],
+    );
+    for r in &reports {
+        table.row(vec![
+            format!("{:.0}", r.offered_qps),
+            format!("{:.0}", r.achieved_qps),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            format!("{:.1}", r.latency.p50_ns as f64 / 1e3),
+            format!("{:.1}", r.latency.p95_ns as f64 / 1e3),
+            format!("{:.1}", r.latency.p99_ns as f64 / 1e3),
+            if r.saturated { "*" } else { "" }.into(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    if let Some(knee) = reports.iter().find(|r| r.saturated) {
+        println!("saturation at ~{:.0} offered qps", knee.offered_qps);
+    } else {
+        println!("no saturation reached within the sweep (raise --qps or --steps)");
     }
     Ok(())
 }

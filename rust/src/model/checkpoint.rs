@@ -23,6 +23,10 @@ use super::mlp::SparseMlp;
 const MAGIC: &[u8; 4] = b"TSNN";
 const VERSION: u32 = 1;
 
+/// Largest JSON header a well-formed checkpoint can carry (the header
+/// is a few numbers per layer — 16 MiB is orders of magnitude of slack).
+const MAX_HEADER_BYTES: usize = 16 << 20;
+
 fn act_name(a: &Activation) -> String {
     match a {
         Activation::Relu => "relu".into(),
@@ -141,6 +145,13 @@ pub fn load(path: &Path) -> Result<SparseMlp> {
         return Err(TsnnError::Checkpoint(format!("unsupported version {version}")));
     }
     let hlen = read_u32(&mut r)? as usize;
+    // sanity-cap before allocating: a truncated or corrupt length field
+    // must surface as a typed error, not an OOM attempt
+    if hlen > MAX_HEADER_BYTES {
+        return Err(TsnnError::Checkpoint(format!(
+            "implausible header length {hlen}"
+        )));
+    }
     let mut hbytes = vec![0u8; hlen];
     r.read_exact(&mut hbytes)?;
     let header = json::parse(
@@ -178,6 +189,12 @@ pub fn load(path: &Path) -> Result<SparseMlp> {
     for l in 0..n_layers {
         let (n_in, n_out) = (sizes[l], sizes[l + 1]);
         let nnz = nnzs[l];
+        // a corrupt header must not drive the bulk-array allocations
+        if nnz > n_in.saturating_mul(n_out) {
+            return Err(TsnnError::Checkpoint(format!(
+                "layer {l}: nnz {nnz} exceeds {n_in}x{n_out}"
+            )));
+        }
         let row_ptr: Vec<usize> = read_u64_vec(&mut r, n_in + 1)?
             .into_iter()
             .map(|v| v as usize)

@@ -1,0 +1,343 @@
+//! Request-batching serving front end (DESIGN.md §10.2).
+//!
+//! One batcher thread owns the model's forward buffers and worker pool;
+//! clients submit single requests into a **bounded** queue:
+//!
+//! * Backpressure is fail-fast: [`ServeEngine::submit`] on a full queue
+//!   returns [`SubmitError::QueueFull`] immediately — it never blocks
+//!   the caller on the pool, and sheds load instead of growing an
+//!   unbounded backlog.
+//! * Batch formation is adaptive: the batcher takes up to
+//!   [`ServeConfig::max_batch`] requests, waiting at most
+//!   [`ServeConfig::max_wait`] past the **oldest** queued request's
+//!   arrival before running a partial batch — single requests pay at
+//!   most one deadline, bursts fill batches immediately.
+//! * Shutdown drains: queued and in-flight requests complete before the
+//!   batcher exits; only new submissions are refused.
+//!
+//! Batch formation cannot change results — per-sample accumulation is
+//! batch-composition-invariant (serving_parity pins this bitwise).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::TsnnError;
+use crate::serve::layout::{ServeModel, ServeWorkspace};
+use crate::serve::metrics::{LatencyRecorder, LatencySummary};
+
+/// Front-end tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Largest batch one forward runs (≥ 1).
+    pub max_batch: usize,
+    /// Submission-queue bound; a full queue fails fast (≥ 1).
+    pub max_queue: usize,
+    /// Longest a queued request waits for co-batched traffic.
+    pub max_wait: Duration,
+    /// Kernel thread budget of the batcher's workspace (`0` = all
+    /// cores); the batcher installs one persistent pool for its
+    /// lifetime.
+    pub kernel_threads: usize,
+    /// Latency-window size of the engine's recorder.
+    pub latency_window: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_queue: 1024,
+            max_wait: Duration::from_millis(2),
+            kernel_threads: 0,
+            latency_window: 4096,
+        }
+    }
+}
+
+/// Why a submission was refused (fail-fast, never blocking).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — shed or retry later.
+    QueueFull,
+    /// The engine is shutting down (or already shut down).
+    Shutdown,
+    /// Feature vector length does not match the model input width.
+    BadShape {
+        /// Model input width.
+        expected: usize,
+        /// Submitted feature count.
+        got: usize,
+    },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "submission queue full"),
+            SubmitError::Shutdown => write!(f, "serving engine is shut down"),
+            SubmitError::BadShape { expected, got } => {
+                write!(f, "expected {expected} features, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for TsnnError {
+    fn from(e: SubmitError) -> TsnnError {
+        TsnnError::Serve(e.to_string())
+    }
+}
+
+/// Completion handle for one submitted request.
+pub struct Ticket {
+    rx: Receiver<Vec<f32>>,
+}
+
+impl Ticket {
+    /// Block until the logits arrive (errors only if the engine died
+    /// without draining — a bug, not a protocol state).
+    pub fn wait(self) -> crate::error::Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| TsnnError::Serve("engine dropped an in-flight request".into()))
+    }
+}
+
+/// One queued request: features in, a one-shot completion channel out.
+struct QueuedRequest {
+    features: Vec<f32>,
+    enqueued: Instant,
+    tx: SyncSender<Vec<f32>>,
+}
+
+/// Queue state guarded by the mutex half of the condvar pair.
+struct QueueState {
+    items: VecDeque<QueuedRequest>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    recorder: Mutex<LatencyRecorder>,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Throughput counters (monotonic since construction/reset).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests completed (results delivered).
+    pub completed: u64,
+    /// Submissions refused by backpressure.
+    pub rejected: u64,
+    /// Forward batches run.
+    pub batches: u64,
+}
+
+/// The serving engine: a loaded [`ServeModel`] behind a bounded queue
+/// and one batcher thread. Dropping the engine shuts it down cleanly
+/// (draining the queue first).
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    model: Arc<ServeModel>,
+    cfg: ServeConfig,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Start serving `model` under `cfg` (spawns the batcher thread,
+    /// which owns the forward buffers and the persistent worker pool).
+    pub fn new(model: ServeModel, cfg: ServeConfig) -> ServeEngine {
+        let cfg = ServeConfig {
+            max_batch: cfg.max_batch.max(1),
+            max_queue: cfg.max_queue.max(1),
+            ..cfg
+        };
+        let model = Arc::new(model);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                items: VecDeque::with_capacity(cfg.max_queue),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            recorder: Mutex::new(LatencyRecorder::with_capacity(cfg.latency_window)),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        });
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            let model = Arc::clone(&model);
+            std::thread::spawn(move || batcher_loop(&shared, &model, cfg))
+        };
+        ServeEngine {
+            shared,
+            model,
+            cfg,
+            batcher: Some(batcher),
+        }
+    }
+
+    /// Submit one request. Fail-fast: a full queue or a shut-down
+    /// engine returns immediately — the caller is never parked on the
+    /// batcher or its pool.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Ticket, SubmitError> {
+        let expected = self.model.n_features();
+        if features.len() != expected {
+            return Err(SubmitError::BadShape {
+                expected,
+                got: features.len(),
+            });
+        }
+        let (tx, rx) = sync_channel(1);
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            if q.shutdown {
+                return Err(SubmitError::Shutdown);
+            }
+            if q.items.len() >= self.cfg.max_queue {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::QueueFull);
+            }
+            q.items.push_back(QueuedRequest {
+                features,
+                enqueued: Instant::now(),
+                tx,
+            });
+        }
+        self.shared.cv.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Submit and block for the result (convenience wrapper).
+    pub fn infer(&self, features: Vec<f32>) -> crate::error::Result<Vec<f32>> {
+        let ticket = self.submit(features).map_err(TsnnError::from)?;
+        ticket.wait()
+    }
+
+    /// The served model (formats, sizes — assertable).
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    /// The active configuration (bounds clamped to ≥ 1).
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Throughput counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Latency digest (enqueue → result delivery, per request).
+    pub fn latency(&self) -> LatencySummary {
+        self.shared.recorder.lock().unwrap().summary()
+    }
+
+    /// Zero the latency window and throughput counters (QPS-sweep steps
+    /// measure in isolation).
+    pub fn reset_metrics(&self) {
+        self.shared.recorder.lock().unwrap().clear();
+        self.shared.completed.store(0, Ordering::Relaxed);
+        self.shared.rejected.store(0, Ordering::Relaxed);
+        self.shared.batches.store(0, Ordering::Relaxed);
+    }
+
+    /// Stop accepting submissions, drain every queued request, join the
+    /// batcher. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            if q.shutdown && self.batcher.is_none() {
+                return;
+            }
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The batcher: wait → form an adaptive batch → forward → deliver.
+/// Reuses one workspace, one staging buffer and one batch vector, so
+/// the steady-state per-batch work allocates only the per-request
+/// result vectors.
+fn batcher_loop(shared: &Shared, model: &ServeModel, cfg: ServeConfig) {
+    let mut ws = ServeWorkspace::with_threads(cfg.kernel_threads);
+    ws.ensure_pool();
+    let n_feat = model.n_features();
+    let n_classes = model.n_classes();
+    let mut batch: Vec<QueuedRequest> = Vec::with_capacity(cfg.max_batch);
+    let mut xbuf: Vec<f32> = Vec::with_capacity(cfg.max_batch * n_feat);
+    loop {
+        {
+            let mut q = shared.state.lock().unwrap();
+            // wait for the first request (or a drained shutdown)
+            loop {
+                if !q.items.is_empty() {
+                    break;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+            // adaptive fill: give co-batched traffic until the oldest
+            // request's deadline, unless the batch is already full or
+            // the engine is draining
+            let deadline = q.items.front().unwrap().enqueued + cfg.max_wait;
+            while q.items.len() < cfg.max_batch && !q.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+            let n = q.items.len().min(cfg.max_batch);
+            batch.extend(q.items.drain(..n));
+        }
+        // forward + deliver outside the lock: submissions keep flowing
+        let bsz = batch.len();
+        xbuf.clear();
+        for r in &batch {
+            xbuf.extend_from_slice(&r.features);
+        }
+        let logits = model.forward(&xbuf, bsz, &mut ws);
+        let done = Instant::now();
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.completed.fetch_add(bsz as u64, Ordering::Relaxed);
+        {
+            let mut rec = shared.recorder.lock().unwrap();
+            for r in &batch {
+                rec.record(done.duration_since(r.enqueued).as_nanos() as u64);
+            }
+        }
+        for (b, r) in batch.drain(..).enumerate() {
+            // a dropped Ticket is a fire-and-forget client; ignore it
+            let _ = r.tx.send(logits[b * n_classes..(b + 1) * n_classes].to_vec());
+        }
+    }
+}

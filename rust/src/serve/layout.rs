@@ -1,0 +1,477 @@
+//! Inference-specialized model layout (DESIGN.md §10.1).
+//!
+//! A served model keeps **weights only** — velocity/optimizer state is
+//! dropped at load — and selects a storage format per layer by measured
+//! density crossover: CSR below [`LayoutOptions::dense_crossover`],
+//! dense-fallback at or above it (Nerva, arXiv 2407.17437, shows the
+//! crossover is real and layout-dependent; `benches/perf_serving.rs`
+//! re-measures it per host into `BENCH_5.json`). The selection is
+//! recorded on every layer ([`ServeLayer::format`]) so tests can assert
+//! it rather than assume it.
+//!
+//! Parity: both formats reproduce the training forward
+//! ([`SparseLayer::forward_into`](crate::model::SparseLayer::forward_into))
+//! **bit-exactly**. The CSR path is the training kernel itself; the
+//! dense path streams the densified rows in the same `i`-then-`j`
+//! accumulation order with the same batch blocking and block-level
+//! zero-skip, so stored entries contribute in the training kernel's
+//! exact order and absent entries only add `±0.0` terms — a no-op for
+//! every accumulator that is not `-0.0`, which bias-seeded accumulators
+//! cannot become under round-to-nearest (the same argument the §4
+//! sharded kernels rely on for shard-count invariance).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::model::{checkpoint, SparseMlp};
+use crate::nn::Activation;
+use crate::sparse::ops::{self, Exec, ShardPtr};
+use crate::sparse::{CsrMatrix, WorkerPool};
+
+/// Samples per block in the dense-fallback kernel — must equal the CSR
+/// kernel's block width so the block-level zero-skip windows coincide.
+const BLOCK: usize = 8;
+
+/// Default density at or above which a layer is served dense. The
+/// indirection-free dense row stream beats CSR well below 50% density
+/// on every host measured so far; 0.25 is the conservative knee from
+/// the `format_crossover` family of `benches/perf_serving.rs`.
+pub const DENSE_CROSSOVER_DENSITY: f64 = 0.25;
+
+/// Per-layer format-selection policy for [`ServeModel`] construction.
+#[derive(Debug, Clone, Copy)]
+pub struct LayoutOptions {
+    /// Layers with `density >= dense_crossover` are densified; the rest
+    /// stay CSR. `> 1.0` forces CSR everywhere, `0.0` forces dense.
+    pub dense_crossover: f64,
+}
+
+impl Default for LayoutOptions {
+    fn default() -> Self {
+        LayoutOptions {
+            dense_crossover: DENSE_CROSSOVER_DENSITY,
+        }
+    }
+}
+
+/// Storage format chosen for one served layer (recorded, assertable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerFormat {
+    /// Truly-sparse CSR, served by the training kernel.
+    Csr,
+    /// Row-major dense fallback for dense-enough layers.
+    Dense,
+}
+
+/// The weights of one served layer in their selected format.
+#[derive(Debug, Clone)]
+enum ServeWeights {
+    Csr(CsrMatrix),
+    Dense {
+        n_in: usize,
+        n_out: usize,
+        /// Row-major `[n_in, n_out]`; absent entries are exactly `0.0`.
+        values: Vec<f32>,
+    },
+}
+
+/// One inference-ready layer: weights in the selected format, bias and
+/// activation — no velocity, no optimizer state.
+#[derive(Debug, Clone)]
+pub struct ServeLayer {
+    weights: ServeWeights,
+    /// Per-output bias, broadcast into `pre` before the kernel (same
+    /// fold as the training path).
+    pub bias: Vec<f32>,
+    /// Activation applied with the training path's 1-based layer index.
+    pub activation: Activation,
+    /// Density measured at selection time (decides [`ServeLayer::format`]).
+    pub density: f64,
+    nnz: usize,
+}
+
+impl ServeLayer {
+    /// Build from a training layer, selecting the format by density.
+    fn from_training(
+        weights: &CsrMatrix,
+        bias: &[f32],
+        activation: Activation,
+        opts: &LayoutOptions,
+    ) -> ServeLayer {
+        let density = weights.density();
+        let nnz = weights.nnz();
+        let weights = if density >= opts.dense_crossover && weights.n_rows * weights.n_cols > 0 {
+            ServeWeights::Dense {
+                n_in: weights.n_rows,
+                n_out: weights.n_cols,
+                values: weights.to_dense(),
+            }
+        } else {
+            ServeWeights::Csr(weights.clone())
+        };
+        ServeLayer {
+            weights,
+            bias: bias.to_vec(),
+            activation,
+            density,
+            nnz,
+        }
+    }
+
+    /// The format selected for this layer.
+    pub fn format(&self) -> LayerFormat {
+        match self.weights {
+            ServeWeights::Csr(_) => LayerFormat::Csr,
+            ServeWeights::Dense { .. } => LayerFormat::Dense,
+        }
+    }
+
+    /// Fan-in.
+    pub fn n_in(&self) -> usize {
+        match &self.weights {
+            ServeWeights::Csr(w) => w.n_rows,
+            ServeWeights::Dense { n_in, .. } => *n_in,
+        }
+    }
+
+    /// Fan-out.
+    pub fn n_out(&self) -> usize {
+        match &self.weights {
+            ServeWeights::Csr(w) => w.n_cols,
+            ServeWeights::Dense { n_out, .. } => *n_out,
+        }
+    }
+
+    /// Stored connections in the source topology (dense layers keep the
+    /// logical count, not `n_in × n_out`).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Bytes held by this layer's weight + bias storage.
+    pub fn memory_bytes(&self) -> usize {
+        let w = match &self.weights {
+            ServeWeights::Csr(w) => w.memory_bytes(),
+            ServeWeights::Dense { values, .. } => 4 * values.len(),
+        };
+        w + 4 * self.bias.len()
+    }
+
+    /// `pre = bias ⊕ x · W` — identical bias fold and accumulation order
+    /// as [`SparseLayer::forward_into`](crate::model::SparseLayer::forward_into).
+    pub fn forward_into(&self, x: &[f32], batch: usize, pre: &mut [f32], exec: Exec<'_>) {
+        let n_out = self.n_out();
+        for b in 0..batch {
+            pre[b * n_out..(b + 1) * n_out].copy_from_slice(&self.bias);
+        }
+        match &self.weights {
+            ServeWeights::Csr(w) => ops::spmm_forward_exec(x, batch, w, pre, exec),
+            ServeWeights::Dense { n_in, n_out, values } => {
+                dense_forward_exec(x, batch, *n_in, *n_out, values, pre, exec)
+            }
+        }
+    }
+}
+
+/// Dense-fallback forward sharded over the batch dimension — the same
+/// disjoint-row sharding as `spmm_forward_exec`, with the dense MAC
+/// count `batch × n_in × n_out` as the crossover work metric.
+fn dense_forward_exec(
+    x: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+    w: &[f32],
+    out: &mut [f32],
+    exec: Exec<'_>,
+) {
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(out.len(), batch * n_out);
+    assert_eq!(w.len(), n_in * n_out);
+    let work = batch.saturating_mul(n_in).saturating_mul(n_out);
+    let shards = if exec.threads() <= 1 || batch <= 1 || work < exec.min_work() {
+        1
+    } else {
+        exec.threads().min(batch)
+    };
+    if shards <= 1 {
+        return dense_forward(x, batch, n_in, n_out, w, out);
+    }
+    let rows_per = batch.div_ceil(shards);
+    let out_ptr = ShardPtr(out.as_mut_ptr());
+    exec.run(shards, |s| {
+        let b0 = (s * rows_per).min(batch);
+        let b1 = ((s + 1) * rows_per).min(batch);
+        if b0 >= b1 {
+            return;
+        }
+        // SAFETY: shard s writes only out rows [b0, b1) — contiguous,
+        // pairwise-disjoint sample ranges of a buffer that outlives the
+        // dispatch (the run() gather is the release point, §9.2).
+        let oc = unsafe {
+            std::slice::from_raw_parts_mut(out_ptr.0.add(b0 * n_out), (b1 - b0) * n_out)
+        };
+        dense_forward(&x[b0 * n_in..b1 * n_in], b1 - b0, n_in, n_out, w, oc);
+    });
+}
+
+/// Sequential dense-row forward: `out[b, :] += Σ_i x[b, i] * W[i, :]`
+/// over pre-biased `out`, mirroring the CSR kernel's batch blocking and
+/// block-level activation-sparsity skip so stored-entry contributions
+/// land in the training kernel's exact floating-point order.
+fn dense_forward(x: &[f32], batch: usize, n_in: usize, n_out: usize, w: &[f32], out: &mut [f32]) {
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let bl = (batch - b0).min(BLOCK);
+        for i in 0..n_in {
+            let mut xv = [0.0f32; BLOCK];
+            let mut any = false;
+            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
+                let v = x[(b0 + t) * n_in + i];
+                *xvt = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let row = &w[i * n_out..(i + 1) * n_out];
+            for (t, &xvt) in xv.iter().enumerate().take(bl) {
+                let o = &mut out[(b0 + t) * n_out..(b0 + t + 1) * n_out];
+                for (oj, &wj) in o.iter_mut().zip(row.iter()) {
+                    *oj += xvt * wj;
+                }
+            }
+        }
+        b0 += bl;
+    }
+}
+
+/// Reusable forward buffers for a served model: two ping-pong slabs
+/// (activations in, pre-activations out) plus the kernel thread budget
+/// and its persistent pool — the serving analogue of the training
+/// [`Workspace`](crate::model::Workspace), without gradient state.
+#[derive(Debug, Default)]
+pub struct ServeWorkspace {
+    act: Vec<f32>,
+    pre: Vec<f32>,
+    /// Worker budget for the sharded kernels (`0` = one per core,
+    /// `1` = sequential) — a pure speed knob, results are bit-identical.
+    pub kernel_threads: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl ServeWorkspace {
+    /// Empty workspace with a kernel-shard budget; buffers are sized
+    /// lazily per batch, the pool on the first forward.
+    pub fn with_threads(kernel_threads: usize) -> Self {
+        ServeWorkspace {
+            kernel_threads,
+            ..Default::default()
+        }
+    }
+
+    /// Make the persistent pool match the current budget (same policy
+    /// as the training workspace: one pool per resolved budget).
+    pub fn ensure_pool(&mut self) {
+        let t = ops::resolve_threads(self.kernel_threads);
+        if t <= 1 {
+            self.pool = None;
+        } else if self.pool.as_ref().map(|p| p.threads()) != Some(t) {
+            self.pool = Some(Arc::new(WorkerPool::new(t)));
+        }
+    }
+
+    /// Shared handle to the persistent pool, if one is installed.
+    pub fn pool(&self) -> Option<Arc<WorkerPool>> {
+        self.pool.clone()
+    }
+}
+
+/// A checkpoint loaded for serving: weights-only layers in their
+/// selected formats. Construction is the only place formats are chosen;
+/// they are immutable (and assertable) afterwards.
+#[derive(Debug, Clone)]
+pub struct ServeModel {
+    /// Layer widths, `sizes[0]` = features, `sizes.last()` = classes.
+    pub sizes: Vec<usize>,
+    /// Inference-ready layers.
+    pub layers: Vec<ServeLayer>,
+}
+
+impl ServeModel {
+    /// Specialize a trained model for serving: clone weights/bias into
+    /// per-layer selected formats, drop all optimizer state.
+    pub fn from_mlp(mlp: &SparseMlp, opts: &LayoutOptions) -> ServeModel {
+        let layers = mlp
+            .layers
+            .iter()
+            .map(|l| ServeLayer::from_training(&l.weights, &l.bias, l.activation, opts))
+            .collect();
+        ServeModel {
+            sizes: mlp.sizes.clone(),
+            layers,
+        }
+    }
+
+    /// Load a `TSNN` checkpoint straight into the serving layout.
+    pub fn load(path: &Path, opts: &LayoutOptions) -> Result<ServeModel> {
+        let mlp = checkpoint::load(path)?;
+        Ok(ServeModel::from_mlp(&mlp, opts))
+    }
+
+    /// Input feature count.
+    pub fn n_features(&self) -> usize {
+        self.sizes[0]
+    }
+
+    /// Output class count.
+    pub fn n_classes(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Bytes held by all layers' weight + bias storage.
+    pub fn memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.memory_bytes()).sum()
+    }
+
+    /// Batched forward: logits for `batch` row-major samples, borrowed
+    /// from the workspace. Bit-exact vs the training forward path (and
+    /// vs itself at any batch composition or pool size).
+    pub fn forward<'w>(&self, x: &[f32], batch: usize, ws: &'w mut ServeWorkspace) -> &'w [f32] {
+        assert_eq!(x.len(), batch * self.n_features());
+        let widest = *self.sizes.iter().max().unwrap();
+        if ws.act.len() < batch * widest {
+            ws.act.resize(batch * widest, 0.0);
+            ws.pre.resize(batch * widest, 0.0);
+        }
+        ws.ensure_pool();
+        let pool = ws.pool();
+        let exec = Exec::with(ws.kernel_threads, pool.as_deref());
+        ws.act[..x.len()].copy_from_slice(x);
+        for (l, layer) in self.layers.iter().enumerate() {
+            let (n_in, n_out) = (layer.n_in(), layer.n_out());
+            {
+                let (act, pre) = (&ws.act, &mut ws.pre);
+                layer.forward_into(&act[..batch * n_in], batch, &mut pre[..batch * n_out], exec);
+            }
+            {
+                let (pre, act) = (&ws.pre, &mut ws.act);
+                layer.activation.apply(&pre[..batch * n_out], &mut act[..batch * n_out], l + 1);
+            }
+        }
+        &ws.act[..batch * self.n_classes()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{erdos_renyi, WeightInit};
+    use crate::util::Rng;
+
+    fn mlp(sizes: &[usize], eps: f64, seed: u64) -> SparseMlp {
+        SparseMlp::new(sizes, eps, Activation::Relu, &WeightInit::HeUniform, &mut Rng::new(seed))
+            .unwrap()
+    }
+
+    #[test]
+    fn format_selection_follows_density_crossover() {
+        let mut rng = Rng::new(3);
+        let sparse = erdos_renyi(40, 30, 0.05, &mut rng, &WeightInit::Normal(0.1));
+        let dense = erdos_renyi(40, 30, 0.6, &mut rng, &WeightInit::Normal(0.1));
+        let opts = LayoutOptions::default();
+        let b = vec![0.0f32; 30];
+        let l_sparse = ServeLayer::from_training(&sparse, &b, Activation::Relu, &opts);
+        let l_dense = ServeLayer::from_training(&dense, &b, Activation::Relu, &opts);
+        assert_eq!(l_sparse.format(), LayerFormat::Csr);
+        assert_eq!(l_dense.format(), LayerFormat::Dense);
+        // the knob is honored in both directions
+        let force_csr = LayoutOptions { dense_crossover: 2.0 };
+        let force_dense = LayoutOptions { dense_crossover: 0.0 };
+        assert_eq!(
+            ServeLayer::from_training(&dense, &b, Activation::Relu, &force_csr).format(),
+            LayerFormat::Csr
+        );
+        assert_eq!(
+            ServeLayer::from_training(&sparse, &b, Activation::Relu, &force_dense).format(),
+            LayerFormat::Dense
+        );
+    }
+
+    #[test]
+    fn empty_layer_stays_csr_even_when_forced_dense() {
+        // density 0.0 of a 0-col layer must not densify a degenerate shape
+        let w = CsrMatrix::empty(5, 0);
+        let opts = LayoutOptions { dense_crossover: 0.0 };
+        let l = ServeLayer::from_training(&w, &[], Activation::Linear, &opts);
+        assert_eq!(l.format(), LayerFormat::Csr);
+    }
+
+    #[test]
+    fn serving_layout_drops_optimizer_state() {
+        let m = mlp(&[64, 128, 10], 8.0, 7);
+        let s = ServeModel::from_mlp(&m, &LayoutOptions::default());
+        // velocity + bias_velocity are gone: serving memory is strictly
+        // below the training layout for a sparse model
+        assert!(s.memory_bytes() < m.memory_bytes());
+        assert_eq!(s.sizes, m.sizes);
+        assert_eq!(s.n_features(), 64);
+        assert_eq!(s.n_classes(), 10);
+    }
+
+    #[test]
+    fn dense_forward_matches_csr_kernel_bitwise() {
+        let mut rng = Rng::new(11);
+        let cases = [(17usize, 13usize, 0.5f64), (8, 8, 1.0), (33, 5, 0.3), (3, 64, 0.7)];
+        for &(n_in, n_out, density) in &cases {
+            let w = erdos_renyi(n_in, n_out, density, &mut rng, &WeightInit::Normal(0.3));
+            let wd = w.to_dense();
+            for &batch in &[1usize, 3, 8, 19] {
+                let x: Vec<f32> = (0..batch * n_in)
+                    .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+                    .collect();
+                let mut csr_out = vec![0.0f32; batch * n_out];
+                let mut dense_out = vec![0.0f32; batch * n_out];
+                ops::spmm_forward(&x, batch, &w, &mut csr_out);
+                dense_forward(&x, batch, n_in, n_out, &wd, &mut dense_out);
+                assert_eq!(csr_out, dense_out, "{n_in}x{n_out} d={density} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_forward_sharded_matches_sequential() {
+        let mut rng = Rng::new(13);
+        let (n_in, n_out, batch) = (48, 40, 32);
+        let w = erdos_renyi(n_in, n_out, 0.8, &mut rng, &WeightInit::Normal(0.2));
+        let wd = w.to_dense();
+        let x: Vec<f32> = (0..batch * n_in).map(|_| rng.normal()).collect();
+        let mut seq = vec![0.0f32; batch * n_out];
+        dense_forward(&x, batch, n_in, n_out, &wd, &mut seq);
+        let pool = WorkerPool::new(4);
+        for exec in [Exec::scoped(4), Exec::pooled(&pool)] {
+            let mut par = vec![0.0f32; batch * n_out];
+            // force sharding: the crossover would keep this size sequential
+            let work = batch * n_in * n_out;
+            assert!(work < exec.min_work() || exec.is_pooled());
+            dense_forward_exec(&x, batch, n_in, n_out, &wd, &mut par, exec);
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn forward_workspace_reuse_is_stable_across_batch_sizes() {
+        let m = mlp(&[32, 48, 6], 6.0, 21);
+        let s = ServeModel::from_mlp(&m, &LayoutOptions::default());
+        let mut ws = ServeWorkspace::with_threads(1);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..19 * 32).map(|_| rng.normal()).collect();
+        let full = s.forward(&x[..16 * 32], 16, &mut ws).to_vec();
+        // shrink then regrow — buffers must stay consistent
+        let one = s.forward(&x[..32], 1, &mut ws).to_vec();
+        let again = s.forward(&x[..16 * 32], 16, &mut ws).to_vec();
+        assert_eq!(full, again);
+        assert_eq!(&full[..6], &one[..]);
+    }
+}

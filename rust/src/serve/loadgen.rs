@@ -1,0 +1,143 @@
+//! Closed-loop traffic replay + offered-QPS sweep (DESIGN.md §10.4).
+//!
+//! One submitter thread paces submissions on an absolute schedule
+//! (`start + i / qps`), a collector thread waits each [`Ticket`] so the
+//! number of un-reaped responses stays bounded; latency comes from the
+//! engine's own recorder (enqueue → delivery). The sweep raises offered
+//! QPS geometrically until the engine saturates — achieved throughput
+//! falls below [`SweepConfig::saturation_ratio`] of offered, or
+//! backpressure starts shedding — which is the measurement protocol of
+//! `benches/perf_serving.rs` / `BENCH_5.json`.
+
+use std::time::Instant;
+
+use crate::serve::engine::{ServeEngine, SubmitError, Ticket};
+use crate::serve::metrics::LatencySummary;
+
+/// One offered-QPS measurement step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    /// Offered (paced) request rate.
+    pub offered_qps: f64,
+    /// Completed requests per second of wall clock (first submission →
+    /// last delivery).
+    pub achieved_qps: f64,
+    /// Requests completed during the step.
+    pub completed: u64,
+    /// Submissions shed by backpressure during the step.
+    pub rejected: u64,
+    /// Engine latency digest for the step (enqueue → delivery).
+    pub latency: LatencySummary,
+    /// True when this step hit the saturation criterion.
+    pub saturated: bool,
+}
+
+/// Sweep protocol knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    /// First offered rate.
+    pub start_qps: f64,
+    /// Multiplier between steps (> 1).
+    pub growth: f64,
+    /// Step ceiling (the sweep stops early at saturation).
+    pub max_steps: usize,
+    /// Replayed requests per step.
+    pub requests_per_step: usize,
+    /// A step saturates when `achieved < ratio × offered` (or anything
+    /// was rejected).
+    pub saturation_ratio: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            start_qps: 200.0,
+            growth: 2.0,
+            max_steps: 10,
+            requests_per_step: 1000,
+            saturation_ratio: 0.9,
+        }
+    }
+}
+
+/// Replay `requests` submissions from the rotating `features` pool
+/// (row-major, `features.len() / n_feat` samples) at `offered_qps`,
+/// resetting the engine's metrics first. Returns the step's report
+/// (with `saturated` left `false` — the sweep judges that).
+pub fn replay_step(
+    engine: &ServeEngine,
+    features: &[f32],
+    n_feat: usize,
+    offered_qps: f64,
+    requests: usize,
+) -> StepReport {
+    assert!(offered_qps > 0.0 && n_feat > 0 && features.len() >= n_feat);
+    let n_pool = features.len() / n_feat;
+    engine.reset_metrics();
+    let (tx, rx) = std::sync::mpsc::channel::<Ticket>();
+    let collector = std::thread::spawn(move || {
+        let mut last_done = None;
+        while let Ok(ticket) = rx.recv() {
+            if ticket.wait().is_ok() {
+                last_done = Some(Instant::now());
+            }
+        }
+        last_done
+    });
+    let start = Instant::now();
+    let mut rejected = 0u64;
+    for i in 0..requests {
+        let target = start + std::time::Duration::from_secs_f64(i as f64 / offered_qps);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let s = (i % n_pool) * n_feat;
+        match engine.submit(features[s..s + n_feat].to_vec()) {
+            Ok(ticket) => {
+                let _ = tx.send(ticket);
+            }
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(_) => break,
+        }
+    }
+    drop(tx);
+    let last_done = collector.join().unwrap();
+    let stats = engine.stats();
+    let elapsed = last_done
+        .map(|t| t.duration_since(start).as_secs_f64())
+        .unwrap_or(0.0)
+        .max(1e-9);
+    StepReport {
+        offered_qps,
+        achieved_qps: stats.completed as f64 / elapsed,
+        completed: stats.completed,
+        rejected: rejected.max(stats.rejected),
+        latency: engine.latency(),
+        saturated: false,
+    }
+}
+
+/// Sweep offered QPS geometrically until saturation (or `max_steps`),
+/// replaying `requests_per_step` requests per step. The saturating step
+/// is included (flagged) so the report shows the knee.
+pub fn sweep(
+    engine: &ServeEngine,
+    features: &[f32],
+    n_feat: usize,
+    cfg: &SweepConfig,
+) -> Vec<StepReport> {
+    let mut reports = Vec::new();
+    let mut qps = cfg.start_qps;
+    for _ in 0..cfg.max_steps {
+        let mut report = replay_step(engine, features, n_feat, qps, cfg.requests_per_step);
+        report.saturated =
+            report.achieved_qps < cfg.saturation_ratio * report.offered_qps || report.rejected > 0;
+        reports.push(report);
+        if report.saturated {
+            break;
+        }
+        qps *= cfg.growth;
+    }
+    reports
+}

@@ -1,0 +1,221 @@
+//! Latency + throughput accounting for the serving engine
+//! (DESIGN.md §10.3).
+//!
+//! [`LatencyRecorder::record`] is the per-request hot path: it writes
+//! into a fixed-capacity sample window (ring overwrite once full) and
+//! bumps scalar counters — no allocation in steady state, pinned at the
+//! allocator level by `rust/tests/serve_alloc.rs` in the style of
+//! `pool_alloc.rs`. Percentiles are nearest-rank over the retained
+//! window and are computed off the hot path ([`LatencyRecorder::summary`]
+//! sorts a scratch copy).
+
+/// Fixed-window latency recorder (nanosecond samples).
+#[derive(Debug, Clone)]
+pub struct LatencyRecorder {
+    /// Retained window; at most `cap` samples.
+    samples: Vec<u64>,
+    /// Window size (explicit — `Vec::with_capacity` only promises "at
+    /// least", and the ring arithmetic needs the exact bound).
+    cap: usize,
+    /// Ring cursor once the window is full.
+    next: usize,
+    /// Lifetime sample count (not capped by the window).
+    total: u64,
+    /// Lifetime sum, for the mean.
+    sum_ns: u128,
+    /// Lifetime maximum.
+    max_ns: u64,
+}
+
+/// Point-in-time digest of a [`LatencyRecorder`]: an empty window
+/// reports `count == 0` and zeroed statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Lifetime recorded samples.
+    pub count: u64,
+    /// Lifetime mean latency in nanoseconds.
+    pub mean_ns: f64,
+    /// Window p50 (nearest-rank).
+    pub p50_ns: u64,
+    /// Window p95 (nearest-rank).
+    pub p95_ns: u64,
+    /// Window p99 (nearest-rank).
+    pub p99_ns: u64,
+    /// Lifetime maximum in nanoseconds.
+    pub max_ns: u64,
+}
+
+impl LatencyRecorder {
+    /// Recorder retaining the last `capacity` samples (min 1).
+    pub fn with_capacity(capacity: usize) -> LatencyRecorder {
+        let cap = capacity.max(1);
+        LatencyRecorder {
+            samples: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    /// Record one latency sample. Steady-state allocation-free: pushes
+    /// within the fixed capacity, then overwrites ring-wise.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        if self.samples.len() < self.cap {
+            self.samples.push(ns);
+        } else {
+            self.samples[self.next] = ns;
+            self.next += 1;
+            if self.next == self.samples.len() {
+                self.next = 0;
+            }
+        }
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    /// Lifetime recorded samples (window retains at most `capacity`).
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True when nothing has been recorded since construction/clear.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Reset all state, keeping the window's capacity (no realloc).
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.next = 0;
+        self.total = 0;
+        self.sum_ns = 0;
+        self.max_ns = 0;
+    }
+
+    /// Nearest-rank percentile over the retained window: the
+    /// `⌈p/100 · n⌉`-th smallest sample (1-based), `None` for an empty
+    /// window. `p` is clamped to `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        Some(nearest_rank(&sorted, p))
+    }
+
+    /// Digest: lifetime count/mean/max plus window percentiles. One
+    /// sort of one scratch copy — call off the hot path.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        LatencySummary {
+            count: self.total,
+            mean_ns: self.sum_ns as f64 / self.total as f64,
+            p50_ns: nearest_rank(&sorted, 50.0),
+            p95_ns: nearest_rank(&sorted, 95.0),
+            p99_ns: nearest_rank(&sorted, 99.0),
+            max_ns: self.max_ns,
+        }
+    }
+}
+
+/// Nearest-rank on an ascending-sorted non-empty slice.
+fn nearest_rank(sorted: &[u64], p: f64) -> u64 {
+    let n = sorted.len();
+    let rank = (p.clamp(0.0, 100.0) / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_window_has_no_percentiles_and_zero_summary() {
+        let r = LatencyRecorder::with_capacity(16);
+        assert!(r.is_empty());
+        assert_eq!(r.percentile(50.0), None);
+        assert_eq!(r.summary(), LatencySummary::default());
+        assert_eq!(r.summary().count, 0);
+    }
+
+    #[test]
+    fn exact_ranks_on_small_samples() {
+        // nearest-rank on [10, 20, 30, 40]: p≤25 → 10, p50 → 20,
+        // p75 → 30, anything above → 40
+        let mut r = LatencyRecorder::with_capacity(8);
+        for v in [40u64, 10, 30, 20] {
+            r.record(v);
+        }
+        assert_eq!(r.percentile(0.0), Some(10));
+        assert_eq!(r.percentile(25.0), Some(10));
+        assert_eq!(r.percentile(26.0), Some(20));
+        assert_eq!(r.percentile(50.0), Some(20));
+        assert_eq!(r.percentile(75.0), Some(30));
+        assert_eq!(r.percentile(76.0), Some(40));
+        assert_eq!(r.percentile(100.0), Some(40));
+        // single sample: every percentile is that sample
+        let mut one = LatencyRecorder::with_capacity(4);
+        one.record(7);
+        assert_eq!(one.percentile(1.0), Some(7));
+        assert_eq!(one.percentile(50.0), Some(7));
+        assert_eq!(one.percentile(99.0), Some(7));
+    }
+
+    #[test]
+    fn known_distribution_percentiles() {
+        // 1..=1000 permuted: p50 = 500, p95 = 950, p99 = 990, max = 1000
+        let mut r = LatencyRecorder::with_capacity(1000);
+        for i in 0..1000u64 {
+            r.record((i * 617) % 1000 + 1); // 617 ⊥ 1000 → a permutation
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.p50_ns, 500);
+        assert_eq!(s.p95_ns, 950);
+        assert_eq!(s.p99_ns, 990);
+        assert_eq!(s.max_ns, 1000);
+        assert!((s.mean_ns - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_overwrite_keeps_last_window_and_lifetime_counters() {
+        let mut r = LatencyRecorder::with_capacity(4);
+        for v in 1..=10u64 {
+            r.record(v);
+        }
+        // window holds {7, 8, 9, 10}; lifetime stats see all ten
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.percentile(1.0), Some(7));
+        assert_eq!(r.percentile(100.0), Some(10));
+        let s = r.summary();
+        assert_eq!(s.max_ns, 10);
+        assert!((s.mean_ns - 5.5).abs() < 1e-9);
+        assert_eq!(s.p50_ns, 8);
+    }
+
+    #[test]
+    fn clear_resets_without_losing_capacity() {
+        let mut r = LatencyRecorder::with_capacity(4);
+        for v in 1..=6u64 {
+            r.record(v);
+        }
+        let cap = r.samples.capacity();
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.summary(), LatencySummary::default());
+        assert_eq!(r.samples.capacity(), cap);
+        r.record(42);
+        assert_eq!(r.percentile(50.0), Some(42));
+    }
+}

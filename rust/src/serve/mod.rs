@@ -1,0 +1,26 @@
+//! Sparse inference serving engine (DESIGN.md §10).
+//!
+//! Turns a trained `TSNN` checkpoint into a served model: an
+//! inference-specialized, weights-only layout with per-layer CSR vs
+//! dense-fallback format selection ([`layout`]), a request-batching
+//! front end with a bounded submission queue and adaptive deadline
+//! batching on the persistent [`WorkerPool`](crate::sparse::WorkerPool)
+//! ([`engine`]), latency/throughput accounting ([`metrics`]) and a
+//! closed-loop traffic generator for QPS sweeps ([`loadgen`],
+//! `benches/perf_serving.rs` → `BENCH_5.json`).
+//!
+//! Parity contract: serving output is **bit-exact** vs the training
+//! forward path at every pool size and batch composition — pinned by
+//! `rust/tests/serving_parity.rs`.
+
+pub mod engine;
+pub mod layout;
+pub mod loadgen;
+pub mod metrics;
+
+pub use engine::{ServeConfig, ServeEngine, ServeStats, SubmitError, Ticket};
+pub use layout::{
+    DENSE_CROSSOVER_DENSITY, LayerFormat, LayoutOptions, ServeLayer, ServeModel, ServeWorkspace,
+};
+pub use loadgen::{sweep, StepReport, SweepConfig};
+pub use metrics::{LatencyRecorder, LatencySummary};

@@ -1,0 +1,66 @@
+//! Zero-allocation gate for the latency-recording hot path
+//! (DESIGN.md §10.3): once its fixed window is allocated, a
+//! [`LatencyRecorder`] must absorb an unbounded stream of `record`
+//! calls — fills, ring wraps, counter bumps — without a single heap
+//! allocation, in the style of `pool_alloc.rs`.
+//!
+//! Lives in its own integration binary so the process-global counting
+//! allocator sees no concurrent allocations from unrelated tests (this
+//! file deliberately contains exactly one test).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tsnn::serve::LatencyRecorder;
+
+/// System allocator with a process-global allocation-event counter.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers to the System allocator for every operation.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn latency_recording_allocates_nothing_after_construction() {
+    let mut rec = LatencyRecorder::with_capacity(4096);
+    // construction reserved the whole window up front; from here on the
+    // hot path must be allocation-free — through the initial fill, the
+    // ring wrap, and a clear+refill cycle
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for i in 0..100_000u64 {
+        rec.record(i * 37 % 10_000);
+    }
+    rec.clear();
+    for i in 0..10_000u64 {
+        rec.record(i);
+    }
+    let grown = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        grown, 0,
+        "latency recording must be allocation-free after construction \
+         (saw {grown} allocation events across 110k records)"
+    );
+    // and the recording really happened
+    assert_eq!(rec.count(), 10_000);
+    assert_eq!(rec.percentile(100.0), Some(9_999));
+}

@@ -1,0 +1,242 @@
+//! Serving front-end behavior suite (DESIGN.md §10.2): bounded-queue
+//! backpressure fails fast without blocking on the pool, adaptive batch
+//! formation handles the edge windows (empty, single request, expired
+//! deadline, over-capacity burst), and shutdown drains every in-flight
+//! request before the batcher exits.
+
+use std::time::{Duration, Instant};
+
+use tsnn::model::SparseMlp;
+use tsnn::nn::Activation;
+use tsnn::serve::{
+    LayoutOptions, ServeConfig, ServeEngine, ServeModel, ServeWorkspace, SubmitError,
+};
+use tsnn::sparse::WeightInit;
+use tsnn::util::Rng;
+
+const N_FEAT: usize = 12;
+
+fn small_model(seed: u64) -> ServeModel {
+    let mlp = SparseMlp::new(
+        &[N_FEAT, 24, 4],
+        4.0,
+        Activation::Relu,
+        &WeightInit::HeUniform,
+        &mut Rng::new(seed),
+    )
+    .unwrap();
+    ServeModel::from_mlp(&mlp, &LayoutOptions::default())
+}
+
+fn features(rng: &mut Rng) -> Vec<f32> {
+    (0..N_FEAT).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn full_queue_fails_fast_without_blocking() {
+    // a long max_wait parks the batcher on its adaptive deadline after
+    // the first request, so the queue genuinely fills up behind it
+    let cfg = ServeConfig {
+        max_batch: 64,
+        max_queue: 2,
+        max_wait: Duration::from_secs(5),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let mut engine = ServeEngine::new(small_model(1), cfg);
+    let mut rng = Rng::new(2);
+    let t1 = engine.submit(features(&mut rng)).unwrap();
+    let t2 = engine.submit(features(&mut rng)).unwrap();
+    // the batcher may have already drained the first submission into
+    // its forming batch; top the queue back up before asserting
+    let mut extra = Vec::new();
+    let rejected_at = loop {
+        let started = Instant::now();
+        match engine.submit(features(&mut rng)) {
+            Ok(t) => extra.push(t),
+            Err(SubmitError::QueueFull) => break started.elapsed(),
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        assert!(extra.len() <= 64 + 2, "queue bound never enforced");
+    };
+    // fail-fast: rejection must return immediately, nowhere near the
+    // 5 s batching deadline (generous bound for loaded CI runners)
+    assert!(rejected_at < Duration::from_millis(500), "rejection took {rejected_at:?}");
+    assert!(engine.stats().rejected >= 1);
+    // draining shutdown completes everything that was accepted
+    engine.shutdown();
+    assert!(t1.wait().is_ok());
+    assert!(t2.wait().is_ok());
+    for t in extra {
+        assert!(t.wait().is_ok());
+    }
+}
+
+#[test]
+fn empty_window_idles_cleanly() {
+    // no traffic at all: the batcher must park (not spin or panic) and
+    // shut down from the empty-queue wait
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_queue: 8,
+        max_wait: Duration::from_millis(1),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let mut engine = ServeEngine::new(small_model(3), cfg);
+    std::thread::sleep(Duration::from_millis(20));
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.batches, 0);
+    assert_eq!(engine.latency().count, 0);
+    engine.shutdown();
+}
+
+#[test]
+fn single_request_completes_after_deadline_alone() {
+    // max_batch 8 but only one request: the deadline must expire and
+    // run a batch of one — the request cannot wait for peers forever
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_queue: 8,
+        max_wait: Duration::from_millis(5),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let engine = ServeEngine::new(small_model(4), cfg);
+    let mut rng = Rng::new(5);
+    let y = engine.infer(features(&mut rng)).unwrap();
+    assert_eq!(y.len(), 4);
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(engine.latency().count, 1);
+}
+
+#[test]
+fn deadline_expired_partial_batch_runs_as_one_batch() {
+    // three requests land well inside one 200 ms window: the batcher
+    // must run them as a single partial batch when the deadline expires
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_queue: 16,
+        max_wait: Duration::from_millis(200),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let engine = ServeEngine::new(small_model(6), cfg);
+    let mut rng = Rng::new(7);
+    let tickets: Vec<_> = (0..3)
+        .map(|_| engine.submit(features(&mut rng)).unwrap())
+        .collect();
+    let start = Instant::now();
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().len(), 4);
+    }
+    // they completed via the deadline, not a full batch
+    assert!(start.elapsed() >= Duration::from_millis(50));
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.batches, 1, "partial batch must run as ONE forward");
+}
+
+#[test]
+fn over_capacity_burst_splits_into_full_batches() {
+    // 10 requests into max_batch 4: ceil(10/4) = 3 batches minimum,
+    // every request completes, order of delivery per ticket is correct
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_queue: 32,
+        max_wait: Duration::from_millis(2),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let model = small_model(8);
+    let oracle_model = model.clone();
+    let engine = ServeEngine::new(model, cfg);
+    let mut rng = Rng::new(9);
+    let xs: Vec<Vec<f32>> = (0..10).map(|_| features(&mut rng)).collect();
+    let tickets: Vec<_> = xs.iter().map(|x| engine.submit(x.clone()).unwrap()).collect();
+    let mut ws = ServeWorkspace::with_threads(1);
+    for (x, t) in xs.iter().zip(tickets) {
+        let y = t.wait().unwrap();
+        assert_eq!(oracle_model.forward(x, 1, &mut ws), &y[..]);
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 10);
+    assert!(stats.batches >= 3, "10 requests / max_batch 4 ⇒ ≥ 3 batches");
+    assert_eq!(stats.rejected, 0);
+}
+
+#[test]
+fn shutdown_drains_queued_requests() {
+    // park the batcher on a long deadline with requests queued behind
+    // it, then shut down: every accepted request must still complete
+    let cfg = ServeConfig {
+        max_batch: 64,
+        max_queue: 16,
+        max_wait: Duration::from_secs(5),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let mut engine = ServeEngine::new(small_model(10), cfg);
+    let mut rng = Rng::new(11);
+    let tickets: Vec<_> = (0..5)
+        .map(|_| engine.submit(features(&mut rng)).unwrap())
+        .collect();
+    let start = Instant::now();
+    engine.shutdown();
+    // drain must not wait out the 5 s deadline
+    assert!(start.elapsed() < Duration::from_secs(4));
+    for t in tickets {
+        assert_eq!(t.wait().unwrap().len(), 4);
+    }
+    assert_eq!(engine.stats().completed, 5);
+    // post-shutdown submissions are refused with the typed error
+    assert_eq!(
+        engine.submit(features(&mut rng)).unwrap_err(),
+        SubmitError::Shutdown
+    );
+    // idempotent
+    engine.shutdown();
+}
+
+#[test]
+fn bad_shape_is_rejected_before_queueing() {
+    let cfg = ServeConfig {
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let engine = ServeEngine::new(small_model(12), cfg);
+    assert_eq!(
+        engine.submit(vec![0.0; N_FEAT + 1]).unwrap_err(),
+        SubmitError::BadShape {
+            expected: N_FEAT,
+            got: N_FEAT + 1
+        }
+    );
+    assert_eq!(engine.stats().completed, 0);
+}
+
+#[test]
+fn metrics_reset_between_measurement_steps() {
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_queue: 16,
+        max_wait: Duration::from_millis(1),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let engine = ServeEngine::new(small_model(13), cfg);
+    let mut rng = Rng::new(14);
+    for _ in 0..4 {
+        engine.infer(features(&mut rng)).unwrap();
+    }
+    assert_eq!(engine.stats().completed, 4);
+    assert_eq!(engine.latency().count, 4);
+    engine.reset_metrics();
+    assert_eq!(engine.stats(), Default::default());
+    assert_eq!(engine.latency().count, 0);
+    engine.infer(features(&mut rng)).unwrap();
+    assert_eq!(engine.stats().completed, 1);
+}

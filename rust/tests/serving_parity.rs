@@ -1,0 +1,238 @@
+//! Serving-parity suite (DESIGN.md §10): the inference-specialized
+//! layout must reproduce the training forward path **bit-exactly** —
+//! across shapes × densities (including layers dense enough to trigger
+//! the dense-fallback format), pool sizes {1, 2, 8} (or the pinned
+//! `KERNEL_THREADS` budget), and any batch composition the front end
+//! forms. Format selection is asserted, not assumed: every grid case
+//! pins the expected per-layer CSR/dense choice.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use tsnn::model::{SparseLayer, SparseMlp};
+use tsnn::nn::Activation;
+use tsnn::serve::{
+    LayerFormat, LayoutOptions, ServeConfig, ServeEngine, ServeModel, ServeWorkspace,
+};
+use tsnn::sparse::{erdos_renyi, WeightInit};
+use tsnn::util::Rng;
+
+mod common;
+use common::thread_counts;
+
+/// Model with hand-picked per-layer densities (the grid needs exact
+/// control over which layers cross the dense-fallback threshold).
+fn mixed_model(sizes: &[usize], densities: &[f64], seed: u64) -> SparseMlp {
+    assert_eq!(densities.len(), sizes.len() - 1);
+    let mut rng = Rng::new(seed);
+    let n_layers = densities.len();
+    let layers = densities
+        .iter()
+        .enumerate()
+        .map(|(l, &d)| {
+            let weights =
+                erdos_renyi(sizes[l], sizes[l + 1], d, &mut rng, &WeightInit::Normal(0.3));
+            let activation = if l + 1 == n_layers {
+                Activation::Linear
+            } else {
+                Activation::AllRelu { alpha: 0.6 }
+            };
+            let n_out = sizes[l + 1];
+            SparseLayer {
+                bias: (0..n_out).map(|_| rng.normal() * 0.1).collect(),
+                velocity: vec![0.0; weights.nnz()],
+                bias_velocity: vec![0.0; n_out],
+                weights,
+                activation,
+                srelu: None,
+            }
+        })
+        .collect();
+    SparseMlp {
+        sizes: sizes.to_vec(),
+        layers,
+    }
+}
+
+fn random_x(rng: &mut Rng, batch: usize, n: usize) -> Vec<f32> {
+    (0..batch * n)
+        .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+        .collect()
+}
+
+/// Training-path logits (the sequential oracle).
+fn training_logits(mlp: &SparseMlp, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut ws = mlp.alloc_workspace(batch);
+    ws.kernel_threads = 1;
+    mlp.forward(x, batch, &mut ws, None).to_vec()
+}
+
+#[test]
+fn serving_forward_bit_exact_across_shapes_densities_and_pools() {
+    // (sizes, densities, expected formats at the default crossover)
+    let grid: &[(&[usize], &[f64], &[LayerFormat])] = &[
+        (
+            &[23, 17, 9],
+            &[0.08, 0.5],
+            &[LayerFormat::Csr, LayerFormat::Dense],
+        ),
+        (
+            &[40, 64, 32, 10],
+            &[0.05, 0.12, 0.9],
+            &[LayerFormat::Csr, LayerFormat::Csr, LayerFormat::Dense],
+        ),
+        (
+            &[7, 5, 3],
+            &[1.0, 1.0],
+            &[LayerFormat::Dense, LayerFormat::Dense],
+        ),
+        (
+            &[12, 30, 4],
+            &[0.0, 0.3],
+            &[LayerFormat::Csr, LayerFormat::Dense],
+        ),
+    ];
+    let mut rng = Rng::new(99);
+    for (case, &(sizes, densities, formats)) in grid.iter().enumerate() {
+        let mlp = mixed_model(sizes, densities, 1000 + case as u64);
+        let serve = ServeModel::from_mlp(&mlp, &LayoutOptions::default());
+        let picked: Vec<LayerFormat> = serve.layers.iter().map(|l| l.format()).collect();
+        assert_eq!(picked, formats, "case {case}: format selection");
+        for &batch in &[1usize, 5, 8, 19] {
+            let x = random_x(&mut rng, batch, sizes[0]);
+            let oracle = training_logits(&mlp, &x, batch);
+            for threads in thread_counts() {
+                let mut ws = ServeWorkspace::with_threads(threads);
+                let got = serve.forward(&x, batch, &mut ws);
+                assert_eq!(
+                    oracle, got,
+                    "case {case} batch={batch} threads={threads}: serving forward \
+                     must be bit-exact vs the training path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serving_formats_cover_both_csr_and_dense_fallback() {
+    let mlp = mixed_model(&[23, 17, 9], &[0.08, 0.5], 5);
+    let serve = ServeModel::from_mlp(&mlp, &LayoutOptions::default());
+    assert_eq!(serve.layers[0].format(), LayerFormat::Csr);
+    assert_eq!(serve.layers[1].format(), LayerFormat::Dense);
+    assert!(serve.layers[0].density < serve.layers[1].density);
+}
+
+#[test]
+fn checkpoint_loads_into_serving_layout_bit_exact() {
+    let mut mlp = mixed_model(&[16, 24, 6], &[0.1, 0.6], 7);
+    // optimizer state must not leak into (or be required by) serving
+    for l in &mut mlp.layers {
+        for v in &mut l.velocity {
+            *v = 0.5;
+        }
+    }
+    let dir = std::env::temp_dir().join("tsnn_serving_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.tsnn");
+    tsnn::model::checkpoint::save(&mlp, &path).unwrap();
+    let serve = ServeModel::load(&path, &LayoutOptions::default()).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(serve.layers[0].format(), LayerFormat::Csr);
+    assert_eq!(serve.layers[1].format(), LayerFormat::Dense);
+    let mut rng = Rng::new(8);
+    for &batch in &[1usize, 9] {
+        let x = random_x(&mut rng, batch, 16);
+        let oracle = training_logits(&mlp, &x, batch);
+        for threads in thread_counts() {
+            let mut ws = ServeWorkspace::with_threads(threads);
+            assert_eq!(oracle, serve.forward(&x, batch, &mut ws), "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn batch_formation_does_not_change_results() {
+    // the same requests through (a) a batching engine, (b) a batch-1
+    // engine, and (c) direct one-at-a-time forwards must agree bitwise
+    let mlp = mixed_model(&[19, 28, 5], &[0.1, 0.55], 21);
+    let serve = ServeModel::from_mlp(&mlp, &LayoutOptions::default());
+    let mut rng = Rng::new(31);
+    let n = 12usize;
+    let requests: Vec<Vec<f32>> = (0..n).map(|_| random_x(&mut rng, 1, 19)).collect();
+
+    let direct: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|x| {
+            let mut ws = ServeWorkspace::with_threads(1);
+            serve.forward(x, 1, &mut ws).to_vec()
+        })
+        .collect();
+
+    for threads in thread_counts() {
+        for max_batch in [8usize, 1] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_queue: 64,
+                max_wait: Duration::from_millis(30),
+                kernel_threads: threads,
+                ..ServeConfig::default()
+            };
+            let mut engine = ServeEngine::new(serve.clone(), cfg);
+            let tickets: Vec<_> = requests
+                .iter()
+                .map(|x| engine.submit(x.clone()).expect("queue has room"))
+                .collect();
+            for (i, t) in tickets.into_iter().enumerate() {
+                let got = t.wait().unwrap();
+                assert_eq!(
+                    direct[i], got,
+                    "request {i} (max_batch={max_batch}, threads={threads})"
+                );
+            }
+            let stats = engine.stats();
+            assert_eq!(stats.completed, n as u64);
+            assert_eq!(stats.rejected, 0);
+            engine.shutdown();
+        }
+    }
+}
+
+#[test]
+fn engine_results_arrive_for_concurrent_submitters() {
+    // many client threads, one engine: every response must match the
+    // direct forward of its own request (no cross-request mixups)
+    let mlp = mixed_model(&[11, 16, 4], &[0.12, 0.6], 77);
+    let serve = ServeModel::from_mlp(&mlp, &LayoutOptions::default());
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_queue: 256,
+        max_wait: Duration::from_millis(2),
+        kernel_threads: 1,
+        ..ServeConfig::default()
+    };
+    let engine = ServeEngine::new(serve.clone(), cfg);
+    let (tx, rx) = channel::<(Vec<f32>, Vec<f32>)>();
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let engine = &engine;
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(c + 1);
+                for _ in 0..8 {
+                    let x = random_x(&mut rng, 1, 11);
+                    let y = engine.infer(x.clone()).unwrap();
+                    tx.send((x, y)).unwrap();
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut ws = ServeWorkspace::with_threads(1);
+    let mut seen = 0;
+    while let Ok((x, y)) = rx.recv() {
+        assert_eq!(serve.forward(&x, 1, &mut ws), &y[..]);
+        seen += 1;
+    }
+    assert_eq!(seen, 32);
+}
