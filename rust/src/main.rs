@@ -24,6 +24,7 @@ use tsnn::runtime::{default_artifacts_dir, Manifest, MaskedDenseTrainer};
 use tsnn::serve::{
     sweep, LayerFormat, LayoutOptions, ServeConfig, ServeEngine, ServeModel, SweepConfig,
 };
+use tsnn::sparse::simd::{self, KernelFormat};
 use tsnn::train::{train_sequential_opts, TrainOptions};
 use tsnn::util::logging;
 
@@ -312,15 +313,17 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("weights: {}", model.weight_count());
     println!("memory: {} KiB", model.memory_bytes() / 1024);
     println!("serve memory: {} KiB (weights-only layout)", serve.memory_bytes() / 1024);
+    print_isa_line();
     for (l, layer) in model.layers.iter().enumerate() {
         println!(
-            "  layer {l}: {}x{} nnz={} density={:.4} act={:?} serve={}",
+            "  layer {l}: {}x{} nnz={} density={:.4} act={:?} serve={} kernel={}",
             layer.n_in(),
             layer.n_out(),
             layer.weights.nnz(),
             layer.weights.density(),
             layer.activation,
-            format_name(serve.layers[l].format())
+            format_name(serve.layers[l].format()),
+            kernel_name_for(serve.layers[l].format())
         );
     }
     Ok(())
@@ -330,6 +333,26 @@ fn format_name(f: LayerFormat) -> &'static str {
     match f {
         LayerFormat::Csr => "csr",
         LayerFormat::Dense => "dense",
+    }
+}
+
+/// The microkernel the process-detected ISA selects for a serve format
+/// (training layers always dispatch the CSR kernel, DESIGN.md §11.2).
+fn kernel_name_for(f: LayerFormat) -> &'static str {
+    let fmt = match f {
+        LayerFormat::Csr => KernelFormat::Csr,
+        LayerFormat::Dense => KernelFormat::Dense,
+    };
+    simd::microkernel_name(simd::detected_isa(), fmt)
+}
+
+/// One line of ISA observability: what the dispatch tables selected and
+/// whether a `TSNN_ISA` override drove the choice.
+fn print_isa_line() {
+    let isa = simd::detected_isa();
+    match std::env::var("TSNN_ISA") {
+        Ok(v) => println!("isa: {} (TSNN_ISA={v})", isa.name()),
+        Err(_) => println!("isa: {} (runtime-detected)", isa.name()),
     }
 }
 
@@ -353,14 +376,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         }
     };
     println!("serving layout ({} KiB):", model.memory_bytes() / 1024);
+    print_isa_line();
     for (l, layer) in model.layers.iter().enumerate() {
         println!(
-            "  layer {l}: {}x{} nnz={} density={:.4} format={}",
+            "  layer {l}: {}x{} nnz={} density={:.4} format={} kernel={}",
             layer.n_in(),
             layer.n_out(),
             layer.nnz(),
             layer.density,
-            format_name(layer.format())
+            format_name(layer.format()),
+            kernel_name_for(layer.format())
         );
     }
 

@@ -2,7 +2,7 @@
 //! state + activation.
 
 use crate::nn::{remap_aligned, Activation, MomentumSgd, SRelu};
-use crate::sparse::{erdos_renyi_epsilon, ops, CsrMatrix, Exec, WeightInit};
+use crate::sparse::{erdos_renyi_epsilon, ops, simd, CsrMatrix, Exec, WeightInit};
 use crate::util::Rng;
 
 /// One sparse layer of the MLP (`n_in × n_out` CSR weights).
@@ -59,6 +59,14 @@ impl SparseLayer {
         self.weights.nnz()
             + self.bias.len()
             + self.srelu.as_ref().map(|s| s.param_count()).unwrap_or(0)
+    }
+
+    /// Name of the CSR microkernel this layer's kernels dispatch to at
+    /// the process-detected ISA (observability for `tsnn inspect`; the
+    /// actual dispatch happens per-call via [`Exec::isa`], DESIGN.md
+    /// §11.2).
+    pub fn microkernel(&self) -> &'static str {
+        simd::microkernel_name(simd::detected_isa(), simd::KernelFormat::Csr)
     }
 
     /// Linear part of the forward pass: `pre = x · W + b` (bias broadcast

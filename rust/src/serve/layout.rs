@@ -27,11 +27,8 @@ use crate::error::Result;
 use crate::model::{checkpoint, SparseMlp};
 use crate::nn::Activation;
 use crate::sparse::ops::{self, Exec, ShardPtr};
+use crate::sparse::simd::{self, Isa};
 use crate::sparse::{CsrMatrix, WorkerPool};
-
-/// Samples per block in the dense-fallback kernel — must equal the CSR
-/// kernel's block width so the block-level zero-skip windows coincide.
-const BLOCK: usize = 8;
 
 /// Default density at or above which a layer is served dense. The
 /// indirection-free dense row stream beats CSR well below 50% density
@@ -176,7 +173,8 @@ impl ServeLayer {
 
 /// Dense-fallback forward sharded over the batch dimension — the same
 /// disjoint-row sharding as `spmm_forward_exec`, with the dense MAC
-/// count `batch × n_in × n_out` as the crossover work metric.
+/// count `batch × n_in × n_out` as the crossover work metric, routed
+/// through the context's dense microkernel ([`Exec::isa`], §11.2).
 fn dense_forward_exec(
     x: &[f32],
     batch: usize,
@@ -189,6 +187,7 @@ fn dense_forward_exec(
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(out.len(), batch * n_out);
     assert_eq!(w.len(), n_in * n_out);
+    let table = simd::kernel_table(exec.isa());
     let work = batch.saturating_mul(n_in).saturating_mul(n_out);
     let shards = if exec.threads() <= 1 || batch <= 1 || work < exec.min_work() {
         1
@@ -196,7 +195,9 @@ fn dense_forward_exec(
         exec.threads().min(batch)
     };
     if shards <= 1 {
-        return dense_forward(x, batch, n_in, n_out, w, out);
+        // SAFETY: lengths asserted above; kernel_table only hands out
+        // tables whose ISA the host supports.
+        return unsafe { (table.dense_forward)(x, batch, n_in, n_out, w, out) };
     }
     let rows_per = batch.div_ceil(shards);
     let out_ptr = ShardPtr(out.as_mut_ptr());
@@ -212,39 +213,17 @@ fn dense_forward_exec(
         let oc = unsafe {
             std::slice::from_raw_parts_mut(out_ptr.0.add(b0 * n_out), (b1 - b0) * n_out)
         };
-        dense_forward(&x[b0 * n_in..b1 * n_in], b1 - b0, n_in, n_out, w, oc);
+        // SAFETY: sub-slice lengths match the sub-batch; table as above.
+        unsafe { (table.dense_forward)(&x[b0 * n_in..b1 * n_in], b1 - b0, n_in, n_out, w, oc) };
     });
 }
 
-/// Sequential dense-row forward: `out[b, :] += Σ_i x[b, i] * W[i, :]`
-/// over pre-biased `out`, mirroring the CSR kernel's batch blocking and
-/// block-level activation-sparsity skip so stored-entry contributions
-/// land in the training kernel's exact floating-point order.
+/// Sequential scalar dense-row forward — now the §11 scalar table entry
+/// [`simd::dense_forward_scalar`] (the body moved there so every ISA's
+/// dense kernel lives beside its CSR siblings); kept as the local name
+/// the parity tests exercise directly.
 fn dense_forward(x: &[f32], batch: usize, n_in: usize, n_out: usize, w: &[f32], out: &mut [f32]) {
-    let mut b0 = 0usize;
-    while b0 < batch {
-        let bl = (batch - b0).min(BLOCK);
-        for i in 0..n_in {
-            let mut xv = [0.0f32; BLOCK];
-            let mut any = false;
-            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
-                let v = x[(b0 + t) * n_in + i];
-                *xvt = v;
-                any |= v != 0.0;
-            }
-            if !any {
-                continue;
-            }
-            let row = &w[i * n_out..(i + 1) * n_out];
-            for (t, &xvt) in xv.iter().enumerate().take(bl) {
-                let o = &mut out[(b0 + t) * n_out..(b0 + t + 1) * n_out];
-                for (oj, &wj) in o.iter_mut().zip(row.iter()) {
-                    *oj += xvt * wj;
-                }
-            }
-        }
-        b0 += bl;
-    }
+    simd::dense_forward_scalar(x, batch, n_in, n_out, w, out);
 }
 
 /// Reusable forward buffers for a served model: two ping-pong slabs
@@ -258,6 +237,11 @@ pub struct ServeWorkspace {
     /// Worker budget for the sharded kernels (`0` = one per core,
     /// `1` = sequential) — a pure speed knob, results are bit-identical.
     pub kernel_threads: usize,
+    /// Force a specific microkernel ISA for this workspace's forwards
+    /// (`None` = process-detected). Unsupported requests clamp to
+    /// scalar; results are bit-identical either way (§11.3) — this is
+    /// the serving parity suite's per-ISA hook.
+    pub force_isa: Option<Isa>,
     pool: Option<Arc<WorkerPool>>,
 }
 
@@ -347,7 +331,10 @@ impl ServeModel {
         }
         ws.ensure_pool();
         let pool = ws.pool();
-        let exec = Exec::with(ws.kernel_threads, pool.as_deref());
+        let mut exec = Exec::with(ws.kernel_threads, pool.as_deref());
+        if let Some(isa) = ws.force_isa {
+            exec = exec.with_isa(isa);
+        }
         ws.act[..x.len()].copy_from_slice(x);
         for (l, layer) in self.layers.iter().enumerate() {
             let (n_in, n_out) = (layer.n_in(), layer.n_out());

@@ -118,6 +118,20 @@ impl CsrMatrix {
         (&self.col_idx[s..e], &self.values[s..e])
     }
 
+    /// Row ids ordered by descending nnz length (ties keep ascending row
+    /// order — the sort is stable), the processing order of the
+    /// length-sorted LPT row schedule (DESIGN.md §11.4). Computed on
+    /// demand: `CsrMatrix` derives `PartialEq`/`Clone`, so a cached
+    /// permutation field would poison equality and rebuild invariants.
+    pub fn rows_by_nnz_desc(&self) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.n_rows as u32).collect();
+        order.sort_by_key(|&r| {
+            let r = r as usize;
+            std::cmp::Reverse(self.row_ptr[r + 1] - self.row_ptr[r])
+        });
+        order
+    }
+
     /// Storage index of entry `(i, j)` if present (binary search).
     #[inline]
     pub fn find(&self, i: usize, j: u32) -> Option<usize> {
@@ -392,6 +406,16 @@ mod tests {
         assert!(CsrMatrix::from_coo(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]).is_err());
         assert!(CsrMatrix::from_coo(2, 2, vec![(2, 0, 1.0)]).is_err());
         assert!(CsrMatrix::from_coo(2, 2, vec![(0, 5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn rows_by_nnz_desc_is_stable_and_total() {
+        let m = sample(); // row lengths 2, 1, 2
+        assert_eq!(m.rows_by_nnz_desc(), vec![0, 2, 1]);
+        // empty rows sort last but are still present
+        let m = CsrMatrix::from_coo(4, 2, vec![(2, 0, 1.0), (2, 1, 2.0), (3, 0, 3.0)]).unwrap();
+        assert_eq!(m.rows_by_nnz_desc(), vec![2, 3, 0, 1]);
+        assert_eq!(CsrMatrix::empty(3, 3).rows_by_nnz_desc(), vec![0, 1, 2]);
     }
 
     #[test]

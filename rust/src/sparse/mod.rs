@@ -6,14 +6,17 @@
 //! one-pass backward, and the two-kernel parity oracles — with their
 //! worker-sharded parallel variants (see `rust/DESIGN.md` §4–§5), the
 //! persistent kernel worker pool that serves every sharded dispatch on
-//! the hot path ([`pool`], `rust/DESIGN.md` §9), and Erdős–Rényi /
-//! weight initialisation ([`init`]). No dense weight matrix is ever
-//! materialised on the training path.
+//! the hot path ([`pool`], `rust/DESIGN.md` §9), the runtime-dispatched
+//! SIMD microkernels every kernel entry point routes through ([`simd`],
+//! `rust/DESIGN.md` §11), and Erdős–Rényi / weight initialisation
+//! ([`init`]). No dense weight matrix is ever materialised on the
+//! training path.
 
 pub mod csr;
 pub mod init;
 pub mod ops;
 pub mod pool;
+pub mod simd;
 
 pub use csr::CsrMatrix;
 pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};
@@ -22,3 +25,4 @@ pub use ops::{
     spmm_grad_weights_threaded, Exec,
 };
 pub use pool::WorkerPool;
+pub use simd::{detected_isa, Isa};

@@ -35,7 +35,8 @@
 
 use super::csr::CsrMatrix;
 use super::pool::WorkerPool;
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::simd::{detected_isa, kernel_table, Isa};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 
 /// Samples per block in the batch-blocked kernels: each W row is streamed
 /// once per block instead of once per sample, cutting weight traffic
@@ -43,7 +44,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// monomorphized inner loops fill a full 256-bit SIMD register of f32
 /// lanes (see DESIGN.md §5); [`tail_dispatch!`] enumerates 1..BLOCK and
 /// must be extended if BLOCK grows.
-const BLOCK: usize = 8;
+pub(crate) const BLOCK: usize = 8;
 
 // Compile-time guard: tail_dispatch! enumerates widths 1..8 only, so a
 // larger BLOCK must extend the macro (or this becomes a runtime panic
@@ -212,7 +213,7 @@ pub fn spmm_grad_weights(
 ///
 /// Callers guarantee `x.len() == batch * n_in`, `dz.len() == batch * n_out`,
 /// `row0 <= row1 <= n_rows`, and a validated CSR `w`.
-fn grad_weights_rows(
+pub(crate) fn grad_weights_rows(
     x: &[f32],
     dz: &[f32],
     batch: usize,
@@ -339,30 +340,54 @@ pub fn spmm_backward_fused_exec(
     debug_assert!(w.validate().is_ok());
     // The fused kernel does ~2 MACs per (slot, sample) — count both when
     // judging the dispatch crossover.
+    let table = kernel_table(exec.isa);
     let shards = shard_count(exec, batch, w.nnz().saturating_mul(2), w.n_rows);
     let dx_ptr = ShardPtr(dx.as_mut_ptr());
     if shards <= 1 {
-        // SAFETY: buffer lengths asserted above; full row range.
-        unsafe { backward_fused_rows(x, dz, batch, w, 0, w.n_rows, dx_ptr, dw) };
+        // SAFETY: buffer lengths asserted above, full row range; table
+        // ISA is host-supported (see spmm_forward_exec).
+        unsafe { (table.backward_fused_rows)(x, dz, batch, w, 0, w.n_rows, dx_ptr, dw) };
         return;
     }
-    let bounds = balanced_row_bounds(&w.row_ptr, shards);
-    let bounds = bounds.as_slice();
+    let shards = exec.row_shard_budget(shards, w.n_rows);
     let dw_ptr = ShardPtr(dw.as_mut_ptr());
-    exec.run(shards, |s| {
-        let (r0, r1) = (bounds[s], bounds[s + 1]);
-        if r0 == r1 {
-            return; // nnz-heavy row swallowed this shard's budget
+    match row_schedule(w, shards) {
+        RowSchedule::Contiguous(bounds) => {
+            let bounds = bounds.as_slice();
+            exec.run(shards, |s| {
+                let (r0, r1) = (bounds[s], bounds[s + 1]);
+                if r0 == r1 {
+                    return; // nnz-heavy row swallowed this shard's budget
+                }
+                // NOTE: a shard with rows but zero nnz (all-empty rows)
+                // must still run — it owns those rows' dx columns.
+                let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+                // SAFETY: disjoint dw slot ranges (monotone row_ptr) and
+                // disjoint dx columns (disjoint row ranges, §5.1); both
+                // buffers outlive the dispatch.
+                let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+                // SAFETY: dw sub-slice spans rows [r0, r1); table as above.
+                unsafe { (table.backward_fused_rows)(x, dz, batch, w, r0, r1, dx_ptr, head) };
+            });
         }
-        // NOTE: a shard with rows but zero nnz (all-empty rows) must
-        // still run — it owns those rows' dx columns.
-        let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
-        // SAFETY: disjoint dw slot ranges (monotone row_ptr) and
-        // disjoint dx columns (disjoint row ranges, §5.1); both buffers
-        // outlive the dispatch.
-        let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
-        unsafe { backward_fused_rows(x, dz, batch, w, r0, r1, dx_ptr, head) };
-    });
+        RowSchedule::Balanced { starts, rows } => {
+            exec.run(shards, |s| {
+                for (r0, r1) in RowRuns::new(&rows[starts[s]..starts[s + 1]]) {
+                    // Empty runs still dispatch: they own those rows' dx
+                    // columns, which the fused kernel zero-fills.
+                    let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+                    // SAFETY: every row belongs to exactly one shard's
+                    // list → disjoint dw slot ranges AND disjoint dx
+                    // columns across the dispatch (§11.4); both buffers
+                    // outlive it.
+                    let head =
+                        unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+                    // SAFETY: dw sub-slice spans the run; table as above.
+                    unsafe { (table.backward_fused_rows)(x, dz, batch, w, r0, r1, dx_ptr, head) };
+                }
+            });
+        }
+    }
 }
 
 /// Fused-backward core over rows `[row0, row1)`: batch-blocked like the
@@ -379,7 +404,7 @@ pub fn spmm_backward_fused_exec(
 /// `[row0, row1)` are not written by anyone else for the duration of the
 /// call.
 #[allow(clippy::too_many_arguments)]
-unsafe fn backward_fused_rows(
+pub(crate) unsafe fn backward_fused_rows(
     x: &[f32],
     dz: &[f32],
     batch: usize,
@@ -565,7 +590,8 @@ pub fn scoped_dispatch_events() -> u64 {
 }
 
 /// Kernel execution context: a resolved thread budget plus, on the hot
-/// path, the persistent [`WorkerPool`] that serves it (DESIGN.md §9).
+/// path, the persistent [`WorkerPool`] that serves it (DESIGN.md §9),
+/// plus the instruction set the kernels dispatch to (DESIGN.md §11).
 ///
 /// `Copy` so it threads freely through the layer/model call chain; the
 /// lifetime ties it to the pool it borrows (a pool-less `Exec` is
@@ -574,6 +600,7 @@ pub fn scoped_dispatch_events() -> u64 {
 pub struct Exec<'p> {
     threads: usize,
     pool: Option<&'p WorkerPool>,
+    isa: Isa,
 }
 
 impl<'p> Exec<'p> {
@@ -582,6 +609,7 @@ impl<'p> Exec<'p> {
         Exec {
             threads: 1,
             pool: None,
+            isa: detected_isa(),
         }
     }
 
@@ -593,6 +621,7 @@ impl<'p> Exec<'p> {
         Exec {
             threads: resolve_threads(threads),
             pool: None,
+            isa: detected_isa(),
         }
     }
 
@@ -602,6 +631,7 @@ impl<'p> Exec<'p> {
         Exec {
             threads: pool.threads(),
             pool: Some(pool),
+            isa: detected_isa(),
         }
     }
 
@@ -614,6 +644,20 @@ impl<'p> Exec<'p> {
         }
     }
 
+    /// Override the microkernel ISA (default: [`detected_isa`], i.e. the
+    /// best supported set or the `TSNN_ISA` env override). An ISA the
+    /// host does not support clamps to [`Isa::Scalar`] — results are
+    /// bit-identical either way (§11.3), so forcing is always safe.
+    pub fn with_isa(mut self, isa: Isa) -> Exec<'p> {
+        self.isa = if isa.supported() { isa } else { Isa::Scalar };
+        self
+    }
+
+    /// The microkernel ISA this context dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
     /// Resolved worker budget (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
@@ -622,6 +666,18 @@ impl<'p> Exec<'p> {
     /// True when dispatches run on a persistent pool.
     pub fn is_pooled(&self) -> bool {
         self.pool.is_some()
+    }
+
+    /// Shard budget for the row-scheduled kernels once the crossover has
+    /// passed: pooled dispatches oversubscribe the worker count
+    /// ([`WorkerPool::shard_budget`]) so work-stealing can absorb ragged
+    /// rows; the scoped fallback keeps one shard per spawned thread
+    /// (spawns are the cost there, not stragglers).
+    fn row_shard_budget(&self, shards: usize, max_shards: usize) -> usize {
+        match self.pool {
+            Some(p) => p.shard_budget(max_shards),
+            None => shards,
+        }
     }
 
     /// The crossover work threshold of this context (two-tier: warm pool
@@ -719,6 +775,132 @@ pub fn balanced_row_bounds(row_ptr: &[usize], shards: usize) -> Vec<usize> {
     bounds
 }
 
+/// How the row-sharded kernels (grad-weights, fused backward) lay rows
+/// onto shards (DESIGN.md §11.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowSchedulePolicy {
+    /// Contiguous nnz-balanced ranges normally; switch to the
+    /// length-sorted LPT schedule when the contiguous split is skewed
+    /// (heaviest shard > 1.25× the mean). The default.
+    Adaptive,
+    /// Always contiguous [`balanced_row_bounds`] ranges — the pre-§11
+    /// behaviour, kept as a kill switch and as the bench baseline.
+    Contiguous,
+}
+
+/// Process-wide policy knob (0 = Adaptive, 1 = Contiguous). A scheduling
+/// choice only — every schedule produces bit-identical results — so a
+/// relaxed global is safe.
+static ROW_SCHEDULE_POLICY: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide row-scheduling policy (bench toggle/kill switch).
+pub fn set_row_schedule_policy(policy: RowSchedulePolicy) {
+    ROW_SCHEDULE_POLICY.store(policy as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide row-scheduling policy.
+pub fn row_schedule_policy() -> RowSchedulePolicy {
+    if ROW_SCHEDULE_POLICY.load(Ordering::Relaxed) == RowSchedulePolicy::Contiguous as u8 {
+        RowSchedulePolicy::Contiguous
+    } else {
+        RowSchedulePolicy::Adaptive
+    }
+}
+
+/// A row→shard assignment for the row-sharded kernels.
+pub(crate) enum RowSchedule {
+    /// Shard `s` owns the contiguous row range `[bounds[s], bounds[s+1])`.
+    Contiguous(Vec<usize>),
+    /// Shard `s` owns the (ascending) explicit row list
+    /// `rows[starts[s]..starts[s + 1]]` — built by longest-processing-time
+    /// greedy assignment over the length-sorted rows, so skewed matrices
+    /// stop straggling on whichever shard drew the heavy rows.
+    Balanced { starts: Vec<usize>, rows: Vec<u32> },
+}
+
+/// Build the row schedule for `shards` shards over `w`'s rows.
+///
+/// Contiguous bounds are kept whenever they are already balanced (the
+/// common quasi-uniform Erdős–Rényi case — no permutation, no extra
+/// allocation beyond the bounds) or the policy forces them. Otherwise:
+/// LPT greedy over [`CsrMatrix::rows_by_nnz_desc`], assigning each row to
+/// the least-loaded shard. **Every** row is assigned — including empty
+/// ones, whose dx columns the fused kernel still owns — and each shard's
+/// list is sorted ascending so kernel calls walk storage in order.
+pub(crate) fn row_schedule(w: &CsrMatrix, shards: usize) -> RowSchedule {
+    let bounds = balanced_row_bounds(&w.row_ptr, shards);
+    if row_schedule_policy() == RowSchedulePolicy::Contiguous {
+        return RowSchedule::Contiguous(bounds);
+    }
+    let nnz = w.nnz();
+    let max_shard_nnz = bounds
+        .windows(2)
+        .map(|b| w.row_ptr[b[1]] - w.row_ptr[b[0]])
+        .max()
+        .unwrap_or(0);
+    // Skew test in integers: heaviest shard ≤ 1.25 × (nnz / shards) keeps
+    // the contiguous split (straggler bounded at +25% of a shard's work).
+    if max_shard_nnz.saturating_mul(shards).saturating_mul(4) <= nnz.saturating_mul(5) {
+        return RowSchedule::Contiguous(bounds);
+    }
+    let order = w.rows_by_nnz_desc();
+    let mut load = vec![0usize; shards];
+    let mut lists: Vec<Vec<u32>> = vec![Vec::new(); shards];
+    for &r in &order {
+        let row = r as usize;
+        let len = w.row_ptr[row + 1] - w.row_ptr[row];
+        let mut best = 0usize;
+        for s in 1..shards {
+            if load[s] < load[best] {
+                best = s;
+            }
+        }
+        // Empty rows cost ~one batch column of dx writes in the fused
+        // kernel — charge 1 so they spread instead of piling up.
+        load[best] += len.max(1);
+        lists[best].push(r);
+    }
+    let mut rows = Vec::with_capacity(order.len());
+    let mut starts = Vec::with_capacity(shards + 1);
+    starts.push(0);
+    for mut list in lists {
+        list.sort_unstable();
+        rows.append(&mut list);
+        starts.push(rows.len());
+    }
+    RowSchedule::Balanced { starts, rows }
+}
+
+/// Iterator over maximal runs of consecutive row ids in an ascending
+/// list, yielding `(r0, r1)` half-open ranges — the balanced schedule's
+/// unit of kernel dispatch, amortizing per-call batch-block setup (and
+/// the SIMD kernels' scratch transposes) across each run.
+struct RowRuns<'a> {
+    rows: &'a [u32],
+    pos: usize,
+}
+
+impl<'a> RowRuns<'a> {
+    fn new(rows: &'a [u32]) -> RowRuns<'a> {
+        RowRuns { rows, pos: 0 }
+    }
+}
+
+impl Iterator for RowRuns<'_> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        let r0 = *self.rows.get(self.pos)? as usize;
+        let mut r1 = r0 + 1;
+        self.pos += 1;
+        while self.pos < self.rows.len() && self.rows[self.pos] as usize == r1 {
+            r1 += 1;
+            self.pos += 1;
+        }
+        Some((r0, r1))
+    }
+}
+
 /// [`spmm_forward`] sharded over the batch dimension across up to
 /// `threads` scoped workers (`0` = one per available core). Each worker
 /// writes a disjoint contiguous range of `out` rows; results are exactly
@@ -749,16 +931,21 @@ pub fn spmm_forward_threaded(
 }
 
 /// [`spmm_forward_threaded`] with an explicit execution context: pooled
-/// dispatch on the hot path, scoped spawns on the cold fallback
-/// (bit-identical results either way).
+/// dispatch on the hot path, scoped spawns on the cold fallback, and the
+/// context's microkernel ISA ([`Exec::isa`]) on every path —
+/// bit-identical results either way (§11.3).
 pub fn spmm_forward_exec(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32], exec: Exec<'_>) {
-    let shards = shard_count(exec, batch, w.nnz(), batch);
-    if shards <= 1 {
-        return spmm_forward(x, batch, w, out);
-    }
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(out.len(), batch * n_out);
+    debug_assert!(w.validate().is_ok());
+    let table = kernel_table(exec.isa);
+    let shards = shard_count(exec, batch, w.nnz(), batch);
+    if shards <= 1 {
+        // SAFETY: lengths asserted above, CSR validated; kernel_table
+        // only hands out tables whose ISA the host supports.
+        return unsafe { (table.forward)(x, batch, w, out) };
+    }
     // shards > 1 implies batch ≥ 2 and nnz ≥ 1, hence n_in, n_out ≥ 1.
     let rows_per = batch.div_ceil(shards);
     let out_ptr = ShardPtr(out.as_mut_ptr());
@@ -774,7 +961,8 @@ pub fn spmm_forward_exec(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]
         let oc = unsafe {
             std::slice::from_raw_parts_mut(out_ptr.0.add(b0 * n_out), (b1 - b0) * n_out)
         };
-        spmm_forward(&x[b0 * n_in..b1 * n_in], b1 - b0, w, oc);
+        // SAFETY: sub-slice lengths match the sub-batch; table as above.
+        unsafe { (table.forward)(&x[b0 * n_in..b1 * n_in], b1 - b0, w, oc) };
     });
 }
 
@@ -799,13 +987,17 @@ pub fn spmm_grad_input_exec(
     dx: &mut [f32],
     exec: Exec<'_>,
 ) {
-    let shards = shard_count(exec, batch, w.nnz(), batch);
-    if shards <= 1 {
-        return spmm_grad_input(dz, batch, w, dx);
-    }
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     assert_eq!(dz.len(), batch * n_out);
     assert_eq!(dx.len(), batch * n_in);
+    debug_assert!(w.validate().is_ok());
+    let table = kernel_table(exec.isa);
+    let shards = shard_count(exec, batch, w.nnz(), batch);
+    if shards <= 1 {
+        // SAFETY: lengths asserted above, CSR validated; table ISA is
+        // host-supported (see spmm_forward_exec).
+        return unsafe { (table.grad_input)(dz, batch, w, dx) };
+    }
     let rows_per = batch.div_ceil(shards);
     let dx_ptr = ShardPtr(dx.as_mut_ptr());
     exec.run(shards, |s| {
@@ -819,7 +1011,8 @@ pub fn spmm_grad_input_exec(
         let xc = unsafe {
             std::slice::from_raw_parts_mut(dx_ptr.0.add(b0 * n_in), (b1 - b0) * n_in)
         };
-        spmm_grad_input(&dz[b0 * n_out..b1 * n_out], b1 - b0, w, xc);
+        // SAFETY: sub-slice lengths match the sub-batch; table as above.
+        unsafe { (table.grad_input)(&dz[b0 * n_out..b1 * n_out], b1 - b0, w, xc) };
     });
 }
 
@@ -849,29 +1042,55 @@ pub fn spmm_grad_weights_exec(
     dw: &mut [f32],
     exec: Exec<'_>,
 ) {
-    let shards = shard_count(exec, batch, w.nnz(), w.n_rows);
-    if shards <= 1 {
-        return spmm_grad_weights(x, dz, batch, w, dw);
-    }
     assert_eq!(x.len(), batch * w.n_rows);
     assert_eq!(dz.len(), batch * w.n_cols);
     assert_eq!(dw.len(), w.nnz());
     debug_assert!(w.validate().is_ok());
-    let bounds = balanced_row_bounds(&w.row_ptr, shards);
-    let bounds = bounds.as_slice();
+    let table = kernel_table(exec.isa);
+    let shards = shard_count(exec, batch, w.nnz(), w.n_rows);
+    if shards <= 1 {
+        // SAFETY: lengths asserted above, CSR validated; table ISA is
+        // host-supported (see spmm_forward_exec).
+        return unsafe { (table.grad_weights_rows)(x, dz, batch, w, 0, w.n_rows, dw) };
+    }
+    let shards = exec.row_shard_budget(shards, w.n_rows);
     let dw_ptr = ShardPtr(dw.as_mut_ptr());
-    exec.run(shards, |s| {
-        let (r0, r1) = (bounds[s], bounds[s + 1]);
-        let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
-        if k0 == k1 {
-            return; // nnz-heavy row swallowed this shard's budget
+    match row_schedule(w, shards) {
+        RowSchedule::Contiguous(bounds) => {
+            let bounds = bounds.as_slice();
+            exec.run(shards, |s| {
+                let (r0, r1) = (bounds[s], bounds[s + 1]);
+                let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+                if k0 == k1 {
+                    return; // nnz-heavy row swallowed this shard's budget
+                }
+                // SAFETY: shard s writes only dw slots [k0, k1) — row_ptr
+                // is monotone, so the value-slot ranges of disjoint row
+                // ranges are disjoint (§4.1); the buffer outlives the
+                // dispatch.
+                let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+                // SAFETY: dw sub-slice spans rows [r0, r1); table as above.
+                unsafe { (table.grad_weights_rows)(x, dz, batch, w, r0, r1, head) };
+            });
         }
-        // SAFETY: shard s writes only dw slots [k0, k1) — row_ptr is
-        // monotone, so the value-slot ranges of disjoint row ranges are
-        // disjoint (§4.1); the buffer outlives the dispatch.
-        let head = unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
-        grad_weights_rows(x, dz, batch, w, r0, r1, head);
-    });
+        RowSchedule::Balanced { starts, rows } => {
+            exec.run(shards, |s| {
+                for (r0, r1) in RowRuns::new(&rows[starts[s]..starts[s + 1]]) {
+                    let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+                    if k0 == k1 {
+                        continue; // all-empty run: no dw slots to fill
+                    }
+                    // SAFETY: every row belongs to exactly one shard's
+                    // list, so run slot ranges are pairwise disjoint
+                    // across the dispatch (§11.4); buffer as above.
+                    let head =
+                        unsafe { std::slice::from_raw_parts_mut(dw_ptr.0.add(k0), k1 - k0) };
+                    // SAFETY: dw sub-slice spans the run; table as above.
+                    unsafe { (table.grad_weights_rows)(x, dz, batch, w, r0, r1, head) };
+                }
+            });
+        }
+    }
 }
 
 /// Dense reference matmul for the test oracle: `x[batch, n_in] @ w_dense`.
@@ -1296,6 +1515,146 @@ mod tests {
             let mut one = vec![0.0f32; 7];
             spmm_forward(&x[b * 10..(b + 1) * 10], 1, &w, &mut one);
             close(&one, &full[b * 7..(b + 1) * 7], 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_runs_yield_maximal_consecutive_ranges() {
+        let rows = [0u32, 1, 2, 5, 7, 8];
+        let runs: Vec<_> = RowRuns::new(&rows).collect();
+        assert_eq!(runs, vec![(0, 3), (5, 6), (7, 9)]);
+        assert_eq!(RowRuns::new(&[]).count(), 0);
+        assert_eq!(RowRuns::new(&[4u32]).collect::<Vec<_>>(), vec![(4, 5)]);
+    }
+
+    /// One heavy row dominating nnz: the adaptive schedule must switch to
+    /// the balanced LPT assignment; forcing `Contiguous` must switch it
+    /// back. Both live in one test because the policy knob is
+    /// process-global (other tests only ever read the default).
+    #[test]
+    fn row_schedule_balances_skew_and_honours_the_policy_toggle() {
+        let mut coo: Vec<(u32, u32, f32)> = Vec::new();
+        for j in 0..600u32 {
+            coo.push((3, j, 1.0));
+        }
+        for r in 0..32u32 {
+            if r != 3 {
+                coo.push((r, 600 + r, 0.5));
+            }
+        }
+        // rows 32..40 are empty — they must still be scheduled (the
+        // fused kernel owns their dx columns)
+        let w = CsrMatrix::from_coo(40, 640, coo).unwrap();
+        let shards = 4;
+        match row_schedule(&w, shards) {
+            RowSchedule::Balanced { starts, rows } => {
+                assert_eq!(starts.len(), shards + 1);
+                assert_eq!(rows.len(), w.n_rows, "every row must be scheduled");
+                let mut seen = vec![false; w.n_rows];
+                for s in 0..shards {
+                    let list = &rows[starts[s]..starts[s + 1]];
+                    assert!(list.windows(2).all(|p| p[0] < p[1]), "shard {s} not ascending");
+                    for &r in list {
+                        assert!(!seen[r as usize], "row {r} scheduled twice");
+                        seen[r as usize] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&v| v), "row dropped from the schedule");
+            }
+            RowSchedule::Contiguous(_) => panic!("skewed matrix must trigger the LPT schedule"),
+        }
+        set_row_schedule_policy(RowSchedulePolicy::Contiguous);
+        let forced = matches!(row_schedule(&w, shards), RowSchedule::Contiguous(_));
+        set_row_schedule_policy(RowSchedulePolicy::Adaptive);
+        assert!(forced, "Contiguous policy must suppress the LPT schedule");
+        assert_eq!(row_schedule_policy(), RowSchedulePolicy::Adaptive);
+        // quasi-uniform matrix: adaptive keeps the contiguous bounds
+        let mut rng = Rng::new(60);
+        let u = erdos_renyi_like(64, 64, 0.5, &mut rng);
+        assert!(matches!(row_schedule(&u, 4), RowSchedule::Contiguous(_)));
+    }
+
+    #[test]
+    fn row_scheduled_kernels_match_sequential_on_skewed_matrices() {
+        // One row owns most of the nnz (the §11.4 straggler shape); the
+        // pooled path oversubscribes and LPT-schedules, and must still be
+        // bit-identical to the sequential kernels.
+        let mut coo: Vec<(u32, u32, f32)> = Vec::new();
+        for j in 0..1500u32 {
+            coo.push((3, j, 0.01 * j as f32 - 5.0));
+        }
+        for r in 0..64u32 {
+            if r == 3 {
+                continue;
+            }
+            for t in 0..4u32 {
+                coo.push((r, (r * 23 + t * 31) % 1500, 0.1 * (r + t) as f32 - 1.0));
+            }
+        }
+        let w = CsrMatrix::from_coo(64, 1500, coo).unwrap();
+        let batch = 32;
+        assert!(batch * w.nnz() >= POOL_MIN_WORK, "must cross the warm crossover");
+        let mut rng = Rng::new(61);
+        let x = random_x(&mut rng, batch, 64, 0.2);
+        let dz = random_x(&mut rng, batch, 1500, 0.0);
+        let pool = WorkerPool::new(4);
+        let exec = Exec::pooled(&pool);
+        let (mut a, mut b) = (vec![0.0f32; w.nnz()], vec![0.0f32; w.nnz()]);
+        spmm_grad_weights(&x, &dz, batch, &w, &mut a);
+        spmm_grad_weights_exec(&x, &dz, batch, &w, &mut b, exec);
+        assert_eq!(a, b, "grad_weights");
+        let (dx_o, dw_o) = oracle_backward(&x, &dz, batch, &w);
+        let mut dx = vec![f32::NAN; batch * 64];
+        let mut dw = vec![0.0f32; w.nnz()];
+        spmm_backward_fused_exec(&x, &dz, batch, &w, &mut dx, &mut dw, exec);
+        assert_eq!(dx, dx_o, "fused dx");
+        assert_eq!(dw, dw_o, "fused dw");
+        // both kernels really dispatched onto the pool
+        assert_eq!(pool.dispatch_events(), 2);
+    }
+
+    #[test]
+    fn exec_isa_defaults_to_detected_and_clamps_unsupported_overrides() {
+        assert_eq!(Exec::sequential().isa(), detected_isa());
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let forced = Exec::scoped(2).with_isa(isa);
+            assert!(forced.isa().supported(), "{isa:?} must clamp to a supported set");
+            if isa.supported() {
+                assert_eq!(forced.isa(), isa);
+            } else {
+                assert_eq!(forced.isa(), Isa::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_isa_matches_scalar_through_the_exec_path() {
+        // Smoke-level ISA sweep on the sequential exec path; the full
+        // shapes × densities × threads grid lives in kernel_parity.rs.
+        let mut rng = Rng::new(62);
+        let w = erdos_renyi_like(48, 40, 0.3, &mut rng);
+        let batch = 13;
+        let x = random_x(&mut rng, batch, 48, 0.2);
+        let dz = random_x(&mut rng, batch, 40, 0.0);
+        let mut out_s = vec![0.0f32; batch * 40];
+        spmm_forward_exec(&x, batch, &w, &mut out_s, Exec::sequential().with_isa(Isa::Scalar));
+        let (dx_s, dw_s) = oracle_backward(&x, &dz, batch, &w);
+        for isa in Isa::available() {
+            let exec = Exec::sequential().with_isa(isa);
+            let mut out = vec![0.0f32; batch * 40];
+            spmm_forward_exec(&x, batch, &w, &mut out, exec);
+            assert_eq!(out, out_s, "forward {}", isa.name());
+            let mut dx = vec![0.0f32; batch * 48];
+            spmm_grad_input_exec(&dz, batch, &w, &mut dx, exec);
+            assert_eq!(dx, dx_s, "grad_input {}", isa.name());
+            let mut dw = vec![0.0f32; w.nnz()];
+            spmm_grad_weights_exec(&x, &dz, batch, &w, &mut dw, exec);
+            assert_eq!(dw, dw_s, "grad_weights {}", isa.name());
+            let mut dx = vec![f32::NAN; batch * 48];
+            let mut dw = vec![0.0f32; w.nnz()];
+            spmm_backward_fused_exec(&x, &dz, batch, &w, &mut dx, &mut dw, exec);
+            assert_eq!(dx, dx_s, "fused dx {}", isa.name());
+            assert_eq!(dw, dw_s, "fused dw {}", isa.name());
         }
     }
 }

@@ -40,6 +40,14 @@ use std::thread::JoinHandle;
 /// the futex; an idle pool parks after a few microseconds.
 const SPIN_LIMIT: u32 = 1 << 12;
 
+/// Over-subscription factor for row-scheduled kernel dispatches
+/// ([`WorkerPool::shard_budget`]): more shards than participants lets the
+/// work-stealing claim loop absorb per-shard load imbalance that the
+/// static nnz-balanced split cannot see (ragged rows, DESIGN.md §11.4).
+/// 4 keeps the per-shard claim overhead negligible while giving the
+/// steal loop enough granularity to smooth a 1-heavy-row skew.
+pub(crate) const SHARD_OVERSUBSCRIPTION: usize = 4;
+
 /// A dispatch's shard closure, lifetime-erased. Safe because `run` never
 /// returns (even by unwinding) until every worker has checked out of the
 /// epoch, so the erased reference cannot outlive the real closure.
@@ -259,6 +267,16 @@ impl WorkerPool {
         self.dispatches.load(Ordering::Relaxed)
     }
 
+    /// Shard budget for row-scheduled kernels: oversubscribe the
+    /// participant count by [`SHARD_OVERSUBSCRIPTION`] so the atomic
+    /// shard-claim loop in [`WorkerPool::run`] can rebalance ragged rows
+    /// (a worker that drew a light shard just claims another), capped at
+    /// `max_shards` and never below 1. Extra shards cost one relaxed
+    /// fetch-add each — noise next to a kernel shard's work (§11.4).
+    pub fn shard_budget(&self, max_shards: usize) -> usize {
+        (self.threads * SHARD_OVERSUBSCRIPTION).min(max_shards).max(1)
+    }
+
     /// Scatter-gather: invoke `f(s)` exactly once for every shard index
     /// `s ∈ [0, n_shards)`, distributed over the parked workers and the
     /// calling thread, returning only when all shards have completed and
@@ -349,6 +367,16 @@ mod tests {
                 assert_eq!(h.load(Ordering::Relaxed), 1, "shard {s} of {n}");
             }
         }
+    }
+
+    #[test]
+    fn shard_budget_oversubscribes_and_clamps() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.shard_budget(1000), 16);
+        assert_eq!(pool.shard_budget(10), 10);
+        assert_eq!(pool.shard_budget(0), 1);
+        let one = WorkerPool::new(1);
+        assert_eq!(one.shard_budget(1000), SHARD_OVERSUBSCRIPTION);
     }
 
     #[test]

@@ -1,0 +1,1299 @@
+//! Runtime-dispatched SIMD microkernels (DESIGN.md §11).
+//!
+//! Every CSR hot kernel ([`spmm_forward`](super::ops::spmm_forward),
+//! `grad_input`, `grad_weights`, `backward_fused`) and the serve-path
+//! dense-fallback kernel exists in up to three bodies: the scalar
+//! BLOCK=8 reference (the kernels in `ops.rs` / formerly
+//! `serve/layout.rs`), an AVX2 body on x86_64, and a NEON body on
+//! aarch64; AVX-512 additionally widens the dense kernel to 16 lanes
+//! (its CSR entries reuse the AVX2 bodies — see §11.2 for why no
+//! AVX-512 gathers). The ISA is detected **once per process**
+//! ([`detected_isa`], `is_x86_feature_detected!`), overridable for
+//! testing via the `TSNN_ISA` env var, and carried on
+//! [`Exec`](super::ops::Exec) so every dispatch path — sequential,
+//! scoped, pooled — routes through the same [`KernelTable`].
+//!
+//! **Tolerance policy: none.** Every SIMD body reproduces the scalar
+//! kernel **bit-exactly**: no FMA contraction (separate multiply + add
+//! intrinsics, matching rustc's non-contracted scalar codegen), no
+//! horizontal reductions (lane `t` of a vector accumulator is exactly
+//! the scalar kernel's `acc[t]`), and identical per-output-element
+//! accumulation order. The parity suites assert `==`, never a
+//! tolerance — see DESIGN.md §11.3 for the per-kernel argument.
+
+#![allow(clippy::needless_range_loop)]
+
+use super::csr::CsrMatrix;
+use super::ops::{self, BLOCK, ShardPtr};
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// ISA detection and selection.
+
+/// Instruction set a kernel table is built for. Detected once per
+/// process ([`detected_isa`]); force a specific set with `TSNN_ISA`
+/// (`scalar` / `avx2` / `avx512` / `neon` / `native`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable BLOCK=8 scalar kernels (every host; the parity oracle).
+    Scalar,
+    /// 256-bit AVX2 (+ gathers) on x86_64.
+    Avx2,
+    /// AVX-512F on x86_64: 16-lane dense kernel, CSR entries reuse AVX2.
+    Avx512,
+    /// 128-bit NEON pairs on aarch64.
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name (the `TSNN_ISA` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `TSNN_ISA` spelling (`native` is handled by the caller:
+    /// it means [`best_isa`], not a fixed variant).
+    fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether the *running host* can execute this ISA's kernels
+    /// (compile-target and runtime feature detection combined).
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every ISA the running host supports, scalar first. This is the
+    /// host capability set — it is **not** filtered by `TSNN_ISA` (the
+    /// parity suites iterate it to force every reachable path).
+    pub fn available() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon]
+            .into_iter()
+            .filter(|isa| isa.supported())
+            .collect()
+    }
+}
+
+/// Widest ISA the running host supports.
+fn best_isa() -> Isa {
+    #[allow(unused_mut)] // stays Scalar on non-SIMD targets
+    let mut best = Isa::Scalar;
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            best = Isa::Avx2;
+        }
+        if is_x86_feature_detected!("avx512f") {
+            best = Isa::Avx512;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        best = Isa::Neon;
+    }
+    best
+}
+
+/// Process-wide selected ISA, resolved once: `TSNN_ISA` when set to a
+/// *supported* ISA (`native` or empty = widest available; an
+/// unsupported or unknown value warns on stderr and falls back to the
+/// widest available — forcing an ISA the host cannot run would be UB,
+/// not a test mode). Every [`Exec`](super::ops::Exec) constructor
+/// defaults to this; [`Exec::with_isa`](super::ops::Exec::with_isa)
+/// overrides it per-context without touching process state.
+pub fn detected_isa() -> Isa {
+    static CACHE: OnceLock<Isa> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let Ok(raw) = std::env::var("TSNN_ISA") else {
+            return best_isa();
+        };
+        let t = raw.trim().to_ascii_lowercase();
+        if t.is_empty() || t == "native" {
+            return best_isa();
+        }
+        match Isa::parse(&t) {
+            Some(isa) if isa.supported() => isa,
+            Some(isa) => {
+                eprintln!(
+                    "tsnn: TSNN_ISA={} is not supported on this host; using {}",
+                    isa.name(),
+                    best_isa().name()
+                );
+                best_isa()
+            }
+            None => {
+                eprintln!(
+                    "tsnn: TSNN_ISA={raw:?} not recognised (scalar/avx2/avx512/neon/native); \
+                     using {}",
+                    best_isa().name()
+                );
+                best_isa()
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-selection table (ISA × kernel; format is the caller's axis).
+
+/// Weight-storage format a microkernel serves — the second axis of the
+/// selection table (the CSR kernels serve training + CSR-served layers,
+/// the dense kernel serves dense-fallback layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFormat {
+    /// Truly-sparse CSR storage.
+    Csr,
+    /// Row-major dense-fallback storage (serve path).
+    Dense,
+}
+
+/// Name of the microkernel body that `isa` actually dispatches for
+/// `format` — including silent fallbacks (an unsupported ISA resolves
+/// to scalar; AVX-512's CSR entries are the AVX2 bodies). Printed by
+/// `tsnn inspect` / `serve-bench` so dispatch is observable.
+pub fn microkernel_name(isa: Isa, format: KernelFormat) -> &'static str {
+    match (kernel_table(isa).isa, format) {
+        (Isa::Scalar, KernelFormat::Csr) => "csr_block8_scalar",
+        (Isa::Scalar, KernelFormat::Dense) => "dense_block8_scalar",
+        (Isa::Avx2, KernelFormat::Csr) => "csr_block8_avx2",
+        (Isa::Avx2, KernelFormat::Dense) => "dense_lanes8_avx2",
+        (Isa::Avx512, KernelFormat::Csr) => "csr_block8_avx2", // CSR reuses AVX2 (§11.2)
+        (Isa::Avx512, KernelFormat::Dense) => "dense_lanes16_avx512",
+        (Isa::Neon, KernelFormat::Csr) => "csr_block8_neon",
+        (Isa::Neon, KernelFormat::Dense) => "dense_lanes4x2_neon",
+    }
+}
+
+/// `spmm_forward`-shaped entry: `(x, batch, w, out)`.
+pub(crate) type ForwardFn = unsafe fn(&[f32], usize, &CsrMatrix, &mut [f32]);
+/// `spmm_grad_input`-shaped entry: `(dz, batch, w, dx)`.
+pub(crate) type GradInputFn = unsafe fn(&[f32], usize, &CsrMatrix, &mut [f32]);
+/// `grad_weights_rows`-shaped entry: `(x, dz, batch, w, row0, row1, dw)`.
+pub(crate) type GradWeightsRowsFn =
+    unsafe fn(&[f32], &[f32], usize, &CsrMatrix, usize, usize, &mut [f32]);
+/// `backward_fused_rows`-shaped entry:
+/// `(x, dz, batch, w, row0, row1, dx, dw)`.
+pub(crate) type BackwardFusedRowsFn =
+    unsafe fn(&[f32], &[f32], usize, &CsrMatrix, usize, usize, ShardPtr<f32>, &mut [f32]);
+/// Dense-fallback forward entry: `(x, batch, n_in, n_out, w, out)`.
+pub(crate) type DenseForwardFn = unsafe fn(&[f32], usize, usize, usize, &[f32], &mut [f32]);
+
+/// One ISA's bodies for every hot kernel. All entries are `unsafe fn`:
+/// the caller (the `*_exec` dispatchers in `ops.rs` and
+/// `serve/layout.rs`, or a test) guarantees the scalar kernels' length
+/// / validated-CSR preconditions **and** that the table's ISA is
+/// supported on the running host ([`kernel_table`] guarantees the
+/// latter for every table it hands out).
+pub(crate) struct KernelTable {
+    /// ISA these bodies require (normalised: what actually runs).
+    pub(crate) isa: Isa,
+    /// Forward `out += x · W` over pre-zeroed/pre-biased `out`.
+    pub(crate) forward: ForwardFn,
+    /// Input gradient `dx = dz · Wᵀ` (overwrites `dx`).
+    pub(crate) grad_input: GradInputFn,
+    /// Pattern-restricted weight gradient over rows `[row0, row1)`.
+    pub(crate) grad_weights_rows: GradWeightsRowsFn,
+    /// Fused `dx` + `dw` over rows `[row0, row1)`.
+    pub(crate) backward_fused_rows: BackwardFusedRowsFn,
+    /// Dense-fallback forward over pre-biased `out`.
+    pub(crate) dense_forward: DenseForwardFn,
+}
+
+/// The table serving `isa`, total over every variant: an ISA the
+/// running host does not support resolves to the scalar table (cheap
+/// runtime re-check — defense in depth on top of
+/// [`Exec::with_isa`](super::ops::Exec::with_isa)'s clamp), and
+/// AVX-512 reuses the AVX2 CSR bodies (every `avx512f` host also has
+/// AVX2).
+pub(crate) fn kernel_table(isa: Isa) -> &'static KernelTable {
+    match isa {
+        Isa::Scalar => &SCALAR_TABLE,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if is_x86_feature_detected!("avx2") => &AVX2_TABLE,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx512 if is_x86_feature_detected!("avx512f") => &AVX512_TABLE,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => &NEON_TABLE,
+        _ => &SCALAR_TABLE,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar entries: thin `unsafe fn` wrappers around the reference
+// kernels (which stay safe `pub` fns — they are the parity oracles).
+
+unsafe fn scalar_forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+    ops::spmm_forward(x, batch, w, out)
+}
+
+unsafe fn scalar_grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+    ops::spmm_grad_input(dz, batch, w, dx)
+}
+
+unsafe fn scalar_grad_weights_rows(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    row0: usize,
+    row1: usize,
+    dw: &mut [f32],
+) {
+    ops::grad_weights_rows(x, dz, batch, w, row0, row1, dw)
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn scalar_backward_fused_rows(
+    x: &[f32],
+    dz: &[f32],
+    batch: usize,
+    w: &CsrMatrix,
+    row0: usize,
+    row1: usize,
+    dx: ShardPtr<f32>,
+    dw: &mut [f32],
+) {
+    ops::backward_fused_rows(x, dz, batch, w, row0, row1, dx, dw)
+}
+
+unsafe fn scalar_dense_forward(
+    x: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+    w: &[f32],
+    out: &mut [f32],
+) {
+    dense_forward_scalar(x, batch, n_in, n_out, w, out)
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    isa: Isa::Scalar,
+    forward: scalar_forward,
+    grad_input: scalar_grad_input,
+    grad_weights_rows: scalar_grad_weights_rows,
+    backward_fused_rows: scalar_backward_fused_rows,
+    dense_forward: scalar_dense_forward,
+};
+
+/// Sequential dense-row forward (scalar reference): `out[b, :] +=
+/// Σ_i x[b, i] * W[i, :]` over pre-biased `out`, mirroring the CSR
+/// kernel's batch blocking and block-level activation-sparsity skip so
+/// stored-entry contributions land in the training kernel's exact
+/// floating-point order (the serving parity argument, DESIGN.md §10.1).
+/// Lives here (moved from `serve/layout.rs`) so the dense format is a
+/// first-class row of the kernel-selection table.
+pub(crate) fn dense_forward_scalar(
+    x: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+    w: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * n_in);
+    debug_assert_eq!(out.len(), batch * n_out);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    let mut b0 = 0usize;
+    while b0 < batch {
+        let bl = (batch - b0).min(BLOCK);
+        for i in 0..n_in {
+            let mut xv = [0.0f32; BLOCK];
+            let mut any = false;
+            for (t, xvt) in xv.iter_mut().enumerate().take(bl) {
+                let v = x[(b0 + t) * n_in + i];
+                *xvt = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let row = &w[i * n_out..(i + 1) * n_out];
+            for (t, &xvt) in xv.iter().enumerate().take(bl) {
+                let o = &mut out[(b0 + t) * n_out..(b0 + t + 1) * n_out];
+                for (oj, &wj) in o.iter_mut().zip(row.iter()) {
+                    *oj += xvt * wj;
+                }
+            }
+        }
+        b0 += bl;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread transpose scratch for the vector CSR kernels. One buffer
+// per thread, take/put around each kernel invocation: no closures are
+// passed into `#[target_feature]` fns (feature inheritance into
+// closures is a footgun) and a panicking kernel merely loses the
+// buffer — never double-borrows or leaves it aliased.
+
+std::thread_local! {
+    static SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
+}
+
+/// Borrow this thread's scratch buffer, grown to at least `len`.
+fn take_scratch(len: usize) -> Vec<f32> {
+    let mut buf = SCRATCH.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    buf
+}
+
+/// Return the scratch buffer for reuse by the next kernel call.
+fn put_scratch(buf: Vec<f32>) {
+    SCRATCH.with(|c| *c.borrow_mut() = buf);
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 bodies (+ an AVX-512 dense widening).
+//
+// Bit-exactness recipe (DESIGN.md §11.3): vector lane `t` carries
+// exactly the scalar kernel's accumulator `acc[t]` (no horizontal
+// reductions), every product+sum is a separate `_mm*_mul_ps` +
+// `_mm*_add_ps` (rustc does not contract the scalar kernels into FMA,
+// so neither may we), and loop nesting preserves the scalar kernel's
+// per-output-element accumulation order. Ragged batch tails (< BLOCK
+// samples) delegate to the scalar kernels on disjoint sample
+// sub-slices, which keeps `dw`'s ascending batch-block order intact.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::csr::CsrMatrix;
+    use super::super::ops::{backward_fused_rows, spmm_forward, spmm_grad_input, BLOCK, ShardPtr};
+    use super::{put_scratch, take_scratch, Isa, KernelTable};
+    use std::arch::x86_64::*;
+
+    /// Gathers index `col_idx` as sign-extended i32: col indices must
+    /// stay below 2³¹ or the slot-vectorized kernels fall back to
+    /// scalar (never hit in practice — layers are ≪ 2³¹ wide).
+    const GATHER_MAX_COLS: usize = i32::MAX as usize;
+
+    /// AVX2 forward: transposed per-block accumulator `outT[n_out][8]`
+    /// in thread scratch. Transpose-in copies the pre-biased `out`
+    /// block, each `(i, k)` contribution lands as one 8-lane
+    /// `add(outT_j, mul(xv, set1(v)))` — lane `t` sees the scalar
+    /// kernel's exact `(i, k)` order — then transpose-out stores back.
+    ///
+    /// # Safety
+    /// AVX2 available; scalar `spmm_forward` preconditions.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        assert_eq!(x.len(), batch * n_in);
+        assert_eq!(out.len(), batch * n_out);
+        let full = batch - batch % BLOCK;
+        if full > 0 && n_out > 0 {
+            let row_ptr = w.row_ptr.as_slice();
+            let col_idx = w.col_idx.as_slice();
+            let values = w.values.as_slice();
+            let mut scratch = take_scratch(n_out * BLOCK);
+            let outt = &mut scratch[..n_out * BLOCK];
+            let mut b0 = 0usize;
+            while b0 < full {
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *outt.get_unchecked_mut(j * BLOCK + t) =
+                            *out.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for i in 0..n_in {
+                    let mut xv = [0.0f32; BLOCK];
+                    let mut any = false;
+                    for t in 0..BLOCK {
+                        let v = *x.get_unchecked((b0 + t) * n_in + i);
+                        xv[t] = v;
+                        any |= v != 0.0;
+                    }
+                    if !any {
+                        continue;
+                    }
+                    let xv_vec = _mm256_loadu_ps(xv.as_ptr());
+                    let s = *row_ptr.get_unchecked(i);
+                    let e = *row_ptr.get_unchecked(i + 1);
+                    for k in s..e {
+                        let j = *col_idx.get_unchecked(k) as usize;
+                        let v = *values.get_unchecked(k);
+                        let p = outt.as_mut_ptr().add(j * BLOCK);
+                        let prod = _mm256_mul_ps(xv_vec, _mm256_set1_ps(v));
+                        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), prod));
+                    }
+                }
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *out.get_unchecked_mut((b0 + t) * n_out + j) =
+                            *outt.get_unchecked(j * BLOCK + t);
+                    }
+                }
+                b0 += BLOCK;
+            }
+            put_scratch(scratch);
+        }
+        let tail = batch - full;
+        if tail > 0 {
+            spmm_forward(&x[full * n_in..], tail, w, &mut out[full * n_out..]);
+        }
+    }
+
+    /// AVX2 input gradient: per-block transposed `dzT[n_out][8]`
+    /// (read-only), 8-lane accumulator over `k` ascending as
+    /// `add(acc, mul(set1(v), dzT_j))` — lane `t` is the scalar
+    /// kernel's `acc[t]` — stored per-lane into `dx`'s strided columns.
+    ///
+    /// # Safety
+    /// AVX2 available; scalar `spmm_grad_input` preconditions.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        assert_eq!(dz.len(), batch * n_out);
+        assert_eq!(dx.len(), batch * n_in);
+        let full = batch - batch % BLOCK;
+        if full > 0 {
+            let row_ptr = w.row_ptr.as_slice();
+            let col_idx = w.col_idx.as_slice();
+            let values = w.values.as_slice();
+            let mut scratch = take_scratch(n_out * BLOCK);
+            let dzt = &mut scratch[..n_out * BLOCK];
+            let mut b0 = 0usize;
+            while b0 < full {
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *dzt.get_unchecked_mut(j * BLOCK + t) =
+                            *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for i in 0..n_in {
+                    let s = *row_ptr.get_unchecked(i);
+                    let e = *row_ptr.get_unchecked(i + 1);
+                    let mut acc = _mm256_setzero_ps();
+                    for k in s..e {
+                        let j = *col_idx.get_unchecked(k) as usize;
+                        let v = *values.get_unchecked(k);
+                        let dzv = _mm256_loadu_ps(dzt.as_ptr().add(j * BLOCK));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(v), dzv));
+                    }
+                    let mut tmp = [0.0f32; BLOCK];
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+                    for t in 0..BLOCK {
+                        *dx.get_unchecked_mut((b0 + t) * n_in + i) = tmp[t];
+                    }
+                }
+                b0 += BLOCK;
+            }
+            put_scratch(scratch);
+        }
+        let tail = batch - full;
+        if tail > 0 {
+            spmm_grad_input(&dz[full * n_out..], tail, w, &mut dx[full * n_in..]);
+        }
+    }
+
+    /// AVX2 weight gradient over rows `[row0, row1)`: vectorized over
+    /// the **slot** axis — 8 `dw` slots per step, their `dz` operands
+    /// fetched with `_mm256_i32gather_ps` per sample `t` (t ascending,
+    /// sequential, so lane `m` accumulates in the scalar kernel's exact
+    /// order: `acc += xv[t] * dz[...]`). The fresh 8-slot accumulator
+    /// is added to `dw` once per batch block, like the scalar kernel's
+    /// `dw[k - base] += acc`. Works at any batch-block width, so no
+    /// batch-tail delegation; slot remainders (`row nnz % 8`) run
+    /// scalar.
+    ///
+    /// # Safety
+    /// AVX2 available; scalar `grad_weights_rows` preconditions.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn grad_weights_rows(
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        w: &CsrMatrix,
+        row0: usize,
+        row1: usize,
+        dw: &mut [f32],
+    ) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        if n_out > GATHER_MAX_COLS {
+            // full path: the scalar fn shares this fn's name
+            return super::super::ops::grad_weights_rows(x, dz, batch, w, row0, row1, dw);
+        }
+        debug_assert!(row0 <= row1 && row1 <= n_in);
+        debug_assert_eq!(x.len(), batch * n_in);
+        debug_assert_eq!(dz.len(), batch * n_out);
+        let row_ptr = w.row_ptr.as_slice();
+        let col_idx = w.col_idx.as_slice();
+        let base = row_ptr[row0];
+        debug_assert_eq!(dw.len(), row_ptr[row1] - base);
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let bl = (batch - b0).min(BLOCK);
+            for i in row0..row1 {
+                let mut xv = [0.0f32; BLOCK];
+                let mut any = false;
+                for t in 0..bl {
+                    let v = *x.get_unchecked((b0 + t) * n_in + i);
+                    xv[t] = v;
+                    any |= v != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let s = *row_ptr.get_unchecked(i);
+                let e = *row_ptr.get_unchecked(i + 1);
+                let mut k = s;
+                while k + BLOCK <= e {
+                    let idx = _mm256_loadu_si256(col_idx.as_ptr().add(k) as *const __m256i);
+                    let mut acc = _mm256_setzero_ps();
+                    for t in 0..bl {
+                        let g = _mm256_i32gather_ps::<4>(dz.as_ptr().add((b0 + t) * n_out), idx);
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(xv[t]), g));
+                    }
+                    let p = dw.as_mut_ptr().add(k - base);
+                    _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), acc));
+                    k += BLOCK;
+                }
+                for kk in k..e {
+                    let j = *col_idx.get_unchecked(kk) as usize;
+                    let mut acc = 0.0f32;
+                    for t in 0..bl {
+                        acc += xv[t] * *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                    *dw.get_unchecked_mut(kk - base) += acc;
+                }
+            }
+            b0 += bl;
+        }
+    }
+
+    /// AVX2 fused backward over rows `[row0, row1)`: per full batch
+    /// block and row, pass A computes the `dx` reduction
+    /// grad-input-style off a transposed `dzT` (unconditional — empty
+    /// and all-zero-x rows still own their `dx` columns), pass B
+    /// accumulates the `dw` slots gather-style (skipped when the `x`
+    /// block is all-zero, matching the oracle's activation-sparsity
+    /// skip). Splitting the scalar kernel's interleaved loop into two
+    /// passes leaves every per-output-element accumulation order
+    /// unchanged. The ragged batch tail delegates to the scalar fused
+    /// kernel on the remaining samples (ascending batch-block order
+    /// for `dw` preserved: `+=` after the full blocks).
+    ///
+    /// # Safety
+    /// AVX2 available; scalar `backward_fused_rows` preconditions.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn backward_fused(
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        w: &CsrMatrix,
+        row0: usize,
+        row1: usize,
+        dx: ShardPtr<f32>,
+        dw: &mut [f32],
+    ) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        if n_out > GATHER_MAX_COLS {
+            return backward_fused_rows(x, dz, batch, w, row0, row1, dx, dw);
+        }
+        debug_assert!(row0 <= row1 && row1 <= n_in);
+        debug_assert_eq!(x.len(), batch * n_in);
+        debug_assert_eq!(dz.len(), batch * n_out);
+        let row_ptr = w.row_ptr.as_slice();
+        let col_idx = w.col_idx.as_slice();
+        let values = w.values.as_slice();
+        let base = row_ptr[row0];
+        debug_assert_eq!(dw.len(), row_ptr[row1] - base);
+        let full = batch - batch % BLOCK;
+        if full > 0 {
+            let mut scratch = take_scratch(n_out * BLOCK);
+            let dzt = &mut scratch[..n_out * BLOCK];
+            let mut b0 = 0usize;
+            while b0 < full {
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *dzt.get_unchecked_mut(j * BLOCK + t) =
+                            *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for i in row0..row1 {
+                    let mut xv = [0.0f32; BLOCK];
+                    let mut any = false;
+                    for t in 0..BLOCK {
+                        let v = *x.get_unchecked((b0 + t) * n_in + i);
+                        xv[t] = v;
+                        any |= v != 0.0;
+                    }
+                    let s = *row_ptr.get_unchecked(i);
+                    let e = *row_ptr.get_unchecked(i + 1);
+                    // pass A: dx block reduction (k ascending, v * dzv)
+                    let mut acc = _mm256_setzero_ps();
+                    for k in s..e {
+                        let j = *col_idx.get_unchecked(k) as usize;
+                        let v = *values.get_unchecked(k);
+                        let dzv = _mm256_loadu_ps(dzt.as_ptr().add(j * BLOCK));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(v), dzv));
+                    }
+                    let mut tmp = [0.0f32; BLOCK];
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+                    for t in 0..BLOCK {
+                        *dx.0.add((b0 + t) * n_in + i) = tmp[t];
+                    }
+                    // pass B: dw slots (skipped on an all-zero x block,
+                    // exactly like the oracle)
+                    if any {
+                        let mut k = s;
+                        while k + BLOCK <= e {
+                            let idx = _mm256_loadu_si256(col_idx.as_ptr().add(k) as *const __m256i);
+                            let mut wacc = _mm256_setzero_ps();
+                            for t in 0..BLOCK {
+                                let g = _mm256_i32gather_ps::<4>(
+                                    dz.as_ptr().add((b0 + t) * n_out),
+                                    idx,
+                                );
+                                wacc =
+                                    _mm256_add_ps(wacc, _mm256_mul_ps(_mm256_set1_ps(xv[t]), g));
+                            }
+                            let p = dw.as_mut_ptr().add(k - base);
+                            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), wacc));
+                            k += BLOCK;
+                        }
+                        for kk in k..e {
+                            let j = *col_idx.get_unchecked(kk) as usize;
+                            let mut gacc = 0.0f32;
+                            for t in 0..BLOCK {
+                                gacc += xv[t] * *dz.get_unchecked((b0 + t) * n_out + j);
+                            }
+                            *dw.get_unchecked_mut(kk - base) += gacc;
+                        }
+                    }
+                }
+                b0 += BLOCK;
+            }
+            put_scratch(scratch);
+        }
+        let tail = batch - full;
+        if tail > 0 {
+            backward_fused_rows(
+                &x[full * n_in..],
+                &dz[full * n_out..],
+                tail,
+                w,
+                row0,
+                row1,
+                ShardPtr(dx.0.add(full * n_in)),
+                dw,
+            );
+        }
+    }
+
+    /// AVX2 dense-fallback forward: the contiguous `j` loop runs 8
+    /// lanes wide (`out_j += xv[t] * row_j` as separate mul + add),
+    /// scalar `j % 8` tail; batch blocking and the block-level
+    /// zero-skip mirror the scalar body. Each `out[t, j]` is a single
+    /// independent accumulator, so lane width cannot change its order.
+    ///
+    /// # Safety
+    /// AVX2 available; `dense_forward_scalar` length contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dense_forward(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), batch * n_in);
+        assert_eq!(out.len(), batch * n_out);
+        assert_eq!(w.len(), n_in * n_out);
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let bl = (batch - b0).min(BLOCK);
+            for i in 0..n_in {
+                let mut xv = [0.0f32; BLOCK];
+                let mut any = false;
+                for t in 0..bl {
+                    let v = *x.get_unchecked((b0 + t) * n_in + i);
+                    xv[t] = v;
+                    any |= v != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let row = w.as_ptr().add(i * n_out);
+                for t in 0..bl {
+                    let xvt = _mm256_set1_ps(xv[t]);
+                    let o = out.as_mut_ptr().add((b0 + t) * n_out);
+                    let mut j = 0usize;
+                    while j + 8 <= n_out {
+                        let prod = _mm256_mul_ps(xvt, _mm256_loadu_ps(row.add(j)));
+                        _mm256_storeu_ps(o.add(j), _mm256_add_ps(_mm256_loadu_ps(o.add(j)), prod));
+                        j += 8;
+                    }
+                    while j < n_out {
+                        *o.add(j) += xv[t] * *row.add(j);
+                        j += 1;
+                    }
+                }
+            }
+            b0 += bl;
+        }
+    }
+
+    /// AVX-512F dense-fallback forward: same shape as the AVX2 body
+    /// with a 16-lane `j` loop. Only the dense kernel widens to 512
+    /// bits — the CSR kernels' gather/transpose structure gains nothing
+    /// from wider lanes at BLOCK=8 (§11.2).
+    ///
+    /// # Safety
+    /// AVX-512F available; `dense_forward_scalar` length contract.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn dense_forward_512(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), batch * n_in);
+        assert_eq!(out.len(), batch * n_out);
+        assert_eq!(w.len(), n_in * n_out);
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let bl = (batch - b0).min(BLOCK);
+            for i in 0..n_in {
+                let mut xv = [0.0f32; BLOCK];
+                let mut any = false;
+                for t in 0..bl {
+                    let v = *x.get_unchecked((b0 + t) * n_in + i);
+                    xv[t] = v;
+                    any |= v != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let row = w.as_ptr().add(i * n_out);
+                for t in 0..bl {
+                    let xvt = _mm512_set1_ps(xv[t]);
+                    let o = out.as_mut_ptr().add((b0 + t) * n_out);
+                    let mut j = 0usize;
+                    while j + 16 <= n_out {
+                        let prod = _mm512_mul_ps(xvt, _mm512_loadu_ps(row.add(j)));
+                        _mm512_storeu_ps(o.add(j), _mm512_add_ps(_mm512_loadu_ps(o.add(j)), prod));
+                        j += 16;
+                    }
+                    while j < n_out {
+                        *o.add(j) += xv[t] * *row.add(j);
+                        j += 1;
+                    }
+                }
+            }
+            b0 += bl;
+        }
+    }
+
+    // Thin non-feature wrappers so the table entries are plain
+    // `unsafe fn` items (no target_feature fn-pointer coercion in
+    // statics). The unsafe call is the feature contract hand-off.
+    pub(super) unsafe fn forward_entry(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+        forward(x, batch, w, out)
+    }
+    pub(super) unsafe fn grad_input_entry(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+        grad_input(dz, batch, w, dx)
+    }
+    pub(super) unsafe fn grad_weights_rows_entry(
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        w: &CsrMatrix,
+        row0: usize,
+        row1: usize,
+        dw: &mut [f32],
+    ) {
+        grad_weights_rows(x, dz, batch, w, row0, row1, dw)
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn backward_fused_entry(
+        x: &[f32],
+        dz: &[f32],
+        batch: usize,
+        w: &CsrMatrix,
+        row0: usize,
+        row1: usize,
+        dx: ShardPtr<f32>,
+        dw: &mut [f32],
+    ) {
+        backward_fused(x, dz, batch, w, row0, row1, dx, dw)
+    }
+    pub(super) unsafe fn dense_forward_entry(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        dense_forward(x, batch, n_in, n_out, w, out)
+    }
+    pub(super) unsafe fn dense_forward_512_entry(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        dense_forward_512(x, batch, n_in, n_out, w, out)
+    }
+
+    pub(super) static AVX2_TABLE: KernelTable = KernelTable {
+        isa: Isa::Avx2,
+        forward: forward_entry,
+        grad_input: grad_input_entry,
+        grad_weights_rows: grad_weights_rows_entry,
+        backward_fused_rows: backward_fused_entry,
+        dense_forward: dense_forward_entry,
+    };
+
+    /// AVX-512 table: dense kernel at 16 lanes, CSR entries reuse the
+    /// AVX2 bodies (every avx512f host supports AVX2; §11.2).
+    pub(super) static AVX512_TABLE: KernelTable = KernelTable {
+        isa: Isa::Avx512,
+        forward: forward_entry,
+        grad_input: grad_input_entry,
+        grad_weights_rows: grad_weights_rows_entry,
+        backward_fused_rows: backward_fused_entry,
+        dense_forward: dense_forward_512_entry,
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+use x86::{AVX2_TABLE, AVX512_TABLE};
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON bodies. 128-bit lanes, so every BLOCK=8 vector op is a
+// pair of `float32x4_t` halves; multiply and add stay separate
+// (`vmulq` + `vaddq`, never `vmlaq` — fused) for the same bit-exactness
+// recipe as the AVX2 bodies. NEON has no hardware gather, so the
+// slot-vectorized kernels (`grad_weights_rows`, `backward_fused_rows`)
+// keep their scalar entries (§11.2).
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::csr::CsrMatrix;
+    use super::super::ops::{spmm_forward, spmm_grad_input, BLOCK};
+    use super::{
+        put_scratch, scalar_backward_fused_rows, scalar_grad_weights_rows, take_scratch, Isa,
+        KernelTable,
+    };
+    use std::arch::aarch64::*;
+
+    /// NEON forward: the AVX2 transposed-accumulator structure with
+    /// each 8-lane op as two `float32x4_t` halves.
+    ///
+    /// # Safety
+    /// Scalar `spmm_forward` preconditions (NEON is baseline aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn forward(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        assert_eq!(x.len(), batch * n_in);
+        assert_eq!(out.len(), batch * n_out);
+        let full = batch - batch % BLOCK;
+        if full > 0 && n_out > 0 {
+            let row_ptr = w.row_ptr.as_slice();
+            let col_idx = w.col_idx.as_slice();
+            let values = w.values.as_slice();
+            let mut scratch = take_scratch(n_out * BLOCK);
+            let outt = &mut scratch[..n_out * BLOCK];
+            let mut b0 = 0usize;
+            while b0 < full {
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *outt.get_unchecked_mut(j * BLOCK + t) =
+                            *out.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for i in 0..n_in {
+                    let mut xv = [0.0f32; BLOCK];
+                    let mut any = false;
+                    for t in 0..BLOCK {
+                        let v = *x.get_unchecked((b0 + t) * n_in + i);
+                        xv[t] = v;
+                        any |= v != 0.0;
+                    }
+                    if !any {
+                        continue;
+                    }
+                    let xlo = vld1q_f32(xv.as_ptr());
+                    let xhi = vld1q_f32(xv.as_ptr().add(4));
+                    let s = *row_ptr.get_unchecked(i);
+                    let e = *row_ptr.get_unchecked(i + 1);
+                    for k in s..e {
+                        let j = *col_idx.get_unchecked(k) as usize;
+                        let v = vdupq_n_f32(*values.get_unchecked(k));
+                        let p = outt.as_mut_ptr().add(j * BLOCK);
+                        vst1q_f32(p, vaddq_f32(vld1q_f32(p), vmulq_f32(xlo, v)));
+                        let p4 = p.add(4);
+                        vst1q_f32(p4, vaddq_f32(vld1q_f32(p4), vmulq_f32(xhi, v)));
+                    }
+                }
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *out.get_unchecked_mut((b0 + t) * n_out + j) =
+                            *outt.get_unchecked(j * BLOCK + t);
+                    }
+                }
+                b0 += BLOCK;
+            }
+            put_scratch(scratch);
+        }
+        let tail = batch - full;
+        if tail > 0 {
+            spmm_forward(&x[full * n_in..], tail, w, &mut out[full * n_out..]);
+        }
+    }
+
+    /// NEON input gradient: transposed `dzT` + paired 4-lane
+    /// accumulators, `k` ascending with `v * dzv` operand order.
+    ///
+    /// # Safety
+    /// Scalar `spmm_grad_input` preconditions.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn grad_input(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+        let (n_in, n_out) = (w.n_rows, w.n_cols);
+        assert_eq!(dz.len(), batch * n_out);
+        assert_eq!(dx.len(), batch * n_in);
+        let full = batch - batch % BLOCK;
+        if full > 0 {
+            let row_ptr = w.row_ptr.as_slice();
+            let col_idx = w.col_idx.as_slice();
+            let values = w.values.as_slice();
+            let mut scratch = take_scratch(n_out * BLOCK);
+            let dzt = &mut scratch[..n_out * BLOCK];
+            let mut b0 = 0usize;
+            while b0 < full {
+                for j in 0..n_out {
+                    for t in 0..BLOCK {
+                        *dzt.get_unchecked_mut(j * BLOCK + t) =
+                            *dz.get_unchecked((b0 + t) * n_out + j);
+                    }
+                }
+                for i in 0..n_in {
+                    let s = *row_ptr.get_unchecked(i);
+                    let e = *row_ptr.get_unchecked(i + 1);
+                    let mut alo = vdupq_n_f32(0.0);
+                    let mut ahi = vdupq_n_f32(0.0);
+                    for k in s..e {
+                        let j = *col_idx.get_unchecked(k) as usize;
+                        let v = vdupq_n_f32(*values.get_unchecked(k));
+                        let p = dzt.as_ptr().add(j * BLOCK);
+                        alo = vaddq_f32(alo, vmulq_f32(v, vld1q_f32(p)));
+                        ahi = vaddq_f32(ahi, vmulq_f32(v, vld1q_f32(p.add(4))));
+                    }
+                    let mut tmp = [0.0f32; BLOCK];
+                    vst1q_f32(tmp.as_mut_ptr(), alo);
+                    vst1q_f32(tmp.as_mut_ptr().add(4), ahi);
+                    for t in 0..BLOCK {
+                        *dx.get_unchecked_mut((b0 + t) * n_in + i) = tmp[t];
+                    }
+                }
+                b0 += BLOCK;
+            }
+            put_scratch(scratch);
+        }
+        let tail = batch - full;
+        if tail > 0 {
+            spmm_grad_input(&dz[full * n_out..], tail, w, &mut dx[full * n_in..]);
+        }
+    }
+
+    /// NEON dense-fallback forward: paired 4-lane `j` loop, scalar
+    /// `j % 8` tail; batch blocking and zero-skip as the scalar body.
+    ///
+    /// # Safety
+    /// `dense_forward_scalar` length contract.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dense_forward(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), batch * n_in);
+        assert_eq!(out.len(), batch * n_out);
+        assert_eq!(w.len(), n_in * n_out);
+        let mut b0 = 0usize;
+        while b0 < batch {
+            let bl = (batch - b0).min(BLOCK);
+            for i in 0..n_in {
+                let mut xv = [0.0f32; BLOCK];
+                let mut any = false;
+                for t in 0..bl {
+                    let v = *x.get_unchecked((b0 + t) * n_in + i);
+                    xv[t] = v;
+                    any |= v != 0.0;
+                }
+                if !any {
+                    continue;
+                }
+                let row = w.as_ptr().add(i * n_out);
+                for t in 0..bl {
+                    let xvt = vdupq_n_f32(xv[t]);
+                    let o = out.as_mut_ptr().add((b0 + t) * n_out);
+                    let mut j = 0usize;
+                    while j + 8 <= n_out {
+                        let oj = o.add(j);
+                        let plo = vmulq_f32(xvt, vld1q_f32(row.add(j)));
+                        vst1q_f32(oj, vaddq_f32(vld1q_f32(oj), plo));
+                        let oj4 = o.add(j + 4);
+                        let phi = vmulq_f32(xvt, vld1q_f32(row.add(j + 4)));
+                        vst1q_f32(oj4, vaddq_f32(vld1q_f32(oj4), phi));
+                        j += 8;
+                    }
+                    while j < n_out {
+                        *o.add(j) += xv[t] * *row.add(j);
+                        j += 1;
+                    }
+                }
+            }
+            b0 += bl;
+        }
+    }
+
+    pub(super) unsafe fn forward_entry(x: &[f32], batch: usize, w: &CsrMatrix, out: &mut [f32]) {
+        forward(x, batch, w, out)
+    }
+    pub(super) unsafe fn grad_input_entry(dz: &[f32], batch: usize, w: &CsrMatrix, dx: &mut [f32]) {
+        grad_input(dz, batch, w, dx)
+    }
+    pub(super) unsafe fn dense_forward_entry(
+        x: &[f32],
+        batch: usize,
+        n_in: usize,
+        n_out: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        dense_forward(x, batch, n_in, n_out, w, out)
+    }
+
+    /// NEON table: no hardware gather, so the slot-vectorized kernels
+    /// stay scalar (documented in `microkernel_name` + §11.2).
+    pub(super) static NEON_TABLE: KernelTable = KernelTable {
+        isa: Isa::Neon,
+        forward: forward_entry,
+        grad_input: grad_input_entry,
+        grad_weights_rows: scalar_grad_weights_rows,
+        backward_fused_rows: scalar_backward_fused_rows,
+        dense_forward: dense_forward_entry,
+    };
+}
+
+#[cfg(target_arch = "aarch64")]
+use neon::NEON_TABLE;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::init;
+    use crate::util::Rng;
+
+    #[test]
+    fn isa_names_parse_back() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512f"), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("mmx"), None);
+        // "native" is deliberately not a variant spelling
+        assert_eq!(Isa::parse("native"), None);
+    }
+
+    #[test]
+    fn available_starts_with_scalar_and_is_all_supported() {
+        let avail = Isa::available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.iter().all(|isa| isa.supported()));
+        assert!(best_isa().supported());
+        assert!(avail.contains(&best_isa()));
+    }
+
+    #[test]
+    fn detected_isa_is_supported() {
+        assert!(detected_isa().supported());
+    }
+
+    #[test]
+    fn kernel_table_is_total_and_clamps_unsupported() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let table = kernel_table(isa);
+            if isa.supported() {
+                assert_eq!(table.isa, isa, "{}", isa.name());
+            } else {
+                assert_eq!(table.isa, Isa::Scalar, "{}", isa.name());
+            }
+            // every format has a name, and it encodes the real fallback
+            let n = microkernel_name(isa, KernelFormat::Csr);
+            let d = microkernel_name(isa, KernelFormat::Dense);
+            assert!(!n.is_empty() && !d.is_empty());
+            if !isa.supported() {
+                assert!(n.ends_with("scalar") && d.ends_with("scalar"));
+            }
+        }
+        // scalar names are fixed API (CLI prints them)
+        assert_eq!(microkernel_name(Isa::Scalar, KernelFormat::Csr), "csr_block8_scalar");
+        assert_eq!(microkernel_name(Isa::Scalar, KernelFormat::Dense), "dense_block8_scalar");
+    }
+
+    fn random_x(rng: &mut Rng, n: usize, zero_frac: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| if rng.bernoulli(zero_frac) { 0.0 } else { rng.normal() })
+            .collect()
+    }
+
+    /// Grid of shapes that hits full-block, tail-only and mixed batch
+    /// paths, slot remainders (row nnz % 8 ≠ 0) and skewed rows.
+    fn cases() -> Vec<(usize, usize, f64, usize)> {
+        vec![
+            (17, 13, 0.3, 5),   // tail-only batch, ragged rows
+            (64, 48, 0.2, 8),   // exactly one full block
+            (64, 48, 0.2, 19),  // full blocks + tail
+            (33, 70, 0.6, 16),  // dense-ish rows: slot-vector path
+            (128, 96, 0.05, 9), // very sparse: mostly remainder slots
+        ]
+    }
+
+    #[test]
+    fn simd_tables_match_scalar_bit_exactly_on_every_kernel() {
+        let mut rng = Rng::new(77);
+        for isa in Isa::available() {
+            let table = kernel_table(isa);
+            for (n_in, n_out, density, batch) in cases() {
+                let wi = init::WeightInit::Normal(0.5);
+                let w = init::erdos_renyi(n_in, n_out, density, &mut rng, &wi);
+                let x = random_x(&mut rng, batch * n_in, 0.3);
+                let dz = random_x(&mut rng, batch * n_out, 0.0);
+                let label = format!("{} {n_in}x{n_out} d{density} b{batch}", isa.name());
+
+                // forward (out pre-biased, like the layer path)
+                let bias = random_x(&mut rng, n_out, 0.0);
+                let mut seq: Vec<f32> = (0..batch).flat_map(|_| bias.iter().copied()).collect();
+                let mut got = seq.clone();
+                ops::spmm_forward(&x, batch, &w, &mut seq);
+                // SAFETY: lengths match, CSR validated, ISA supported
+                // (Isa::available() only yields supported ISAs).
+                unsafe { (table.forward)(&x, batch, &w, &mut got) };
+                assert_eq!(seq, got, "forward {label}");
+
+                // grad_input
+                let mut seq = vec![f32::NAN; batch * n_in];
+                let mut got = vec![f32::NAN; batch * n_in];
+                ops::spmm_grad_input(&dz, batch, &w, &mut seq);
+                unsafe { (table.grad_input)(&dz, batch, &w, &mut got) };
+                assert_eq!(seq, got, "grad_input {label}");
+
+                // grad_weights: full row range and a proper sub-range
+                let mut seq = vec![0.0f32; w.nnz()];
+                let mut got = vec![0.0f32; w.nnz()];
+                ops::spmm_grad_weights(&x, &dz, batch, &w, &mut seq);
+                unsafe { (table.grad_weights_rows)(&x, &dz, batch, &w, 0, n_in, &mut got) };
+                assert_eq!(seq, got, "grad_weights {label}");
+                let (r0, r1) = (n_in / 4, (3 * n_in) / 4);
+                let (k0, k1) = (w.row_ptr[r0], w.row_ptr[r1]);
+                let mut got = vec![0.0f32; k1 - k0];
+                unsafe { (table.grad_weights_rows)(&x, &dz, batch, &w, r0, r1, &mut got) };
+                assert_eq!(&seq[k0..k1], &got[..], "grad_weights rows {label}");
+
+                // fused backward
+                let mut dx_seq = vec![f32::NAN; batch * n_in];
+                let mut dw_seq = vec![0.0f32; w.nnz()];
+                ops::spmm_grad_input(&dz, batch, &w, &mut dx_seq);
+                ops::spmm_grad_weights(&x, &dz, batch, &w, &mut dw_seq);
+                let mut dx = vec![f32::NAN; batch * n_in];
+                let mut dw = vec![0.0f32; w.nnz()];
+                unsafe {
+                    (table.backward_fused_rows)(
+                        &x,
+                        &dz,
+                        batch,
+                        &w,
+                        0,
+                        n_in,
+                        ShardPtr(dx.as_mut_ptr()),
+                        &mut dw,
+                    )
+                };
+                assert_eq!(dx_seq, dx, "fused dx {label}");
+                assert_eq!(dw_seq, dw, "fused dw {label}");
+
+                // dense-fallback forward on the densified weights
+                let wd = w.to_dense();
+                let mut seq: Vec<f32> = (0..batch).flat_map(|_| bias.iter().copied()).collect();
+                let mut got = seq.clone();
+                dense_forward_scalar(&x, batch, n_in, n_out, &wd, &mut seq);
+                unsafe { (table.dense_forward)(&x, batch, n_in, n_out, &wd, &mut got) };
+                assert_eq!(seq, got, "dense {label}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_tables_survive_degenerate_shapes() {
+        for isa in Isa::available() {
+            let table = kernel_table(isa);
+            // empty matrix, zero batch
+            let w = CsrMatrix::empty(4, 5);
+            let x = vec![1.0f32; 2 * 4];
+            let mut out = vec![0.0f32; 2 * 5];
+            unsafe { (table.forward)(&x, 2, &w, &mut out) };
+            assert!(out.iter().all(|&v| v == 0.0), "{}", isa.name());
+            let mut dx = vec![f32::NAN; 2 * 4];
+            unsafe { (table.grad_input)(&[0.5f32; 10], 2, &w, &mut dx) };
+            assert!(dx.iter().all(|&v| v == 0.0), "{}", isa.name());
+            unsafe { (table.forward)(&[], 0, &w, &mut []) };
+            let mut dw: Vec<f32> = Vec::new();
+            unsafe { (table.grad_weights_rows)(&[], &[], 0, &w, 0, 4, &mut dw) };
+            // single-row matrix with a one-slot row (pure remainder)
+            let w = CsrMatrix::from_coo(1, 3, vec![(0u32, 1u32, 2.0f32)]).unwrap();
+            let x = [1.0f32, -1.0, 0.5, 0.0, 2.0, 3.0, -4.0, 5.0, 9.0]; // batch 9
+            let mut seq = vec![0.0f32; 9 * 3];
+            let mut got = vec![0.0f32; 9 * 3];
+            ops::spmm_forward(&x, 9, &w, &mut seq);
+            unsafe { (table.forward)(&x, 9, &w, &mut got) };
+            assert_eq!(seq, got, "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn scratch_take_put_reuses_capacity() {
+        let buf = take_scratch(64);
+        assert!(buf.len() >= 64);
+        let ptr = buf.as_ptr();
+        put_scratch(buf);
+        let buf = take_scratch(32);
+        assert_eq!(buf.as_ptr(), ptr, "same thread must reuse its buffer");
+        put_scratch(buf);
+    }
+}

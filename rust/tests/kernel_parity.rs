@@ -11,9 +11,13 @@
 //! Every parity assertion runs the sharded kernels on BOTH dispatch
 //! backends — the cold scoped-spawn fallback and a persistent
 //! [`WorkerPool`] of the same size (DESIGN.md §9) — across pool sizes
-//! {1, 2, 8} (or the single `KERNEL_THREADS` budget CI pins).
+//! {1, 2, 8} (or the single `KERNEL_THREADS` budget CI pins), and on
+//! EVERY microkernel ISA the host supports (scalar always; AVX2/AVX-512
+//! or NEON where detected, DESIGN.md §11) — the sequential oracles are
+//! the scalar kernels, so every assertion is a cross-ISA bit-exactness
+//! check, with `TSNN_ISA` covering the forced legs in CI.
 
-use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, WeightInit, WorkerPool};
+use tsnn::sparse::{erdos_renyi, ops, CsrMatrix, Isa, WeightInit, WorkerPool};
 use tsnn::util::Rng;
 
 mod common;
@@ -26,8 +30,9 @@ fn random_x(rng: &mut Rng, batch: usize, n: usize, zero_frac: f64) -> Vec<f32> {
 }
 
 /// Run all three kernels sequentially and sharded at `threads` — on the
-/// scoped fallback AND on a pool of the same size — asserting exact
-/// agreement on every output buffer.
+/// scoped fallback AND on a pool of the same size, at every supported
+/// microkernel ISA — asserting exact agreement on every output buffer
+/// (the sequential oracles are the scalar kernels).
 fn assert_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
     let (n_in, n_out) = (w.n_rows, w.n_cols);
     let x = random_x(rng, batch, n_in, 0.3);
@@ -37,28 +42,32 @@ fn assert_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usize) {
         ("scoped", ops::Exec::scoped(threads)),
         ("pooled", ops::Exec::pooled(&pool)),
     ] {
-        let label = format!(
-            "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path}",
-            w.nnz()
-        );
+        for isa in Isa::available() {
+            let exec = exec.with_isa(isa);
+            let label = format!(
+                "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path} {}",
+                w.nnz(),
+                isa.name()
+            );
 
-        let mut seq = vec![0.0f32; batch * n_out];
-        let mut par = vec![0.0f32; batch * n_out];
-        ops::spmm_forward(&x, batch, w, &mut seq);
-        ops::spmm_forward_exec(&x, batch, w, &mut par, exec);
-        assert_eq!(seq, par, "forward mismatch ({label})");
+            let mut seq = vec![0.0f32; batch * n_out];
+            let mut par = vec![0.0f32; batch * n_out];
+            ops::spmm_forward(&x, batch, w, &mut seq);
+            ops::spmm_forward_exec(&x, batch, w, &mut par, exec);
+            assert_eq!(seq, par, "forward mismatch ({label})");
 
-        let mut seq = vec![0.0f32; batch * n_in];
-        let mut par = vec![0.0f32; batch * n_in];
-        ops::spmm_grad_input(&dz, batch, w, &mut seq);
-        ops::spmm_grad_input_exec(&dz, batch, w, &mut par, exec);
-        assert_eq!(seq, par, "grad_input mismatch ({label})");
+            let mut seq = vec![0.0f32; batch * n_in];
+            let mut par = vec![0.0f32; batch * n_in];
+            ops::spmm_grad_input(&dz, batch, w, &mut seq);
+            ops::spmm_grad_input_exec(&dz, batch, w, &mut par, exec);
+            assert_eq!(seq, par, "grad_input mismatch ({label})");
 
-        let mut seq = vec![0.0f32; w.nnz()];
-        let mut par = vec![0.0f32; w.nnz()];
-        ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
-        ops::spmm_grad_weights_exec(&x, &dz, batch, w, &mut par, exec);
-        assert_eq!(seq, par, "grad_weights mismatch ({label})");
+            let mut seq = vec![0.0f32; w.nnz()];
+            let mut par = vec![0.0f32; w.nnz()];
+            ops::spmm_grad_weights(&x, &dz, batch, w, &mut seq);
+            ops::spmm_grad_weights_exec(&x, &dz, batch, w, &mut par, exec);
+            assert_eq!(seq, par, "grad_weights mismatch ({label})");
+        }
     }
 }
 
@@ -82,15 +91,19 @@ fn assert_fused_parity(w: &CsrMatrix, batch: usize, rng: &mut Rng, threads: usiz
         ("scoped", ops::Exec::scoped(threads)),
         ("pooled", ops::Exec::pooled(&pool)),
     ] {
-        let label = format!(
-            "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path}",
-            w.nnz()
-        );
-        let mut dx = vec![f32::NAN; batch * n_in];
-        let mut dw = vec![0.0f32; w.nnz()];
-        ops::spmm_backward_fused_exec(&x, &dz, batch, w, &mut dx, &mut dw, exec);
-        assert_eq!(dx, dx_oracle, "fused dx mismatch ({label})");
-        assert_eq!(dw, dw_oracle, "fused dw mismatch ({label})");
+        for isa in Isa::available() {
+            let exec = exec.with_isa(isa);
+            let label = format!(
+                "{n_in}x{n_out} nnz={} batch={batch} threads={threads} {path} {}",
+                w.nnz(),
+                isa.name()
+            );
+            let mut dx = vec![f32::NAN; batch * n_in];
+            let mut dw = vec![0.0f32; w.nnz()];
+            ops::spmm_backward_fused_exec(&x, &dz, batch, w, &mut dx, &mut dw, exec);
+            assert_eq!(dx, dx_oracle, "fused dx mismatch ({label})");
+            assert_eq!(dw, dw_oracle, "fused dw mismatch ({label})");
+        }
     }
 }
 

@@ -2,9 +2,11 @@
 //! layout must reproduce the training forward path **bit-exactly** —
 //! across shapes × densities (including layers dense enough to trigger
 //! the dense-fallback format), pool sizes {1, 2, 8} (or the pinned
-//! `KERNEL_THREADS` budget), and any batch composition the front end
-//! forms. Format selection is asserted, not assumed: every grid case
-//! pins the expected per-layer CSR/dense choice.
+//! `KERNEL_THREADS` budget), every microkernel ISA the host supports
+//! (forced via `ServeWorkspace::force_isa` against a default-ISA
+//! training oracle, DESIGN.md §11.3), and any batch composition the
+//! front end forms. Format selection is asserted, not assumed: every
+//! grid case pins the expected per-layer CSR/dense choice.
 
 use std::sync::mpsc::channel;
 use std::time::Duration;
@@ -14,7 +16,7 @@ use tsnn::nn::Activation;
 use tsnn::serve::{
     LayerFormat, LayoutOptions, ServeConfig, ServeEngine, ServeModel, ServeWorkspace,
 };
-use tsnn::sparse::{erdos_renyi, WeightInit};
+use tsnn::sparse::{erdos_renyi, Isa, WeightInit};
 use tsnn::util::Rng;
 
 mod common;
@@ -102,13 +104,17 @@ fn serving_forward_bit_exact_across_shapes_densities_and_pools() {
             let x = random_x(&mut rng, batch, sizes[0]);
             let oracle = training_logits(&mlp, &x, batch);
             for threads in thread_counts() {
-                let mut ws = ServeWorkspace::with_threads(threads);
-                let got = serve.forward(&x, batch, &mut ws);
-                assert_eq!(
-                    oracle, got,
-                    "case {case} batch={batch} threads={threads}: serving forward \
-                     must be bit-exact vs the training path"
-                );
+                for isa in Isa::available() {
+                    let mut ws = ServeWorkspace::with_threads(threads);
+                    ws.force_isa = Some(isa);
+                    let got = serve.forward(&x, batch, &mut ws);
+                    assert_eq!(
+                        oracle, got,
+                        "case {case} batch={batch} threads={threads} isa={}: serving \
+                         forward must be bit-exact vs the training path",
+                        isa.name()
+                    );
+                }
             }
         }
     }
