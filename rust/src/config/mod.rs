@@ -296,10 +296,7 @@ impl TrainConfig {
             "kernel_threads" => {
                 self.kernel_threads = value.parse().map_err(|_| bad(key, value))?
             }
-            "lr" => {
-                let eta: f32 = value.parse().map_err(|_| bad(key, value))?;
-                self.lr = LrSchedule::Constant(eta);
-            }
+            "lr" => self.lr = parse_lr(value).ok_or_else(|| bad(key, value))?,
             "momentum" => {
                 self.optimizer.momentum = value.parse().map_err(|_| bad(key, value))?
             }
@@ -319,13 +316,21 @@ impl TrainConfig {
             }
             "init" => self.init = WeightInit::parse(value).ok_or_else(|| bad(key, value))?,
             "hidden" => {
-                let sizes: Option<Vec<usize>> =
-                    value.split('x').map(|p| p.parse().ok()).collect();
-                self.hidden = sizes.ok_or_else(|| bad(key, value))?;
+                if value == "none" {
+                    self.hidden = Vec::new();
+                } else {
+                    let sizes: Option<Vec<usize>> =
+                        value.split('x').map(|p| p.parse().ok()).collect();
+                    self.hidden = sizes.ok_or_else(|| bad(key, value))?;
+                }
             }
             "zeta" => {
                 let z: f64 = value.parse().map_err(|_| bad(key, value))?;
                 self.evolution.get_or_insert_with(Default::default).zeta = z;
+            }
+            "evolution_init" => {
+                self.evolution.get_or_insert_with(Default::default).init =
+                    WeightInit::parse(value).ok_or_else(|| bad(key, value))?
             }
             "evolution" => match value {
                 "on" => {
@@ -355,11 +360,76 @@ impl TrainConfig {
                     .get_or_insert_with(Default::default)
                     .percentile = value.parse().map_err(|_| bad(key, value))?
             }
+            "importance_min" => {
+                self.importance
+                    .get_or_insert_with(Default::default)
+                    .min_connections = value.parse().map_err(|_| bad(key, value))?
+            }
             other => {
                 return Err(TsnnError::Config(format!("unknown config key '{other}'")));
             }
         }
         Ok(())
+    }
+
+    /// Dump every field as `key=value` lines that [`apply_file`] parses
+    /// back into an identical config. Floats print via Rust's
+    /// shortest-roundtrip `Display`, so dump → parse is bit-exact; the
+    /// multi-process coordinator ships worker configs this way.
+    ///
+    /// [`apply_file`]: TrainConfig::apply_file
+    pub fn dump_kv(&self) -> String {
+        let mut out = String::new();
+        let mut kv = |k: &str, v: String| {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(&v);
+            out.push('\n');
+        };
+        let hidden = if self.hidden.is_empty() {
+            "none".into()
+        } else {
+            self.hidden
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        };
+        kv("hidden", hidden);
+        kv("epsilon", self.epsilon.to_string());
+        kv(
+            "activation",
+            crate::model::checkpoint::act_name(&self.activation),
+        );
+        kv("init", init_kv(&self.init));
+        kv("lr", lr_kv(&self.lr));
+        kv("momentum", self.optimizer.momentum.to_string());
+        kv("weight_decay", self.optimizer.weight_decay.to_string());
+        kv("batch", self.batch.to_string());
+        kv("epochs", self.epochs.to_string());
+        kv("dropout", self.dropout.to_string());
+        kv("seed", self.seed.to_string());
+        kv("eval_every", self.eval_every.to_string());
+        kv("kernel_threads", self.kernel_threads.to_string());
+        match &self.evolution {
+            None => kv("evolution", "off".into()),
+            Some(e) => {
+                kv("evolution", "on".into());
+                kv("zeta", e.zeta.to_string());
+                kv("evolution_init", init_kv(&e.init));
+            }
+        }
+        match &self.importance {
+            None => kv("importance", "off".into()),
+            Some(i) => {
+                kv("importance", "on".into());
+                kv("importance_start", i.start_epoch.to_string());
+                kv("importance_period", i.period.to_string());
+                kv("importance_pct", i.percentile.to_string());
+                kv("importance_min", i.min_connections.to_string());
+            }
+        }
+        out
     }
 
     /// Parse a config file: `key = value` lines, `#` comments.
@@ -375,6 +445,62 @@ impl TrainConfig {
             self.set(k.trim(), v.trim())?;
         }
         Ok(())
+    }
+}
+
+/// Parse an LR schedule: a plain float (constant), `warmup:BASE:SCALE:EPOCHS`,
+/// or `hotstart:HOT:BASE:EPOCHS`.
+fn parse_lr(value: &str) -> Option<LrSchedule> {
+    fn three(rest: &str) -> Option<(f32, f32, usize)> {
+        let mut it = rest.split(':');
+        let a = it.next()?.parse().ok()?;
+        let b = it.next()?.parse().ok()?;
+        let c = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some((a, b, c))
+    }
+    if let Some(rest) = value.strip_prefix("warmup:") {
+        let (base, scale, warmup_epochs) = three(rest)?;
+        return Some(LrSchedule::Warmup {
+            base,
+            scale,
+            warmup_epochs,
+        });
+    }
+    if let Some(rest) = value.strip_prefix("hotstart:") {
+        let (hot, base, hot_epochs) = three(rest)?;
+        return Some(LrSchedule::HotStart {
+            hot,
+            base,
+            hot_epochs,
+        });
+    }
+    value.parse().ok().map(LrSchedule::Constant)
+}
+
+fn lr_kv(lr: &LrSchedule) -> String {
+    match *lr {
+        LrSchedule::Constant(eta) => eta.to_string(),
+        LrSchedule::Warmup {
+            base,
+            scale,
+            warmup_epochs,
+        } => format!("warmup:{base}:{scale}:{warmup_epochs}"),
+        LrSchedule::HotStart {
+            hot,
+            base,
+            hot_epochs,
+        } => format!("hotstart:{hot}:{base}:{hot_epochs}"),
+    }
+}
+
+fn init_kv(init: &WeightInit) -> String {
+    match *init {
+        WeightInit::Normal(std) => format!("normal:{std}"),
+        WeightInit::Xavier => "xavier".into(),
+        WeightInit::HeUniform => "he_uniform".into(),
     }
 }
 
@@ -440,6 +566,46 @@ mod tests {
         c.set("activation", "relu").unwrap();
         c.set("alpha", "0.5").unwrap();
         assert_eq!(c.activation, Activation::Relu); // relu has no alpha
+    }
+
+    #[test]
+    fn dump_kv_roundtrips_exactly() {
+        let mut c = TrainConfig::paper_preset("madelon");
+        c.lr = LrSchedule::HotStart {
+            hot: 0.02,
+            base: 0.01,
+            hot_epochs: 3,
+        };
+        c.importance = Some(ImportanceConfig {
+            start_epoch: 11,
+            period: 7,
+            percentile: 2.5,
+            min_connections: 3,
+        });
+        let dump = c.dump_kv();
+        let mut parsed = TrainConfig::default();
+        parsed.apply_file(&dump).unwrap();
+        assert_eq!(parsed.dump_kv(), dump);
+        assert_eq!(parsed.hidden, c.hidden);
+        assert_eq!(parsed.init, c.init);
+        assert_eq!(parsed.activation, c.activation);
+        assert_eq!(parsed.importance.unwrap().min_connections, 3);
+
+        // warmup schedule + disabled evolution + empty hidden
+        let mut c2 = TrainConfig::default();
+        c2.lr = LrSchedule::Warmup {
+            base: 0.01,
+            scale: 3.0,
+            warmup_epochs: 5,
+        };
+        c2.evolution = None;
+        c2.hidden = Vec::new();
+        let dump2 = c2.dump_kv();
+        let mut parsed2 = TrainConfig::default();
+        parsed2.apply_file(&dump2).unwrap();
+        assert_eq!(parsed2.dump_kv(), dump2);
+        assert!(parsed2.hidden.is_empty());
+        assert!(parsed2.evolution.is_none());
     }
 
     #[test]

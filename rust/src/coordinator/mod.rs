@@ -17,20 +17,25 @@
 
 pub mod average;
 pub mod server;
+pub mod transport;
 
 use std::sync::Arc;
 
 use crate::config::TrainConfig;
 use crate::data::Dataset;
 use crate::error::{Result, TsnnError};
-use crate::model::Batcher;
 use crate::model::SparseMlp;
-use crate::nn::LrSchedule;
-use crate::train::{self, TrainOptions};
-use crate::util::{PhaseTimes, Rng, Timer};
+use crate::util::{PhaseTimes, Rng};
 
 pub use average::average_and_resparsify;
 pub use server::{ParameterServer, ServerStats, Snapshot, SparseGradient};
+pub use transport::service::{CoordStats, CoordinatorOptions, CoordinatorService};
+pub use transport::worker::{run_worker, WorkerJob, WorkerReport};
+
+use transport::channel::ChannelHub;
+use transport::fault::{FaultCounters, FaultPlan, FaultyTransport};
+use transport::service::ServiceOutcome;
+use transport::{Listener, Transport};
 
 /// Parallel-training configuration.
 #[derive(Debug, Clone, Copy)]
@@ -66,18 +71,30 @@ impl Default for ParallelConfig {
 }
 
 /// Scale all gradient buffers so the global L2 norm is at most `clip`.
-fn clip_gradients(grad_w: &mut [Vec<f32>], grad_b: &mut [Vec<f32>], clip: f32) {
-    if clip <= 0.0 {
-        return;
-    }
+///
+/// A non-finite norm (any NaN/±Inf entry) zeroes the whole gradient and
+/// returns `true` — the old behaviour silently skipped scaling, letting a
+/// single poisoned batch NaN the shared server model through `push`.
+/// Zeroing runs regardless of `clip` so `grad_clip = 0` (clipping off)
+/// still never forwards a poisoned gradient.
+pub fn clip_gradients(grad_w: &mut [Vec<f32>], grad_b: &mut [Vec<f32>], clip: f32) -> bool {
     let norm_sq: f32 = grad_w
         .iter()
         .chain(grad_b.iter())
         .flat_map(|g| g.iter())
         .map(|g| g * g)
         .sum();
+    if !norm_sq.is_finite() {
+        for g in grad_w.iter_mut().chain(grad_b.iter_mut()) {
+            g.fill(0.0);
+        }
+        return true;
+    }
+    if clip <= 0.0 {
+        return false;
+    }
     let norm = norm_sq.sqrt();
-    if norm > clip && norm.is_finite() {
+    if norm > clip {
         let scale = clip / norm;
         for g in grad_w.iter_mut().chain(grad_b.iter_mut()) {
             for v in g.iter_mut() {
@@ -85,6 +102,7 @@ fn clip_gradients(grad_w: &mut [Vec<f32>], grad_b: &mut [Vec<f32>], clip: f32) {
             }
         }
     }
+    false
 }
 
 /// Result of a parallel run.
@@ -102,6 +120,8 @@ pub struct ParallelReport {
     pub end_weights: usize,
     /// Server-side statistics (staleness, dropped updates, ...).
     pub server_stats: ServerStats,
+    /// Transport-side statistics (frames, retries absorbed, stragglers).
+    pub coord_stats: CoordStats,
     /// Wall-clock per phase.
     pub phases: PhaseTimes,
 }
@@ -115,7 +135,7 @@ pub struct ParallelReport {
 /// idle — now 3+3+2). Each worker's `Workspace` turns its budget into a
 /// persistent kernel sub-pool (DESIGN.md §9.4), so K workers × pool
 /// shards never oversubscribes the host.
-fn worker_kernel_budgets(cfg: &TrainConfig, workers: usize) -> Vec<usize> {
+pub fn worker_kernel_budgets(cfg: &TrainConfig, workers: usize) -> Vec<usize> {
     let workers = workers.max(1);
     let total = crate::sparse::ops::resolve_threads(cfg.kernel_threads);
     let (base, rem) = (total / workers, total % workers);
@@ -124,7 +144,9 @@ fn worker_kernel_budgets(cfg: &TrainConfig, workers: usize) -> Vec<usize> {
         .collect()
 }
 
-fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
+/// Contiguous shard `k` of `n` samples split across `workers` workers
+/// (the last worker absorbs the remainder).
+pub fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
     let per = n / workers;
     let lo = k * per;
     let hi = if k + 1 == workers { n } else { lo + per };
@@ -133,7 +155,7 @@ fn shard_bounds(n: usize, workers: usize, k: usize) -> (usize, usize) {
 
 /// Build a worker-local dataset containing only its shard of train data
 /// (test split shared for evaluation convenience).
-fn shard_dataset(data: &Dataset, lo: usize, hi: usize) -> Dataset {
+pub fn shard_dataset(data: &Dataset, lo: usize, hi: usize) -> Dataset {
     let nf = data.n_features;
     Dataset {
         name: format!("{}[{}..{}]", data.name, lo, hi),
@@ -146,12 +168,42 @@ fn shard_dataset(data: &Dataset, lo: usize, hi: usize) -> Dataset {
     }
 }
 
+/// Extra knobs for [`run_parallel_opts`] (fault injection is test/CLI
+/// only; the defaults run clean).
+#[derive(Default)]
+pub struct ParallelOptions {
+    /// Coordinator-side options (retry policy, idle timeout, straggler
+    /// sensitivity).
+    pub coord: CoordinatorOptions,
+    /// Deterministic fault plan applied to every worker's transport.
+    pub fault: FaultPlan,
+    /// Share a counter sink to observe injected faults from tests.
+    pub fault_counters: Option<Arc<FaultCounters>>,
+}
+
 /// Run WASAP-SGD (or WASSP-SGD when `pcfg.synchronous`).
 pub fn run_parallel(
     cfg: &TrainConfig,
     pcfg: &ParallelConfig,
     data: &Dataset,
     rng: &mut Rng,
+) -> Result<ParallelReport> {
+    run_parallel_opts(cfg, pcfg, data, rng, &ParallelOptions::default())
+}
+
+/// Run WASAP/WASSP with in-process workers over the channel transport.
+///
+/// Phase 1 and phase 2 both flow through the [`transport`] protocol: the
+/// coordinator thread runs a [`CoordinatorService`] on a [`ChannelHub`],
+/// and each worker thread drives [`run_worker`] over its own channel
+/// connection — the very same state machines a multi-process socket run
+/// executes, so in-process tests pin the protocol, not a shortcut.
+pub fn run_parallel_opts(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    rng: &mut Rng,
+    opts: &ParallelOptions,
 ) -> Result<ParallelReport> {
     if pcfg.workers == 0 {
         return Err(TsnnError::Coordinator("need at least one worker".into()));
@@ -163,288 +215,118 @@ pub fn run_parallel(
     })?;
     let start_weights = model.weight_count();
 
-    let pushes_per_epoch = data.n_train().div_ceil(cfg.batch);
-    // Asynchrony begets momentum (Mitliagkas et al., cited by the paper):
-    // K async workers contribute an implicit momentum of ~1 − 1/K, so the
-    // explicit coefficient is reduced to keep the *effective* momentum at
-    // the configured value: μ_explicit = 1 − (1 − μ)·K, clamped at 0.
-    // Without this, μ=0.9 with K≥3 exceeds effective momentum 1 and the
-    // server model diverges to a constant predictor.
-    let mut opt = cfg.optimizer;
-    if !pcfg.synchronous && pcfg.workers > 1 {
-        let k = pcfg.workers as f32;
-        opt.momentum = (1.0 - (1.0 - opt.momentum) * k).max(0.0);
-    }
-    let ps = ParameterServer::new(
-        model,
-        opt,
-        cfg.evolution,
-        cfg.importance,
-        pushes_per_epoch,
-        cfg.seed,
-    );
+    let service = CoordinatorService::new(cfg, pcfg, model, data.n_train(), None, &opts.coord);
+    let (hub, connector) = ChannelHub::new();
+    let budgets = worker_kernel_budgets(cfg, pcfg.workers);
 
-    // ---- phase 1 ----
-    let t1 = Timer::start();
-    if pcfg.synchronous {
-        run_phase1_sync(cfg, pcfg, data, &ps)?;
-    } else {
-        run_phase1_async(cfg, pcfg, data, &ps)?;
-    }
-    phases.add("phase1", t1.secs());
+    let outcome: ServiceOutcome = std::thread::scope(|scope| -> Result<ServiceOutcome> {
+        let coordinator = scope.spawn(move || {
+            let mut hub = hub;
+            service.run(&mut hub)
+        });
+        let mut handles = Vec::new();
+        for k in 0..pcfg.workers {
+            let job = WorkerJob::new(k as u32, budgets[k], cfg, pcfg);
+            let retry = opts.coord.retry;
+            let mut t: Box<dyn Transport> = Box::new(connector.connect());
+            if opts.fault.is_active() {
+                let counters = opts
+                    .fault_counters
+                    .clone()
+                    .unwrap_or_else(|| Arc::new(FaultCounters::default()));
+                t = Box::new(FaultyTransport::new(t, opts.fault, counters));
+            }
+            handles.push(scope.spawn(move || run_worker(t, retry, &job, data)));
+        }
+        drop(connector);
+        let mut worker_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(_report)) => {}
+                Ok(Err(e)) => worker_err = worker_err.or(Some(e)),
+                Err(_) => {
+                    worker_err = worker_err.or(Some(TsnnError::Coordinator(
+                        "phase-1 worker panicked".into(),
+                    )))
+                }
+            }
+        }
+        let outcome = coordinator
+            .join()
+            .map_err(|_| TsnnError::Coordinator("coordinator thread panicked".into()))?;
+        // a worker's own failure is the root cause; the coordinator error
+        // (if any) is usually the knock-on "everyone disconnected"
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        outcome
+    })?;
+    finish_report(data, phases, start_weights, outcome)
+}
 
-    let (phase1_model, server_stats) = ps.finish();
-    // The averaging step restores the sparsity budget of the *phase-1*
-    // model, so Importance Pruning reductions made during phase 1 persist
-    // through phase 2's union-average.
-    let target_nnz: Vec<usize> = phase1_model
-        .layers
-        .iter()
-        .map(|l| l.weights.nnz())
-        .collect();
-    let mut ws = phase1_model.alloc_workspace(256);
+/// Run the coordinator side only, serving external workers over
+/// `listener` (the multi-process socket path: workers are separate
+/// `tsnn worker` processes that receive `job_json` at join).
+pub fn run_parallel_listener(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    rng: &mut Rng,
+    listener: &mut dyn Listener,
+    job_json: Option<String>,
+    opts: &CoordinatorOptions,
+) -> Result<ParallelReport> {
+    if pcfg.workers == 0 {
+        return Err(TsnnError::Coordinator("need at least one worker".into()));
+    }
+    let mut phases = PhaseTimes::new();
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let model = phases.time("init", || {
+        SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, rng)
+    })?;
+    let start_weights = model.weight_count();
+    let service = CoordinatorService::new(cfg, pcfg, model, data.n_train(), job_json, opts);
+    let outcome = service.run(listener)?;
+    finish_report(data, phases, start_weights, outcome)
+}
+
+/// Shared tail of a parallel run: evaluate the phase-1 and final models
+/// and assemble the report.
+fn finish_report(
+    data: &Dataset,
+    mut phases: PhaseTimes,
+    start_weights: usize,
+    outcome: ServiceOutcome,
+) -> Result<ParallelReport> {
+    phases.add("phase1", outcome.coord.phase1_secs);
+    phases.add("phase2", outcome.coord.phase2_secs);
+    let mut ws = outcome.phase1_model.alloc_workspace(256);
     let (_, phase1_acc) = phases.time("test", || {
-        phase1_model.evaluate(&data.x_test, &data.y_test, 256, &mut ws)
+        outcome
+            .phase1_model
+            .evaluate(&data.x_test, &data.y_test, 256, &mut ws)
     });
-
-    // ---- phase 2: local training per worker, then averaging ----
-    let t2 = Timer::start();
-    let final_model = if pcfg.phase2_epochs > 0 {
-        let mut locals: Vec<SparseMlp> = Vec::with_capacity(pcfg.workers);
-        let budgets = worker_kernel_budgets(cfg, pcfg.workers);
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            for k in 0..pcfg.workers {
-                let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, k);
-                let shard = shard_dataset(data, lo, hi);
-                let mut local_cfg = cfg.clone();
-                local_cfg.epochs = pcfg.phase2_epochs;
-                local_cfg.eval_every = 0; // no test eval inside workers
-                local_cfg.kernel_threads = budgets[k];
-                let mut local_model = phase1_model.clone();
-                let mut local_rng = Rng::new(cfg.seed).split(1000 + k as u64);
-                handles.push(scope.spawn(move || -> Result<SparseMlp> {
-                    let mut local_phases = PhaseTimes::new();
-                    train::train_model(
-                        &local_cfg,
-                        &shard,
-                        &mut local_model,
-                        &mut local_rng,
-                        TrainOptions::default(),
-                        &mut local_phases,
-                    )?;
-                    Ok(local_model)
-                }));
-            }
-            for h in handles {
-                locals.push(h.join().map_err(|_| {
-                    TsnnError::Coordinator("phase-2 worker panicked".into())
-                })??);
-            }
-            Ok(())
-        })?;
-        average_and_resparsify(&locals, &target_nnz)?
-    } else {
-        phase1_model
-    };
-    phases.add("phase2", t2.secs());
-
+    let final_model = outcome.final_model;
     let mut ws = final_model.alloc_workspace(256);
     let (_, final_acc) = phases.time("test", || {
         final_model.evaluate(&data.x_test, &data.y_test, 256, &mut ws)
     });
-
     Ok(ParallelReport {
         end_weights: final_model.weight_count(),
         start_weights,
         phase1_test_accuracy: phase1_acc,
         final_test_accuracy: final_acc,
-        server_stats,
+        server_stats: outcome.server_stats,
+        coord_stats: outcome.coord,
         phases,
         model: final_model,
     })
 }
 
-/// Phase 1, asynchronous (WASAP): workers fetch/push with no barrier.
-fn run_phase1_async(
-    cfg: &TrainConfig,
-    pcfg: &ParallelConfig,
-    data: &Dataset,
-    ps: &ParameterServer,
-) -> Result<()> {
-    // WASAP benefits from a hot-start LR (paper §2.3); respect an explicit
-    // schedule if the caller set one, otherwise wrap the constant rate.
-    let schedule = match cfg.lr {
-        LrSchedule::Constant(eta) if pcfg.hot_start => LrSchedule::HotStart {
-            hot: eta * 2.0,
-            base: eta,
-            hot_epochs: 3,
-        },
-        other => other,
-    };
-    let budgets = worker_kernel_budgets(cfg, pcfg.workers);
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for k in 0..pcfg.workers {
-            let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, k);
-            let kernel_threads = budgets[k];
-            let mut rng = Rng::new(cfg.seed).split(k as u64);
-            let dropout = if cfg.dropout > 0.0 {
-                Some(crate::nn::Dropout::new(cfg.dropout))
-            } else {
-                None
-            };
-            handles.push(scope.spawn(move || -> Result<()> {
-                let mut batcher = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
-                batcher.reset(&mut rng);
-                // Worker-owned persistent kernel sub-pool for the whole
-                // phase (DESIGN.md §9.4): the workspace spawns it on the
-                // first dispatch and parks it between steps.
-                let mut ws = crate::model::Workspace::with_threads(kernel_threads);
-                loop {
-                    let epoch = ps.epoch();
-                    if epoch >= pcfg.phase1_epochs {
-                        return Ok(());
-                    }
-                    let snap = ps.fetch();
-                    let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
-                        Some(b) => b,
-                        None => {
-                            batcher.reset(&mut rng);
-                            batcher.next_batch(&data.x_train, &data.y_train).unwrap()
-                        }
-                    };
-                    snap.model
-                        .compute_gradients(batch.0, batch.1, dropout.as_ref(), &mut ws, &mut rng);
-                    let mut grad_w = ws.grad_w.clone();
-                    let mut grad_b = ws.grad_b.clone();
-                    clip_gradients(&mut grad_w, &mut grad_b, pcfg.grad_clip);
-                    let grad = SparseGradient {
-                        grad_w,
-                        grad_b,
-                        topo: Arc::clone(&snap.model),
-                        gen: snap.gen,
-                        fetched_step: snap.step,
-                    };
-                    ps.push(grad, schedule.at(epoch))?;
-                }
-            }));
-        }
-        for h in handles {
-            h.join()
-                .map_err(|_| TsnnError::Coordinator("phase-1 worker panicked".into()))??;
-        }
-        Ok(())
-    })
-}
-
-/// Phase 1, synchronous (WASSP): per step all K gradients are computed
-/// against the same snapshot, averaged, and applied once (Goyal et al.
-/// warmup + linear scaling on the LR).
-fn run_phase1_sync(
-    cfg: &TrainConfig,
-    pcfg: &ParallelConfig,
-    data: &Dataset,
-    ps: &ParameterServer,
-) -> Result<()> {
-    let base = match cfg.lr {
-        LrSchedule::Constant(eta) => eta,
-        other => other.at(0),
-    };
-    let schedule = LrSchedule::Warmup {
-        base,
-        scale: (pcfg.workers as f32).max(1.0).min(4.0),
-        warmup_epochs: 5,
-    };
-    let k = pcfg.workers;
-    let steps_per_epoch = data.n_train().div_ceil(cfg.batch);
-
-    // Per-worker persistent state across the run.
-    let mut rngs: Vec<Rng> = (0..k).map(|i| Rng::new(cfg.seed).split(i as u64)).collect();
-    let mut batchers: Vec<Batcher> = (0..k)
-        .map(|i| {
-            let (lo, hi) = shard_bounds(data.n_train(), k, i);
-            Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi)
-        })
-        .collect();
-    for (b, r) in batchers.iter_mut().zip(rngs.iter_mut()) {
-        b.reset(r);
-    }
-    let dropout = if cfg.dropout > 0.0 {
-        Some(crate::nn::Dropout::new(cfg.dropout))
-    } else {
-        None
-    };
-    // Persistent per-worker workspaces: each carries its kernel sub-pool
-    // (DESIGN.md §9.4) and its forward/backward buffers across ALL steps
-    // of the phase — the old per-step workspace would have re-spawned
-    // pool workers (and reallocated every buffer) every step.
-    let budgets = worker_kernel_budgets(cfg, k);
-    let mut wss: Vec<crate::model::Workspace> = budgets
-        .iter()
-        .map(|&t| crate::model::Workspace::with_threads(t))
-        .collect();
-
-    for epoch in 0..pcfg.phase1_epochs {
-        let lr = schedule.at(epoch);
-        for _ in 0..steps_per_epoch {
-            let snap = ps.fetch();
-            // Barrier semantics: all K gradients computed against `snap`,
-            // then averaged and applied once. Computation itself fans out
-            // across scoped threads (real thread-parallelism on multicore
-            // hosts; deterministic aggregation either way); gradients
-            // stay in the persistent workspaces — no per-step clones
-            // (a panicked worker propagates at the scope join).
-            std::thread::scope(|scope| {
-                for ((batcher, rng), ws) in
-                    batchers.iter_mut().zip(rngs.iter_mut()).zip(wss.iter_mut())
-                {
-                    let model = Arc::clone(&snap.model);
-                    let dref = dropout.as_ref();
-                    scope.spawn(move || {
-                        let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
-                            Some(b) => b,
-                            None => {
-                                batcher.reset(rng);
-                                batcher.next_batch(&data.x_train, &data.y_train).unwrap()
-                            }
-                        };
-                        model.compute_gradients(batch.0, batch.1, dref, ws, rng);
-                    });
-                }
-            });
-            // average K aligned gradients into worker 0's buffers (the
-            // next step's backward_into re-zeroes them anyway)
-            let inv_k = 1.0f32 / k as f32;
-            let (agg, rest) = wss.split_first_mut().expect("workers >= 1");
-            for ws in rest.iter() {
-                for (a, g) in agg.grad_w.iter_mut().zip(ws.grad_w.iter()) {
-                    for (x, y) in a.iter_mut().zip(g.iter()) {
-                        *x += y;
-                    }
-                }
-                for (a, g) in agg.grad_b.iter_mut().zip(ws.grad_b.iter()) {
-                    for (x, y) in a.iter_mut().zip(g.iter()) {
-                        *x += y;
-                    }
-                }
-            }
-            for a in agg.grad_w.iter_mut().flat_map(|v| v.iter_mut()) {
-                *a *= inv_k;
-            }
-            for a in agg.grad_b.iter_mut().flat_map(|v| v.iter_mut()) {
-                *a *= inv_k;
-            }
-            clip_gradients(&mut agg.grad_w, &mut agg.grad_b, pcfg.grad_clip);
-            ps.apply_aligned(&agg.grad_w, &agg.grad_b, lr)?;
-        }
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::LrSchedule;
 
     /// Cleanly separable two-blob data: the coordinator unit tests pin
     /// the *machinery* (phases, staleness, averaging), so the learning

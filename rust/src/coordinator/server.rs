@@ -58,6 +58,7 @@ struct ServerState {
     applied_entries: u64,
     staleness_sum: u64,
     staleness_max: u64,
+    nonfinite_rejected: u64,
 }
 
 /// Lock-protected parameter server.
@@ -90,6 +91,19 @@ pub struct ServerStats {
     pub max_staleness: u64,
     /// Topology generations.
     pub generations: u64,
+    /// Pushes rejected because a gradient entry was NaN/Inf.
+    pub nonfinite_rejected: u64,
+}
+
+/// All gradient entries finite? A single NaN would propagate through
+/// `apply_update` into the canonical model and, via snapshots, to every
+/// worker — so non-finite pushes are rejected wholesale at the server.
+fn grads_finite(grad_w: &[Vec<f32>], grad_b: &[Vec<f32>]) -> bool {
+    grad_w
+        .iter()
+        .chain(grad_b.iter())
+        .flat_map(|g| g.iter())
+        .all(|v| v.is_finite())
 }
 
 impl ParameterServer {
@@ -116,6 +130,7 @@ impl ParameterServer {
                 applied_entries: 0,
                 staleness_sum: 0,
                 staleness_max: 0,
+                nonfinite_rejected: 0,
             }),
             opt,
             evolution,
@@ -169,8 +184,15 @@ impl ParameterServer {
 
     /// Atomic write: push a gradient; the server applies valid entries
     /// (Algorithm 1 lines 13–21) and advances step/epoch/topology.
-    pub fn push(&self, grad: SparseGradient, lr: f32) -> Result<()> {
+    /// Returns `false` (without touching the model or the step counter)
+    /// when the gradient carries NaN/Inf entries — a diverged or
+    /// corrupted worker must not poison the server model.
+    pub fn push(&self, grad: SparseGradient, lr: f32) -> Result<bool> {
         let mut st = self.state.lock().unwrap();
+        if !grads_finite(&grad.grad_w, &grad.grad_b) {
+            st.nonfinite_rejected += 1;
+            return Ok(false);
+        }
         let staleness = st.step.saturating_sub(grad.fetched_step);
         st.staleness_sum += staleness;
         st.staleness_max = st.staleness_max.max(staleness);
@@ -230,13 +252,18 @@ impl ParameterServer {
         self.end_of_epoch_evolution(&mut st)?;
         // publish a fresh snapshot for subsequent fetches
         st.snapshot = Arc::new(st.model.clone());
-        Ok(())
+        Ok(true)
     }
 
     /// Synchronous update path (WASSP): apply an averaged dense-of-sparse
-    /// gradient already aligned to the CURRENT topology.
-    pub fn apply_aligned(&self, grad_w: &[Vec<f32>], grad_b: &[Vec<f32>], lr: f32) -> Result<()> {
+    /// gradient already aligned to the CURRENT topology. Returns `false`
+    /// (model untouched) when the gradient carries NaN/Inf entries.
+    pub fn apply_aligned(&self, grad_w: &[Vec<f32>], grad_b: &[Vec<f32>], lr: f32) -> Result<bool> {
         let mut st = self.state.lock().unwrap();
+        if !grads_finite(grad_w, grad_b) {
+            st.nonfinite_rejected += 1;
+            return Ok(false);
+        }
         for (l, layer) in st.model.layers.iter_mut().enumerate() {
             layer.apply_update(&self.opt, &grad_w[l], &grad_b[l], lr);
         }
@@ -244,7 +271,7 @@ impl ParameterServer {
         st.pushes_since_evolution += 1;
         self.end_of_epoch_evolution(&mut st)?;
         st.snapshot = Arc::new(st.model.clone());
-        Ok(())
+        Ok(true)
     }
 
     /// Take the final model + stats (consumes nothing; clones).
@@ -262,6 +289,7 @@ impl ParameterServer {
             },
             max_staleness: st.staleness_max,
             generations: st.gen,
+            nonfinite_rejected: st.nonfinite_rejected,
         };
         (st.model.clone(), stats)
     }
@@ -412,6 +440,40 @@ mod tests {
         assert!(stats.dropped_entries > 0, "{stats:?}");
         assert!(stats.applied_entries > 0);
         assert!(stats.max_staleness >= 1);
+    }
+
+    #[test]
+    fn nonfinite_pushes_are_rejected_and_counted() {
+        let m = model(5);
+        let ps = ParameterServer::new(m, MomentumSgd::default(), None, None, 10, 0);
+        let snap = ps.fetch();
+        let (mut gw, gb) = zero_grad_like(&snap.model);
+        gw[0][0] = f32::NAN;
+        let applied = ps
+            .push(
+                SparseGradient {
+                    grad_w: gw,
+                    grad_b: gb,
+                    topo: Arc::clone(&snap.model),
+                    gen: snap.gen,
+                    fetched_step: snap.step,
+                },
+                0.1,
+            )
+            .unwrap();
+        assert!(!applied);
+        // aligned path rejects too
+        let (gw2, mut gb2) = zero_grad_like(&snap.model);
+        gb2[0][0] = f32::INFINITY;
+        assert!(!ps.apply_aligned(&gw2, &gb2, 0.1).unwrap());
+        let (after, stats) = ps.finish();
+        assert_eq!(stats.steps, 0); // rejected pushes advance nothing
+        assert_eq!(stats.nonfinite_rejected, 2);
+        assert!(after
+            .layers
+            .iter()
+            .flat_map(|l| l.weights.values.iter())
+            .all(|v| v.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! In-process channel transport: mpsc-backed, zero-copy-ish, and the
+//! reference implementation the socket transport must match bit-exactly.
+//!
+//! One [`ChannelHub`] lives on the coordinator thread; each worker
+//! thread holds a [`ChannelClient`] from [`ChannelConnector::connect`].
+//! Dropping a client delivers [`Inbound::Closed`] for its connection, so
+//! a panicking worker thread reads as an implicit leave — the same
+//! signal a dead worker process produces on the socket transport.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Result, TsnnError};
+
+use super::{Inbound, Listener, Transport};
+
+/// Coordinator side of the in-process transport.
+pub struct ChannelHub {
+    rx: Receiver<(u64, Inbound)>,
+    reg_rx: Receiver<(u64, Sender<Vec<u8>>)>,
+    conns: Vec<(u64, Sender<Vec<u8>>)>,
+}
+
+/// Cloneable connector handed to worker threads.
+#[derive(Clone)]
+pub struct ChannelConnector {
+    tx: Sender<(u64, Inbound)>,
+    reg_tx: Sender<(u64, Sender<Vec<u8>>)>,
+    next: Arc<AtomicU64>,
+}
+
+/// Worker side of one in-process connection.
+pub struct ChannelClient {
+    conn: u64,
+    tx: Sender<(u64, Inbound)>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl ChannelHub {
+    /// Create a hub and the connector that reaches it.
+    pub fn new() -> (ChannelHub, ChannelConnector) {
+        let (tx, rx) = channel();
+        let (reg_tx, reg_rx) = channel();
+        (
+            ChannelHub {
+                rx,
+                reg_rx,
+                conns: Vec::new(),
+            },
+            ChannelConnector {
+                tx,
+                reg_tx,
+                next: Arc::new(AtomicU64::new(1)),
+            },
+        )
+    }
+
+    /// Pull newly-registered connections. Registration is enqueued before
+    /// the client can send its first frame, so draining here first keeps
+    /// `send` able to answer any frame `recv` returns.
+    fn drain_registrations(&mut self) {
+        loop {
+            match self.reg_rx.try_recv() {
+                Ok(pair) => self.conns.push(pair),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+}
+
+impl Listener for ChannelHub {
+    fn recv(&mut self, timeout: Duration) -> Result<Option<(u64, Inbound)>> {
+        self.drain_registrations();
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.drain_registrations();
+                Ok(Some(ev))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TsnnError::Transport(
+                "all channel clients disconnected".into(),
+            )),
+        }
+    }
+
+    fn send(&mut self, conn: u64, frame: &[u8]) -> Result<()> {
+        self.drain_registrations();
+        if let Some((_, tx)) = self.conns.iter().find(|(id, _)| *id == conn) {
+            // a dead receiver is not an error: its Closed event is the
+            // authoritative signal and may already be queued
+            let _ = tx.send(frame.to_vec());
+        }
+        Ok(())
+    }
+}
+
+impl ChannelConnector {
+    /// Open a new connection to the hub.
+    pub fn connect(&self) -> ChannelClient {
+        let conn = self.next.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        // registration first: the hub drains registrations before
+        // handling frames, so the reply path always exists
+        let _ = self.reg_tx.send((conn, reply_tx));
+        ChannelClient {
+            conn,
+            tx: self.tx.clone(),
+            rx: reply_rx,
+        }
+    }
+}
+
+impl Transport for ChannelClient {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send((self.conn, Inbound::Frame(frame.to_vec())))
+            .map_err(|_| TsnnError::Transport("coordinator hung up".into()))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TsnnError::Transport("coordinator hung up".into()))
+            }
+        }
+    }
+}
+
+impl Drop for ChannelClient {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.conn, Inbound::Closed));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::wire::{encode_frame, Message};
+
+    #[test]
+    fn frames_flow_both_ways_and_drop_closes() {
+        let (mut hub, connector) = ChannelHub::new();
+        let mut a = connector.connect();
+        let frame = encode_frame(0, 1, &Message::Join);
+        a.send(&frame).unwrap();
+        let (conn, ev) = hub.recv(Duration::from_secs(1)).unwrap().unwrap();
+        match ev {
+            Inbound::Frame(f) => assert_eq!(f, frame),
+            Inbound::Closed => panic!("unexpected close"),
+        }
+        let reply = encode_frame(0, 1, &Message::JoinAck { job: None });
+        hub.send(conn, &reply).unwrap();
+        assert_eq!(a.recv(Duration::from_secs(1)).unwrap().unwrap(), reply);
+
+        drop(a);
+        let (conn2, ev2) = hub.recv(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(conn2, conn);
+        assert!(matches!(ev2, Inbound::Closed));
+        // sending to the dead connection is a no-op, not an error
+        hub.send(conn, &reply).unwrap();
+    }
+
+    #[test]
+    fn recv_times_out_quietly() {
+        let (mut hub, _connector) = ChannelHub::new();
+        assert!(hub.recv(Duration::from_millis(10)).unwrap().is_none());
+    }
+}

@@ -1,0 +1,285 @@
+//! Deterministic fault injection for transport tests.
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and perturbs traffic on
+//! modulo counters — no RNG, so a given plan produces the identical
+//! fault sequence on every run, which is what lets the parity tests pin
+//! "trajectory under faults == trajectory without faults" exactly.
+//!
+//! Faults on the send path: `drop` (frame vanishes), `dup` (frame sent
+//! twice), `delay` (frame held until the next send — a one-slot
+//! reorder), `truncate` (frame cut mid-payload; channel transport only,
+//! a byte-stream would desync). On the receive path: `drop_reply`
+//! (reply vanishes, forcing the timeout/retransmit path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Result, TsnnError};
+
+use super::wire::HEADER_BYTES;
+use super::Transport;
+
+/// Which frames to perturb: every `n`-th send / receive (0 = off).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Drop every n-th sent frame.
+    pub drop_every: u64,
+    /// Duplicate every n-th sent frame.
+    pub dup_every: u64,
+    /// Hold every n-th sent frame until the next send (reorder-by-one).
+    pub delay_every: u64,
+    /// Truncate every n-th sent frame mid-payload (channel transport
+    /// only: a truncated frame on a byte stream desyncs the connection).
+    pub truncate_every: u64,
+    /// Drop every n-th received reply.
+    pub drop_reply_every: u64,
+}
+
+impl FaultPlan {
+    /// Any fault enabled?
+    pub fn is_active(&self) -> bool {
+        *self != FaultPlan::default()
+    }
+
+    /// Parse `drop=7,dup=5,delay=11,truncate=13,drop_reply=9` (any
+    /// subset, any order).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                TsnnError::Config(format!("fault spec '{part}': expected key=N"))
+            })?;
+            let n: u64 = val
+                .parse()
+                .map_err(|_| TsnnError::Config(format!("fault spec '{part}': bad count")))?;
+            match key.trim() {
+                "drop" => plan.drop_every = n,
+                "dup" => plan.dup_every = n,
+                "delay" => plan.delay_every = n,
+                "truncate" => plan.truncate_every = n,
+                "drop_reply" => plan.drop_reply_every = n,
+                other => {
+                    return Err(TsnnError::Config(format!("unknown fault '{other}'")));
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Shared tallies of injected faults (assertable from tests).
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Sent frames dropped.
+    pub dropped: AtomicU64,
+    /// Sent frames duplicated.
+    pub duplicated: AtomicU64,
+    /// Sent frames delayed (reordered).
+    pub delayed: AtomicU64,
+    /// Sent frames truncated.
+    pub truncated: AtomicU64,
+    /// Received replies dropped.
+    pub replies_dropped: AtomicU64,
+}
+
+impl FaultCounters {
+    /// Total injected faults.
+    pub fn total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+            + self.duplicated.load(Ordering::Relaxed)
+            + self.delayed.load(Ordering::Relaxed)
+            + self.truncated.load(Ordering::Relaxed)
+            + self.replies_dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// A transport wrapper that injects the plan's faults.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    counters: Arc<FaultCounters>,
+    sent: u64,
+    rcvd: u64,
+    held: Option<Vec<u8>>,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with the plan; `counters` is shared with the caller.
+    pub fn new(
+        inner: Box<dyn Transport>,
+        plan: FaultPlan,
+        counters: Arc<FaultCounters>,
+    ) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            plan,
+            counters,
+            sent: 0,
+            rcvd: 0,
+            held: None,
+        }
+    }
+
+    fn flush_held(&mut self) -> Result<()> {
+        if let Some(h) = self.held.take() {
+            self.inner.send(&h)?;
+        }
+        Ok(())
+    }
+}
+
+fn hits(every: u64, n: u64) -> bool {
+    every > 0 && n % every == 0
+}
+
+impl Transport for FaultyTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.sent += 1;
+        let n = self.sent;
+        if hits(self.plan.truncate_every, n) {
+            self.counters.truncated.fetch_add(1, Ordering::Relaxed);
+            let body = frame.len().saturating_sub(HEADER_BYTES);
+            let cut = HEADER_BYTES.min(frame.len()) + body / 2;
+            self.inner.send(&frame[..cut])?;
+        } else if hits(self.plan.drop_every, n) {
+            self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+        } else if hits(self.plan.dup_every, n) {
+            self.counters.duplicated.fetch_add(1, Ordering::Relaxed);
+            self.inner.send(frame)?;
+            self.inner.send(frame)?;
+        } else if hits(self.plan.delay_every, n) {
+            self.counters.delayed.fetch_add(1, Ordering::Relaxed);
+            self.flush_held()?;
+            self.held = Some(frame.to_vec());
+            return Ok(()); // held frame goes out on the next send
+        } else {
+            self.inner.send(frame)?;
+        }
+        self.flush_held()
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        match self.inner.recv(timeout)? {
+            None => Ok(None),
+            Some(frame) => {
+                self.rcvd += 1;
+                if hits(self.plan.drop_reply_every, self.rcvd) {
+                    self.counters.replies_dropped.fetch_add(1, Ordering::Relaxed);
+                    // swallowed: the caller sees a timeout and retransmits
+                    Ok(None)
+                } else {
+                    Ok(Some(frame))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Records sends; replays a scripted receive queue.
+    struct Probe {
+        sent: Arc<Mutex<Vec<Vec<u8>>>>,
+        replies: Vec<Vec<u8>>,
+    }
+
+    impl Transport for Probe {
+        fn send(&mut self, frame: &[u8]) -> Result<()> {
+            self.sent.lock().unwrap().push(frame.to_vec());
+            Ok(())
+        }
+
+        fn recv(&mut self, _timeout: Duration) -> Result<Option<Vec<u8>>> {
+            Ok(if self.replies.is_empty() {
+                None
+            } else {
+                Some(self.replies.remove(0))
+            })
+        }
+    }
+
+    #[test]
+    fn parse_accepts_subsets_and_rejects_garbage() {
+        let p = FaultPlan::parse("drop=7,dup=5").unwrap();
+        assert_eq!(p.drop_every, 7);
+        assert_eq!(p.dup_every, 5);
+        assert_eq!(p.delay_every, 0);
+        assert!(p.is_active());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(FaultPlan::parse("drop").is_err());
+        assert!(FaultPlan::parse("warp=3").is_err());
+        assert!(FaultPlan::parse("drop=x").is_err());
+    }
+
+    #[test]
+    fn faults_fire_on_schedule_and_are_counted() {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(FaultCounters::default());
+        let mut t = FaultyTransport::new(
+            Box::new(Probe {
+                sent: sent.clone(),
+                replies: vec![],
+            }),
+            FaultPlan {
+                drop_every: 3,
+                dup_every: 4,
+                delay_every: 0,
+                truncate_every: 0,
+                drop_reply_every: 0,
+            },
+            counters.clone(),
+        );
+        for i in 0..12u8 {
+            t.send(&[i]).unwrap();
+        }
+        // drops at 3,6,9,12 → 4; dups at 4,8 (12 already dropped) → 2
+        assert_eq!(counters.dropped.load(Ordering::Relaxed), 4);
+        assert_eq!(counters.duplicated.load(Ordering::Relaxed), 2);
+        // 12 sends - 4 dropped + 2 extra dup copies = 10 on the wire
+        assert_eq!(sent.lock().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn delay_reorders_by_one_slot() {
+        let sent = Arc::new(Mutex::new(Vec::new()));
+        let mut t = FaultyTransport::new(
+            Box::new(Probe {
+                sent: sent.clone(),
+                replies: vec![],
+            }),
+            FaultPlan {
+                delay_every: 2,
+                ..FaultPlan::default()
+            },
+            Arc::new(FaultCounters::default()),
+        );
+        for i in 1..=4u8 {
+            t.send(&[i]).unwrap();
+        }
+        // 2 held then flushed after 3; 4 held (still in flight)
+        assert_eq!(*sent.lock().unwrap(), vec![vec![1], vec![3], vec![2]]);
+    }
+
+    #[test]
+    fn dropped_replies_read_as_timeouts() {
+        let mut t = FaultyTransport::new(
+            Box::new(Probe {
+                sent: Arc::new(Mutex::new(Vec::new())),
+                replies: vec![vec![1], vec![2], vec![3]],
+            }),
+            FaultPlan {
+                drop_reply_every: 2,
+                ..FaultPlan::default()
+            },
+            Arc::new(FaultCounters::default()),
+        );
+        let d = Duration::from_millis(1);
+        assert_eq!(t.recv(d).unwrap(), Some(vec![1]));
+        assert_eq!(t.recv(d).unwrap(), None); // swallowed
+        assert_eq!(t.recv(d).unwrap(), Some(vec![3]));
+    }
+}

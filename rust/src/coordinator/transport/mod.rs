@@ -1,0 +1,382 @@
+//! Coordinator transport layer: the wire format, the `Transport` /
+//! `Listener` traits, a retrying request/response client, and the two
+//! implementations (in-process channels, Unix/TCP sockets) plus a
+//! deterministic fault injector.
+//!
+//! All phase-1 (gradient push / model fetch) and phase-2 (replica
+//! upload) traffic flows through these traits, so "multi-node" means
+//! "write a transport", not "rewrite the coordinator". DESIGN.md §12
+//! documents the protocol; the short version:
+//!
+//! * every request carries a per-connection monotonic `seq`; retransmits
+//!   repeat it, and the server caches its last reply per connection so a
+//!   retried request is answered idempotently — lost or duplicated
+//!   frames never duplicate a gradient application;
+//! * a worker that disconnects (or sends `Leave`) is removed from the
+//!   active set; the run finishes when every worker that ever joined has
+//!   left, so worker churn degrades capacity, not correctness.
+
+pub mod channel;
+pub mod fault;
+pub mod service;
+pub mod socket;
+pub mod wire;
+pub mod worker;
+
+use std::time::{Duration, Instant};
+
+use crate::config::{DatasetSpec, TrainConfig};
+use crate::error::{Result, TsnnError};
+use crate::model::SparseMlp;
+use crate::util::json::{self, Json};
+
+use super::ParallelConfig;
+use wire::{FetchAck, Message, PushMsg, PushStatus};
+
+/// One direction of a worker↔coordinator link (worker side).
+///
+/// `send` ships one encoded frame; `recv` returns the next inbound frame,
+/// `Ok(None)` on timeout, `Err` when the peer is gone for good.
+pub trait Transport: Send {
+    /// Send one encoded frame.
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Receive the next frame, waiting at most `timeout`.
+    fn recv(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>>;
+}
+
+/// Inbound event on the coordinator side of a connection.
+#[derive(Debug)]
+pub enum Inbound {
+    /// A frame arrived.
+    Frame(Vec<u8>),
+    /// The connection closed (worker process died or hung up) — an
+    /// implicit leave.
+    Closed,
+}
+
+/// Coordinator side: a multiplexed set of worker connections keyed by a
+/// transport-assigned connection id.
+pub trait Listener: Send {
+    /// Next inbound event from any connection; `Ok(None)` on timeout.
+    fn recv(&mut self, timeout: Duration) -> Result<Option<(u64, Inbound)>>;
+    /// Send a frame to one connection. Sending to a dead connection is
+    /// not an error (the `Closed` event is the authoritative signal).
+    fn send(&mut self, conn: u64, frame: &[u8]) -> Result<()>;
+}
+
+/// Per-frame timeout + bounded retry with multiplicative backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// First-attempt reply timeout.
+    pub timeout: Duration,
+    /// Retransmits after the first attempt.
+    pub retries: u32,
+    /// Timeout multiplier per retry.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            timeout: Duration::from_secs(2),
+            retries: 8,
+            backoff: 1.5,
+        }
+    }
+}
+
+/// Request/response client over any [`Transport`].
+///
+/// Each logical request gets a fresh `seq`; a retransmit repeats the
+/// same bytes, and replies tagged with an older seq (stale duplicates)
+/// or failing to decode (injected corruption) are discarded while the
+/// attempt's deadline runs down.
+pub struct Client {
+    t: Box<dyn Transport>,
+    policy: RetryPolicy,
+    worker: u32,
+    seq: u64,
+    /// Retransmits performed over the client's lifetime.
+    pub retries: u64,
+}
+
+impl Client {
+    /// Wrap a transport for the given worker id.
+    pub fn new(t: Box<dyn Transport>, worker: u32, policy: RetryPolicy) -> Client {
+        Client {
+            t,
+            policy,
+            worker,
+            seq: 0,
+            retries: 0,
+        }
+    }
+
+    /// Send `msg` and wait for its reply, retransmitting per the policy.
+    pub fn request(&mut self, msg: &Message) -> Result<Message> {
+        self.seq += 1;
+        let seq = self.seq;
+        let frame = wire::encode_frame(self.worker, seq, msg);
+        let mut timeout = self.policy.timeout;
+        for attempt in 0..=self.policy.retries {
+            if attempt > 0 {
+                self.retries += 1;
+            }
+            self.t.send(&frame)?;
+            let deadline = Instant::now() + timeout;
+            loop {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let Some(raw) = self.t.recv(deadline - now)? else {
+                    break;
+                };
+                let (h, reply) = match wire::decode_frame(&raw) {
+                    Ok(x) => x,
+                    // corrupt reply (injected truncation): keep waiting,
+                    // the retransmit path will recover
+                    Err(_) => continue,
+                };
+                if h.seq < seq {
+                    // stale duplicate of an earlier reply
+                    continue;
+                }
+                if h.seq > seq {
+                    return Err(TsnnError::Transport(format!(
+                        "reply seq {} ahead of request seq {seq}",
+                        h.seq
+                    )));
+                }
+                if let Message::Err { message } = reply {
+                    return Err(TsnnError::Transport(message));
+                }
+                return Ok(reply);
+            }
+            timeout = timeout.mul_f64(self.policy.backoff);
+        }
+        Err(TsnnError::Transport(format!(
+            "worker {}: no reply after {} attempts",
+            self.worker,
+            self.policy.retries + 1
+        )))
+    }
+
+    /// Join the run; returns the coordinator's job spec, if any.
+    pub fn join(&mut self) -> Result<Option<String>> {
+        match self.request(&Message::Join)? {
+            Message::JoinAck { job } => Ok(job),
+            other => Err(unexpected("JoinAck", &other)),
+        }
+    }
+
+    /// Fetch a model snapshot.
+    pub fn fetch(&mut self, have_gen: u64, have_step: u64) -> Result<FetchAck> {
+        match self.request(&Message::Fetch { have_gen, have_step })? {
+            Message::FetchAck(f) => Ok(f),
+            other => Err(unexpected("FetchAck", &other)),
+        }
+    }
+
+    /// Push a gradient; returns `(status, server_step, server_epoch)`.
+    pub fn push(&mut self, p: PushMsg) -> Result<(PushStatus, u64, u64)> {
+        match self.request(&Message::Push(p))? {
+            Message::PushAck { status, step, epoch } => Ok((status, step, epoch)),
+            other => Err(unexpected("PushAck", &other)),
+        }
+    }
+
+    /// Upload a phase-2 replica.
+    pub fn replica(&mut self, model: &SparseMlp) -> Result<()> {
+        match self.request(&Message::Replica {
+            model: model.clone(),
+        })? {
+            Message::ReplicaAck => Ok(()),
+            other => Err(unexpected("ReplicaAck", &other)),
+        }
+    }
+
+    /// Leave the run.
+    pub fn leave(&mut self) -> Result<()> {
+        match self.request(&Message::Leave)? {
+            Message::LeaveAck => Ok(()),
+            other => Err(unexpected("LeaveAck", &other)),
+        }
+    }
+}
+
+fn unexpected(want: &str, got: &Message) -> TsnnError {
+    TsnnError::Transport(format!("expected {want}, got {got:?}"))
+}
+
+/// Everything an external worker process needs to reproduce its shard of
+/// the run: the full training config (as `key=value` text), the dataset
+/// spec (workers regenerate the dataset deterministically from the
+/// seed), the parallel config, and per-worker kernel-thread budgets.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// `TrainConfig::dump_kv` output.
+    pub config_kv: String,
+    /// Dataset to regenerate.
+    pub dataset: DatasetSpec,
+    /// Parallel run shape.
+    pub pcfg: ParallelConfig,
+    /// Kernel-thread budget per worker id.
+    pub budgets: Vec<usize>,
+}
+
+impl JobSpec {
+    /// Build from run inputs.
+    pub fn new(
+        cfg: &TrainConfig,
+        dataset: &DatasetSpec,
+        pcfg: &ParallelConfig,
+        budgets: Vec<usize>,
+    ) -> JobSpec {
+        JobSpec {
+            config_kv: cfg.dump_kv(),
+            dataset: dataset.clone(),
+            pcfg: pcfg.clone(),
+            budgets,
+        }
+    }
+
+    /// Serialize to the JSON carried in `JoinAck`.
+    pub fn to_json(&self) -> String {
+        json::obj(vec![
+            ("config", Json::Str(self.config_kv.clone())),
+            (
+                "dataset",
+                json::obj(vec![
+                    ("name", Json::Str(self.dataset.name.clone())),
+                    ("generator", Json::Str(self.dataset.generator.clone())),
+                    ("n_features", Json::from(self.dataset.n_features)),
+                    ("n_classes", Json::from(self.dataset.n_classes)),
+                    ("n_train", Json::from(self.dataset.n_train)),
+                    ("n_test", Json::from(self.dataset.n_test)),
+                ]),
+            ),
+            (
+                "parallel",
+                json::obj(vec![
+                    ("workers", Json::from(self.pcfg.workers)),
+                    ("phase1_epochs", Json::from(self.pcfg.phase1_epochs)),
+                    ("phase2_epochs", Json::from(self.pcfg.phase2_epochs)),
+                    ("synchronous", Json::from(self.pcfg.synchronous)),
+                    ("hot_start", Json::from(self.pcfg.hot_start)),
+                    ("grad_clip", Json::from(f64::from(self.pcfg.grad_clip))),
+                ]),
+            ),
+            (
+                "budgets",
+                Json::Arr(self.budgets.iter().map(|&b| Json::from(b)).collect()),
+            ),
+        ])
+        .dump()
+    }
+
+    /// Parse the `JoinAck` job JSON.
+    pub fn from_json(text: &str) -> Result<JobSpec> {
+        let bad = |m: &str| TsnnError::Transport(format!("job spec: {m}"));
+        let j = json::parse(text).map_err(|e| bad(&e))?;
+        let config_kv = j
+            .get("config")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad("missing config"))?
+            .to_string();
+        let d = j.get("dataset").ok_or_else(|| bad("missing dataset"))?;
+        let field = |v: Option<usize>, name: &str| {
+            v.ok_or_else(|| bad(&format!("missing dataset.{name}")))
+        };
+        let dataset = DatasetSpec {
+            name: d
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| bad("missing dataset.name"))?
+                .to_string(),
+            generator: d
+                .get("generator")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| bad("missing dataset.generator"))?
+                .to_string(),
+            n_features: field(d.get("n_features").and_then(|v| v.as_usize()), "n_features")?,
+            n_classes: field(d.get("n_classes").and_then(|v| v.as_usize()), "n_classes")?,
+            n_train: field(d.get("n_train").and_then(|v| v.as_usize()), "n_train")?,
+            n_test: field(d.get("n_test").and_then(|v| v.as_usize()), "n_test")?,
+        };
+        let p = j.get("parallel").ok_or_else(|| bad("missing parallel"))?;
+        let pfield = |v: Option<usize>, name: &str| {
+            v.ok_or_else(|| bad(&format!("missing parallel.{name}")))
+        };
+        let pcfg = ParallelConfig {
+            workers: pfield(p.get("workers").and_then(|v| v.as_usize()), "workers")?,
+            phase1_epochs: pfield(
+                p.get("phase1_epochs").and_then(|v| v.as_usize()),
+                "phase1_epochs",
+            )?,
+            phase2_epochs: pfield(
+                p.get("phase2_epochs").and_then(|v| v.as_usize()),
+                "phase2_epochs",
+            )?,
+            synchronous: p
+                .get("synchronous")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| bad("missing parallel.synchronous"))?,
+            hot_start: p
+                .get("hot_start")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| bad("missing parallel.hot_start"))?,
+            grad_clip: p
+                .get("grad_clip")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| bad("missing parallel.grad_clip"))? as f32,
+        };
+        let budgets: Vec<usize> = j
+            .get("budgets")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing budgets"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        Ok(JobSpec {
+            config_kv,
+            dataset,
+            pcfg,
+            budgets,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_roundtrips() {
+        let cfg = TrainConfig::small_preset("madelon");
+        let spec = DatasetSpec::small("madelon");
+        let pcfg = ParallelConfig {
+            workers: 3,
+            phase1_epochs: 8,
+            phase2_epochs: 2,
+            synchronous: true,
+            hot_start: false,
+            grad_clip: 5.0,
+        };
+        let job = JobSpec::new(&cfg, &spec, &pcfg, vec![2, 1, 1]);
+        let parsed = JobSpec::from_json(&job.to_json()).unwrap();
+        assert_eq!(parsed.config_kv, cfg.dump_kv());
+        assert_eq!(parsed.dataset.n_features, 500);
+        assert_eq!(parsed.pcfg.workers, 3);
+        assert!(parsed.pcfg.synchronous);
+        assert_eq!(parsed.pcfg.grad_clip, 5.0);
+        assert_eq!(parsed.budgets, vec![2, 1, 1]);
+
+        let mut back = TrainConfig::default();
+        back.apply_file(&parsed.config_kv).unwrap();
+        assert_eq!(back.dump_kv(), cfg.dump_kv());
+
+        assert!(JobSpec::from_json("{}").is_err());
+        assert!(JobSpec::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,799 @@
+//! The coordinator service: the parameter-server side of the transport
+//! protocol.
+//!
+//! One service instance drives a whole WASAP/WASSP run over any
+//! [`Listener`] — the in-process channel hub (worker threads) or the
+//! socket hub (worker processes) — with identical semantics:
+//!
+//! * **Idempotent requests** — each connection's requests carry a
+//!   monotonic seq; the last reply is cached per connection, so a
+//!   retransmitted request (lost frame, lost reply, duplicate) is
+//!   re-answered from the cache and gradient applications are never
+//!   duplicated. This is what makes the fault-injection parity tests
+//!   exact: faults change *traffic*, never the applied-update sequence.
+//! * **Elasticity** — workers join with an id, leave explicitly, or
+//!   vanish (connection close = implicit leave). The run finishes when
+//!   every worker that ever joined has left; a synchronous barrier waits
+//!   only for currently-active workers.
+//! * **Straggler detection** (async phase) — per-worker push cadence is
+//!   tracked; a worker whose silence exceeds `factor ×` its median gap
+//!   is flagged and logged. Observability only: WASAP tolerates
+//!   stragglers by design (RetainValidUpdates), so no action is taken.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::TrainConfig;
+use crate::coordinator::{
+    clip_gradients, ParallelConfig, ParameterServer, ServerStats, SparseGradient,
+};
+use crate::error::{Result, TsnnError};
+use crate::model::SparseMlp;
+use crate::nn::LrSchedule;
+
+use super::wire::{self, FetchAck, Message, ModelDelta, PushMsg, PushStatus, NONE_U64};
+use super::{Inbound, Listener, RetryPolicy};
+
+/// How many topology generations of snapshots the server keeps for
+/// `RetainValidUpdates` against stale pushes. Generations advance once
+/// per epoch, so 8 generations of slack covers any sane staleness.
+const TOPO_RING: usize = 8;
+
+/// Coordinator-side knobs that are not part of [`ParallelConfig`]
+/// (which external callers construct literally and must not change).
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    /// Client-side retry policy handed to in-process workers.
+    pub retry: RetryPolicy,
+    /// Abort the run when no frame arrives for this long.
+    pub idle_timeout: Duration,
+    /// Flag a worker whose push gap exceeds `factor ×` its median gap.
+    pub straggler_factor: f64,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            retry: RetryPolicy::default(),
+            idle_timeout: Duration::from_secs(600),
+            straggler_factor: 10.0,
+        }
+    }
+}
+
+/// Transport/coordination statistics for one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordStats {
+    /// Frames received (including duplicates and undecodable ones).
+    pub frames_in: u64,
+    /// Frames sent (including cached-reply resends).
+    pub frames_out: u64,
+    /// Bytes received.
+    pub bytes_in: u64,
+    /// Bytes sent.
+    pub bytes_out: u64,
+    /// Inbound frames that failed to decode.
+    pub decode_errors: u64,
+    /// Duplicate requests absorbed by the seq/reply cache.
+    pub dup_requests: u64,
+    /// Worker joins.
+    pub joins: u64,
+    /// Explicit leaves.
+    pub leaves: u64,
+    /// Connections that closed without a Leave.
+    pub implicit_leaves: u64,
+    /// Pushes rejected: topology generation fell out of the ring.
+    pub rejected_stale_gen: u64,
+    /// Pushes rejected: gradient shape mismatch.
+    pub rejected_shape: u64,
+    /// Pushes rejected: non-finite gradient entries (server-side guard).
+    pub rejected_nonfinite: u64,
+    /// Straggler flags raised (async phase).
+    pub stragglers_flagged: u64,
+    /// Fetches answered with a full model.
+    pub full_snapshots: u64,
+    /// Fetches answered with a values-only delta.
+    pub delta_snapshots: u64,
+    /// Phase-1 wall-clock seconds.
+    pub phase1_secs: f64,
+    /// Phase-2 wall-clock seconds.
+    pub phase2_secs: f64,
+}
+
+/// What a completed run hands back.
+#[derive(Debug)]
+pub struct ServiceOutcome {
+    /// Model at the end of phase 1.
+    pub phase1_model: SparseMlp,
+    /// Final model (union-averaged + re-sparsified when phase 2 ran).
+    pub final_model: SparseMlp,
+    /// Parameter-server statistics.
+    pub server_stats: ServerStats,
+    /// Transport statistics.
+    pub coord: CoordStats,
+}
+
+/// Per-worker push-cadence tracker (pure: fed microsecond timestamps, so
+/// it is unit-testable without clocks).
+pub struct StragglerTracker {
+    factor: f64,
+    floor_us: u64,
+    workers: BTreeMap<u32, Cadence>,
+}
+
+struct Cadence {
+    last_us: u64,
+    gaps: VecDeque<u64>,
+    flagged: bool,
+}
+
+impl StragglerTracker {
+    /// `factor`: flag when the current gap exceeds `factor × median gap`.
+    pub fn new(factor: f64) -> StragglerTracker {
+        StragglerTracker {
+            factor,
+            floor_us: 50_000, // never flag on gaps under 50 ms
+            workers: BTreeMap::new(),
+        }
+    }
+
+    /// Record a push from `worker` at `now_us`; clears any flag.
+    pub fn observe(&mut self, worker: u32, now_us: u64) {
+        let c = self.workers.entry(worker).or_insert(Cadence {
+            last_us: now_us,
+            gaps: VecDeque::new(),
+            flagged: false,
+        });
+        let gap = now_us.saturating_sub(c.last_us);
+        c.last_us = now_us;
+        c.flagged = false;
+        if gap > 0 {
+            c.gaps.push_back(gap);
+            if c.gaps.len() > 32 {
+                c.gaps.pop_front();
+            }
+        }
+    }
+
+    /// Forget a departed worker.
+    pub fn remove(&mut self, worker: u32) {
+        self.workers.remove(&worker);
+    }
+
+    /// Workers newly overdue at `now_us` (each flagged once until it
+    /// pushes again).
+    pub fn check(&mut self, now_us: u64) -> Vec<u32> {
+        let mut flagged = Vec::new();
+        for (&w, c) in self.workers.iter_mut() {
+            if c.flagged || c.gaps.len() < 8 {
+                continue;
+            }
+            let mut sorted: Vec<u64> = c.gaps.iter().copied().collect();
+            sorted.sort_unstable();
+            let median = sorted[sorted.len() / 2];
+            let threshold = ((median as f64 * self.factor) as u64).max(self.floor_us);
+            if now_us.saturating_sub(c.last_us) > threshold {
+                c.flagged = true;
+                flagged.push(w);
+            }
+        }
+        flagged
+    }
+}
+
+#[derive(Default)]
+struct ConnState {
+    worker: Option<u32>,
+    last_seq: u64,
+    cached: Option<Vec<u8>>,
+}
+
+struct ParkedFetch {
+    conn: u64,
+    seq: u64,
+    worker: u32,
+    have_gen: u64,
+    have_step: u64,
+}
+
+/// The coordinator service. Build with [`CoordinatorService::new`], then
+/// drive to completion with [`CoordinatorService::run`].
+pub struct CoordinatorService {
+    ps: ParameterServer,
+    pcfg: ParallelConfig,
+    grad_clip: f32,
+    sync_lr: LrSchedule,
+    job_json: Option<String>,
+    idle_timeout: Duration,
+
+    conns: HashMap<u64, ConnState>,
+    seen: BTreeSet<u32>,
+    active: BTreeSet<u32>,
+    topo_ring: VecDeque<(u64, Arc<SparseMlp>)>,
+    pending_sync: BTreeMap<u32, (Vec<Vec<f32>>, Vec<Vec<f32>>)>,
+    parked: Vec<ParkedFetch>,
+    replicas: BTreeMap<u32, SparseMlp>,
+    phase1_done: Option<(SparseMlp, ServerStats, Vec<usize>)>,
+    straggler: StragglerTracker,
+    stats: CoordStats,
+    started: Instant,
+    t_phase: Instant,
+}
+
+impl CoordinatorService {
+    /// Build the service around an initial model. `job_json` is handed to
+    /// joining workers (external processes need it; in-process workers
+    /// already hold the job and get `None`).
+    pub fn new(
+        cfg: &TrainConfig,
+        pcfg: &ParallelConfig,
+        initial: SparseMlp,
+        n_train: usize,
+        job_json: Option<String>,
+        opts: &CoordinatorOptions,
+    ) -> CoordinatorService {
+        let pushes_per_epoch = n_train.div_ceil(cfg.batch).max(1);
+        // Asynchrony begets momentum (see run_parallel): K async workers
+        // contribute an implicit ~1 − 1/K, so the explicit coefficient is
+        // reduced to keep effective momentum at the configured value.
+        let mut opt = cfg.optimizer;
+        if !pcfg.synchronous && pcfg.workers > 1 {
+            let k = pcfg.workers as f32;
+            opt.momentum = (1.0 - (1.0 - opt.momentum) * k).max(0.0);
+        }
+        let ps = ParameterServer::new(
+            initial,
+            opt,
+            cfg.evolution,
+            cfg.importance,
+            pushes_per_epoch,
+            cfg.seed,
+        );
+        // WASSP learning rate lives server-side (Goyal warmup + linear
+        // scaling, evaluated at the server epoch) so every contributor of
+        // a step shares one rate.
+        let base = match cfg.lr {
+            LrSchedule::Constant(eta) => eta,
+            other => other.at(0),
+        };
+        let sync_lr = LrSchedule::Warmup {
+            base,
+            scale: (pcfg.workers as f32).max(1.0).min(4.0),
+            warmup_epochs: 5,
+        };
+        let now = Instant::now();
+        let mut svc = CoordinatorService {
+            ps,
+            pcfg: *pcfg,
+            grad_clip: pcfg.grad_clip,
+            sync_lr,
+            job_json,
+            idle_timeout: opts.idle_timeout,
+            conns: HashMap::new(),
+            seen: BTreeSet::new(),
+            active: BTreeSet::new(),
+            topo_ring: VecDeque::new(),
+            pending_sync: BTreeMap::new(),
+            parked: Vec::new(),
+            replicas: BTreeMap::new(),
+            phase1_done: None,
+            straggler: StragglerTracker::new(opts.straggler_factor),
+            stats: CoordStats::default(),
+            started: now,
+            t_phase: now,
+        };
+        svc.refresh_topo_ring();
+        svc
+    }
+
+    fn now_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    fn refresh_topo_ring(&mut self) {
+        let snap = self.ps.fetch();
+        if self.topo_ring.back().map(|(g, _)| *g) != Some(snap.gen) {
+            self.topo_ring.push_back((snap.gen, snap.model));
+            while self.topo_ring.len() > TOPO_RING {
+                self.topo_ring.pop_front();
+            }
+        }
+    }
+
+    fn done(&self) -> bool {
+        !self.seen.is_empty() && self.active.is_empty()
+    }
+
+    fn send_reply(
+        &mut self,
+        listener: &mut dyn Listener,
+        conn: u64,
+        worker: u32,
+        seq: u64,
+        msg: &Message,
+    ) -> Result<()> {
+        let frame = wire::encode_frame(worker, seq, msg);
+        self.stats.frames_out += 1;
+        self.stats.bytes_out += frame.len() as u64;
+        if let Some(st) = self.conns.get_mut(&conn) {
+            st.cached = Some(frame.clone());
+        }
+        listener.send(conn, &frame)
+    }
+
+    /// Drive the protocol until every joined worker has left; returns the
+    /// phase-1 and final models.
+    pub fn run(mut self, listener: &mut dyn Listener) -> Result<ServiceOutcome> {
+        let mut last_activity = Instant::now();
+        while !self.done() {
+            match listener.recv(Duration::from_millis(50)) {
+                Ok(Some((conn, Inbound::Frame(raw)))) => {
+                    last_activity = Instant::now();
+                    self.handle_frame(listener, conn, raw)?;
+                    self.after_advance(listener)?;
+                }
+                Ok(Some((conn, Inbound::Closed))) => {
+                    last_activity = Instant::now();
+                    self.handle_closed(conn);
+                    self.after_advance(listener)?;
+                }
+                Ok(None) => {
+                    if last_activity.elapsed() > self.idle_timeout {
+                        return Err(TsnnError::Transport(format!(
+                            "coordinator idle for {:?} with {} active workers",
+                            self.idle_timeout,
+                            self.active.len()
+                        )));
+                    }
+                    self.check_stragglers();
+                }
+                Err(e) => {
+                    // listener died (e.g. all in-process clients dropped
+                    // after a worker error); finish if finishable so the
+                    // worker's own error surfaces instead of ours
+                    if self.seen.is_empty() {
+                        return Err(e);
+                    }
+                    break;
+                }
+            }
+        }
+        self.finalize()
+    }
+
+    fn handle_frame(
+        &mut self,
+        listener: &mut dyn Listener,
+        conn: u64,
+        raw: Vec<u8>,
+    ) -> Result<()> {
+        self.stats.frames_in += 1;
+        self.stats.bytes_in += raw.len() as u64;
+        let (h, msg) = match wire::decode_frame(&raw) {
+            Ok(x) => x,
+            Err(_) => {
+                // an undecodable frame (e.g. injected truncation) is
+                // dropped; the client retransmits and dedup handles it
+                self.stats.decode_errors += 1;
+                return Ok(());
+            }
+        };
+        // request dedup: retransmits repeat the seq
+        enum Disposition {
+            Stale,
+            Resend(Option<Vec<u8>>),
+            Fresh,
+        }
+        let disposition = {
+            let st = self.conns.entry(conn).or_default();
+            if h.seq < st.last_seq {
+                Disposition::Stale
+            } else if h.seq == st.last_seq && st.last_seq != 0 {
+                Disposition::Resend(st.cached.clone())
+            } else {
+                st.last_seq = h.seq;
+                st.cached = None;
+                Disposition::Fresh
+            }
+        };
+        match disposition {
+            Disposition::Stale => {
+                self.stats.dup_requests += 1;
+                Ok(())
+            }
+            Disposition::Resend(cached) => {
+                self.stats.dup_requests += 1;
+                if let Some(frame) = cached {
+                    self.stats.frames_out += 1;
+                    self.stats.bytes_out += frame.len() as u64;
+                    listener.send(conn, &frame)?;
+                }
+                // no cached reply yet: the request is still in flight
+                // (e.g. a parked sync fetch) — the reply goes out once
+                Ok(())
+            }
+            Disposition::Fresh => self.dispatch(listener, conn, h.worker, h.seq, msg),
+        }
+    }
+
+    fn dispatch(
+        &mut self,
+        listener: &mut dyn Listener,
+        conn: u64,
+        worker: u32,
+        seq: u64,
+        msg: Message,
+    ) -> Result<()> {
+        let reply = match msg {
+            Message::Join => Some(self.handle_join(conn, worker)),
+            Message::Fetch { have_gen, have_step } => {
+                if self.phase1_done.is_none()
+                    && have_step != NONE_U64
+                    && self.ps.fetch().step <= have_step
+                {
+                    // synchronous worker waiting on the barrier: park the
+                    // fetch; it is answered when the step advances
+                    self.parked.push(ParkedFetch {
+                        conn,
+                        seq,
+                        worker,
+                        have_gen,
+                        have_step,
+                    });
+                    None
+                } else {
+                    Some(Message::FetchAck(self.snapshot_reply(have_gen)))
+                }
+            }
+            Message::Push(p) => Some(self.handle_push(worker, p)?),
+            Message::Replica { model } => Some(self.handle_replica(worker, model)),
+            Message::Leave => {
+                self.stats.leaves += 1;
+                self.deactivate(worker, conn);
+                Some(Message::LeaveAck)
+            }
+            // server-bound connections should never receive replies here
+            _ => Some(Message::Err {
+                message: "unexpected message kind".into(),
+            }),
+        };
+        if let Some(m) = reply {
+            self.send_reply(listener, conn, worker, seq, &m)?;
+        }
+        Ok(())
+    }
+
+    fn handle_join(&mut self, conn: u64, worker: u32) -> Message {
+        if (worker as usize) >= self.pcfg.workers {
+            return Message::Err {
+                message: format!(
+                    "worker id {worker} out of range (run has {} shards)",
+                    self.pcfg.workers
+                ),
+            };
+        }
+        if self.active.contains(&worker) {
+            return Message::Err {
+                message: format!("worker {worker} already joined"),
+            };
+        }
+        self.stats.joins += 1;
+        self.seen.insert(worker);
+        self.active.insert(worker);
+        if let Some(st) = self.conns.get_mut(&conn) {
+            st.worker = Some(worker);
+        }
+        Message::JoinAck {
+            job: self.job_json.clone(),
+        }
+    }
+
+    /// Build a fetch reply against the current phase/snapshot.
+    fn snapshot_reply(&mut self, have_gen: u64) -> FetchAck {
+        if let Some((phase1_model, _, _)) = &self.phase1_done {
+            // phase 2: ship the full phase-1 model with optimizer state
+            // (local training continues from the server's velocity)
+            self.stats.full_snapshots += 1;
+            return FetchAck {
+                phase2: true,
+                gen: 0,
+                step: 0,
+                epoch: self.ps.epoch() as u64,
+                delta: ModelDelta::Full {
+                    model: phase1_model.clone(),
+                    velocity: true,
+                },
+            };
+        }
+        let snap = self.ps.fetch();
+        let delta = if have_gen == snap.gen {
+            self.stats.delta_snapshots += 1;
+            ModelDelta::Values {
+                values: snap
+                    .model
+                    .layers
+                    .iter()
+                    .map(|l| l.weights.values.clone())
+                    .collect(),
+                bias: snap.model.layers.iter().map(|l| l.bias.clone()).collect(),
+            }
+        } else {
+            self.stats.full_snapshots += 1;
+            ModelDelta::Full {
+                model: (*snap.model).clone(),
+                velocity: false,
+            }
+        };
+        FetchAck {
+            phase2: false,
+            gen: snap.gen,
+            step: snap.step,
+            epoch: self.ps.epoch() as u64,
+            delta,
+        }
+    }
+
+    fn handle_push(&mut self, worker: u32, p: PushMsg) -> Result<Message> {
+        let (step, epoch) = {
+            let snap = self.ps.fetch();
+            (snap.step, self.ps.epoch() as u64)
+        };
+        let ack = |status| Message::PushAck { status, step, epoch };
+        if self.phase1_done.is_some() {
+            // a push that raced past the phase boundary: acknowledged but
+            // not applied (the next fetch moves the worker to phase 2)
+            return Ok(ack(PushStatus::Ignored));
+        }
+        let Some(topo) = self
+            .topo_ring
+            .iter()
+            .find(|(g, _)| *g == p.gen)
+            .map(|(_, m)| Arc::clone(m))
+        else {
+            self.stats.rejected_stale_gen += 1;
+            return Ok(ack(PushStatus::RejectedStaleGen));
+        };
+        // shape guard: transport input is untrusted
+        let shape_ok = p.grad_w.len() == topo.layers.len()
+            && p.grad_b.len() == topo.layers.len()
+            && topo.layers.iter().enumerate().all(|(l, layer)| {
+                p.grad_w[l].len() == layer.weights.nnz() && p.grad_b[l].len() == layer.bias.len()
+            });
+        if !shape_ok {
+            self.stats.rejected_shape += 1;
+            return Ok(ack(PushStatus::RejectedShape));
+        }
+        self.straggler.observe(worker, self.now_us());
+        if p.sync {
+            // WASSP contribution: parked until every active worker has
+            // contributed; the finite guard runs on the averaged result
+            // (matching the thread coordinator's single post-average clip)
+            self.pending_sync.insert(worker, (p.grad_w, p.grad_b));
+            return Ok(ack(PushStatus::Applied));
+        }
+        let applied = self.ps.push(
+            SparseGradient {
+                grad_w: p.grad_w,
+                grad_b: p.grad_b,
+                topo,
+                gen: p.gen,
+                fetched_step: p.fetched_step,
+            },
+            p.lr,
+        )?;
+        Ok(if applied {
+            ack(PushStatus::Applied)
+        } else {
+            self.stats.rejected_nonfinite += 1;
+            ack(PushStatus::RejectedNonFinite)
+        })
+    }
+
+    fn handle_replica(&mut self, worker: u32, model: SparseMlp) -> Message {
+        let reference = match &self.phase1_done {
+            Some((m, _, _)) => m,
+            None => {
+                return Message::Err {
+                    message: "replica upload before phase 1 finished".into(),
+                }
+            }
+        };
+        if model.sizes != reference.sizes {
+            return Message::Err {
+                message: "replica layer sizes do not match the run".into(),
+            };
+        }
+        self.replicas.insert(worker, model);
+        Message::ReplicaAck
+    }
+
+    fn deactivate(&mut self, worker: u32, conn: u64) {
+        self.active.remove(&worker);
+        self.straggler.remove(worker);
+        // a parked fetch from a departed worker will never be answered
+        self.parked.retain(|p| p.worker != worker);
+        if let Some(st) = self.conns.get_mut(&conn) {
+            st.worker = None;
+        }
+        // an already-stored sync contribution still counts once: the
+        // work was done against the current step's snapshot
+    }
+
+    fn handle_closed(&mut self, conn: u64) {
+        if let Some(st) = self.conns.get_mut(&conn) {
+            if let Some(w) = st.worker.take() {
+                self.stats.implicit_leaves += 1;
+                log::warn!("worker {w} disconnected without leaving");
+                self.active.remove(&w);
+                self.straggler.remove(w);
+                self.parked.retain(|p| p.worker != w);
+            }
+        }
+        self.conns.remove(&conn);
+    }
+
+    fn check_stragglers(&mut self) {
+        if self.pcfg.synchronous || self.phase1_done.is_some() {
+            return; // barrier waits are not straggling; phase 2 is local
+        }
+        for w in self.straggler.check(self.now_us()) {
+            self.stats.stragglers_flagged += 1;
+            log::warn!("worker {w} is straggling (push gap far above its median)");
+        }
+    }
+
+    /// Post-dispatch bookkeeping: fire the sync barrier, cross the
+    /// phase-1 boundary, refresh the topology ring, answer parked
+    /// fetches.
+    fn after_advance(&mut self, listener: &mut dyn Listener) -> Result<()> {
+        // 1. synchronous barrier: every active worker contributed
+        if !self.pending_sync.is_empty()
+            && self.phase1_done.is_none()
+            && self.active.iter().all(|w| self.pending_sync.contains_key(w))
+        {
+            let n = self.pending_sync.len();
+            let contributions: Vec<_> =
+                std::mem::take(&mut self.pending_sync).into_values().collect();
+            // identical float-op order to the thread coordinator: start
+            // from worker 0's buffers, add the rest in worker order, then
+            // scale, then clip once
+            let mut it = contributions.into_iter();
+            let (mut agg_w, mut agg_b) = it.next().expect("n >= 1");
+            for (gw, gb) in it {
+                for (a, g) in agg_w.iter_mut().zip(gw.iter()) {
+                    for (x, y) in a.iter_mut().zip(g.iter()) {
+                        *x += y;
+                    }
+                }
+                for (a, g) in agg_b.iter_mut().zip(gb.iter()) {
+                    for (x, y) in a.iter_mut().zip(g.iter()) {
+                        *x += y;
+                    }
+                }
+            }
+            let inv_k = 1.0f32 / n as f32;
+            for a in agg_w.iter_mut().flat_map(|v| v.iter_mut()) {
+                *a *= inv_k;
+            }
+            for a in agg_b.iter_mut().flat_map(|v| v.iter_mut()) {
+                *a *= inv_k;
+            }
+            clip_gradients(&mut agg_w, &mut agg_b, self.grad_clip);
+            let lr = self.sync_lr.at(self.ps.epoch());
+            self.ps.apply_aligned(&agg_w, &agg_b, lr)?;
+        }
+
+        // 2. phase-1 boundary
+        if self.phase1_done.is_none() && self.ps.epoch() >= self.pcfg.phase1_epochs {
+            let (model, stats) = self.ps.finish();
+            let target_nnz = model.layers.iter().map(|l| l.weights.nnz()).collect();
+            self.stats.phase1_secs = self.t_phase.elapsed().as_secs_f64();
+            self.t_phase = Instant::now();
+            self.pending_sync.clear();
+            self.phase1_done = Some((model, stats, target_nnz));
+        }
+
+        // 3. topology ring
+        self.refresh_topo_ring();
+
+        // 4. parked fetches whose wait is over
+        if !self.parked.is_empty() {
+            let step = self.ps.fetch().step;
+            let phase2 = self.phase1_done.is_some();
+            let ready: Vec<ParkedFetch> = {
+                let (ready, waiting) = std::mem::take(&mut self.parked)
+                    .into_iter()
+                    .partition(|p| phase2 || step > p.have_step);
+                self.parked = waiting;
+                ready
+            };
+            for p in ready {
+                let ack = Message::FetchAck(self.snapshot_reply(p.have_gen));
+                self.send_reply(listener, p.conn, p.worker, p.seq, &ack)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(mut self) -> Result<ServiceOutcome> {
+        // elastic early end: if every worker left before the configured
+        // phase-1 epochs, finish phase 1 with what was applied
+        if self.phase1_done.is_none() {
+            let (model, stats) = self.ps.finish();
+            let target_nnz = model.layers.iter().map(|l| l.weights.nnz()).collect();
+            self.stats.phase1_secs = self.t_phase.elapsed().as_secs_f64();
+            self.t_phase = Instant::now();
+            self.phase1_done = Some((model, stats, target_nnz));
+        }
+        let (phase1_model, server_stats, target_nnz) =
+            self.phase1_done.take().expect("set above");
+        let final_model = if self.replicas.is_empty() {
+            phase1_model.clone()
+        } else {
+            // worker-id order = the thread coordinator's locals order
+            let locals: Vec<SparseMlp> = std::mem::take(&mut self.replicas)
+                .into_values()
+                .collect();
+            crate::coordinator::average_and_resparsify(&locals, &target_nnz)?
+        };
+        self.stats.phase2_secs = self.t_phase.elapsed().as_secs_f64();
+        Ok(ServiceOutcome {
+            phase1_model,
+            final_model,
+            server_stats,
+            coord: self.stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_tracker_flags_overdue_workers_once() {
+        let mut t = StragglerTracker::new(10.0);
+        // steady cadence: one push per 100ms for 10 pushes
+        for i in 0..10u64 {
+            t.observe(7, i * 100_000);
+        }
+        // just after the last push: nothing overdue
+        assert!(t.check(950_000).is_empty());
+        // 2s of silence >> 10 × 100ms median
+        assert_eq!(t.check(2_900_000), vec![7]);
+        // flagged once, not repeatedly
+        assert!(t.check(3_900_000).is_empty());
+        // a new push clears the flag and re-arms
+        t.observe(7, 4_000_000);
+        assert!(t.check(4_050_000).is_empty());
+    }
+
+    #[test]
+    fn straggler_tracker_needs_history_and_respects_floor() {
+        let mut t = StragglerTracker::new(10.0);
+        // too few samples: never flags
+        for i in 0..3u64 {
+            t.observe(1, i * 1000);
+        }
+        assert!(t.check(10_000_000).is_empty());
+        // tight cadence (1ms gaps): the 50ms floor suppresses flags at
+        // 10×median = 10ms silence
+        let mut t2 = StragglerTracker::new(10.0);
+        for i in 0..20u64 {
+            t2.observe(2, i * 1000);
+        }
+        assert!(t2.check(19_000 + 30_000).is_empty()); // 30ms < floor
+        assert_eq!(t2.check(19_000 + 60_000), vec![2]); // 60ms > floor
+    }
+
+    #[test]
+    fn removed_workers_are_forgotten() {
+        let mut t = StragglerTracker::new(2.0);
+        for i in 0..10u64 {
+            t.observe(3, i * 100_000);
+        }
+        t.remove(3);
+        assert!(t.check(100_000_000).is_empty());
+    }
+}

@@ -1,0 +1,405 @@
+//! Unix-socket / TCP transport: the same framed protocol as the channel
+//! transport, over real byte streams between real processes.
+//!
+//! Each accepted connection gets a reader thread that reassembles frames
+//! ([`HEADER_BYTES`]-prefixed, length-guarded — the header is validated
+//! *before* the payload allocation) and forwards them to the hub's mpsc
+//! queue, so [`SocketHub`] presents the same [`Listener`] surface as the
+//! in-process hub. A read error or EOF becomes [`Inbound::Closed`] — a
+//! dead worker process is an implicit leave, never a hang.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Result, TsnnError};
+
+use super::wire::{decode_header, HEADER_BYTES};
+use super::{Inbound, Listener, Transport};
+
+/// A transport endpoint address.
+#[derive(Debug, Clone)]
+pub enum Addr {
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            #[cfg(unix)]
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+            Addr::Tcp(s) => write!(f, "tcp:{s}"),
+        }
+    }
+}
+
+#[cfg(unix)]
+fn default_addr(spec: &str) -> Result<Addr> {
+    Ok(Addr::Unix(PathBuf::from(spec)))
+}
+
+#[cfg(not(unix))]
+fn default_addr(spec: &str) -> Result<Addr> {
+    Err(TsnnError::Transport(format!(
+        "unix sockets unavailable on this platform; use tcp:HOST:PORT (got '{spec}')"
+    )))
+}
+
+/// Parse `tcp:HOST:PORT` or `unix:PATH` (a bare string means a unix path).
+pub fn parse_addr(spec: &str) -> Result<Addr> {
+    if let Some(hp) = spec.strip_prefix("tcp:") {
+        if hp.is_empty() {
+            return Err(TsnnError::Transport("empty tcp address".into()));
+        }
+        return Ok(Addr::Tcp(hp.to_string()));
+    }
+    default_addr(spec.strip_prefix("unix:").unwrap_or(spec))
+}
+
+enum Stream {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Read one frame off a byte stream. `Ok(None)` on clean EOF at a frame
+/// boundary; a malformed header is an error (the stream is desynced and
+/// the connection must die — framing has no resync point).
+fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut got = 0;
+    while got < HEADER_BYTES {
+        let n = r.read(&mut header[got..])?;
+        if n == 0 {
+            return if got == 0 {
+                Ok(None) // clean EOF between frames
+            } else {
+                Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof mid-header",
+                ))
+            };
+        }
+        got += n;
+    }
+    let h = decode_header(&header)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let mut frame = vec![0u8; HEADER_BYTES + h.len];
+    frame[..HEADER_BYTES].copy_from_slice(&header);
+    r.read_exact(&mut frame[HEADER_BYTES..])?;
+    Ok(Some(frame))
+}
+
+/// Coordinator side of the socket transport.
+pub struct SocketHub {
+    rx: Receiver<(u64, Inbound)>,
+    reg_rx: Receiver<(u64, Stream)>,
+    conns: HashMap<u64, Stream>,
+    shutdown: Arc<AtomicBool>,
+    cleanup: Option<PathBuf>,
+    /// Actual `host:port` for TCP binds (resolves `:0` to the real port).
+    pub local_tcp: Option<String>,
+}
+
+impl SocketHub {
+    /// Bind and start accepting connections on a background thread.
+    pub fn bind(addr: &Addr) -> Result<SocketHub> {
+        let (tx, rx) = channel::<(u64, Inbound)>();
+        let (reg_tx, reg_rx) = channel::<(u64, Stream)>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let cleanup;
+        let mut local_tcp = None;
+        match addr {
+            #[cfg(unix)]
+            Addr::Unix(path) => {
+                // a stale socket file from a previous run blocks bind
+                let _ = std::fs::remove_file(path);
+                let listener = UnixListener::bind(path)?;
+                listener.set_nonblocking(true)?;
+                cleanup = Some(path.clone());
+                spawn_acceptor(shutdown.clone(), tx, reg_tx, move || {
+                    listener.accept().map(|(s, _)| {
+                        s.set_nonblocking(false).map(|()| Stream::Unix(s))
+                    })
+                });
+            }
+            Addr::Tcp(hostport) => {
+                let listener = TcpListener::bind(hostport)?;
+                listener.set_nonblocking(true)?;
+                local_tcp = listener.local_addr().ok().map(|a| a.to_string());
+                cleanup = None;
+                spawn_acceptor(shutdown.clone(), tx, reg_tx, move || {
+                    listener.accept().map(|(s, _)| {
+                        s.set_nonblocking(false)
+                            .and_then(|()| s.set_nodelay(true))
+                            .map(|()| Stream::Tcp(s))
+                    })
+                });
+            }
+        }
+        Ok(SocketHub {
+            rx,
+            reg_rx,
+            conns: HashMap::new(),
+            shutdown,
+            cleanup,
+            local_tcp,
+        })
+    }
+
+    fn drain_registrations(&mut self) {
+        loop {
+            match self.reg_rx.try_recv() {
+                Ok((id, s)) => {
+                    self.conns.insert(id, s);
+                }
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+}
+
+/// Accept loop: `accept` yields a ready connection or `WouldBlock`.
+fn spawn_acceptor(
+    shutdown: Arc<AtomicBool>,
+    tx: Sender<(u64, Inbound)>,
+    reg_tx: Sender<(u64, Stream)>,
+    mut accept: impl FnMut() -> io::Result<io::Result<Stream>> + Send + 'static,
+) {
+    std::thread::spawn(move || {
+        let mut next_conn = 1u64;
+        while !shutdown.load(Ordering::Relaxed) {
+            match accept() {
+                Ok(Ok(stream)) => {
+                    let conn = next_conn;
+                    next_conn += 1;
+                    let Ok(writer) = stream.try_clone() else {
+                        continue;
+                    };
+                    if reg_tx.send((conn, writer)).is_err() {
+                        return; // hub gone
+                    }
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        let mut stream = stream;
+                        loop {
+                            match read_frame(&mut stream) {
+                                Ok(Some(frame)) => {
+                                    if tx.send((conn, Inbound::Frame(frame))).is_err() {
+                                        return;
+                                    }
+                                }
+                                Ok(None) | Err(_) => {
+                                    let _ = tx.send((conn, Inbound::Closed));
+                                    return;
+                                }
+                            }
+                        }
+                    });
+                }
+                Ok(Err(_)) => {} // handshake-time setup failure: drop it
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => return,
+            }
+        }
+    });
+}
+
+impl Listener for SocketHub {
+    fn recv(&mut self, timeout: Duration) -> Result<Option<(u64, Inbound)>> {
+        self.drain_registrations();
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.drain_registrations();
+                Ok(Some(ev))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(TsnnError::Transport("socket acceptor died".into()))
+            }
+        }
+    }
+
+    fn send(&mut self, conn: u64, frame: &[u8]) -> Result<()> {
+        self.drain_registrations();
+        if let Some(s) = self.conns.get_mut(&conn) {
+            // write failure = peer died mid-reply; its Closed event is
+            // (or will be) queued by the reader thread
+            if s.write_all(frame).and_then(|()| s.flush()).is_err() {
+                self.conns.remove(&conn);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SocketHub {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(path) = &self.cleanup {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Worker side of a socket connection.
+pub struct SocketClient {
+    writer: Stream,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl SocketClient {
+    /// Connect to a coordinator.
+    pub fn connect(addr: &Addr) -> Result<SocketClient> {
+        let stream = match addr {
+            #[cfg(unix)]
+            Addr::Unix(path) => Stream::Unix(UnixStream::connect(path)?),
+            Addr::Tcp(hostport) => {
+                let s = TcpStream::connect(hostport)?;
+                s.set_nodelay(true)?;
+                Stream::Tcp(s)
+            }
+        };
+        let writer = stream.try_clone()?;
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            while let Ok(Some(frame)) = read_frame(&mut stream) {
+                if tx.send(frame).is_err() {
+                    return;
+                }
+            }
+            // sender dropped here: recv() reports Disconnected
+        });
+        Ok(SocketClient { writer, rx })
+    }
+}
+
+impl Transport for SocketClient {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.writer
+            .write_all(frame)
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| TsnnError::Transport(format!("socket send: {e}")))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TsnnError::Transport(
+                "coordinator closed the connection".into(),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::wire::{encode_frame, Message};
+
+    fn roundtrip_over(addr: Addr) {
+        let mut hub = SocketHub::bind(&addr).unwrap();
+        let addr = match (&addr, &hub.local_tcp) {
+            (Addr::Tcp(_), Some(actual)) => Addr::Tcp(actual.clone()),
+            _ => addr,
+        };
+        let mut client = SocketClient::connect(&addr).unwrap();
+        let frame = encode_frame(3, 1, &Message::Fetch {
+            have_gen: 0,
+            have_step: u64::MAX,
+        });
+        client.send(&frame).unwrap();
+        let (conn, ev) = hub.recv(Duration::from_secs(5)).unwrap().unwrap();
+        match ev {
+            Inbound::Frame(f) => assert_eq!(f, frame),
+            Inbound::Closed => panic!("unexpected close"),
+        }
+        let reply = encode_frame(3, 1, &Message::LeaveAck);
+        hub.send(conn, &reply).unwrap();
+        assert_eq!(client.recv(Duration::from_secs(5)).unwrap().unwrap(), reply);
+
+        drop(client);
+        let (conn2, ev2) = hub.recv(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(conn2, conn);
+        assert!(matches!(ev2, Inbound::Closed));
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        // port 0: the OS picks a free port; local_tcp reports it
+        roundtrip_over(Addr::Tcp("127.0.0.1:0".into()));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_roundtrip_and_stale_socket_cleanup() {
+        let path = std::env::temp_dir().join("tsnn_sock_test.sock");
+        std::fs::write(&path, b"stale").unwrap(); // stale file must not block bind
+        roundtrip_over(Addr::Unix(path.clone()));
+        assert!(!path.exists(), "hub drop should remove the socket file");
+    }
+
+    #[test]
+    fn addr_parsing() {
+        assert!(matches!(parse_addr("tcp:127.0.0.1:9000"), Ok(Addr::Tcp(_))));
+        assert!(parse_addr("tcp:").is_err());
+        #[cfg(unix)]
+        {
+            assert!(matches!(parse_addr("unix:/tmp/x.sock"), Ok(Addr::Unix(_))));
+            assert!(matches!(parse_addr("/tmp/x.sock"), Ok(Addr::Unix(_))));
+        }
+    }
+}

@@ -1,0 +1,828 @@
+//! Serialized sparse-delta wire format for the coordinator transport.
+//!
+//! Frames reuse the hardened checkpoint encoding discipline from
+//! `model/checkpoint.rs` — a magic/version header, explicit
+//! length-guarded payloads, and per-array little-endian layouts written
+//! through the same `checkpoint::write_*` helpers — so a transport frame
+//! and a checkpoint agree byte-for-byte on how a sparse array is laid
+//! out, and a corrupt or truncated frame surfaces as a typed
+//! [`TsnnError`] before any unbounded allocation.
+//!
+//! Frame layout (little-endian, [`HEADER_BYTES`] = 25):
+//!
+//! ```text
+//! magic "TSNW" | version u32 | kind u8 | worker u32 | seq u64 | payload_len u32
+//! payload bytes (payload_len)
+//! ```
+//!
+//! Models and deltas never densify: a full model ships the CSR arrays
+//! (row_ptr / col_idx / values) exactly as a checkpoint would, and a
+//! values-only delta (topology generation unchanged) ships just the new
+//! CSR values + biases — the sparse-delta exchange the paper's MPI
+//! implementation used, kept topology-first per Nerva/Hoefler.
+
+use std::io::Write;
+
+use crate::error::{Result, TsnnError};
+use crate::model::checkpoint::{
+    write_f32_slice, write_u32, write_u32_slice, write_u64, write_usize_slice_as_u64,
+};
+use crate::model::{SparseLayer, SparseMlp};
+use crate::nn::Activation;
+use crate::sparse::CsrMatrix;
+
+/// Frame magic: "TSNW" (TSNN Wire) — deliberately distinct from the
+/// checkpoint magic so a checkpoint file is never mistaken for a frame.
+pub const MAGIC: &[u8; 4] = b"TSNW";
+/// Wire protocol version.
+pub const VERSION: u32 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_BYTES: usize = 25;
+/// Hard cap on a single frame payload: a corrupt length field must
+/// surface as a typed error, not an allocation attempt.
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+/// Hard cap on layer counts carried in a frame.
+pub const MAX_LAYERS: usize = 256;
+
+/// `have_gen` / `have_step` sentinel: "I have nothing / reply now".
+pub const NONE_U64: u64 = u64::MAX;
+
+/// Frame kind tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Worker → server: join the run (worker id in the header).
+    Join = 0,
+    /// Server → worker: join accepted, optional job spec attached.
+    JoinAck = 1,
+    /// Worker → server: fetch a model snapshot.
+    Fetch = 2,
+    /// Server → worker: snapshot (values-only delta or full model).
+    FetchAck = 3,
+    /// Worker → server: gradient push.
+    Push = 4,
+    /// Server → worker: push outcome.
+    PushAck = 5,
+    /// Worker → server: phase-2 local replica upload.
+    Replica = 6,
+    /// Server → worker: replica stored.
+    ReplicaAck = 7,
+    /// Worker → server: leaving the run.
+    Leave = 8,
+    /// Server → worker: leave acknowledged.
+    LeaveAck = 9,
+    /// Server → worker: request-level error (protocol misuse).
+    Err = 10,
+}
+
+impl Kind {
+    fn from_u8(v: u8) -> Option<Kind> {
+        Some(match v {
+            0 => Kind::Join,
+            1 => Kind::JoinAck,
+            2 => Kind::Fetch,
+            3 => Kind::FetchAck,
+            4 => Kind::Push,
+            5 => Kind::PushAck,
+            6 => Kind::Replica,
+            7 => Kind::ReplicaAck,
+            8 => Kind::Leave,
+            9 => Kind::LeaveAck,
+            10 => Kind::Err,
+            _ => return None,
+        })
+    }
+}
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy)]
+pub struct Header {
+    /// Message kind.
+    pub kind: Kind,
+    /// Worker id the frame belongs to (`u32::MAX` before assignment).
+    pub worker: u32,
+    /// Per-connection monotonic request sequence number (requests and
+    /// their replies share the seq; retransmits repeat it).
+    pub seq: u64,
+    /// Payload length in bytes.
+    pub len: usize,
+}
+
+/// Push outcome codes carried in [`Message::PushAck`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushStatus {
+    /// Gradient applied (or parked for the synchronous barrier).
+    Applied = 0,
+    /// Rejected: non-finite values on the receive path.
+    RejectedNonFinite = 1,
+    /// Rejected: topology generation no longer in the server's ring.
+    RejectedStaleGen = 2,
+    /// Rejected: gradient shape does not match the claimed topology.
+    RejectedShape = 3,
+    /// Ignored: phase 1 already completed.
+    Ignored = 4,
+}
+
+impl PushStatus {
+    fn from_u8(v: u8) -> Option<PushStatus> {
+        Some(match v {
+            0 => PushStatus::Applied,
+            1 => PushStatus::RejectedNonFinite,
+            2 => PushStatus::RejectedStaleGen,
+            3 => PushStatus::RejectedShape,
+            4 => PushStatus::Ignored,
+            _ => return None,
+        })
+    }
+}
+
+/// Model snapshot payload: values-only when the worker's cached
+/// topology generation matches, full CSR otherwise.
+#[derive(Debug, Clone)]
+pub enum ModelDelta {
+    /// Topology unchanged: new CSR values + biases per layer.
+    Values {
+        /// Per-layer CSR values (aligned to the cached topology).
+        values: Vec<Vec<f32>>,
+        /// Per-layer biases.
+        bias: Vec<Vec<f32>>,
+    },
+    /// Full model (topology + values; optimizer state iff `velocity`).
+    Full {
+        /// The model.
+        model: SparseMlp,
+        /// Whether velocity / bias_velocity arrays were shipped.
+        velocity: bool,
+    },
+}
+
+/// Decoded fetch reply.
+#[derive(Debug, Clone)]
+pub struct FetchAck {
+    /// True once phase 1 completed: `delta` is the full phase-1 model
+    /// (with optimizer state) and the worker should move to phase 2.
+    pub phase2: bool,
+    /// Topology generation of the snapshot.
+    pub gen: u64,
+    /// Server step of the snapshot.
+    pub step: u64,
+    /// Server epoch of the snapshot.
+    pub epoch: u64,
+    /// The model payload.
+    pub delta: ModelDelta,
+}
+
+/// Decoded gradient push.
+#[derive(Debug, Clone)]
+pub struct PushMsg {
+    /// Topology generation the gradients are aligned to.
+    pub gen: u64,
+    /// Server step the worker fetched at (staleness accounting).
+    pub fetched_step: u64,
+    /// Worker-computed learning rate (async; ignored for sync pushes —
+    /// the server computes the warmup schedule itself).
+    pub lr: f32,
+    /// Synchronous (WASSP barrier) contribution.
+    pub sync: bool,
+    /// Per-layer weight gradients aligned to the topology's CSR values.
+    pub grad_w: Vec<Vec<f32>>,
+    /// Per-layer bias gradients.
+    pub grad_b: Vec<Vec<f32>>,
+}
+
+/// A decoded wire message.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// Worker joins (id in the frame header).
+    Join,
+    /// Join accepted; `job` is a JSON job spec for external workers.
+    JoinAck {
+        /// JSON job spec (config + dataset + parallel config + budgets);
+        /// `None` for in-process workers that already hold the job.
+        job: Option<String>,
+    },
+    /// Snapshot request.
+    Fetch {
+        /// Topology generation the worker has cached ([`NONE_U64`] = none).
+        have_gen: u64,
+        /// Last server step the worker observed; a synchronous worker
+        /// parks until the step advances past it ([`NONE_U64`] = reply now).
+        have_step: u64,
+    },
+    /// Snapshot reply.
+    FetchAck(FetchAck),
+    /// Gradient push.
+    Push(PushMsg),
+    /// Push outcome.
+    PushAck {
+        /// Outcome code.
+        status: PushStatus,
+        /// Server step after handling the push.
+        step: u64,
+        /// Server epoch after handling the push.
+        epoch: u64,
+    },
+    /// Phase-2 replica upload (weights + biases, no optimizer state).
+    Replica {
+        /// The locally-trained model.
+        model: SparseMlp,
+    },
+    /// Replica stored.
+    ReplicaAck,
+    /// Worker leaves.
+    Leave,
+    /// Leave acknowledged.
+    LeaveAck,
+    /// Request-level error.
+    Err {
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+impl Message {
+    fn kind(&self) -> Kind {
+        match self {
+            Message::Join => Kind::Join,
+            Message::JoinAck { .. } => Kind::JoinAck,
+            Message::Fetch { .. } => Kind::Fetch,
+            Message::FetchAck(_) => Kind::FetchAck,
+            Message::Push(_) => Kind::Push,
+            Message::PushAck { .. } => Kind::PushAck,
+            Message::Replica { .. } => Kind::Replica,
+            Message::ReplicaAck => Kind::ReplicaAck,
+            Message::Leave => Kind::Leave,
+            Message::LeaveAck => Kind::LeaveAck,
+            Message::Err { .. } => Kind::Err,
+        }
+    }
+}
+
+// --- encoding ---------------------------------------------------------------
+
+fn act_tag(a: &Activation) -> (u8, f32) {
+    match *a {
+        Activation::Relu => (0, 0.0),
+        Activation::LeakyRelu { alpha } => (1, alpha),
+        Activation::AllRelu { alpha } => (2, alpha),
+        Activation::Linear => (3, 0.0),
+    }
+}
+
+fn act_from_tag(tag: u8, alpha: f32) -> Option<Activation> {
+    Some(match tag {
+        0 => Activation::Relu,
+        1 => Activation::LeakyRelu { alpha },
+        2 => Activation::AllRelu { alpha },
+        3 => Activation::Linear,
+        _ => return None,
+    })
+}
+
+fn encode_model(w: &mut Vec<u8>, m: &SparseMlp, velocity: bool) -> Result<()> {
+    w.push(u8::from(velocity));
+    write_u32(w, m.layers.len() as u32)?;
+    write_usize_slice_as_u64(w, &m.sizes)?;
+    for layer in &m.layers {
+        let (tag, alpha) = act_tag(&layer.activation);
+        w.push(tag);
+        write_f32_slice(w, &[alpha])?;
+        write_u64(w, layer.weights.nnz() as u64)?;
+        write_usize_slice_as_u64(w, &layer.weights.row_ptr)?;
+        write_u32_slice(w, &layer.weights.col_idx)?;
+        write_f32_slice(w, &layer.weights.values)?;
+        write_f32_slice(w, &layer.bias)?;
+        if velocity {
+            write_f32_slice(w, &layer.velocity)?;
+            write_f32_slice(w, &layer.bias_velocity)?;
+        }
+    }
+    Ok(())
+}
+
+fn encode_layer_vecs(w: &mut Vec<u8>, per_nnz: &[Vec<f32>], per_out: &[Vec<f32>]) -> Result<()> {
+    write_u32(w, per_nnz.len() as u32)?;
+    for (v, b) in per_nnz.iter().zip(per_out.iter()) {
+        write_u64(w, v.len() as u64)?;
+        write_f32_slice(w, v)?;
+        write_u32(w, b.len() as u32)?;
+        write_f32_slice(w, b)?;
+    }
+    Ok(())
+}
+
+fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
+    let mut w: Vec<u8> = Vec::new();
+    match msg {
+        Message::Join | Message::ReplicaAck | Message::Leave | Message::LeaveAck => {}
+        Message::JoinAck { job } => {
+            w.push(u8::from(job.is_some()));
+            if let Some(j) = job {
+                write_u32(&mut w, j.len() as u32)?;
+                w.write_all(j.as_bytes())?;
+            }
+        }
+        Message::Fetch { have_gen, have_step } => {
+            write_u64(&mut w, *have_gen)?;
+            write_u64(&mut w, *have_step)?;
+        }
+        Message::FetchAck(f) => {
+            w.push(if f.phase2 { 2 } else { 1 });
+            write_u64(&mut w, f.gen)?;
+            write_u64(&mut w, f.step)?;
+            write_u64(&mut w, f.epoch)?;
+            match &f.delta {
+                ModelDelta::Values { values, bias } => {
+                    w.push(0);
+                    encode_layer_vecs(&mut w, values, bias)?;
+                }
+                ModelDelta::Full { model, velocity } => {
+                    w.push(1);
+                    encode_model(&mut w, model, *velocity)?;
+                }
+            }
+        }
+        Message::Push(p) => {
+            write_u64(&mut w, p.gen)?;
+            write_u64(&mut w, p.fetched_step)?;
+            write_f32_slice(&mut w, &[p.lr])?;
+            w.push(u8::from(p.sync));
+            encode_layer_vecs(&mut w, &p.grad_w, &p.grad_b)?;
+        }
+        Message::PushAck { status, step, epoch } => {
+            w.push(*status as u8);
+            write_u64(&mut w, *step)?;
+            write_u64(&mut w, *epoch)?;
+        }
+        Message::Replica { model } => {
+            encode_model(&mut w, model, false)?;
+        }
+        Message::Err { message } => {
+            write_u32(&mut w, message.len() as u32)?;
+            w.write_all(message.as_bytes())?;
+        }
+    }
+    Ok(w)
+}
+
+/// Encode a complete frame (header + payload).
+pub fn encode_frame(worker: u32, seq: u64, msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg).expect("in-memory frame encode cannot fail");
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(msg.kind() as u8);
+    out.extend_from_slice(&worker.to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+// --- decoding ---------------------------------------------------------------
+
+/// Bounds-checked slice cursor: every read validates the remaining
+/// length *before* allocating, so implausible length fields surface as
+/// typed errors — never a panic or an unbounded allocation.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(TsnnError::Transport(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Length-guarded count: fails *before* allocation when the claimed
+    /// element count cannot fit in the remaining bytes.
+    fn checked_len(&self, n: u64, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = usize::try_from(n)
+            .ok()
+            .and_then(|n| n.checked_mul(elem_bytes).map(|bytes| (n, bytes)))
+            .filter(|&(_, bytes)| bytes <= self.remaining())
+            .map(|(n, _)| n)
+            .ok_or_else(|| {
+                TsnnError::Transport(format!(
+                    "implausible {what} length {n} ({} bytes remain)",
+                    self.remaining()
+                ))
+            })?;
+        Ok(n)
+    }
+
+    fn f32_vec(&mut self, n: u64, what: &str) -> Result<Vec<f32>> {
+        let n = self.checked_len(n, 4, what)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u32_vec(&mut self, n: u64, what: &str) -> Result<Vec<u32>> {
+        let n = self.checked_len(n, 4, what)?;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u64_vec(&mut self, n: u64, what: &str) -> Result<Vec<u64>> {
+        let n = self.checked_len(n, 8, what)?;
+        let b = self.take(n * 8)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| {
+                u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
+            .collect())
+    }
+
+    fn string(&mut self, n: u32, what: &str) -> Result<String> {
+        let n = self.checked_len(u64::from(n), 1, what)?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| TsnnError::Transport(format!("{what}: invalid utf8")))
+    }
+}
+
+fn decode_model(c: &mut Cur) -> Result<SparseMlp> {
+    let with_velocity = c.u8()? != 0;
+    let n_layers = c.u32()? as usize;
+    if n_layers == 0 || n_layers > MAX_LAYERS {
+        return Err(TsnnError::Transport(format!(
+            "implausible layer count {n_layers}"
+        )));
+    }
+    let sizes: Vec<usize> = c
+        .u64_vec((n_layers + 1) as u64, "sizes")?
+        .into_iter()
+        .map(|v| v as usize)
+        .collect();
+    // dimension cap: keeps `n_in + 1` and row_ptr allocation math safe
+    if let Some(&bad) = sizes.iter().find(|&&s| s == 0 || s > (1 << 31)) {
+        return Err(TsnnError::Transport(format!("implausible layer size {bad}")));
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let (n_in, n_out) = (sizes[l], sizes[l + 1]);
+        let tag = c.u8()?;
+        let alpha = c.f32()?;
+        let activation = act_from_tag(tag, alpha)
+            .ok_or_else(|| TsnnError::Transport(format!("layer {l}: bad activation tag {tag}")))?;
+        let nnz64 = c.u64()?;
+        // a corrupt nnz must not drive allocations or validate() cost
+        if nnz64 > n_in.saturating_mul(n_out) as u64 {
+            return Err(TsnnError::Transport(format!(
+                "layer {l}: nnz {nnz64} exceeds {n_in}x{n_out}"
+            )));
+        }
+        let row_ptr: Vec<usize> = c
+            .u64_vec((n_in + 1) as u64, "row_ptr")?
+            .into_iter()
+            .map(|v| v as usize)
+            .collect();
+        let col_idx = c.u32_vec(nnz64, "col_idx")?;
+        let values = c.f32_vec(nnz64, "values")?;
+        let bias = c.f32_vec(n_out as u64, "bias")?;
+        let (velocity, bias_velocity) = if with_velocity {
+            (
+                c.f32_vec(nnz64, "velocity")?,
+                c.f32_vec(n_out as u64, "bias_velocity")?,
+            )
+        } else {
+            (vec![0.0; nnz64 as usize], vec![0.0; n_out])
+        };
+        let weights = CsrMatrix {
+            n_rows: n_in,
+            n_cols: n_out,
+            row_ptr,
+            col_idx,
+            values,
+        };
+        weights
+            .validate()
+            .map_err(|e| TsnnError::Transport(format!("layer {l}: {e}")))?;
+        layers.push(SparseLayer {
+            weights,
+            bias,
+            velocity,
+            bias_velocity,
+            activation,
+            srelu: None,
+        });
+    }
+    Ok(SparseMlp { sizes, layers })
+}
+
+fn decode_layer_vecs(c: &mut Cur) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+    let n_layers = c.u32()? as usize;
+    if n_layers > MAX_LAYERS {
+        return Err(TsnnError::Transport(format!(
+            "implausible layer count {n_layers}"
+        )));
+    }
+    let mut per_nnz = Vec::with_capacity(n_layers);
+    let mut per_out = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let nnz = c.u64()?;
+        per_nnz.push(c.f32_vec(nnz, "layer values")?);
+        let n_out = c.u32()?;
+        per_out.push(c.f32_vec(u64::from(n_out), "layer bias")?);
+    }
+    Ok((per_nnz, per_out))
+}
+
+/// Decode and validate a frame header from its fixed-size prefix.
+pub fn decode_header(buf: &[u8]) -> Result<Header> {
+    if buf.len() < HEADER_BYTES {
+        return Err(TsnnError::Transport(format!(
+            "truncated header: {} of {HEADER_BYTES} bytes",
+            buf.len()
+        )));
+    }
+    if &buf[0..4] != MAGIC {
+        return Err(TsnnError::Transport("bad frame magic".into()));
+    }
+    let version = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if version != VERSION {
+        return Err(TsnnError::Transport(format!(
+            "unsupported wire version {version}"
+        )));
+    }
+    let kind = Kind::from_u8(buf[8])
+        .ok_or_else(|| TsnnError::Transport(format!("unknown frame kind {}", buf[8])))?;
+    let worker = u32::from_le_bytes([buf[9], buf[10], buf[11], buf[12]]);
+    let seq = u64::from_le_bytes([
+        buf[13], buf[14], buf[15], buf[16], buf[17], buf[18], buf[19], buf[20],
+    ]);
+    let len = u32::from_le_bytes([buf[21], buf[22], buf[23], buf[24]]) as usize;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(TsnnError::Transport(format!(
+            "implausible payload length {len}"
+        )));
+    }
+    Ok(Header { kind, worker, seq, len })
+}
+
+/// Decode a complete frame (header + payload) into its message.
+pub fn decode_frame(frame: &[u8]) -> Result<(Header, Message)> {
+    let h = decode_header(frame)?;
+    let payload = &frame[HEADER_BYTES.min(frame.len())..];
+    if payload.len() != h.len {
+        return Err(TsnnError::Transport(format!(
+            "payload length mismatch: header says {}, frame carries {}",
+            h.len,
+            payload.len()
+        )));
+    }
+    let mut c = Cur::new(payload);
+    let msg = match h.kind {
+        Kind::Join => Message::Join,
+        Kind::JoinAck => {
+            let has_job = c.u8()? != 0;
+            let job = if has_job {
+                let n = c.u32()?;
+                Some(c.string(n, "job spec")?)
+            } else {
+                None
+            };
+            Message::JoinAck { job }
+        }
+        Kind::Fetch => Message::Fetch {
+            have_gen: c.u64()?,
+            have_step: c.u64()?,
+        },
+        Kind::FetchAck => {
+            let phase = c.u8()?;
+            if phase != 1 && phase != 2 {
+                return Err(TsnnError::Transport(format!("bad phase tag {phase}")));
+            }
+            let gen = c.u64()?;
+            let step = c.u64()?;
+            let epoch = c.u64()?;
+            let delta = match c.u8()? {
+                0 => {
+                    let (values, bias) = decode_layer_vecs(&mut c)?;
+                    ModelDelta::Values { values, bias }
+                }
+                1 => {
+                    let velocity_peek = c.buf.get(c.off).copied().unwrap_or(0) != 0;
+                    let model = decode_model(&mut c)?;
+                    ModelDelta::Full {
+                        model,
+                        velocity: velocity_peek,
+                    }
+                }
+                other => {
+                    return Err(TsnnError::Transport(format!("bad delta tag {other}")));
+                }
+            };
+            Message::FetchAck(FetchAck {
+                phase2: phase == 2,
+                gen,
+                step,
+                epoch,
+                delta,
+            })
+        }
+        Kind::Push => {
+            let gen = c.u64()?;
+            let fetched_step = c.u64()?;
+            let lr = c.f32()?;
+            let sync = c.u8()? != 0;
+            let (grad_w, grad_b) = decode_layer_vecs(&mut c)?;
+            Message::Push(PushMsg {
+                gen,
+                fetched_step,
+                lr,
+                sync,
+                grad_w,
+                grad_b,
+            })
+        }
+        Kind::PushAck => {
+            let s = c.u8()?;
+            let status = PushStatus::from_u8(s)
+                .ok_or_else(|| TsnnError::Transport(format!("bad push status {s}")))?;
+            Message::PushAck {
+                status,
+                step: c.u64()?,
+                epoch: c.u64()?,
+            }
+        }
+        Kind::Replica => Message::Replica {
+            model: decode_model(&mut c)?,
+        },
+        Kind::ReplicaAck => Message::ReplicaAck,
+        Kind::Leave => Message::Leave,
+        Kind::LeaveAck => Message::LeaveAck,
+        Kind::Err => {
+            let n = c.u32()?;
+            Message::Err {
+                message: c.string(n, "error message")?,
+            }
+        }
+    };
+    if c.remaining() != 0 {
+        return Err(TsnnError::Transport(format!(
+            "{} trailing bytes after payload",
+            c.remaining()
+        )));
+    }
+    Ok((h, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::WeightInit;
+    use crate::util::Rng;
+
+    fn model() -> SparseMlp {
+        SparseMlp::new(
+            &[8, 12, 3],
+            4.0,
+            Activation::AllRelu { alpha: 0.4 },
+            &WeightInit::Xavier,
+            &mut Rng::new(9),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_model_roundtrips_bit_exact() {
+        let mut m = model();
+        for l in &mut m.layers {
+            for (i, v) in l.velocity.iter_mut().enumerate() {
+                *v = 0.25 * i as f32;
+            }
+        }
+        let msg = Message::FetchAck(FetchAck {
+            phase2: true,
+            gen: 7,
+            step: 99,
+            epoch: 3,
+            delta: ModelDelta::Full {
+                model: m.clone(),
+                velocity: true,
+            },
+        });
+        let frame = encode_frame(2, 41, &msg);
+        let (h, decoded) = decode_frame(&frame).unwrap();
+        assert_eq!(h.worker, 2);
+        assert_eq!(h.seq, 41);
+        match decoded {
+            Message::FetchAck(f) => {
+                assert!(f.phase2);
+                let got = match f.delta {
+                    ModelDelta::Full { model, velocity } => {
+                        assert!(velocity);
+                        model
+                    }
+                    _ => panic!("expected full model"),
+                };
+                assert_eq!(got.sizes, m.sizes);
+                for (a, b) in got.layers.iter().zip(m.layers.iter()) {
+                    assert_eq!(a.weights, b.weights);
+                    assert_eq!(a.bias, b.bias);
+                    assert_eq!(a.velocity, b.velocity);
+                    assert_eq!(a.activation, b.activation);
+                }
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_roundtrips() {
+        let msg = Message::Push(PushMsg {
+            gen: 3,
+            fetched_step: 17,
+            lr: 0.05,
+            sync: true,
+            grad_w: vec![vec![1.0, -2.0], vec![0.5]],
+            grad_b: vec![vec![0.1], vec![-0.2, 0.3]],
+        });
+        let frame = encode_frame(0, 5, &msg);
+        match decode_frame(&frame).unwrap().1 {
+            Message::Push(p) => {
+                assert_eq!(p.gen, 3);
+                assert!(p.sync);
+                assert_eq!(p.grad_w, vec![vec![1.0, -2.0], vec![0.5]]);
+                assert_eq!(p.grad_b, vec![vec![0.1], vec![-0.2, 0.3]]);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        let mut f = encode_frame(0, 1, &Message::Join);
+        f[0] = b'X';
+        assert!(decode_frame(&f).is_err());
+        let mut f = encode_frame(0, 1, &Message::Join);
+        f[4] = 9; // version
+        assert!(decode_frame(&f).is_err());
+        let mut f = encode_frame(0, 1, &Message::Join);
+        f[8] = 200; // kind
+        assert!(decode_frame(&f).is_err());
+    }
+
+    #[test]
+    fn implausible_lengths_fail_before_allocating() {
+        // a Push whose layer-values length claims far more data than the
+        // frame carries must fail in checked_len, not in Vec::with_capacity
+        let msg = Message::Push(PushMsg {
+            gen: 0,
+            fetched_step: 0,
+            lr: 0.1,
+            sync: false,
+            grad_w: vec![vec![1.0; 4]],
+            grad_b: vec![vec![0.0; 2]],
+        });
+        let mut frame = encode_frame(0, 1, &msg);
+        // the nnz u64 lives right after: 4 bytes n_layers following
+        // gen(8) + step(8) + lr(4) + sync(1) in the payload
+        let off = HEADER_BYTES + 8 + 8 + 4 + 1 + 4;
+        frame[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(matches!(err, TsnnError::Transport(_)), "{err}");
+    }
+}

@@ -1,0 +1,234 @@
+//! The worker side of the transport protocol: one `run_worker` call is
+//! one full WASAP/WASSP worker lifetime — join, phase-1 fetch/push loop,
+//! phase-2 local training + replica upload, leave.
+//!
+//! The loop mirrors the original thread-coordinator semantics exactly
+//! (same RNG streams, same batch order, same clip-then-push) so an
+//! in-process channel run is bit-identical to the pre-transport
+//! coordinator, and a multi-process socket run differs only by async
+//! scheduling.
+
+use crate::config::TrainConfig;
+use crate::coordinator::{clip_gradients, shard_bounds, shard_dataset, ParallelConfig};
+use crate::data::Dataset;
+use crate::error::{Result, TsnnError};
+use crate::model::{Batcher, SparseMlp};
+use crate::nn::LrSchedule;
+use crate::train::{self, TrainOptions};
+use crate::util::{PhaseTimes, Rng};
+
+use super::wire::{ModelDelta, PushMsg, PushStatus, NONE_U64};
+use super::{Client, RetryPolicy, Transport};
+
+/// Everything a worker needs to run its shard of a parallel job.
+#[derive(Debug, Clone)]
+pub struct WorkerJob {
+    /// This worker's id (also its shard index), `< pcfg.workers`.
+    pub worker: u32,
+    /// Kernel threads for this worker's workspace sub-pool.
+    pub kernel_threads: usize,
+    /// Training configuration (shared across the job).
+    pub cfg: TrainConfig,
+    /// Parallel configuration (shared across the job).
+    pub pcfg: ParallelConfig,
+    /// Leave after this many applied pushes (elasticity tests).
+    pub max_phase1_pushes: Option<u64>,
+    /// Leave after phase 1 without training/uploading a replica.
+    pub skip_phase2: bool,
+}
+
+impl WorkerJob {
+    /// Job for worker `k` of a run, with its kernel budget.
+    pub fn new(
+        worker: u32,
+        kernel_threads: usize,
+        cfg: &TrainConfig,
+        pcfg: &ParallelConfig,
+    ) -> WorkerJob {
+        WorkerJob {
+            worker,
+            kernel_threads,
+            cfg: cfg.clone(),
+            pcfg: *pcfg,
+            max_phase1_pushes: None,
+            skip_phase2: false,
+        }
+    }
+}
+
+/// What one worker did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerReport {
+    /// Gradient pushes the server applied.
+    pub pushes: u64,
+    /// Request retransmissions (timeouts / dropped replies).
+    pub retries: u64,
+    /// Gradients zeroed worker-side because their norm was non-finite.
+    pub zeroed_nonfinite: u64,
+}
+
+/// Join and run a full worker lifetime over `transport`.
+pub fn run_worker(
+    transport: Box<dyn Transport>,
+    retry: RetryPolicy,
+    job: &WorkerJob,
+    data: &Dataset,
+) -> Result<WorkerReport> {
+    let mut client = Client::new(transport, job.worker, retry);
+    client.join()?;
+    run_worker_joined(&mut client, job, data)
+}
+
+/// Run a worker lifetime on an already-joined client (the `tsnn worker`
+/// subcommand joins first to obtain the job spec, then calls this).
+pub fn run_worker_joined(
+    client: &mut Client,
+    job: &WorkerJob,
+    data: &Dataset,
+) -> Result<WorkerReport> {
+    let cfg = &job.cfg;
+    let sync = job.pcfg.synchronous;
+    let mut report = WorkerReport::default();
+
+    // identical RNG/batcher streams to the thread coordinator
+    let mut rng = Rng::new(cfg.seed).split(job.worker as u64);
+    let (lo, hi) = shard_bounds(data.n_train(), job.pcfg.workers, job.worker as usize);
+    let mut batcher = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
+    batcher.reset(&mut rng);
+    let dropout = if cfg.dropout > 0.0 {
+        Some(crate::nn::Dropout::new(cfg.dropout))
+    } else {
+        None
+    };
+    let mut ws = crate::model::Workspace::with_threads(job.kernel_threads);
+    // WASAP hot-start (paper §2.3); WASSP's warmup schedule lives
+    // server-side so every contributor of a step shares one rate
+    let schedule = match cfg.lr {
+        LrSchedule::Constant(eta) if job.pcfg.hot_start && !sync => LrSchedule::HotStart {
+            hot: eta * 2.0,
+            base: eta,
+            hot_epochs: 3,
+        },
+        other => other,
+    };
+
+    // ---- phase 1: fetch / compute / push ----
+    let mut cached: Option<(SparseMlp, u64)> = None;
+    let mut last_step = NONE_U64;
+    let phase1_model: SparseMlp = loop {
+        let have_gen = cached.as_ref().map_or(NONE_U64, |(_, g)| *g);
+        // synchronous workers report the step they last trained on; the
+        // server parks the fetch until the barrier advances past it
+        let have_step = if sync { last_step } else { NONE_U64 };
+        let ack = client.fetch(have_gen, have_step)?;
+        if ack.phase2 {
+            match ack.delta {
+                ModelDelta::Full { model, .. } => break model,
+                ModelDelta::Values { .. } => {
+                    return Err(TsnnError::Transport(
+                        "phase-2 fetch must carry a full model".into(),
+                    ))
+                }
+            }
+        }
+        match ack.delta {
+            ModelDelta::Full { model, .. } => cached = Some((model, ack.gen)),
+            ModelDelta::Values { values, bias } => {
+                let ok = cached.as_ref().is_some_and(|(m, _)| {
+                    values.len() == m.layers.len()
+                        && bias.len() == m.layers.len()
+                        && m.layers.iter().enumerate().all(|(l, layer)| {
+                            values[l].len() == layer.weights.values.len()
+                                && bias[l].len() == layer.bias.len()
+                        })
+                });
+                if !ok {
+                    // topology moved under us without a gen bump (or the
+                    // cache is gone): drop it and re-fetch a full model
+                    cached = None;
+                    continue;
+                }
+                let (m, g) = cached.as_mut().expect("checked above");
+                for (l, layer) in m.layers.iter_mut().enumerate() {
+                    layer.weights.values.copy_from_slice(&values[l]);
+                    layer.bias.copy_from_slice(&bias[l]);
+                }
+                *g = ack.gen;
+            }
+        }
+        last_step = ack.step;
+        let (model, gen) = cached.as_ref().expect("set above");
+
+        let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
+            Some(b) => b,
+            None => {
+                batcher.reset(&mut rng);
+                batcher.next_batch(&data.x_train, &data.y_train).unwrap()
+            }
+        };
+        model.compute_gradients(batch.0, batch.1, dropout.as_ref(), &mut ws, &mut rng);
+        let mut grad_w = ws.grad_w.clone();
+        let mut grad_b = ws.grad_b.clone();
+        let lr = if sync {
+            0.0 // server-side warmup schedule decides; raw gradients travel
+        } else {
+            if clip_gradients(&mut grad_w, &mut grad_b, job.pcfg.grad_clip) {
+                report.zeroed_nonfinite += 1;
+            }
+            schedule.at(ack.epoch as usize)
+        };
+        let (status, _, _) = client.push(PushMsg {
+            gen: *gen,
+            fetched_step: ack.step,
+            lr,
+            sync,
+            grad_w,
+            grad_b,
+        })?;
+        match status {
+            PushStatus::Applied => report.pushes += 1,
+            PushStatus::Ignored => {} // raced the phase boundary; next fetch says phase 2
+            PushStatus::RejectedNonFinite => {} // server-side guard fired
+            PushStatus::RejectedStaleGen => cached = None, // fell out of the topology ring
+            PushStatus::RejectedShape => {
+                return Err(TsnnError::Transport(
+                    "server rejected gradient shape — worker/server topology diverged".into(),
+                ))
+            }
+        }
+        if let Some(max) = job.max_phase1_pushes {
+            if report.pushes >= max {
+                client.leave()?;
+                report.retries = client.retries;
+                return Ok(report);
+            }
+        }
+    };
+
+    // ---- phase 2: local training, replica upload ----
+    if job.skip_phase2 || job.pcfg.phase2_epochs == 0 {
+        client.leave()?;
+        report.retries = client.retries;
+        return Ok(report);
+    }
+    let mut local_cfg = cfg.clone();
+    local_cfg.epochs = job.pcfg.phase2_epochs;
+    local_cfg.eval_every = 0;
+    local_cfg.kernel_threads = job.kernel_threads;
+    let mut local_model = phase1_model;
+    let mut local_rng = Rng::new(cfg.seed).split(1000 + job.worker as u64);
+    let shard = shard_dataset(data, lo, hi);
+    let mut local_phases = PhaseTimes::new();
+    train::train_model(
+        &local_cfg,
+        &shard,
+        &mut local_model,
+        &mut local_rng,
+        TrainOptions::default(),
+        &mut local_phases,
+    )?;
+    client.replica(&local_model)?;
+    client.leave()?;
+    report.retries = client.retries;
+    Ok(report)
+}

@@ -33,6 +33,9 @@ pub enum TsnnError {
     /// Inference serving-engine failure.
     Serve(String),
 
+    /// Coordinator transport failure (malformed frame, timeout, peer gone).
+    Transport(String),
+
     /// IO wrapper.
     Io(std::io::Error),
 }
@@ -48,6 +51,7 @@ impl fmt::Display for TsnnError {
             TsnnError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             TsnnError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             TsnnError::Serve(m) => write!(f, "serving error: {m}"),
+            TsnnError::Transport(m) => write!(f, "transport error: {m}"),
             // transparent: delegate straight to the wrapped error
             TsnnError::Io(e) => fmt::Display::fmt(e, f),
         }

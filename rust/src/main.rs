@@ -4,19 +4,30 @@
 //!   datasets                         print the dataset inventory (Table 1)
 //!   train <dataset> [k=v ...]        sequential SET training (§2.2)
 //!   parallel <dataset> [k=v ...]     WASAP/WASSP parallel training (§2.3)
+//!   worker --connect ADDR --worker K headless worker for a parallel run
 //!   baseline <arch> [k=v ...]        masked-dense XLA baseline ("Keras")
 //!   inspect <checkpoint>             print a checkpoint's structure
 //!   serve-bench [checkpoint]         serving QPS sweep (DESIGN.md §10)
 //!
 //! Common options: --paper (full paper-scale dataset), --seed N,
 //! --save PATH, --workers K, --sync, --phase1 N, --phase2 N, --verbose.
+//! `parallel --transport unix:PATH|tcp:HOST:PORT` serves the run over a
+//! socket and spawns the workers as `tsnn worker` child processes
+//! (DESIGN.md §12); `--fault drop=N,dup=N,...` injects transport faults.
 
 use std::time::Duration;
 
 use tsnn::bench::fmt_duration;
 use tsnn::cli::Args;
 use tsnn::config::{DatasetSpec, TrainConfig};
-use tsnn::coordinator::{run_parallel, ParallelConfig};
+use tsnn::coordinator::transport::fault::{FaultCounters, FaultPlan, FaultyTransport};
+use tsnn::coordinator::transport::socket::{parse_addr, Addr, SocketClient, SocketHub};
+use tsnn::coordinator::transport::worker::run_worker_joined;
+use tsnn::coordinator::transport::{Client, JobSpec, RetryPolicy, Transport};
+use tsnn::coordinator::{
+    run_parallel_listener, run_parallel_opts, worker_kernel_budgets, CoordinatorOptions,
+    ParallelConfig, ParallelOptions, ParallelReport, WorkerJob,
+};
 use tsnn::data::datasets;
 use tsnn::error::{Result, TsnnError};
 use tsnn::prelude::Rng;
@@ -54,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
         "datasets" => cmd_datasets(args),
         "train" => cmd_train(args),
         "parallel" => cmd_parallel(args),
+        "worker" => cmd_worker(args),
         "baseline" => cmd_baseline(args),
         "inspect" => cmd_inspect(args),
         "serve-bench" => cmd_serve_bench(args),
@@ -75,6 +87,9 @@ fn print_help() {
          \x20 datasets                      dataset inventory (Table 1)\n\
          \x20 train <dataset> [k=v ...]     sequential SET training\n\
          \x20 parallel <dataset> [k=v ...]  WASAP/WASSP parallel training\n\
+         \x20   (--transport unix:PATH|tcp:HOST:PORT runs workers as\n\
+         \x20    child processes; --fault drop=N,dup=N,delay=N,drop_reply=N)\n\
+         \x20 worker --connect ADDR --worker K   headless parallel worker\n\
          \x20 baseline <arch> [k=v ...]     masked-dense XLA baseline\n\
          \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\
          \x20 serve-bench [checkpoint]      serving layout + offered-QPS sweep\n\
@@ -213,6 +228,10 @@ fn cmd_parallel(args: &Args) -> Result<()> {
         hot_start: true,
         grad_clip: 5.0,
     };
+    let fault = match args.opt("fault") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::default(),
+    };
     let mut rng = Rng::new(cfg.seed);
     let data = datasets::generate(&spec, &mut rng)?;
     log::info!(
@@ -222,7 +241,18 @@ fn cmd_parallel(args: &Args) -> Result<()> {
         pcfg.phase1_epochs,
         pcfg.phase2_epochs
     );
-    let report = run_parallel(&cfg, &pcfg, &data, &mut rng)?;
+    let report = match args.opt("transport") {
+        None | Some("inproc") => {
+            let opts = ParallelOptions {
+                fault,
+                ..ParallelOptions::default()
+            };
+            run_parallel_opts(&cfg, &pcfg, &data, &mut rng, &opts)?
+        }
+        Some(addr_spec) => {
+            run_parallel_multiprocess(&cfg, &pcfg, &spec, &data, &mut rng, addr_spec, args)?
+        }
+    };
     println!(
         "dataset={} algo={} workers={} phase1_acc={:.4} final_acc={:.4} \
          steps={} mean_staleness={:.2} dropped={} time={}",
@@ -236,10 +266,123 @@ fn cmd_parallel(args: &Args) -> Result<()> {
         report.server_stats.dropped_entries,
         fmt_duration(report.phases.get("phase1") + report.phases.get("phase2"))
     );
+    if report.server_stats.nonfinite_rejected > 0 || report.coord_stats.stragglers_flagged > 0 {
+        println!(
+            "  guards: nonfinite_rejected={} stragglers_flagged={}",
+            report.server_stats.nonfinite_rejected, report.coord_stats.stragglers_flagged
+        );
+    }
     if let Some(path) = args.opt("save") {
         tsnn::model::checkpoint::save(&report.model, std::path::Path::new(path))?;
         println!("checkpoint written to {path}");
     }
+    Ok(())
+}
+
+/// Serve a parallel run over a socket, spawning `tsnn worker` child
+/// processes for every shard (DESIGN.md §12.5).
+fn run_parallel_multiprocess(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    spec: &DatasetSpec,
+    data: &tsnn::data::Dataset,
+    rng: &mut Rng,
+    addr_spec: &str,
+    args: &Args,
+) -> Result<ParallelReport> {
+    let addr = parse_addr(addr_spec)?;
+    let mut hub = SocketHub::bind(&addr)?;
+    // `tcp:HOST:0` binds an OS-assigned port; children must get the real one
+    let connect_addr = match (&addr, &hub.local_tcp) {
+        (Addr::Tcp(_), Some(actual)) => Addr::Tcp(actual.clone()),
+        _ => addr,
+    };
+    let budgets = worker_kernel_budgets(cfg, pcfg.workers);
+    let job_json = JobSpec::new(cfg, spec, pcfg, budgets).to_json();
+
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(pcfg.workers);
+    for k in 0..pcfg.workers {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--connect")
+            .arg(connect_addr.to_string())
+            .arg("--worker")
+            .arg(k.to_string());
+        if let Some(fault) = args.opt("fault") {
+            cmd.arg("--fault").arg(fault);
+        }
+        children.push(cmd.spawn().map_err(|e| {
+            TsnnError::Transport(format!("spawning worker {k}: {e}"))
+        })?);
+    }
+    log::info!("spawned {} worker processes on {connect_addr}", pcfg.workers);
+
+    let result = run_parallel_listener(
+        cfg,
+        pcfg,
+        data,
+        rng,
+        &mut hub,
+        Some(job_json),
+        &CoordinatorOptions::default(),
+    );
+    for (k, mut child) in children.into_iter().enumerate() {
+        match child.wait() {
+            Ok(status) if !status.success() => {
+                log::warn!("worker process {k} exited with {status}")
+            }
+            Err(e) => log::warn!("waiting on worker process {k}: {e}"),
+            _ => {}
+        }
+    }
+    result
+}
+
+/// Headless worker process: join a coordinator, receive the job spec,
+/// regenerate the dataset shard deterministically, and run the standard
+/// worker lifetime (phase-1 pushes, phase-2 replica).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .opt("connect")
+        .ok_or_else(|| TsnnError::Config("worker needs --connect ADDR".into()))?;
+    let worker: u32 = args.opt_parse("worker", u32::MAX)?;
+    if worker == u32::MAX {
+        return Err(TsnnError::Config("worker needs --worker K".into()));
+    }
+    let addr = parse_addr(connect)?;
+    let mut transport: Box<dyn Transport> = Box::new(SocketClient::connect(&addr)?);
+    if let Some(fault_spec) = args.opt("fault") {
+        let plan = FaultPlan::parse(fault_spec)?;
+        if plan.is_active() {
+            transport = Box::new(FaultyTransport::new(
+                transport,
+                plan,
+                std::sync::Arc::new(FaultCounters::default()),
+            ));
+        }
+    }
+    let mut client = Client::new(transport, worker, RetryPolicy::default());
+    let job_json = client.join()?.ok_or_else(|| {
+        TsnnError::Transport("coordinator sent no job spec at join".into())
+    })?;
+    let spec = JobSpec::from_json(&job_json)?;
+    let mut cfg = TrainConfig::default();
+    cfg.apply_file(&spec.config_kv)?;
+    // identical stream prefix to the coordinator's own generation call
+    let mut rng = Rng::new(cfg.seed);
+    let data = datasets::generate(&spec.dataset, &mut rng)?;
+    let kernel_threads = spec
+        .budgets
+        .get(worker as usize)
+        .copied()
+        .unwrap_or(1);
+    let job = WorkerJob::new(worker, kernel_threads, &cfg, &spec.pcfg);
+    let report = run_worker_joined(&mut client, &job, &data)?;
+    println!(
+        "worker={} pushes={} retries={} zeroed_nonfinite={}",
+        worker, report.pushes, report.retries, report.zeroed_nonfinite
+    );
     Ok(())
 }
 

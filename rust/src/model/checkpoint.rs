@@ -27,13 +27,50 @@ const VERSION: u32 = 1;
 /// is a few numbers per layer — 16 MiB is orders of magnitude of slack).
 const MAX_HEADER_BYTES: usize = 16 << 20;
 
-fn act_name(a: &Activation) -> String {
+pub(crate) fn act_name(a: &Activation) -> String {
     match a {
         Activation::Relu => "relu".into(),
         Activation::LeakyRelu { alpha } => format!("lrelu:{alpha}"),
         Activation::AllRelu { alpha } => format!("allrelu:{alpha}"),
         Activation::Linear => "linear".into(),
     }
+}
+
+// --- shared little-endian bulk-array writers -------------------------------
+//
+// The coordinator wire format (`coordinator/transport/wire.rs`) reuses these
+// so checkpoints and transport frames stay byte-compatible per array: f32 /
+// u32 / u64 little-endian, row_ptr widened to u64.
+
+pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn write_f32_slice(w: &mut impl Write, vs: &[f32]) -> Result<()> {
+    for &v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub(crate) fn write_u32_slice(w: &mut impl Write, vs: &[u32]) -> Result<()> {
+    for &v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub(crate) fn write_usize_slice_as_u64(w: &mut impl Write, vs: &[usize]) -> Result<()> {
+    for &v in vs {
+        w.write_all(&(v as u64).to_le_bytes())?;
+    }
+    Ok(())
 }
 
 /// Save a model to `path`.
@@ -68,44 +105,32 @@ pub fn save(mlp: &SparseMlp, path: &Path) -> Result<()> {
         ),
     ]);
     let hbytes = header.dump().into_bytes();
-    w.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+    write_u32(&mut w, hbytes.len() as u32)?;
     w.write_all(&hbytes)?;
 
     for layer in &mlp.layers {
-        for &p in &layer.weights.row_ptr {
-            w.write_all(&(p as u64).to_le_bytes())?;
-        }
-        for &c in &layer.weights.col_idx {
-            w.write_all(&c.to_le_bytes())?;
-        }
-        for &v in &layer.weights.values {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        for &b in &layer.bias {
-            w.write_all(&b.to_le_bytes())?;
-        }
-        for &v in &layer.velocity {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        for &v in &layer.bias_velocity {
-            w.write_all(&v.to_le_bytes())?;
-        }
+        write_usize_slice_as_u64(&mut w, &layer.weights.row_ptr)?;
+        write_u32_slice(&mut w, &layer.weights.col_idx)?;
+        write_f32_slice(&mut w, &layer.weights.values)?;
+        write_f32_slice(&mut w, &layer.bias)?;
+        write_f32_slice(&mut w, &layer.velocity)?;
+        write_f32_slice(&mut w, &layer.bias_velocity)?;
     }
     w.flush()?;
     Ok(())
 }
 
-fn read_exact4(r: &mut impl Read) -> Result<[u8; 4]> {
+pub(crate) fn read_exact4(r: &mut impl Read) -> Result<[u8; 4]> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(b)
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
+pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(read_exact4(r)?))
 }
 
-fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+pub(crate) fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf)?;
     Ok(buf
@@ -114,7 +139,7 @@ fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+pub(crate) fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf)?;
     Ok(buf
@@ -123,7 +148,7 @@ fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
         .collect())
 }
 
-fn read_u64_vec(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
+pub(crate) fn read_u64_vec(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
     let mut buf = vec![0u8; n * 8];
     r.read_exact(&mut buf)?;
     Ok(buf

@@ -22,8 +22,11 @@ pub enum WeightInit {
 }
 
 impl WeightInit {
-    /// Parse from a config string.
+    /// Parse from a config string (`normal:STD` sets an explicit std).
     pub fn parse(s: &str) -> Option<WeightInit> {
+        if let Some(std) = s.strip_prefix("normal:") {
+            return std.parse().ok().map(WeightInit::Normal);
+        }
         match s {
             "normal" => Some(WeightInit::Normal(0.05)),
             "xavier" => Some(WeightInit::Xavier),
@@ -237,6 +240,8 @@ mod tests {
     #[test]
     fn weight_init_parse() {
         assert_eq!(WeightInit::parse("normal"), Some(WeightInit::Normal(0.05)));
+        assert_eq!(WeightInit::parse("normal:0.1"), Some(WeightInit::Normal(0.1)));
+        assert_eq!(WeightInit::parse("normal:x"), None);
         assert_eq!(WeightInit::parse("xavier"), Some(WeightInit::Xavier));
         assert_eq!(WeightInit::parse("he_uniform"), Some(WeightInit::HeUniform));
         assert_eq!(WeightInit::parse("bogus"), None);

@@ -1,0 +1,494 @@
+//! Parity and protocol tests for the transport-based coordinator.
+//!
+//! The heart of this suite is bit-exactness: the channel-transport WASSP
+//! run must reproduce the pre-transport thread coordinator's float
+//! trajectory to the last bit, and a fault-injected run must reproduce
+//! the clean run (idempotent retries change traffic, never the applied
+//! update sequence). The remaining tests pin the protocol's elasticity
+//! and admission rules.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tsnn::config::TrainConfig;
+use tsnn::coordinator::transport::channel::ChannelHub;
+use tsnn::coordinator::transport::fault::{FaultCounters, FaultPlan};
+use tsnn::coordinator::transport::socket::{Addr, SocketClient, SocketHub};
+use tsnn::coordinator::transport::{Client, RetryPolicy, Transport};
+use tsnn::coordinator::{
+    clip_gradients, run_parallel, run_parallel_listener, run_parallel_opts, run_worker,
+    shard_bounds, worker_kernel_budgets, CoordinatorOptions, CoordinatorService, ParallelConfig,
+    ParallelOptions, ParameterServer, WorkerJob,
+};
+use tsnn::data::Dataset;
+use tsnn::model::{Batcher, SparseMlp, Workspace};
+use tsnn::nn::LrSchedule;
+use tsnn::prelude::Rng;
+
+/// Cleanly separable two-blob data (same construction as the coordinator
+/// unit tests): these tests pin machinery, not learning capacity.
+fn blob_data() -> Dataset {
+    let (n_train, n_test, nf) = (400usize, 160usize, 20usize);
+    let mut rng = Rng::new(1);
+    let gen = |n: usize, rng: &mut Rng| {
+        let mut x = vec![0.0f32; n * nf];
+        let mut y = vec![0u32; n];
+        for s in 0..n {
+            let c = (s % 2) as u32;
+            y[s] = c;
+            let shift = if c == 0 { -1.5 } else { 1.5 };
+            for f in 0..nf {
+                x[s * nf + f] = rng.normal() + if f < 6 { shift } else { 0.0 };
+            }
+        }
+        (x, y)
+    };
+    let (x_train, y_train) = gen(n_train, &mut rng);
+    let (x_test, y_test) = gen(n_test, &mut rng);
+    Dataset {
+        name: "blobs".into(),
+        n_features: nf,
+        n_classes: 2,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    }
+}
+
+fn quick_cfg() -> TrainConfig {
+    TrainConfig {
+        hidden: vec![32, 16],
+        epsilon: 8.0,
+        batch: 40,
+        dropout: 0.0,
+        epochs: 0, // unused by the parallel driver
+        lr: LrSchedule::Constant(0.05),
+        kernel_threads: 2,
+        ..TrainConfig::default()
+    }
+}
+
+/// A retry policy tight enough that injected faults resolve in tens of
+/// milliseconds instead of the production 2-second timeout.
+fn tight_retry() -> RetryPolicy {
+    RetryPolicy {
+        timeout: Duration::from_millis(50),
+        retries: 12,
+        backoff: 1.5,
+    }
+}
+
+fn assert_models_bit_equal(a: &SparseMlp, b: &SparseMlp, what: &str) {
+    assert_eq!(a.sizes, b.sizes, "{what}: sizes differ");
+    for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.weights, lb.weights, "{what}: layer {l} weights differ");
+        assert_eq!(la.bias, lb.bias, "{what}: layer {l} bias differs");
+        assert_eq!(la.velocity, lb.velocity, "{what}: layer {l} velocity differs");
+        assert_eq!(
+            la.bias_velocity, lb.bias_velocity,
+            "{what}: layer {l} bias velocity differs"
+        );
+    }
+}
+
+/// The pre-transport thread coordinator's WASSP phase 1, reimplemented
+/// against the public `ParameterServer` API: every step, all K workers
+/// compute a gradient on the same snapshot, the gradients are summed in
+/// worker order starting from worker 0's buffers, scaled by 1/K, clipped
+/// once, and applied with the server-epoch warmup learning rate. The
+/// transport run must reproduce this trajectory bit for bit.
+fn reference_wassp_phase1(
+    cfg: &TrainConfig,
+    pcfg: &ParallelConfig,
+    data: &Dataset,
+    seed: u64,
+) -> SparseMlp {
+    let mut rng = Rng::new(seed);
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let model = SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, &mut rng).unwrap();
+    let pushes_per_epoch = data.n_train().div_ceil(cfg.batch).max(1);
+    let ps = ParameterServer::new(
+        model,
+        cfg.optimizer,
+        cfg.evolution,
+        cfg.importance,
+        pushes_per_epoch,
+        cfg.seed,
+    );
+    let base = match cfg.lr {
+        LrSchedule::Constant(eta) => eta,
+        other => other.at(0),
+    };
+    let schedule = LrSchedule::Warmup {
+        base,
+        scale: (pcfg.workers as f32).max(1.0).min(4.0),
+        warmup_epochs: 5,
+    };
+    let budgets = worker_kernel_budgets(cfg, pcfg.workers);
+    let mut states: Vec<(Rng, Batcher, Workspace)> = (0..pcfg.workers)
+        .map(|w| {
+            let mut wrng = Rng::new(cfg.seed).split(w as u64);
+            let (lo, hi) = shard_bounds(data.n_train(), pcfg.workers, w);
+            let mut b = Batcher::shard(data.n_train(), data.n_features, cfg.batch, lo, hi);
+            b.reset(&mut wrng);
+            (wrng, b, Workspace::with_threads(budgets[w]))
+        })
+        .collect();
+
+    for _ in 0..pcfg.phase1_epochs * pushes_per_epoch {
+        let snap = ps.fetch();
+        let mut grads: Vec<(Vec<Vec<f32>>, Vec<Vec<f32>>)> = Vec::with_capacity(pcfg.workers);
+        for (wrng, batcher, ws) in states.iter_mut() {
+            let batch = match batcher.next_batch(&data.x_train, &data.y_train) {
+                Some(b) => b,
+                None => {
+                    batcher.reset(wrng);
+                    batcher.next_batch(&data.x_train, &data.y_train).unwrap()
+                }
+            };
+            snap.model.compute_gradients(batch.0, batch.1, None, ws, wrng);
+            grads.push((ws.grad_w.clone(), ws.grad_b.clone()));
+        }
+        let mut it = grads.into_iter();
+        let (mut agg_w, mut agg_b) = it.next().unwrap();
+        for (gw, gb) in it {
+            for (a, g) in agg_w.iter_mut().zip(gw.iter()) {
+                for (x, y) in a.iter_mut().zip(g.iter()) {
+                    *x += y;
+                }
+            }
+            for (a, g) in agg_b.iter_mut().zip(gb.iter()) {
+                for (x, y) in a.iter_mut().zip(g.iter()) {
+                    *x += y;
+                }
+            }
+        }
+        let inv_k = 1.0f32 / pcfg.workers as f32;
+        for a in agg_w.iter_mut().flat_map(|v| v.iter_mut()) {
+            *a *= inv_k;
+        }
+        for a in agg_b.iter_mut().flat_map(|v| v.iter_mut()) {
+            *a *= inv_k;
+        }
+        clip_gradients(&mut agg_w, &mut agg_b, pcfg.grad_clip);
+        let lr = schedule.at(ps.epoch());
+        ps.apply_aligned(&agg_w, &agg_b, lr).unwrap();
+    }
+    ps.finish().0
+}
+
+/// Tentpole acceptance: WASSP over the channel transport reproduces the
+/// thread coordinator bit for bit — with SET evolution on, so the run
+/// crosses topology generations and exercises both the values-only delta
+/// (same gen) and full-model (gen bump) snapshot paths.
+#[test]
+fn wassp_channel_is_bit_exact_with_thread_reference() {
+    let cfg = quick_cfg(); // evolution stays on (TrainConfig::default)
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 2,
+        phase1_epochs: 3,
+        phase2_epochs: 0,
+        synchronous: true,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let reference = reference_wassp_phase1(&cfg, &pcfg, &data, 21);
+    let report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(21)).unwrap();
+    assert_models_bit_equal(&reference, &report.model, "wassp channel vs thread reference");
+    assert_eq!(report.server_stats.epochs, 3);
+    assert_eq!(report.coord_stats.joins, 2);
+    assert_eq!(report.coord_stats.leaves, 2);
+    // gen bumps happened, so both snapshot flavours were served
+    assert!(report.coord_stats.full_snapshots > 0);
+    assert!(report.coord_stats.delta_snapshots > 0);
+}
+
+/// Fault-injection parity: with one worker, a run under deterministic
+/// drops / duplicates / reorders / truncations / lost replies applies the
+/// exact same update sequence as a clean run — the seq/reply cache makes
+/// every retransmit idempotent.
+#[test]
+fn wasap_fault_injection_is_bit_exact_for_one_worker() {
+    let cfg = quick_cfg();
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 1,
+        phase1_epochs: 3,
+        phase2_epochs: 0,
+        synchronous: false,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let clean = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(9)).unwrap();
+
+    let counters = Arc::new(FaultCounters::default());
+    let opts = ParallelOptions {
+        coord: CoordinatorOptions {
+            retry: tight_retry(),
+            ..CoordinatorOptions::default()
+        },
+        fault: FaultPlan {
+            drop_every: 7,
+            dup_every: 5,
+            delay_every: 4,
+            truncate_every: 9,
+            drop_reply_every: 6,
+        },
+        fault_counters: Some(Arc::clone(&counters)),
+    };
+    let faulty = run_parallel_opts(&cfg, &pcfg, &data, &mut Rng::new(9), &opts).unwrap();
+
+    assert!(counters.total() > 0, "no faults fired — plan misconfigured");
+    assert!(
+        faulty.coord_stats.dup_requests > 0,
+        "faults fired but no retransmit was deduplicated"
+    );
+    assert_eq!(clean.server_stats.steps, faulty.server_stats.steps);
+    assert_models_bit_equal(&clean.model, &faulty.model, "faulty vs clean wasap");
+}
+
+/// Multi-worker WASAP under sustained fault injection still completes and
+/// learns: the protocol survives lost frames in both directions at K > 1.
+#[test]
+fn wasap_multiworker_survives_faults_and_learns() {
+    let cfg = TrainConfig {
+        evolution: None, // keep the short run's convergence reliable
+        ..quick_cfg()
+    };
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 3,
+        phase1_epochs: 15,
+        phase2_epochs: 2,
+        synchronous: false,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let counters = Arc::new(FaultCounters::default());
+    let opts = ParallelOptions {
+        coord: CoordinatorOptions {
+            retry: tight_retry(),
+            ..CoordinatorOptions::default()
+        },
+        fault: FaultPlan {
+            drop_every: 13,
+            dup_every: 11,
+            delay_every: 8,
+            truncate_every: 17,
+            drop_reply_every: 15,
+        },
+        fault_counters: Some(Arc::clone(&counters)),
+    };
+    let report = run_parallel_opts(&cfg, &pcfg, &data, &mut Rng::new(5), &opts).unwrap();
+    assert!(counters.total() > 0);
+    assert!(report.server_stats.steps > 0);
+    assert!(
+        report.final_test_accuracy > 0.55,
+        "accuracy {} under faults",
+        report.final_test_accuracy
+    );
+}
+
+/// Elasticity: workers that leave after a budget of pushes end the run
+/// early (no configured-epoch wait), and every applied push is counted.
+#[test]
+fn elastic_workers_leave_early_and_the_run_still_finishes() {
+    let cfg = TrainConfig {
+        evolution: None, // gen never bumps, so every push is applied
+        ..quick_cfg()
+    };
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 2,
+        phase1_epochs: 50, // far more than the workers will serve
+        phase2_epochs: 0,
+        synchronous: false,
+        hot_start: false,
+        grad_clip: 5.0,
+    };
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let model =
+        SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, &mut Rng::new(3)).unwrap();
+    let service = CoordinatorService::new(
+        &cfg,
+        &pcfg,
+        model,
+        data.n_train(),
+        None,
+        &CoordinatorOptions::default(),
+    );
+    let (hub, connector) = ChannelHub::new();
+    let data_ref = &data;
+    let outcome = std::thread::scope(|scope| {
+        let coord = scope.spawn(move || {
+            let mut hub = hub;
+            service.run(&mut hub)
+        });
+        let mut handles = Vec::new();
+        for k in 0..2u32 {
+            let mut job = WorkerJob::new(k, 1, &cfg, &pcfg);
+            job.max_phase1_pushes = Some(6);
+            job.skip_phase2 = true;
+            let t: Box<dyn Transport> = Box::new(connector.connect());
+            let retry = RetryPolicy::default();
+            handles.push(scope.spawn(move || run_worker(t, retry, &job, data_ref)));
+        }
+        drop(connector);
+        for h in handles {
+            let report = h.join().unwrap().unwrap();
+            assert_eq!(report.pushes, 6);
+        }
+        coord.join().unwrap().unwrap()
+    });
+    assert_eq!(outcome.server_stats.steps, 12); // 2 workers × 6 pushes
+    assert_eq!(outcome.coord.joins, 2);
+    assert_eq!(outcome.coord.leaves, 2);
+    // the elastic run finished phase 1 with what was applied
+    assert!(outcome.server_stats.epochs < pcfg.phase1_epochs);
+}
+
+/// Admission control: out-of-range worker ids and duplicate ids of an
+/// active worker are refused at join; the run still completes cleanly
+/// once the legitimately-joined worker leaves.
+#[test]
+fn join_rejects_bad_and_duplicate_worker_ids() {
+    let cfg = quick_cfg();
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 1,
+        phase1_epochs: 1,
+        phase2_epochs: 0,
+        synchronous: false,
+        hot_start: false,
+        grad_clip: 5.0,
+    };
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let model =
+        SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, &mut Rng::new(4)).unwrap();
+    let service = CoordinatorService::new(
+        &cfg,
+        &pcfg,
+        model,
+        data.n_train(),
+        None,
+        &CoordinatorOptions::default(),
+    );
+    let (hub, connector) = ChannelHub::new();
+    let outcome = std::thread::scope(|scope| {
+        let coord = scope.spawn(move || {
+            let mut hub = hub;
+            service.run(&mut hub)
+        });
+        let mut a = Client::new(Box::new(connector.connect()), 0, RetryPolicy::default());
+        assert!(a.join().is_ok());
+        // same id while worker 0 is active: refused
+        let mut dup = Client::new(Box::new(connector.connect()), 0, RetryPolicy::default());
+        assert!(dup.join().is_err());
+        // id beyond the shard count: refused
+        let mut oor = Client::new(Box::new(connector.connect()), 5, RetryPolicy::default());
+        assert!(oor.join().is_err());
+        a.leave().unwrap();
+        drop(connector);
+        coord.join().unwrap().unwrap()
+    });
+    assert_eq!(outcome.coord.joins, 1);
+    assert_eq!(outcome.coord.leaves, 1);
+    assert_eq!(outcome.server_stats.steps, 0);
+}
+
+/// The socket transport and the channel transport run the same protocol:
+/// a synchronous 2-worker run over a real TCP loopback socket (workers in
+/// threads driving `SocketClient`s, coordinator on a `SocketHub`) lands
+/// on the same final model, bit for bit, as the in-process channel run —
+/// including phase-2 replica upload and union-averaging.
+#[test]
+fn wassp_over_tcp_socket_matches_channel() {
+    let cfg = quick_cfg();
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 2,
+        phase1_epochs: 2,
+        phase2_epochs: 1,
+        synchronous: true,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let channel_report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(77)).unwrap();
+
+    let mut hub = SocketHub::bind(&Addr::Tcp("127.0.0.1:0".into())).unwrap();
+    let connect = Addr::Tcp(hub.local_tcp.clone().expect("tcp bind reports its port"));
+    let budgets = worker_kernel_budgets(&cfg, pcfg.workers);
+    let data_ref = &data;
+    let socket_report = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for k in 0..pcfg.workers {
+            let job = WorkerJob::new(k as u32, budgets[k], &cfg, &pcfg);
+            let connect = connect.clone();
+            handles.push(scope.spawn(move || {
+                let client = SocketClient::connect(&connect).unwrap();
+                run_worker(Box::new(client), RetryPolicy::default(), &job, data_ref)
+            }));
+        }
+        let report = run_parallel_listener(
+            &cfg,
+            &pcfg,
+            &data,
+            &mut Rng::new(77),
+            &mut hub,
+            None,
+            &CoordinatorOptions::default(),
+        );
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        report
+    })
+    .unwrap();
+
+    assert_models_bit_equal(&channel_report.model, &socket_report.model, "socket vs channel");
+    assert_eq!(
+        channel_report.server_stats.steps,
+        socket_report.server_stats.steps
+    );
+}
+
+/// Satellite 1 regression: a non-finite gradient norm zeroes the buffers
+/// (even with clipping off) instead of silently skipping the scale and
+/// letting NaNs through; finite gradients behave as before.
+#[test]
+fn clip_gradients_zeroes_nonfinite_and_scales_finite() {
+    // over the clip: scaled down to the clip norm
+    let mut gw = vec![vec![3.0f32, 4.0]];
+    let mut gb = vec![vec![0.0f32]];
+    assert!(!clip_gradients(&mut gw, &mut gb, 2.5));
+    let norm = gw
+        .iter()
+        .chain(gb.iter())
+        .flat_map(|v| v.iter())
+        .map(|x| x * x)
+        .sum::<f32>()
+        .sqrt();
+    assert!((norm - 2.5).abs() < 1e-5, "clipped norm {norm}");
+
+    // under the clip: untouched
+    let mut gw = vec![vec![0.5f32]];
+    let mut gb = vec![vec![0.5f32]];
+    assert!(!clip_gradients(&mut gw, &mut gb, 5.0));
+    assert_eq!(gw[0][0], 0.5);
+    assert_eq!(gb[0][0], 0.5);
+
+    // NaN with clipping OFF: the old code forwarded it; now it zeroes
+    let mut gw = vec![vec![1.0f32, f32::NAN]];
+    let mut gb = vec![vec![2.0f32]];
+    assert!(clip_gradients(&mut gw, &mut gb, 0.0));
+    assert!(gw[0].iter().all(|&x| x == 0.0));
+    assert!(gb[0].iter().all(|&x| x == 0.0));
+
+    // Inf with clipping on: same zeroing path
+    let mut gw = vec![vec![1.0f32, f32::INFINITY]];
+    let mut gb = vec![vec![0.0f32]];
+    assert!(clip_gradients(&mut gw, &mut gb, 5.0));
+    assert!(gw[0].iter().all(|&x| x == 0.0));
+}

@@ -1,0 +1,236 @@
+//! Adversarial decode tests for the transport wire format: every
+//! truncation, corruption, and implausible-length input must come back
+//! as a typed `TsnnError` — never a panic, never an unbounded
+//! allocation. (A panicking decode would let one corrupt frame kill the
+//! coordinator; an unguarded length would let a 25-byte frame OOM it.)
+
+use tsnn::coordinator::transport::wire::{
+    decode_frame, decode_header, encode_frame, FetchAck, Message, ModelDelta, PushMsg,
+    HEADER_BYTES, MAX_PAYLOAD_BYTES, NONE_U64,
+};
+use tsnn::model::SparseMlp;
+use tsnn::nn::Activation;
+use tsnn::prelude::Rng;
+use tsnn::sparse::WeightInit;
+
+fn tiny_model(seed: u64) -> SparseMlp {
+    SparseMlp::new(
+        &[12, 16, 4],
+        6.0,
+        Activation::AllRelu { alpha: 0.6 },
+        &WeightInit::HeUniform,
+        &mut Rng::new(seed),
+    )
+    .unwrap()
+}
+
+fn assert_models_equal(a: &SparseMlp, b: &SparseMlp) {
+    assert_eq!(a.sizes, b.sizes);
+    for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+        assert_eq!(la.weights, lb.weights, "weights differ");
+        assert_eq!(la.bias, lb.bias, "bias differs");
+        assert_eq!(la.velocity, lb.velocity, "velocity differs");
+        assert_eq!(la.bias_velocity, lb.bias_velocity, "bias velocity differs");
+    }
+}
+
+/// Representative frames of every payload-bearing message kind.
+fn sample_frames() -> Vec<Vec<u8>> {
+    let model = tiny_model(11);
+    let grad_w: Vec<Vec<f32>> = model
+        .layers
+        .iter()
+        .map(|l| (0..l.weights.nnz()).map(|i| i as f32 * 0.25 - 1.0).collect())
+        .collect();
+    let grad_b: Vec<Vec<f32>> = model
+        .layers
+        .iter()
+        .map(|l| (0..l.bias.len()).map(|i| -(i as f32) * 0.5).collect())
+        .collect();
+    vec![
+        encode_frame(0, 1, &Message::Join),
+        encode_frame(0, 2, &Message::JoinAck { job: Some("{\"k\":1}".into()) }),
+        encode_frame(1, 3, &Message::Fetch { have_gen: 7, have_step: NONE_U64 }),
+        encode_frame(
+            1,
+            4,
+            &Message::FetchAck(FetchAck {
+                phase2: false,
+                gen: 7,
+                step: 42,
+                epoch: 3,
+                delta: ModelDelta::Values {
+                    values: grad_w.clone(),
+                    bias: grad_b.clone(),
+                },
+            }),
+        ),
+        encode_frame(
+            2,
+            5,
+            &Message::FetchAck(FetchAck {
+                phase2: true,
+                gen: 0,
+                step: 0,
+                epoch: 20,
+                delta: ModelDelta::Full {
+                    model: model.clone(),
+                    velocity: true,
+                },
+            }),
+        ),
+        encode_frame(
+            2,
+            6,
+            &Message::Push(PushMsg {
+                gen: 7,
+                fetched_step: 42,
+                lr: 0.05,
+                sync: false,
+                grad_w,
+                grad_b,
+            }),
+        ),
+        encode_frame(3, 7, &Message::Replica { model }),
+        encode_frame(3, 8, &Message::Err { message: "worker 3 out of range".into() }),
+    ]
+}
+
+#[test]
+fn every_sample_frame_roundtrips() {
+    for frame in sample_frames() {
+        let (h, msg) = decode_frame(&frame).unwrap();
+        let re = encode_frame(h.worker, h.seq, &msg);
+        assert_eq!(re, frame, "re-encode of {msg:?} is not canonical");
+    }
+}
+
+#[test]
+fn full_model_with_velocity_roundtrips_bit_exact() {
+    let model = tiny_model(23);
+    let frame = encode_frame(
+        0,
+        9,
+        &Message::FetchAck(FetchAck {
+            phase2: true,
+            gen: 3,
+            step: 100,
+            epoch: 9,
+            delta: ModelDelta::Full { model: model.clone(), velocity: true },
+        }),
+    );
+    let (_, msg) = decode_frame(&frame).unwrap();
+    match msg {
+        Message::FetchAck(FetchAck { delta: ModelDelta::Full { model: got, .. }, .. }) => {
+            assert_models_equal(&model, &got)
+        }
+        other => panic!("wrong decode: {other:?}"),
+    }
+}
+
+/// Truncate every sample frame at EVERY byte boundary. The raw prefix
+/// must fail (payload length no longer matches the header), and the
+/// header-patched prefix (length field rewritten to match, so the decoder
+/// walks into the cut payload) must fail too — at every single offset.
+#[test]
+fn truncation_at_every_byte_boundary_is_a_typed_error() {
+    for frame in sample_frames() {
+        for cut in 0..frame.len() {
+            let prefix = &frame[..cut];
+            assert!(
+                decode_frame(prefix).is_err(),
+                "raw truncation at {cut}/{} decoded",
+                frame.len()
+            );
+            if cut >= HEADER_BYTES {
+                let mut patched = prefix.to_vec();
+                let plen = (cut - HEADER_BYTES) as u32;
+                patched[21..25].copy_from_slice(&plen.to_le_bytes());
+                // either a decode error or a valid shorter message whose
+                // canonical encoding is itself — never a panic; for these
+                // payloads every strict prefix is malformed
+                assert!(
+                    decode_frame(&patched).is_err(),
+                    "patched truncation at {cut}/{} decoded",
+                    frame.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn garbage_magic_and_version_are_rejected() {
+    let frame = encode_frame(0, 1, &Message::Join);
+    for b in 0..4 {
+        let mut bad = frame.clone();
+        bad[b] ^= 0xff;
+        assert!(decode_header(&bad).is_err(), "magic byte {b} accepted");
+        assert!(decode_frame(&bad).is_err());
+    }
+    let mut bad_version = frame.clone();
+    bad_version[4..8].copy_from_slice(&999u32.to_le_bytes());
+    assert!(decode_header(&bad_version).is_err());
+    let mut bad_kind = frame;
+    bad_kind[8] = 0xee;
+    assert!(decode_header(&bad_kind).is_err());
+}
+
+#[test]
+fn implausible_lengths_fail_fast_without_allocating() {
+    // header claims a payload beyond the global cap: rejected from the
+    // header alone, before any payload buffer exists
+    let mut huge = encode_frame(0, 1, &Message::Join);
+    huge[21..25].copy_from_slice(&((MAX_PAYLOAD_BYTES as u32) + 1).to_le_bytes());
+    assert!(decode_header(&huge).is_err());
+
+    // a Push whose per-layer nnz claims u64::MAX: the element count is
+    // validated against the bytes actually present before the Vec is
+    // sized, so this returns an error instantly instead of OOMing
+    let model = tiny_model(5);
+    let grads: Vec<Vec<f32>> = model.layers.iter().map(|l| vec![0.5; l.weights.nnz()]).collect();
+    let biases: Vec<Vec<f32>> = model.layers.iter().map(|l| vec![0.1; l.bias.len()]).collect();
+    let mut frame = encode_frame(
+        0,
+        2,
+        &Message::Push(PushMsg {
+            gen: 0,
+            fetched_step: 0,
+            lr: 0.01,
+            sync: false,
+            grad_w: grads,
+            grad_b: biases,
+        }),
+    );
+    // payload layout: gen u64 | fetched_step u64 | lr f32 | sync u8 | n_layers u32 | nnz u64 ...
+    let nnz_at = HEADER_BYTES + 8 + 8 + 4 + 1 + 4;
+    frame[nnz_at..nnz_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(decode_frame(&frame).is_err());
+}
+
+/// Random byte corruption must never panic (it may decode, since some
+/// bytes are free-form f32 payload — the invariant is totality, not
+/// rejection).
+#[test]
+fn single_byte_corruption_never_panics() {
+    for frame in sample_frames() {
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x55;
+            let _ = decode_frame(&bad); // must return, Ok or Err
+        }
+    }
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    let mut frame = encode_frame(0, 1, &Message::Fetch { have_gen: 0, have_step: 3 });
+    frame.push(0);
+    // payload longer than the header claims
+    assert!(decode_frame(&frame).is_err());
+    // header patched to cover the junk byte: now the payload itself is
+    // too long for the message
+    let plen = (frame.len() - HEADER_BYTES) as u32;
+    frame[21..25].copy_from_slice(&plen.to_le_bytes());
+    assert!(decode_frame(&frame).is_err());
+}
