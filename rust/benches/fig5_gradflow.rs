@@ -54,6 +54,7 @@ fn main() {
                 TrainOptions {
                     gradflow_every: every,
                     verbose: false,
+                    ..Default::default()
                 },
             )
             .expect("train");

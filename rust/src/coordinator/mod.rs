@@ -17,6 +17,7 @@
 
 pub mod average;
 pub mod server;
+pub mod supervisor;
 pub mod transport;
 
 use std::sync::Arc;
@@ -29,7 +30,9 @@ use crate::util::{PhaseTimes, Rng};
 
 pub use average::average_and_resparsify;
 pub use server::{ParameterServer, ServerStats, Snapshot, SparseGradient};
-pub use transport::service::{CoordStats, CoordinatorOptions, CoordinatorService};
+pub use transport::service::{
+    CoordStats, CoordinatorOptions, CoordinatorService, SupervisionPolicy,
+};
 pub use transport::worker::{run_worker, WorkerJob, WorkerReport};
 
 use transport::channel::ChannelHub;

@@ -1,0 +1,303 @@
+//! Child-process supervision for multi-process parallel runs
+//! (DESIGN.md §13.3).
+//!
+//! A [`Supervisor`] owns one slot per worker shard, spawns the initial
+//! `tsnn worker` process for each, and monitors them from a background
+//! thread. A child that exits *cleanly* (status 0) finished its worker
+//! lifetime and is left alone; a child that dies any other way (crash,
+//! SIGKILL, panic) is respawned after an exponentially-backed-off delay,
+//! up to a bounded per-slot restart budget. The respawned process goes
+//! through the ordinary join path and is re-admitted by the coordinator's
+//! supervision state machine with a resume cursor, so the applied-update
+//! trajectory is preserved (pinned by `tests/chaos.rs`).
+//!
+//! The supervisor is deliberately transport-agnostic: it knows how to
+//! *spawn* a worker (a caller-supplied closure) and nothing about the
+//! protocol. Crash detection on the coordinator side rides the existing
+//! connection-close / heartbeat machinery.
+
+use std::process::Child;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, TsnnError};
+
+/// Bounded-restart policy with exponential backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartPolicy {
+    /// Respawn budget per worker slot; exceeding it abandons the slot
+    /// (the coordinator's rejoin grace then decides the run's fate).
+    pub max_restarts: usize,
+    /// Delay before the first respawn of a slot.
+    pub backoff: Duration,
+    /// Delay multiplier for successive respawns of the same slot.
+    pub factor: f64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 3,
+            backoff: Duration::from_millis(200),
+            factor: 2.0,
+        }
+    }
+}
+
+/// What one slot's lifetime looked like.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotReport {
+    /// Respawns performed.
+    pub restarts: usize,
+    /// `true` once the slot's process exited with status 0.
+    pub clean_exit: bool,
+    /// `true` if the restart budget ran out with the process still dead.
+    pub abandoned: bool,
+}
+
+struct Slot {
+    worker: u32,
+    child: Option<Child>,
+    restarts: usize,
+    /// When a pending respawn fires (backoff in progress).
+    respawn_at: Option<Instant>,
+    clean_exit: bool,
+    abandoned: bool,
+}
+
+/// Spawns a worker process for slot `k`. Must be cheap to call again —
+/// respawns reuse it verbatim.
+pub type SpawnFn = dyn Fn(u32) -> std::io::Result<Child> + Send + 'static;
+
+/// Handle to the monitor thread. Call [`Supervisor::finish`] after the
+/// coordinator run returns.
+pub struct Supervisor {
+    shutdown: Arc<AtomicBool>,
+    slots: Arc<Mutex<Vec<Slot>>>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn the initial process for every slot and start monitoring.
+    pub fn start(
+        workers: usize,
+        policy: RestartPolicy,
+        spawn: Box<SpawnFn>,
+    ) -> Result<Supervisor> {
+        let mut slots = Vec::with_capacity(workers);
+        for k in 0..workers {
+            let child = spawn(k as u32).map_err(|e| {
+                TsnnError::Transport(format!("spawning worker {k}: {e}"))
+            })?;
+            slots.push(Slot {
+                worker: k as u32,
+                child: Some(child),
+                restarts: 0,
+                respawn_at: None,
+                clean_exit: false,
+                abandoned: false,
+            });
+        }
+        let slots = Arc::new(Mutex::new(slots));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let monitor = {
+            let slots = Arc::clone(&slots);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                while !shutdown.load(Ordering::Relaxed) {
+                    sweep(&slots, &policy, spawn.as_ref());
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            })
+        };
+        Ok(Supervisor {
+            shutdown,
+            slots,
+            monitor: Some(monitor),
+        })
+    }
+
+    /// Stop respawning, reap every remaining child (killing any that
+    /// outlive `grace` — after a successful run they exit on their own),
+    /// and report per-slot restart activity.
+    pub fn finish(mut self, grace: Duration) -> Vec<SlotReport> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        let mut slots = self.slots.lock().expect("supervisor mutex");
+        let deadline = Instant::now() + grace;
+        for slot in slots.iter_mut() {
+            let Some(child) = slot.child.as_mut() else {
+                continue;
+            };
+            loop {
+                match child.try_wait() {
+                    Ok(Some(status)) => {
+                        slot.clean_exit = status.success();
+                        break;
+                    }
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        log::warn!("killing worker process {}", slot.worker);
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+            slot.child = None;
+        }
+        slots
+            .iter()
+            .map(|s| SlotReport {
+                restarts: s.restarts,
+                clean_exit: s.clean_exit,
+                abandoned: s.abandoned,
+            })
+            .collect()
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        // leave children to the caller's finish(); on a panic path, kill
+        // them so a failed run never leaks worker processes
+        if let Ok(mut slots) = self.slots.lock() {
+            for slot in slots.iter_mut() {
+                if let Some(mut child) = slot.child.take() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+        }
+    }
+}
+
+/// One monitor pass: reap exits, schedule and fire respawns.
+fn sweep(slots: &Mutex<Vec<Slot>>, policy: &RestartPolicy, spawn: &SpawnFn) {
+    let mut slots = slots.lock().expect("supervisor mutex");
+    let now = Instant::now();
+    for slot in slots.iter_mut() {
+        // fire a due respawn
+        if slot.respawn_at.is_some_and(|t| now >= t) {
+            slot.respawn_at = None;
+            match spawn(slot.worker) {
+                Ok(child) => {
+                    slot.restarts += 1;
+                    log::warn!(
+                        "respawned worker {} (restart {}/{})",
+                        slot.worker,
+                        slot.restarts,
+                        policy.max_restarts
+                    );
+                    slot.child = Some(child);
+                }
+                Err(e) => {
+                    log::warn!("respawn of worker {} failed: {e}", slot.worker);
+                    slot.abandoned = true;
+                }
+            }
+            continue;
+        }
+        let Some(child) = slot.child.as_mut() else {
+            continue;
+        };
+        match child.try_wait() {
+            Ok(Some(status)) if status.success() => {
+                // worker lifetime complete: never respawn a clean exit
+                slot.clean_exit = true;
+                slot.child = None;
+            }
+            Ok(Some(status)) => {
+                slot.child = None;
+                if slot.restarts >= policy.max_restarts {
+                    log::warn!(
+                        "worker {} died ({status}) with restart budget exhausted",
+                        slot.worker
+                    );
+                    slot.abandoned = true;
+                } else {
+                    let delay = policy
+                        .backoff
+                        .mul_f64(policy.factor.powi(slot.restarts as i32));
+                    log::warn!(
+                        "worker {} died ({status}); respawn in {delay:?}",
+                        slot.worker
+                    );
+                    slot.respawn_at = Some(now + delay);
+                }
+            }
+            Ok(None) => {}  // still running
+            Err(e) => log::warn!("polling worker {}: {e}", slot.worker),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_sleep(secs: &str) -> std::io::Result<Child> {
+        std::process::Command::new("sleep").arg(secs).spawn()
+    }
+
+    #[test]
+    fn clean_exits_are_not_respawned() {
+        let sup = Supervisor::start(
+            2,
+            RestartPolicy::default(),
+            Box::new(|_| spawn_sleep("0")),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        let reports = sup.finish(Duration::from_secs(2));
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.restarts, 0, "clean exit must not trigger a respawn");
+            assert!(r.clean_exit);
+            assert!(!r.abandoned);
+        }
+    }
+
+    #[test]
+    fn crashes_are_respawned_within_budget() {
+        // `false` exits 1 immediately: every death burns one restart
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            backoff: Duration::from_millis(10),
+            factor: 2.0,
+        };
+        let sup = Supervisor::start(
+            1,
+            policy,
+            Box::new(|_| std::process::Command::new("false").spawn()),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(800));
+        let reports = sup.finish(Duration::from_secs(2));
+        assert_eq!(reports[0].restarts, 2, "budget of 2 must be fully used");
+        assert!(reports[0].abandoned, "budget exhaustion abandons the slot");
+    }
+
+    #[test]
+    fn finish_kills_stragglers_after_grace() {
+        let sup = Supervisor::start(
+            1,
+            RestartPolicy::default(),
+            Box::new(|_| spawn_sleep("600")),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let reports = sup.finish(Duration::from_millis(100));
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        assert!(!reports[0].clean_exit);
+    }
+}

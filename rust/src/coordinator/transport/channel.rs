@@ -152,7 +152,15 @@ mod tests {
             Inbound::Frame(f) => assert_eq!(f, frame),
             Inbound::Closed => panic!("unexpected close"),
         }
-        let reply = encode_frame(0, 1, &Message::JoinAck { job: None });
+        let reply = encode_frame(
+            0,
+            1,
+            &Message::JoinAck {
+                job: None,
+                resume_pushes: 0,
+                resume_step: u64::MAX,
+            },
+        );
         hub.send(conn, &reply).unwrap();
         assert_eq!(a.recv(Duration::from_secs(1)).unwrap().unwrap(), reply);
 

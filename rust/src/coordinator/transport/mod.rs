@@ -162,11 +162,30 @@ impl Client {
         )))
     }
 
-    /// Join the run; returns the coordinator's job spec, if any.
-    pub fn join(&mut self) -> Result<Option<String>> {
+    /// Join the run; returns the coordinator's join reply: the job spec
+    /// (if any) plus the rejoin cursor (`resume_pushes`, `resume_step`)
+    /// a respawned worker needs to fast-forward its streams.
+    pub fn join(&mut self) -> Result<JoinReply> {
         match self.request(&Message::Join)? {
-            Message::JoinAck { job } => Ok(job),
+            Message::JoinAck {
+                job,
+                resume_pushes,
+                resume_step,
+            } => Ok(JoinReply {
+                job,
+                resume_pushes,
+                resume_step,
+            }),
             other => Err(unexpected("JoinAck", &other)),
+        }
+    }
+
+    /// Liveness heartbeat (phase-2 workers, which otherwise go silent
+    /// while training locally).
+    pub fn ping(&mut self) -> Result<()> {
+        match self.request(&Message::Ping)? {
+            Message::Pong => Ok(()),
+            other => Err(unexpected("Pong", &other)),
         }
     }
 
@@ -207,6 +226,19 @@ impl Client {
 
 fn unexpected(want: &str, got: &Message) -> TsnnError {
     TsnnError::Transport(format!("expected {want}, got {got:?}"))
+}
+
+/// Decoded `JoinAck`: the job spec plus the rejoin cursor.
+#[derive(Debug, Clone)]
+pub struct JoinReply {
+    /// JSON job spec for external workers (`None` in-process).
+    pub job: Option<String>,
+    /// Phase-1 batches already applied under this worker id (0 on a
+    /// first join) — the fast-forward count for a respawned worker.
+    pub resume_pushes: u64,
+    /// Step a parked synchronous contribution is waiting at
+    /// ([`wire::NONE_U64`] = none).
+    pub resume_step: u64,
 }
 
 /// Everything an external worker process needs to reproduce its shard of

@@ -19,6 +19,13 @@
 //!   tracked; a worker whose silence exceeds `factor ×` its median gap
 //!   is flagged and logged. Observability only: WASAP tolerates
 //!   stragglers by design (RetainValidUpdates), so no action is taken.
+//! * **Supervision** (opt-in, DESIGN.md §13.3) — escalates detection to
+//!   action: a vanished or long-silent worker is held in an
+//!   awaiting-rejoin set instead of shrinking the run; the WASSP barrier
+//!   waits for held workers; a rejoining worker gets a resume cursor
+//!   (its counted pushes + any parked sync step) so a supervisor-
+//!   respawned process fast-forwards onto the exact trajectory; rejoin
+//!   grace expiry abandons the worker, aborting only on lost quorum.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::Arc;
@@ -50,6 +57,12 @@ pub struct CoordinatorOptions {
     pub idle_timeout: Duration,
     /// Flag a worker whose push gap exceeds `factor ×` its median gap.
     pub straggler_factor: f64,
+    /// Worker supervision (DESIGN.md §13.3). `None` keeps the PR 7
+    /// elastic semantics: a vanished worker is an implicit leave and the
+    /// run shrinks around it. `Some` escalates detection to action:
+    /// vanished workers are held for rejoin, the WASSP barrier waits for
+    /// them, and losing quorum aborts the run.
+    pub supervision: Option<SupervisionPolicy>,
 }
 
 impl Default for CoordinatorOptions {
@@ -58,6 +71,33 @@ impl Default for CoordinatorOptions {
             retry: RetryPolicy::default(),
             idle_timeout: Duration::from_secs(600),
             straggler_factor: 10.0,
+            supervision: None,
+        }
+    }
+}
+
+/// Supervision parameters (DESIGN.md §13.3).
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisionPolicy {
+    /// An active worker silent for this long (no request of any kind,
+    /// and no parked fetch waiting on the server) is presumed dead and
+    /// moved to the awaiting-rejoin set.
+    pub dead_after: Duration,
+    /// How long a vanished worker may stay awaiting rejoin before the
+    /// run abandons it and continues below full strength.
+    pub rejoin_grace: Duration,
+    /// Quorum: abandoning a worker aborts the run if fewer than this
+    /// many workers remain (active + awaiting). Clean leaves never
+    /// trigger the quorum rule — elasticity is still a feature.
+    pub min_active: usize,
+}
+
+impl Default for SupervisionPolicy {
+    fn default() -> Self {
+        SupervisionPolicy {
+            dead_after: Duration::from_secs(60),
+            rejoin_grace: Duration::from_secs(30),
+            min_active: 1,
         }
     }
 }
@@ -91,6 +131,14 @@ pub struct CoordStats {
     pub rejected_nonfinite: u64,
     /// Straggler flags raised (async phase).
     pub stragglers_flagged: u64,
+    /// Heartbeat pings answered.
+    pub pings: u64,
+    /// Rejoins of previously-vanished workers (supervision).
+    pub rejoins: u64,
+    /// Active workers presumed dead after prolonged silence (supervision).
+    pub presumed_dead: u64,
+    /// Vanished workers abandoned after the rejoin grace (supervision).
+    pub abandoned: u64,
     /// Fetches answered with a full model.
     pub full_snapshots: u64,
     /// Fetches answered with a values-only delta.
@@ -206,10 +254,22 @@ pub struct CoordinatorService {
     sync_lr: LrSchedule,
     job_json: Option<String>,
     idle_timeout: Duration,
+    supervision: Option<SupervisionPolicy>,
 
     conns: HashMap<u64, ConnState>,
     seen: BTreeSet<u32>,
     active: BTreeSet<u32>,
+    /// Vanished workers held for rejoin (supervision), with the deadline
+    /// after which each is abandoned.
+    awaiting_rejoin: BTreeMap<u32, Instant>,
+    /// Unique (deduplicated) Push requests dispatched per worker — the
+    /// rejoin fast-forward cursor. One worker loop iteration consumes one
+    /// batch and sends one push, so this count tells a respawned worker
+    /// exactly how far to advance its data/RNG streams (DESIGN.md §13.4).
+    /// Cleared on a clean Leave, kept across crashes.
+    push_seen: BTreeMap<u32, u64>,
+    /// Last time each active worker was heard from (any fresh request).
+    last_heard: BTreeMap<u32, Instant>,
     topo_ring: VecDeque<(u64, Arc<SparseMlp>)>,
     pending_sync: BTreeMap<u32, (Vec<Vec<f32>>, Vec<Vec<f32>>)>,
     parked: Vec<ParkedFetch>,
@@ -270,9 +330,13 @@ impl CoordinatorService {
             sync_lr,
             job_json,
             idle_timeout: opts.idle_timeout,
+            supervision: opts.supervision,
             conns: HashMap::new(),
             seen: BTreeSet::new(),
             active: BTreeSet::new(),
+            awaiting_rejoin: BTreeMap::new(),
+            push_seen: BTreeMap::new(),
+            last_heard: BTreeMap::new(),
             topo_ring: VecDeque::new(),
             pending_sync: BTreeMap::new(),
             parked: Vec::new(),
@@ -302,7 +366,7 @@ impl CoordinatorService {
     }
 
     fn done(&self) -> bool {
-        !self.seen.is_empty() && self.active.is_empty()
+        !self.seen.is_empty() && self.active.is_empty() && self.awaiting_rejoin.is_empty()
     }
 
     fn send_reply(
@@ -327,6 +391,7 @@ impl CoordinatorService {
     pub fn run(mut self, listener: &mut dyn Listener) -> Result<ServiceOutcome> {
         let mut last_activity = Instant::now();
         while !self.done() {
+            self.check_liveness()?;
             match listener.recv(Duration::from_millis(50)) {
                 Ok(Some((conn, Inbound::Frame(raw)))) => {
                     last_activity = Instant::now();
@@ -347,6 +412,8 @@ impl CoordinatorService {
                         )));
                     }
                     self.check_stragglers();
+                    // an abandonment may have unblocked the sync barrier
+                    self.after_advance(listener)?;
                 }
                 Err(e) => {
                     // listener died (e.g. all in-process clients dropped
@@ -425,8 +492,15 @@ impl CoordinatorService {
         seq: u64,
         msg: Message,
     ) -> Result<()> {
+        if !matches!(msg, Message::Join) {
+            self.note_alive(conn, worker);
+        }
         let reply = match msg {
             Message::Join => Some(self.handle_join(conn, worker)),
+            Message::Ping => {
+                self.stats.pings += 1;
+                Some(Message::Pong)
+            }
             Message::Fetch { have_gen, have_step } => {
                 if self.phase1_done.is_none()
                     && have_step != NONE_U64
@@ -446,10 +520,19 @@ impl CoordinatorService {
                     Some(Message::FetchAck(self.snapshot_reply(have_gen)))
                 }
             }
-            Message::Push(p) => Some(self.handle_push(worker, p)?),
+            Message::Push(p) => {
+                // counted per unique request (dedup already filtered
+                // retransmits): this is the rejoin fast-forward cursor
+                *self.push_seen.entry(worker).or_insert(0) += 1;
+                Some(self.handle_push(worker, p)?)
+            }
             Message::Replica { model } => Some(self.handle_replica(worker, model)),
             Message::Leave => {
                 self.stats.leaves += 1;
+                // a clean leave completes the worker's lifetime: a later
+                // join under the same id starts from batch 0
+                self.push_seen.remove(&worker);
+                self.last_heard.remove(&worker);
                 self.deactivate(worker, conn);
                 Some(Message::LeaveAck)
             }
@@ -473,20 +556,121 @@ impl CoordinatorService {
                 ),
             };
         }
-        if self.active.contains(&worker) {
-            return Message::Err {
-                message: format!("worker {worker} already joined"),
-            };
+        let usurp = self.active.contains(&worker);
+        if usurp {
+            if self.supervision.is_none() {
+                return Message::Err {
+                    message: format!("worker {worker} already joined"),
+                };
+            }
+            // supervised respawn outracing the close notice for its
+            // predecessor's connection: usurp the stale binding so the
+            // old connection's eventual Closed is a no-op
+            for st in self.conns.values_mut() {
+                if st.worker == Some(worker) {
+                    st.worker = None;
+                }
+            }
         }
+        let rejoin = self.awaiting_rejoin.remove(&worker).is_some() || usurp;
         self.stats.joins += 1;
+        if rejoin {
+            self.stats.rejoins += 1;
+            log::info!("worker {worker} rejoined");
+        }
         self.seen.insert(worker);
         self.active.insert(worker);
+        self.last_heard.insert(worker, Instant::now());
         if let Some(st) = self.conns.get_mut(&conn) {
             st.worker = Some(worker);
         }
+        // resume cursor: pushes this id already had dispatched (kept
+        // across crashes, cleared by a clean Leave) plus the step any
+        // parked sync contribution waits at — a respawned worker replays
+        // that many batches and parks its first fetch (DESIGN.md §13.4)
+        let resume_pushes = self.push_seen.get(&worker).copied().unwrap_or(0);
+        let resume_step = if self.pending_sync.contains_key(&worker) {
+            self.ps.fetch().step
+        } else {
+            NONE_U64
+        };
         Message::JoinAck {
             job: self.job_json.clone(),
+            resume_pushes,
+            resume_step,
         }
+    }
+
+    /// Any fresh request proves the sender alive; one arriving on the
+    /// original connection of a presumed-dead worker resurrects it.
+    fn note_alive(&mut self, conn: u64, worker: u32) {
+        let bound = self.conns.get(&conn).and_then(|st| st.worker) == Some(worker);
+        if !bound {
+            return;
+        }
+        self.last_heard.insert(worker, Instant::now());
+        if self.awaiting_rejoin.remove(&worker).is_some() {
+            log::info!("worker {worker} resurfaced; restoring to the active set");
+            self.active.insert(worker);
+        }
+    }
+
+    /// Supervision sweep: presume silent workers dead, abandon vanished
+    /// workers whose rejoin grace expired, abort on lost quorum.
+    fn check_liveness(&mut self) -> Result<()> {
+        let Some(sup) = self.supervision else {
+            return Ok(());
+        };
+        let now = Instant::now();
+        // presumed death: active and silent past dead_after, unless a
+        // parked fetch shows the worker is waiting on *us*
+        let silent: Vec<u32> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|w| !self.parked.iter().any(|p| p.worker == *w))
+            .filter(|w| {
+                self.last_heard
+                    .get(w)
+                    .is_some_and(|t| now.duration_since(*t) > sup.dead_after)
+            })
+            .collect();
+        for w in silent {
+            self.stats.presumed_dead += 1;
+            log::warn!(
+                "worker {w} presumed dead after {:?} of silence; holding for rejoin",
+                sup.dead_after
+            );
+            self.active.remove(&w);
+            self.straggler.remove(w);
+            self.awaiting_rejoin.insert(w, now + sup.rejoin_grace);
+            // the connection stays bound: a request on it resurrects
+        }
+        // abandonment + quorum
+        let expired: Vec<u32> = self
+            .awaiting_rejoin
+            .iter()
+            .filter(|&(_, deadline)| now >= *deadline)
+            .map(|(&w, _)| w)
+            .collect();
+        for w in expired {
+            self.awaiting_rejoin.remove(&w);
+            self.stats.abandoned += 1;
+            log::warn!(
+                "worker {w} abandoned (no rejoin within {:?}); continuing below strength",
+                sup.rejoin_grace
+            );
+            // a stored sync contribution still counts once; the barrier
+            // just stops waiting for this worker
+            let remaining = self.active.len() + self.awaiting_rejoin.len();
+            if remaining < sup.min_active {
+                return Err(TsnnError::Transport(format!(
+                    "quorum lost: {remaining} workers remain, {} required",
+                    sup.min_active
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Build a fetch reply against the current phase/snapshot.
@@ -624,10 +808,17 @@ impl CoordinatorService {
         if let Some(st) = self.conns.get_mut(&conn) {
             if let Some(w) = st.worker.take() {
                 self.stats.implicit_leaves += 1;
-                log::warn!("worker {w} disconnected without leaving");
                 self.active.remove(&w);
                 self.straggler.remove(w);
                 self.parked.retain(|p| p.worker != w);
+                self.last_heard.remove(&w);
+                if let Some(sup) = self.supervision {
+                    log::warn!("worker {w} vanished; holding {:?} for rejoin", sup.rejoin_grace);
+                    self.awaiting_rejoin
+                        .insert(w, Instant::now() + sup.rejoin_grace);
+                } else {
+                    log::warn!("worker {w} disconnected without leaving");
+                }
             }
         }
         self.conns.remove(&conn);
@@ -647,10 +838,17 @@ impl CoordinatorService {
     /// phase-1 boundary, refresh the topology ring, answer parked
     /// fetches.
     fn after_advance(&mut self, listener: &mut dyn Listener) -> Result<()> {
-        // 1. synchronous barrier: every active worker contributed
+        // 1. synchronous barrier: every active worker contributed — and,
+        // under supervision, every vanished worker being held for rejoin
+        // (a respawn replays up to its counted pushes, so the barrier
+        // waiting preserves the K-way average the reference run applies)
         if !self.pending_sync.is_empty()
             && self.phase1_done.is_none()
-            && self.active.iter().all(|w| self.pending_sync.contains_key(w))
+            && self
+                .active
+                .iter()
+                .chain(self.awaiting_rejoin.keys())
+                .all(|w| self.pending_sync.contains_key(w))
         {
             let n = self.pending_sync.len();
             let contributions: Vec<_> =

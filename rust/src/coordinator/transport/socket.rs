@@ -324,6 +324,29 @@ impl SocketClient {
         });
         Ok(SocketClient { writer, rx })
     }
+
+    /// Connect, retrying with exponential backoff while the coordinator
+    /// is not (yet) listening. Covers the startup race where a worker
+    /// process launches before the coordinator binds, and a supervisor
+    /// respawn racing a coordinator restart. Gives up after `timeout`.
+    pub fn connect_retry(addr: &Addr, timeout: Duration) -> Result<SocketClient> {
+        let start = std::time::Instant::now();
+        let mut delay = Duration::from_millis(50);
+        loop {
+            match SocketClient::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if start.elapsed() + delay > timeout {
+                        return Err(TsnnError::Transport(format!(
+                            "no coordinator at {addr} after {timeout:?}: {e}"
+                        )));
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(2));
+                }
+            }
+        }
+    }
 }
 
 impl Transport for SocketClient {
@@ -390,6 +413,30 @@ mod tests {
         std::fs::write(&path, b"stale").unwrap(); // stale file must not block bind
         roundtrip_over(Addr::Unix(path.clone()));
         assert!(!path.exists(), "hub drop should remove the socket file");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn connect_retry_waits_for_late_coordinator() {
+        let path = std::env::temp_dir().join("tsnn_sock_retry_test.sock");
+        let _ = std::fs::remove_file(&path);
+        let addr = Addr::Unix(path.clone());
+        let addr2 = addr.clone();
+        let binder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            SocketHub::bind(&addr2).unwrap()
+        });
+        // starts connecting while nothing is listening yet
+        let mut client = SocketClient::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+        let mut hub = binder.join().unwrap();
+        let frame = encode_frame(0, 1, &Message::Ping);
+        client.send(&frame).unwrap();
+        let (_, ev) = hub.recv(Duration::from_secs(5)).unwrap().unwrap();
+        assert!(matches!(ev, Inbound::Frame(f) if f == frame));
+
+        // and an endpoint that never appears is a typed timeout
+        let missing = Addr::Unix(std::env::temp_dir().join("tsnn_never_bound.sock"));
+        assert!(SocketClient::connect_retry(&missing, Duration::from_millis(200)).is_err());
     }
 
     #[test]

@@ -16,17 +16,25 @@
 //! ```
 //!
 //! Models and deltas never densify: a full model ships the CSR arrays
-//! (row_ptr / col_idx / values) exactly as a checkpoint would, and a
+//! exactly as a checkpoint would lay them out semantically, and a
 //! values-only delta (topology generation unchanged) ships just the new
 //! CSR values + biases — the sparse-delta exchange the paper's MPI
 //! implementation used, kept topology-first per Nerva/Hoefler.
+//!
+//! Version 2 compresses the full-model topology (the post-topology-bump
+//! snapshot that used to ship raw `row_ptr` u64s + `col_idx` u32s): row
+//! *lengths* go as LEB128 varints, and each row's columns go as a first
+//! absolute column + ascending-gap varints. On ε-sparse layers the gaps
+//! are small, so most entries fit one byte instead of four. The encoder
+//! always emits minimal-length varints, so decode→re-encode is
+//! byte-identical (pinned by `tests/transport_wire.rs`), and every
+//! length is still validated against the remaining payload *before* any
+//! allocation.
 
 use std::io::Write;
 
 use crate::error::{Result, TsnnError};
-use crate::model::checkpoint::{
-    write_f32_slice, write_u32, write_u32_slice, write_u64, write_usize_slice_as_u64,
-};
+use crate::model::checkpoint::{write_f32_slice, write_u32, write_u64, write_usize_slice_as_u64};
 use crate::model::{SparseLayer, SparseMlp};
 use crate::nn::Activation;
 use crate::sparse::CsrMatrix;
@@ -34,8 +42,9 @@ use crate::sparse::CsrMatrix;
 /// Frame magic: "TSNW" (TSNN Wire) — deliberately distinct from the
 /// checkpoint magic so a checkpoint file is never mistaken for a frame.
 pub const MAGIC: &[u8; 4] = b"TSNW";
-/// Wire protocol version.
-pub const VERSION: u32 = 1;
+/// Wire protocol version. v2: varint-compressed full-model topology,
+/// heartbeat (Ping/Pong) kinds, rejoin cursor in JoinAck.
+pub const VERSION: u32 = 2;
 /// Fixed frame-header size in bytes.
 pub const HEADER_BYTES: usize = 25;
 /// Hard cap on a single frame payload: a corrupt length field must
@@ -72,6 +81,11 @@ pub enum Kind {
     LeaveAck = 9,
     /// Server → worker: request-level error (protocol misuse).
     Err = 10,
+    /// Worker → server: liveness heartbeat (phase-2 workers, which
+    /// otherwise go silent while training locally).
+    Ping = 11,
+    /// Server → worker: heartbeat acknowledged.
+    Pong = 12,
 }
 
 impl Kind {
@@ -88,6 +102,8 @@ impl Kind {
             8 => Kind::Leave,
             9 => Kind::LeaveAck,
             10 => Kind::Err,
+            11 => Kind::Ping,
+            12 => Kind::Pong,
             _ => return None,
         })
     }
@@ -199,6 +215,16 @@ pub enum Message {
         /// JSON job spec (config + dataset + parallel config + budgets);
         /// `None` for in-process workers that already hold the job.
         job: Option<String>,
+        /// Phase-1 batches this worker id already had applied before a
+        /// crash — a respawned worker fast-forwards its data/RNG streams
+        /// this many iterations so the applied-update trajectory is
+        /// unchanged. 0 for a first join.
+        resume_pushes: u64,
+        /// Server step a parked synchronous contribution from this
+        /// worker id is waiting at ([`NONE_U64`] = none): the rejoiner
+        /// must report this as its `have_step` so it parks until the
+        /// barrier advances rather than double-contributing.
+        resume_step: u64,
     },
     /// Snapshot request.
     Fetch {
@@ -237,6 +263,10 @@ pub enum Message {
         /// Human-readable cause.
         message: String,
     },
+    /// Liveness heartbeat.
+    Ping,
+    /// Heartbeat acknowledged.
+    Pong,
 }
 
 impl Message {
@@ -253,6 +283,8 @@ impl Message {
             Message::Leave => Kind::Leave,
             Message::LeaveAck => Kind::LeaveAck,
             Message::Err { .. } => Kind::Err,
+            Message::Ping => Kind::Ping,
+            Message::Pong => Kind::Pong,
         }
     }
 }
@@ -278,6 +310,41 @@ fn act_from_tag(tag: u8, alpha: f32) -> Option<Activation> {
     })
 }
 
+/// Minimal-length LEB128 — the canonical form, so decode→re-encode of
+/// any frame we produced is byte-identical.
+fn write_varint(w: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            w.push(b);
+            break;
+        }
+        w.push(b | 0x80);
+    }
+}
+
+/// Varint-compressed CSR topology: per-row lengths, then per row a
+/// first absolute column followed by ascending gaps minus one. CSR
+/// validation guarantees strictly-ascending columns within a row, so
+/// the gaps are non-negative and — at ε-sparse densities — small.
+fn encode_topology(w: &mut Vec<u8>, m: &CsrMatrix) {
+    for r in 0..m.n_rows {
+        write_varint(w, (m.row_ptr[r + 1] - m.row_ptr[r]) as u64);
+    }
+    for r in 0..m.n_rows {
+        let cols = &m.col_idx[m.row_ptr[r]..m.row_ptr[r + 1]];
+        let mut prev: Option<u32> = None;
+        for &c in cols {
+            match prev {
+                None => write_varint(w, u64::from(c)),
+                Some(p) => write_varint(w, u64::from(c - p - 1)),
+            }
+            prev = Some(c);
+        }
+    }
+}
+
 fn encode_model(w: &mut Vec<u8>, m: &SparseMlp, velocity: bool) -> Result<()> {
     w.push(u8::from(velocity));
     write_u32(w, m.layers.len() as u32)?;
@@ -287,8 +354,7 @@ fn encode_model(w: &mut Vec<u8>, m: &SparseMlp, velocity: bool) -> Result<()> {
         w.push(tag);
         write_f32_slice(w, &[alpha])?;
         write_u64(w, layer.weights.nnz() as u64)?;
-        write_usize_slice_as_u64(w, &layer.weights.row_ptr)?;
-        write_u32_slice(w, &layer.weights.col_idx)?;
+        encode_topology(w, &layer.weights);
         write_f32_slice(w, &layer.weights.values)?;
         write_f32_slice(w, &layer.bias)?;
         if velocity {
@@ -313,13 +379,24 @@ fn encode_layer_vecs(w: &mut Vec<u8>, per_nnz: &[Vec<f32>], per_out: &[Vec<f32>]
 fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
     let mut w: Vec<u8> = Vec::new();
     match msg {
-        Message::Join | Message::ReplicaAck | Message::Leave | Message::LeaveAck => {}
-        Message::JoinAck { job } => {
+        Message::Join
+        | Message::ReplicaAck
+        | Message::Leave
+        | Message::LeaveAck
+        | Message::Ping
+        | Message::Pong => {}
+        Message::JoinAck {
+            job,
+            resume_pushes,
+            resume_step,
+        } => {
             w.push(u8::from(job.is_some()));
             if let Some(j) = job {
                 write_u32(&mut w, j.len() as u32)?;
                 w.write_all(j.as_bytes())?;
             }
+            write_u64(&mut w, *resume_pushes)?;
+            write_u64(&mut w, *resume_step)?;
         }
         Message::Fetch { have_gen, have_step } => {
             write_u64(&mut w, *have_gen)?;
@@ -431,6 +508,26 @@ impl<'a> Cur<'a> {
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    /// LEB128 varint, capped at 10 bytes / 64 bits.
+    fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift == 63 && b > 1 {
+                return Err(TsnnError::Transport("varint overflows u64".into()));
+            }
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(TsnnError::Transport("varint too long".into()));
+            }
+        }
+    }
+
     /// Length-guarded count: fails *before* allocation when the claimed
     /// element count cannot fit in the remaining bytes.
     fn checked_len(&self, n: u64, elem_bytes: usize, what: &str) -> Result<usize> {
@@ -456,14 +553,6 @@ impl<'a> Cur<'a> {
             .collect())
     }
 
-    fn u32_vec(&mut self, n: u64, what: &str) -> Result<Vec<u32>> {
-        let n = self.checked_len(n, 4, what)?;
-        let b = self.take(n * 4)?;
-        Ok(b.chunks_exact(4)
-            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
     fn u64_vec(&mut self, n: u64, what: &str) -> Result<Vec<u64>> {
         let n = self.checked_len(n, 8, what)?;
         let b = self.take(n * 8)?;
@@ -480,6 +569,56 @@ impl<'a> Cur<'a> {
         String::from_utf8(b.to_vec())
             .map_err(|_| TsnnError::Transport(format!("{what}: invalid utf8")))
     }
+}
+
+/// Decode the varint-compressed topology of one layer: row lengths must
+/// sum to exactly `nnz`, and reconstructed columns must stay strictly
+/// ascending below `n_out` — both checked as we go, so a corrupt stream
+/// fails typed before `validate()` and never over-allocates (`nnz` was
+/// already bounded by the caller).
+fn decode_topology(
+    c: &mut Cur,
+    l: usize,
+    n_in: usize,
+    n_out: usize,
+    nnz: usize,
+) -> Result<(Vec<usize>, Vec<u32>)> {
+    let mut row_ptr = Vec::with_capacity(n_in + 1);
+    row_ptr.push(0usize);
+    let mut acc = 0u64;
+    for _ in 0..n_in {
+        acc = acc.saturating_add(c.varint()?);
+        if acc > nnz as u64 {
+            return Err(TsnnError::Transport(format!(
+                "layer {l}: row lengths exceed nnz {nnz}"
+            )));
+        }
+        row_ptr.push(acc as usize);
+    }
+    if acc != nnz as u64 {
+        return Err(TsnnError::Transport(format!(
+            "layer {l}: row lengths sum to {acc}, nnz says {nnz}"
+        )));
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    for r in 0..n_in {
+        let len = row_ptr[r + 1] - row_ptr[r];
+        let mut prev: Option<u64> = None;
+        for _ in 0..len {
+            let col = match prev {
+                None => c.varint()?,
+                Some(p) => p.saturating_add(1).saturating_add(c.varint()?),
+            };
+            if col >= n_out as u64 {
+                return Err(TsnnError::Transport(format!(
+                    "layer {l}: column {col} out of bounds (n_out {n_out})"
+                )));
+            }
+            col_idx.push(col as u32);
+            prev = Some(col);
+        }
+    }
+    Ok((row_ptr, col_idx))
 }
 
 fn decode_model(c: &mut Cur) -> Result<SparseMlp> {
@@ -507,18 +646,20 @@ fn decode_model(c: &mut Cur) -> Result<SparseMlp> {
         let activation = act_from_tag(tag, alpha)
             .ok_or_else(|| TsnnError::Transport(format!("layer {l}: bad activation tag {tag}")))?;
         let nnz64 = c.u64()?;
-        // a corrupt nnz must not drive allocations or validate() cost
-        if nnz64 > n_in.saturating_mul(n_out) as u64 {
+        // a corrupt nnz must not drive allocations or validate() cost;
+        // every varint is >= 1 byte, so nnz (and n_in row lengths) must
+        // also fit in the remaining payload before anything allocates
+        if nnz64 > n_in.saturating_mul(n_out) as u64 || nnz64 > c.remaining() as u64 {
             return Err(TsnnError::Transport(format!(
-                "layer {l}: nnz {nnz64} exceeds {n_in}x{n_out}"
+                "layer {l}: implausible nnz {nnz64}"
             )));
         }
-        let row_ptr: Vec<usize> = c
-            .u64_vec((n_in + 1) as u64, "row_ptr")?
-            .into_iter()
-            .map(|v| v as usize)
-            .collect();
-        let col_idx = c.u32_vec(nnz64, "col_idx")?;
+        if n_in > c.remaining() {
+            return Err(TsnnError::Transport(format!(
+                "layer {l}: truncated row lengths"
+            )));
+        }
+        let (row_ptr, col_idx) = decode_topology(c, l, n_in, n_out, nnz64 as usize)?;
         let values = c.f32_vec(nnz64, "values")?;
         let bias = c.f32_vec(n_out as u64, "bias")?;
         let (velocity, bias_velocity) = if with_velocity {
@@ -623,7 +764,11 @@ pub fn decode_frame(frame: &[u8]) -> Result<(Header, Message)> {
             } else {
                 None
             };
-            Message::JoinAck { job }
+            Message::JoinAck {
+                job,
+                resume_pushes: c.u64()?,
+                resume_step: c.u64()?,
+            }
         }
         Kind::Fetch => Message::Fetch {
             have_gen: c.u64()?,
@@ -699,6 +844,8 @@ pub fn decode_frame(frame: &[u8]) -> Result<(Header, Message)> {
                 message: c.string(n, "error message")?,
             }
         }
+        Kind::Ping => Message::Ping,
+        Kind::Pong => Message::Pong,
     };
     if c.remaining() != 0 {
         return Err(TsnnError::Transport(format!(

@@ -14,11 +14,11 @@ use crate::data::Dataset;
 use crate::error::{Result, TsnnError};
 use crate::model::{Batcher, SparseMlp};
 use crate::nn::LrSchedule;
-use crate::train::{self, TrainOptions};
+use crate::train::{self, HookAction, TrainOptions};
 use crate::util::{PhaseTimes, Rng};
 
 use super::wire::{ModelDelta, PushMsg, PushStatus, NONE_U64};
-use super::{Client, RetryPolicy, Transport};
+use super::{Client, JoinReply, RetryPolicy, Transport};
 
 /// Everything a worker needs to run its shard of a parallel job.
 #[derive(Debug, Clone)]
@@ -75,16 +75,20 @@ pub fn run_worker(
     data: &Dataset,
 ) -> Result<WorkerReport> {
     let mut client = Client::new(transport, job.worker, retry);
-    client.join()?;
-    run_worker_joined(&mut client, job, data)
+    let reply = client.join()?;
+    run_worker_joined(&mut client, job, data, &reply)
 }
 
 /// Run a worker lifetime on an already-joined client (the `tsnn worker`
 /// subcommand joins first to obtain the job spec, then calls this).
+/// `reply` is the join acknowledgement: its resume cursor is zero for a
+/// first join and positions a supervisor-respawned worker back onto the
+/// exact trajectory of its crashed predecessor (DESIGN.md §13.4).
 pub fn run_worker_joined(
     client: &mut Client,
     job: &WorkerJob,
     data: &Dataset,
+    reply: &JoinReply,
 ) -> Result<WorkerReport> {
     let cfg = &job.cfg;
     let sync = job.pcfg.synchronous;
@@ -112,9 +116,39 @@ pub fn run_worker_joined(
         other => other,
     };
 
+    // ---- rejoin fast-forward ----
+    // The server counted `resume_pushes` of this id's batches before the
+    // predecessor process died. Gradient computation is deterministic
+    // given (server snapshot, batch), and the server state only reflects
+    // pushes it actually saw — so replaying exactly the counted batches
+    // (data draws + dropout draws) puts this process's streams where the
+    // predecessor's next iteration would have been, and anything it
+    // computed but never delivered is simply recomputed.
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    for _ in 0..reply.resume_pushes {
+        let rows = match batcher.next_batch(&data.x_train, &data.y_train) {
+            Some((_, y)) => y.len(),
+            None => {
+                batcher.reset(&mut rng);
+                let (_, y) = batcher.next_batch(&data.x_train, &data.y_train).unwrap();
+                y.len()
+            }
+        };
+        if let Some(d) = &dropout {
+            // forward() draws one bernoulli per hidden activation
+            for l in 0..sizes.len().saturating_sub(2) {
+                for _ in 0..rows * sizes[l + 1] {
+                    rng.bernoulli(d.rate as f64);
+                }
+            }
+        }
+    }
+
     // ---- phase 1: fetch / compute / push ----
     let mut cached: Option<(SparseMlp, u64)> = None;
-    let mut last_step = NONE_U64;
+    // a parked sync contribution means our first fetch must wait at the
+    // step it was stored for, exactly like the predecessor's would have
+    let mut last_step = reply.resume_step;
     let phase1_model: SparseMlp = loop {
         let have_gen = cached.as_ref().map_or(NONE_U64, |(_, g)| *g);
         // synchronous workers report the step they last trained on; the
@@ -219,14 +253,31 @@ pub fn run_worker_joined(
     let mut local_rng = Rng::new(cfg.seed).split(1000 + job.worker as u64);
     let shard = shard_dataset(data, lo, hi);
     let mut local_phases = PhaseTimes::new();
-    train::train_model(
-        &local_cfg,
-        &shard,
-        &mut local_model,
-        &mut local_rng,
-        TrainOptions::default(),
-        &mut local_phases,
-    )?;
+    // phase 2 is local: heartbeat once per epoch so a supervised
+    // coordinator can tell "training" from "dead" during the silence
+    let mut ping_err: Option<crate::error::TsnnError> = None;
+    {
+        let client_ref = &mut *client;
+        let mut heartbeat = |_epoch: usize, _m: &SparseMlp| match client_ref.ping() {
+            Ok(()) => HookAction::Continue,
+            Err(e) => {
+                ping_err = Some(e);
+                HookAction::Stop
+            }
+        };
+        train::train_model_hooked(
+            &local_cfg,
+            &shard,
+            &mut local_model,
+            &mut local_rng,
+            TrainOptions::default(),
+            &mut local_phases,
+            Some(&mut heartbeat),
+        )?;
+    }
+    if let Some(e) = ping_err {
+        return Err(e);
+    }
     client.replica(&local_model)?;
     client.leave()?;
     report.retries = client.retries;

@@ -30,6 +30,9 @@ pub enum TsnnError {
     /// Checkpoint serialization problems.
     Checkpoint(String),
 
+    /// Checkpoint integrity trailer mismatch (torn write / bit rot).
+    ChecksumMismatch(String),
+
     /// Inference serving-engine failure.
     Serve(String),
 
@@ -50,6 +53,7 @@ impl fmt::Display for TsnnError {
             TsnnError::Runtime(m) => write!(f, "runtime error: {m}"),
             TsnnError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             TsnnError::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            TsnnError::ChecksumMismatch(m) => write!(f, "checksum mismatch: {m}"),
             TsnnError::Serve(m) => write!(f, "serving error: {m}"),
             TsnnError::Transport(m) => write!(f, "transport error: {m}"),
             // transparent: delegate straight to the wrapped error

@@ -11,22 +11,27 @@
 //!
 //! Common options: --paper (full paper-scale dataset), --seed N,
 //! --save PATH, --workers K, --sync, --phase1 N, --phase2 N, --verbose.
-//! `parallel --transport unix:PATH|tcp:HOST:PORT` serves the run over a
-//! socket and spawns the workers as `tsnn worker` child processes
-//! (DESIGN.md §12); `--fault drop=N,dup=N,...` injects transport faults.
+//! `train --state PATH [--checkpoint-every N]` writes a durable training
+//! state each epoch; `train --resume PATH` continues a killed run
+//! bit-exactly (DESIGN.md §13). `parallel --transport
+//! unix:PATH|tcp:HOST:PORT` serves the run over a socket and spawns the
+//! workers as `tsnn worker` child processes (DESIGN.md §12);
+//! `--supervise [--max-restarts N]` respawns crashed workers and holds
+//! their shards for rejoin; `--fault drop=N,dup=N,...` injects faults.
 
 use std::time::Duration;
 
 use tsnn::bench::fmt_duration;
 use tsnn::cli::Args;
 use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::coordinator::supervisor::{RestartPolicy, SpawnFn, Supervisor};
 use tsnn::coordinator::transport::fault::{FaultCounters, FaultPlan, FaultyTransport};
 use tsnn::coordinator::transport::socket::{parse_addr, Addr, SocketClient, SocketHub};
 use tsnn::coordinator::transport::worker::run_worker_joined;
 use tsnn::coordinator::transport::{Client, JobSpec, RetryPolicy, Transport};
 use tsnn::coordinator::{
     run_parallel_listener, run_parallel_opts, worker_kernel_budgets, CoordinatorOptions,
-    ParallelConfig, ParallelOptions, ParallelReport, WorkerJob,
+    ParallelConfig, ParallelOptions, ParallelReport, SupervisionPolicy, WorkerJob,
 };
 use tsnn::data::datasets;
 use tsnn::error::{Result, TsnnError};
@@ -36,7 +41,9 @@ use tsnn::serve::{
     sweep, LayerFormat, LayoutOptions, ServeConfig, ServeEngine, ServeModel, SweepConfig,
 };
 use tsnn::sparse::simd::{self, KernelFormat};
-use tsnn::train::{train_sequential_opts, TrainOptions};
+use tsnn::train::{
+    load_state, train_resume, train_sequential_opts, CheckpointPolicy, TrainOptions, TrainState,
+};
 use tsnn::util::logging;
 
 const DATASETS: &[&str] = &["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme"];
@@ -86,9 +93,13 @@ fn print_help() {
          subcommands:\n\
          \x20 datasets                      dataset inventory (Table 1)\n\
          \x20 train <dataset> [k=v ...]     sequential SET training\n\
+         \x20   (--state PATH [--checkpoint-every N] writes durable\n\
+         \x20    training state; --resume PATH continues a killed run\n\
+         \x20    bit-exactly)\n\
          \x20 parallel <dataset> [k=v ...]  WASAP/WASSP parallel training\n\
          \x20   (--transport unix:PATH|tcp:HOST:PORT runs workers as\n\
-         \x20    child processes; --fault drop=N,dup=N,delay=N,drop_reply=N)\n\
+         \x20    child processes; --supervise [--max-restarts N] respawns\n\
+         \x20    crashed workers; --fault drop=N,dup=N,delay=N,drop_reply=N)\n\
          \x20 worker --connect ADDR --worker K   headless parallel worker\n\
          \x20 baseline <arch> [k=v ...]     masked-dense XLA baseline\n\
          \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\
@@ -177,9 +188,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         spec.n_train
     );
     let data = datasets::generate(&spec, &mut rng)?;
+    let checkpoint = match args.opt("state") {
+        Some(p) => Some(CheckpointPolicy {
+            path: std::path::PathBuf::from(p),
+            every: args.opt_parse("checkpoint-every", 1usize)?,
+        }),
+        None => None,
+    };
     let opts = TrainOptions {
         gradflow_every: args.opt_parse("gradflow", 0usize)?,
         verbose: args.flag("verbose"),
+        checkpoint,
     };
     log::info!(
         "training {:?} ε={} act={:?} epochs={}",
@@ -188,7 +207,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.activation,
         cfg.epochs
     );
-    let report = train_sequential_opts(&cfg, &data, &mut rng, opts)?;
+    let report = if let Some(resume_path) = args.opt("resume") {
+        // a crash mid-save can leave a temp sibling; only the renamed
+        // file is ever trusted, the temp is deleted
+        let path = std::path::Path::new(resume_path);
+        TrainState::clean_stale_tmp(path);
+        let state = load_state(path)?;
+        log::info!("resuming from {resume_path} at epoch {}", state.next_epoch);
+        let mut phases = tsnn::util::PhaseTimes::new();
+        train_resume(&cfg, &data, state, opts, &mut phases)?
+    } else {
+        train_sequential_opts(&cfg, &data, &mut rng, opts)?
+    };
     println!(
         "dataset={} best_test_acc={:.4} final_test_acc={:.4} start_w={} end_w={} train_time={}",
         spec.name,
@@ -301,32 +331,55 @@ fn run_parallel_multiprocess(
     let job_json = JobSpec::new(cfg, spec, pcfg, budgets).to_json();
 
     let exe = std::env::current_exe()?;
-    let mut children = Vec::with_capacity(pcfg.workers);
-    for k in 0..pcfg.workers {
+    let fault = args.opt("fault").map(str::to_string);
+    let connect_str = connect_addr.to_string();
+    let spawn: Box<SpawnFn> = Box::new(move |k: u32| {
         let mut cmd = std::process::Command::new(&exe);
         cmd.arg("worker")
             .arg("--connect")
-            .arg(connect_addr.to_string())
+            .arg(&connect_str)
             .arg("--worker")
             .arg(k.to_string());
-        if let Some(fault) = args.opt("fault") {
-            cmd.arg("--fault").arg(fault);
+        if let Some(f) = &fault {
+            cmd.arg("--fault").arg(f);
         }
-        children.push(cmd.spawn().map_err(|e| {
+        cmd.spawn()
+    });
+
+    let mut coord_opts = CoordinatorOptions::default();
+    if args.flag("supervise") {
+        // supervised run: crashed workers are respawned (below) and the
+        // coordinator holds their shards for rejoin instead of shrinking
+        coord_opts.supervision = Some(SupervisionPolicy::default());
+        let policy = RestartPolicy {
+            max_restarts: args.opt_parse("max-restarts", 3usize)?,
+            ..RestartPolicy::default()
+        };
+        let sup = Supervisor::start(pcfg.workers, policy, spawn)?;
+        log::info!(
+            "spawned {} supervised worker processes on {connect_addr}",
+            pcfg.workers
+        );
+        let result =
+            run_parallel_listener(cfg, pcfg, data, rng, &mut hub, Some(job_json), &coord_opts);
+        for (k, r) in sup.finish(Duration::from_secs(10)).iter().enumerate() {
+            if r.restarts > 0 || r.abandoned {
+                log::info!("worker {k}: restarts={} abandoned={}", r.restarts, r.abandoned);
+            }
+        }
+        return result;
+    }
+
+    let mut children = Vec::with_capacity(pcfg.workers);
+    for k in 0..pcfg.workers {
+        children.push(spawn(k as u32).map_err(|e| {
             TsnnError::Transport(format!("spawning worker {k}: {e}"))
         })?);
     }
     log::info!("spawned {} worker processes on {connect_addr}", pcfg.workers);
 
-    let result = run_parallel_listener(
-        cfg,
-        pcfg,
-        data,
-        rng,
-        &mut hub,
-        Some(job_json),
-        &CoordinatorOptions::default(),
-    );
+    let result =
+        run_parallel_listener(cfg, pcfg, data, rng, &mut hub, Some(job_json), &coord_opts);
     for (k, mut child) in children.into_iter().enumerate() {
         match child.wait() {
             Ok(status) if !status.success() => {
@@ -351,7 +404,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
         return Err(TsnnError::Config("worker needs --worker K".into()));
     }
     let addr = parse_addr(connect)?;
-    let mut transport: Box<dyn Transport> = Box::new(SocketClient::connect(&addr)?);
+    // retry with backoff: the worker may launch before the coordinator
+    // binds (startup race), or a supervisor respawn may race a restart
+    let connect_timeout = Duration::from_secs(args.opt_parse("connect-timeout", 30u64)?);
+    let mut transport: Box<dyn Transport> =
+        Box::new(SocketClient::connect_retry(&addr, connect_timeout)?);
     if let Some(fault_spec) = args.opt("fault") {
         let plan = FaultPlan::parse(fault_spec)?;
         if plan.is_active() {
@@ -363,10 +420,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
     }
     let mut client = Client::new(transport, worker, RetryPolicy::default());
-    let job_json = client.join()?.ok_or_else(|| {
+    let reply = client.join()?;
+    let job_json = reply.job.as_deref().ok_or_else(|| {
         TsnnError::Transport("coordinator sent no job spec at join".into())
     })?;
-    let spec = JobSpec::from_json(&job_json)?;
+    let spec = JobSpec::from_json(job_json)?;
     let mut cfg = TrainConfig::default();
     cfg.apply_file(&spec.config_kv)?;
     // identical stream prefix to the coordinator's own generation call
@@ -378,7 +436,13 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .copied()
         .unwrap_or(1);
     let job = WorkerJob::new(worker, kernel_threads, &cfg, &spec.pcfg);
-    let report = run_worker_joined(&mut client, &job, &data)?;
+    if reply.resume_pushes > 0 {
+        log::info!(
+            "rejoined: fast-forwarding {} counted pushes",
+            reply.resume_pushes
+        );
+    }
+    let report = run_worker_joined(&mut client, &job, &data, &reply)?;
     println!(
         "worker={} pushes={} retries={} zeroed_nonfinite={}",
         worker, report.pushes, report.retries, report.zeroed_nonfinite

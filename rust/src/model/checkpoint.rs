@@ -5,23 +5,33 @@
 //!   magic "TSNN" | version u32 | json header length u32 | json header |
 //!   per layer: row_ptr (u64s), col_idx (u32s), values (f32s),
 //!              bias (f32s), velocity (f32s), bias_velocity (f32s)
+//!   | crc32 u32 (version >= 2)
 //!
 //! The JSON header carries sizes, activations and nnz counts so a loader
 //! can pre-validate before touching the bulk arrays.
+//!
+//! Durability protocol (DESIGN.md §13.1): `save` writes the whole image
+//! to `PATH.tmp`, fsyncs it, renames it over `PATH`, and fsyncs the
+//! parent directory — a crash at any point leaves either the old or the
+//! new checkpoint, never a torn one. Version 2 appends a CRC-32 trailer
+//! over everything before it; `load` verifies the trailer before parsing
+//! and reports [`TsnnError::ChecksumMismatch`] on torn writes / bit rot.
+//! Version-1 files (pre-trailer) still load.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{Cursor, Read, Write};
+use std::path::{Path, PathBuf};
 
 use crate::error::{Result, TsnnError};
 use crate::nn::Activation;
 use crate::sparse::CsrMatrix;
+use crate::util::crc::crc32;
 use crate::util::json::{self, Json};
 
 use super::layer::SparseLayer;
 use super::mlp::SparseMlp;
 
 const MAGIC: &[u8; 4] = b"TSNN";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Largest JSON header a well-formed checkpoint can carry (the header
 /// is a few numbers per layer — 16 MiB is orders of magnitude of slack).
@@ -38,9 +48,10 @@ pub(crate) fn act_name(a: &Activation) -> String {
 
 // --- shared little-endian bulk-array writers -------------------------------
 //
-// The coordinator wire format (`coordinator/transport/wire.rs`) reuses these
-// so checkpoints and transport frames stay byte-compatible per array: f32 /
-// u32 / u64 little-endian, row_ptr widened to u64.
+// The coordinator wire format (`coordinator/transport/wire.rs`) and the
+// train-state format (`train/state.rs`) reuse these so checkpoints and
+// transport frames stay byte-compatible per array: f32 / u32 / u64
+// little-endian, row_ptr widened to u64.
 
 pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -48,6 +59,16 @@ pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
 }
 
 pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn write_f64(w: &mut impl Write, v: f64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
 }
@@ -73,13 +94,9 @@ pub(crate) fn write_usize_slice_as_u64(w: &mut impl Write, vs: &[usize]) -> Resu
     Ok(())
 }
 
-/// Save a model to `path`.
-pub fn save(mlp: &SparseMlp, path: &Path) -> Result<()> {
-    let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-
+/// Serialize the model image (json header + bulk arrays) — everything
+/// between the magic/version prefix and the CRC trailer.
+pub(crate) fn write_model(w: &mut impl Write, mlp: &SparseMlp) -> Result<()> {
     let header = json::obj(vec![
         (
             "sizes",
@@ -105,19 +122,58 @@ pub fn save(mlp: &SparseMlp, path: &Path) -> Result<()> {
         ),
     ]);
     let hbytes = header.dump().into_bytes();
-    write_u32(&mut w, hbytes.len() as u32)?;
+    write_u32(w, hbytes.len() as u32)?;
     w.write_all(&hbytes)?;
 
     for layer in &mlp.layers {
-        write_usize_slice_as_u64(&mut w, &layer.weights.row_ptr)?;
-        write_u32_slice(&mut w, &layer.weights.col_idx)?;
-        write_f32_slice(&mut w, &layer.weights.values)?;
-        write_f32_slice(&mut w, &layer.bias)?;
-        write_f32_slice(&mut w, &layer.velocity)?;
-        write_f32_slice(&mut w, &layer.bias_velocity)?;
+        write_usize_slice_as_u64(w, &layer.weights.row_ptr)?;
+        write_u32_slice(w, &layer.weights.col_idx)?;
+        write_f32_slice(w, &layer.weights.values)?;
+        write_f32_slice(w, &layer.bias)?;
+        write_f32_slice(w, &layer.velocity)?;
+        write_f32_slice(w, &layer.bias_velocity)?;
     }
-    w.flush()?;
     Ok(())
+}
+
+/// Where `save` stages its image before the atomic rename.
+pub(crate) fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Durably land `image` at `path`: append a CRC-32 trailer over the
+/// image, write to `PATH.tmp`, fsync, rename over `PATH`, fsync the
+/// parent directory. A crash anywhere leaves the previous `PATH` intact.
+pub(crate) fn write_durable(path: &Path, mut image: Vec<u8>) -> Result<()> {
+    let crc = crc32(&image);
+    image.extend_from_slice(&crc.to_le_bytes());
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&image)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        // directory fsync makes the rename itself durable; best-effort on
+        // filesystems that refuse to open directories
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Save a model to `path` (atomic, CRC-trailed — never clobbers the
+/// previous checkpoint on a mid-write crash).
+pub fn save(mlp: &SparseMlp, path: &Path) -> Result<()> {
+    let mut image = Vec::new();
+    image.extend_from_slice(MAGIC);
+    write_u32(&mut image, VERSION)?;
+    write_model(&mut image, mlp)?;
+    write_durable(path, image)
 }
 
 pub(crate) fn read_exact4(r: &mut impl Read) -> Result<[u8; 4]> {
@@ -128,6 +184,22 @@ pub(crate) fn read_exact4(r: &mut impl Read) -> Result<[u8; 4]> {
 
 pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
     Ok(u32::from_le_bytes(read_exact4(r)?))
+}
+
+pub(crate) fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn read_f32(r: &mut impl Read) -> Result<f32> {
+    Ok(f32::from_le_bytes(read_exact4(r)?))
+}
+
+pub(crate) fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
 }
 
 pub(crate) fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
@@ -157,19 +229,48 @@ pub(crate) fn read_u64_vec(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
         .collect())
 }
 
-/// Load a model from `path`.
-pub fn load(path: &Path) -> Result<SparseMlp> {
-    let f = std::fs::File::open(path)?;
-    let mut r = BufReader::new(f);
-    let magic = read_exact4(&mut r)?;
-    if &magic != MAGIC {
+/// Read a full durable file: check `magic`, return `(version, bytes)`.
+/// The caller decides per-version whether a CRC trailer is expected and
+/// calls [`checked_image`] to verify + strip it.
+pub(crate) fn read_framed(path: &Path, magic: &[u8; 4]) -> Result<(u32, Vec<u8>)> {
+    let bytes = std::fs::read(path)?;
+    let mut r = Cursor::new(&bytes[..]);
+    let m = read_exact4(&mut r)?;
+    if &m != magic {
         return Err(TsnnError::Checkpoint("bad magic".into()));
     }
     let version = read_u32(&mut r)?;
-    if version != VERSION {
-        return Err(TsnnError::Checkpoint(format!("unsupported version {version}")));
+    Ok((version, bytes))
+}
+
+/// Verify the CRC-32 trailer of a durable image and return the body
+/// bounds `(start, end)` — `bytes[8..len-4]`, i.e. everything after the
+/// magic/version prefix and before the trailer.
+pub(crate) fn checked_image(bytes: &[u8]) -> Result<(usize, usize)> {
+    if bytes.len() < 12 {
+        return Err(TsnnError::ChecksumMismatch(
+            "file too short for its integrity trailer".into(),
+        ));
     }
-    let hlen = read_u32(&mut r)? as usize;
+    let body_end = bytes.len() - 4;
+    let stored = u32::from_le_bytes([
+        bytes[body_end],
+        bytes[body_end + 1],
+        bytes[body_end + 2],
+        bytes[body_end + 3],
+    ]);
+    let computed = crc32(&bytes[..body_end]);
+    if stored != computed {
+        return Err(TsnnError::ChecksumMismatch(format!(
+            "stored {stored:#010x} != computed {computed:#010x} (torn write or corruption)"
+        )));
+    }
+    Ok((8, body_end))
+}
+
+/// Parse the model image (json header + bulk arrays) from a reader.
+pub(crate) fn read_model(r: &mut impl Read) -> Result<SparseMlp> {
+    let hlen = read_u32(r)? as usize;
     // sanity-cap before allocating: a truncated or corrupt length field
     // must surface as a typed error, not an OOM attempt
     if hlen > MAX_HEADER_BYTES {
@@ -220,15 +321,15 @@ pub fn load(path: &Path) -> Result<SparseMlp> {
                 "layer {l}: nnz {nnz} exceeds {n_in}x{n_out}"
             )));
         }
-        let row_ptr: Vec<usize> = read_u64_vec(&mut r, n_in + 1)?
+        let row_ptr: Vec<usize> = read_u64_vec(r, n_in + 1)?
             .into_iter()
             .map(|v| v as usize)
             .collect();
-        let col_idx = read_u32_vec(&mut r, nnz)?;
-        let values = read_f32_vec(&mut r, nnz)?;
-        let bias = read_f32_vec(&mut r, n_out)?;
-        let velocity = read_f32_vec(&mut r, nnz)?;
-        let bias_velocity = read_f32_vec(&mut r, n_out)?;
+        let col_idx = read_u32_vec(r, nnz)?;
+        let values = read_f32_vec(r, nnz)?;
+        let bias = read_f32_vec(r, n_out)?;
+        let velocity = read_f32_vec(r, nnz)?;
+        let bias_velocity = read_f32_vec(r, n_out)?;
         let weights = CsrMatrix {
             n_rows: n_in,
             n_cols: n_out,
@@ -249,6 +350,29 @@ pub fn load(path: &Path) -> Result<SparseMlp> {
         });
     }
     Ok(SparseMlp { sizes, layers })
+}
+
+/// Load a model from `path`. Version 2 verifies the CRC-32 trailer
+/// first; version-1 files (no trailer) still load.
+pub fn load(path: &Path) -> Result<SparseMlp> {
+    let (version, bytes) = read_framed(path, MAGIC)?;
+    match version {
+        1 => {
+            let mut r = Cursor::new(&bytes[8..]);
+            read_model(&mut r)
+        }
+        2 => {
+            let (start, end) = checked_image(&bytes)?;
+            let body = &bytes[start..end];
+            let mut r = Cursor::new(body);
+            let model = read_model(&mut r)?;
+            if (r.position() as usize) != body.len() {
+                return Err(TsnnError::Checkpoint("trailing bytes after model".into()));
+            }
+            Ok(model)
+        }
+        v => Err(TsnnError::Checkpoint(format!("unsupported version {v}"))),
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +423,77 @@ mod tests {
         let path = dir.join("bad.tsnn");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_does_not_leave_tmp_files() {
+        let mut rng = Rng::new(3);
+        let mlp = SparseMlp::new(
+            &[6, 4, 2],
+            2.0,
+            Activation::Relu,
+            &WeightInit::Xavier,
+            &mut rng,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("tsnn_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.tsnn");
+        save(&mlp, &path).unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn version1_files_without_trailer_still_load() {
+        let mut rng = Rng::new(5);
+        let mlp = SparseMlp::new(
+            &[8, 6, 3],
+            3.0,
+            Activation::Relu,
+            &WeightInit::Xavier,
+            &mut rng,
+        )
+        .unwrap();
+        // hand-assemble a v1 image: no trailer, version field = 1
+        let mut image = Vec::new();
+        image.extend_from_slice(MAGIC);
+        write_u32(&mut image, 1).unwrap();
+        write_model(&mut image, &mlp).unwrap();
+        let dir = std::env::temp_dir().join("tsnn_ckpt_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.tsnn");
+        std::fs::write(&path, &image).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.sizes, mlp.sizes);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn flipped_bit_is_a_checksum_mismatch() {
+        let mut rng = Rng::new(7);
+        let mlp = SparseMlp::new(
+            &[8, 6, 3],
+            3.0,
+            Activation::Relu,
+            &WeightInit::Xavier,
+            &mut rng,
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("tsnn_ckpt_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip.tsnn");
+        save(&mlp, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        match load(&path) {
+            Err(TsnnError::ChecksumMismatch(_)) => {}
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
         std::fs::remove_file(&path).unwrap();
     }
 }

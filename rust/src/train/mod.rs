@@ -15,6 +15,10 @@ use crate::nn::Dropout;
 use crate::set;
 use crate::util::{PhaseTimes, Rng, Timer};
 
+pub mod state;
+
+pub use state::{load_state, save_state, TrainState};
+
 /// Per-epoch record (drives Figs. 4, 6, 7).
 #[derive(Debug, Clone, Copy)]
 pub struct EpochLog {
@@ -77,13 +81,74 @@ impl TrainReport {
     }
 }
 
-/// Options beyond `TrainConfig` used by instrumentation-heavy benches.
-#[derive(Debug, Clone, Copy, Default)]
+/// Options beyond `TrainConfig` used by instrumentation-heavy benches
+/// and by the fault-tolerance layer.
+#[derive(Debug, Clone, Default)]
 pub struct TrainOptions {
     /// Sample gradient flow on the train set every N epochs (0 = off).
     pub gradflow_every: usize,
     /// Print progress lines via `log`.
     pub verbose: bool,
+    /// Periodic durable checkpointing (DESIGN.md §13.2). `None` = off.
+    pub checkpoint: Option<CheckpointPolicy>,
+}
+
+/// Where and how often the train loop snapshots resumable state.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Train-state file (atomic temp+fsync+rename, CRC-trailed).
+    pub path: std::path::PathBuf,
+    /// Save after every N completed epochs (0 = never).
+    pub every: usize,
+}
+
+/// What an epoch-boundary hook tells the loop to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HookAction {
+    /// Keep training.
+    Continue,
+    /// Stop cleanly after this epoch (state already checkpointed if a
+    /// policy is set — the chaos suite uses this to simulate a kill at
+    /// an exact epoch boundary).
+    Stop,
+}
+
+/// Epoch-boundary callback: `(completed_epoch, model)`. Runs after the
+/// epoch fully completes (evolution, eval, checkpoint) — the worker
+/// protocol hangs phase-2 heartbeats off this, the chaos suite uses it
+/// to stop runs at a chosen boundary.
+pub type EpochHook<'a> = &'a mut dyn FnMut(usize, &SparseMlp) -> HookAction;
+
+/// Where a (possibly resumed) run starts and what it has accumulated.
+#[derive(Debug, Clone)]
+struct ResumeCursor {
+    next_epoch: usize,
+    start_weights: Option<usize>,
+    best_test: f32,
+    final_test: f32,
+    epochs: Vec<EpochLog>,
+}
+
+impl ResumeCursor {
+    fn fresh() -> ResumeCursor {
+        ResumeCursor {
+            next_epoch: 0,
+            start_weights: None,
+            best_test: 0.0,
+            final_test: f32::NAN,
+            epochs: Vec::new(),
+        }
+    }
+
+    fn from_state(state: &TrainState) -> ResumeCursor {
+        ResumeCursor {
+            next_epoch: state.next_epoch,
+            start_weights: Some(state.start_weights),
+            best_test: state.best_test,
+            final_test: state.final_test,
+            epochs: state.epochs.clone(),
+        }
+    }
 }
 
 /// Train a fresh model per the config — the sequential baseline.
@@ -117,7 +182,52 @@ pub fn train_model(
     opts: TrainOptions,
     phases: &mut PhaseTimes,
 ) -> Result<TrainReport> {
-    let start_weights = model.weight_count();
+    train_model_hooked(cfg, data, model, rng, opts, phases, None)
+}
+
+/// [`train_model`] with an epoch-boundary hook.
+pub fn train_model_hooked(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    model: &mut SparseMlp,
+    rng: &mut Rng,
+    opts: TrainOptions,
+    phases: &mut PhaseTimes,
+    hook: Option<EpochHook<'_>>,
+) -> Result<TrainReport> {
+    train_model_from(cfg, data, model, rng, opts, phases, ResumeCursor::fresh(), hook)
+}
+
+/// Resume a run from a durable [`TrainState`]. The caller regenerates
+/// the dataset exactly as the original run did (same seed, same spec);
+/// the state supplies the model, RNG and report accumulators, and the
+/// loop continues at `state.next_epoch` bit-exactly as if the original
+/// process had never died (pinned by `tests/chaos.rs`).
+pub fn train_resume(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    state: TrainState,
+    opts: TrainOptions,
+    phases: &mut PhaseTimes,
+) -> Result<TrainReport> {
+    let cursor = ResumeCursor::from_state(&state);
+    let mut model = state.model;
+    let mut rng = state.rng();
+    train_model_from(cfg, data, &mut model, &mut rng, opts, phases, cursor, None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn train_model_from(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    model: &mut SparseMlp,
+    rng: &mut Rng,
+    opts: TrainOptions,
+    phases: &mut PhaseTimes,
+    cursor: ResumeCursor,
+    mut hook: Option<EpochHook<'_>>,
+) -> Result<TrainReport> {
+    let start_weights = cursor.start_weights.unwrap_or_else(|| model.weight_count());
     let mut ws = model.alloc_workspace(cfg.batch);
     // Kernel-shard budget rides in the workspace so every forward and
     // every fused backward (`SparseLayer::backward_into`, DESIGN.md §5)
@@ -147,11 +257,11 @@ pub fn train_model(
         None => set::EvolutionEngine::new(),
     };
 
-    let mut epochs = Vec::with_capacity(cfg.epochs);
-    let mut best_test = 0.0f32;
-    let mut final_test = f32::NAN;
+    let mut epochs = cursor.epochs;
+    let mut best_test = cursor.best_test;
+    let mut final_test = cursor.final_test;
 
-    for epoch in 0..cfg.epochs {
+    for epoch in cursor.next_epoch..cfg.epochs {
         let lr = cfg.lr.at(epoch);
         let timer = Timer::start();
         batcher.reset(rng);
@@ -244,6 +354,30 @@ pub fn train_model(
             );
         }
         epochs.push(log_entry);
+
+        // durable snapshot at the epoch boundary (model + RNG + report
+        // accumulators) — written AFTER evolution and eval so a resumed
+        // loop re-enters at exactly this point in the random stream
+        if let Some(ck) = &opts.checkpoint {
+            if ck.every > 0 && (epoch + 1) % ck.every == 0 {
+                let snapshot = TrainState {
+                    model: model.clone(),
+                    rng: rng.state(),
+                    next_epoch: epoch + 1,
+                    start_weights,
+                    best_test,
+                    final_test,
+                    epochs: epochs.clone(),
+                };
+                phases.time("checkpoint", || state::save_state(&snapshot, &ck.path))?;
+            }
+        }
+
+        if let Some(h) = hook.as_mut() {
+            if h(epoch, model) == HookAction::Stop {
+                break;
+            }
+        }
     }
 
     Ok(TrainReport {
@@ -349,6 +483,7 @@ mod tests {
             TrainOptions {
                 gradflow_every: 2,
                 verbose: false,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -1,0 +1,281 @@
+//! Durable, resumable training state (DESIGN.md §13.2).
+//!
+//! A `TrainState` is everything the sequential train loop needs to
+//! continue **bit-exactly** from an epoch boundary: the full model
+//! (weights, bias, velocities — the same image the `TSNN` checkpoint
+//! carries), the raw xoshiro256** RNG state, the epoch cursor, and the
+//! accumulated report fields (epoch logs, best/final test accuracy,
+//! starting weight count). Topology-evolution state needs no extra
+//! fields: the evolved topology lives in the model and the prune/regrow
+//! draws replay from the restored RNG.
+//!
+//! Layout (little-endian, magic "TSNT", version 1):
+//!   magic | version u32 | model image (checkpoint body) |
+//!   rng [u64; 4] | next_epoch u64 | start_weights u64 |
+//!   best_test f32 | final_test f32 |
+//!   n_logs u64 | per log: epoch u64, train_loss f32, train_acc f32,
+//!                         test_loss f32, test_acc f32,
+//!                         weight_count u64, seconds f64
+//!   | crc32 u32
+//!
+//! Binary throughout (no JSON): RNG words don't fit in f64-backed JSON
+//! numbers and un-evaluated epochs carry NaN accuracies. Writes go
+//! through the same atomic temp+fsync+rename protocol as model
+//! checkpoints, and the CRC-32 trailer is mandatory from version 1.
+
+use std::io::{Cursor, Read, Write};
+use std::path::Path;
+
+use crate::error::{Result, TsnnError};
+use crate::model::checkpoint::{
+    checked_image, read_f32, read_f64, read_framed, read_model, read_u64, tmp_path, write_durable,
+    write_f32, write_f64, write_model, write_u32, write_u64,
+};
+use crate::model::SparseMlp;
+use crate::util::Rng;
+
+use super::EpochLog;
+
+const MAGIC: &[u8; 4] = b"TSNT";
+const VERSION: u32 = 1;
+
+/// More epoch logs than any plausible run; a crafted length field past
+/// this fails before allocation.
+const MAX_LOGS: u64 = 1 << 24;
+
+/// Full resumable snapshot of a sequential training run at an epoch
+/// boundary (`next_epoch` epochs completed).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// The model as of the end of epoch `next_epoch - 1`.
+    pub model: SparseMlp,
+    /// Raw RNG state at the epoch boundary.
+    pub rng: [u64; 4],
+    /// First epoch the resumed loop will run.
+    pub next_epoch: usize,
+    /// Weight count at the start of the original run.
+    pub start_weights: usize,
+    /// Best test accuracy observed so far.
+    pub best_test: f32,
+    /// Most recent test accuracy (NaN if never evaluated).
+    pub final_test: f32,
+    /// Per-epoch logs accumulated so far.
+    pub epochs: Vec<EpochLog>,
+}
+
+/// Atomically save a training state to `path` (temp + fsync + rename +
+/// CRC trailer, like model checkpoints).
+pub fn save_state(state: &TrainState, path: &Path) -> Result<()> {
+    let mut image = Vec::new();
+    image.extend_from_slice(MAGIC);
+    write_u32(&mut image, VERSION)?;
+    write_state_body(&mut image, state)?;
+    write_durable(path, image)
+}
+
+fn write_state_body(w: &mut impl Write, state: &TrainState) -> Result<()> {
+    write_model(w, &state.model)?;
+    for word in state.rng {
+        write_u64(w, word)?;
+    }
+    write_u64(w, state.next_epoch as u64)?;
+    write_u64(w, state.start_weights as u64)?;
+    write_f32(w, state.best_test)?;
+    write_f32(w, state.final_test)?;
+    write_u64(w, state.epochs.len() as u64)?;
+    for e in &state.epochs {
+        write_u64(w, e.epoch as u64)?;
+        write_f32(w, e.train_loss)?;
+        write_f32(w, e.train_accuracy)?;
+        write_f32(w, e.test_loss)?;
+        write_f32(w, e.test_accuracy)?;
+        write_u64(w, e.weight_count as u64)?;
+        write_f64(w, e.seconds)?;
+    }
+    Ok(())
+}
+
+/// Load a training state; the CRC trailer is verified before any field
+/// is parsed, so a torn write surfaces as
+/// [`TsnnError::ChecksumMismatch`], never as a half-restored run.
+pub fn load_state(path: &Path) -> Result<TrainState> {
+    let (version, bytes) = read_framed(path, MAGIC)?;
+    if version != VERSION {
+        return Err(TsnnError::Checkpoint(format!(
+            "unsupported train-state version {version}"
+        )));
+    }
+    let (start, end) = checked_image(&bytes)?;
+    let body = &bytes[start..end];
+    let mut r = Cursor::new(body);
+    let state = read_state_body(&mut r)?;
+    if (r.position() as usize) != body.len() {
+        return Err(TsnnError::Checkpoint(
+            "trailing bytes after train state".into(),
+        ));
+    }
+    // a zero RNG state can't come from a real run (xoshiro fixed point)
+    if state.rng.iter().all(|&w| w == 0) {
+        return Err(TsnnError::Checkpoint("all-zero rng state".into()));
+    }
+    Ok(state)
+}
+
+fn read_state_body(r: &mut impl Read) -> Result<TrainState> {
+    let model = read_model(r)?;
+    let mut rng = [0u64; 4];
+    for word in &mut rng {
+        *word = read_u64(r)?;
+    }
+    let next_epoch = read_u64(r)? as usize;
+    let start_weights = read_u64(r)? as usize;
+    let best_test = read_f32(r)?;
+    let final_test = read_f32(r)?;
+    let n_logs = read_u64(r)?;
+    if n_logs > MAX_LOGS {
+        return Err(TsnnError::Checkpoint(format!(
+            "implausible epoch-log count {n_logs}"
+        )));
+    }
+    let mut epochs = Vec::with_capacity(n_logs as usize);
+    for _ in 0..n_logs {
+        epochs.push(EpochLog {
+            epoch: read_u64(r)? as usize,
+            train_loss: read_f32(r)?,
+            train_accuracy: read_f32(r)?,
+            test_loss: read_f32(r)?,
+            test_accuracy: read_f32(r)?,
+            weight_count: read_u64(r)? as usize,
+            seconds: read_f64(r)?,
+        });
+    }
+    Ok(TrainState {
+        model,
+        rng,
+        next_epoch,
+        start_weights,
+        best_test,
+        final_test,
+        epochs,
+    })
+}
+
+impl TrainState {
+    /// Restore the generator this state snapshotted.
+    pub fn rng(&self) -> Rng {
+        Rng::from_state(self.rng)
+    }
+
+    /// `true` if `path` has a state file and no stale temp sibling from
+    /// an interrupted save (the temp is ignored either way — rename
+    /// atomicity means only `path` itself is ever trusted).
+    pub fn exists(path: &Path) -> bool {
+        path.exists()
+    }
+
+    /// Remove a stale temp sibling left by a crash mid-save. Safe to
+    /// call unconditionally before resuming.
+    pub fn clean_stale_tmp(path: &Path) {
+        let tmp = tmp_path(path);
+        if tmp.exists() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::sparse::WeightInit;
+
+    fn sample_state() -> TrainState {
+        let mut rng = Rng::new(11);
+        let model = SparseMlp::new(
+            &[12, 8, 3],
+            3.0,
+            Activation::AllRelu { alpha: 0.6 },
+            &WeightInit::Xavier,
+            &mut rng,
+        )
+        .unwrap();
+        for _ in 0..5 {
+            rng.next_u64();
+        }
+        TrainState {
+            model,
+            rng: rng.state(),
+            next_epoch: 7,
+            start_weights: 123,
+            best_test: 0.81,
+            final_test: f32::NAN,
+            epochs: vec![
+                EpochLog {
+                    epoch: 5,
+                    train_loss: 0.4,
+                    train_accuracy: 0.8,
+                    test_loss: f32::NAN,
+                    test_accuracy: f32::NAN,
+                    weight_count: 120,
+                    seconds: 0.25,
+                },
+                EpochLog {
+                    epoch: 6,
+                    train_loss: 0.35,
+                    train_accuracy: 0.85,
+                    test_loss: 0.5,
+                    test_accuracy: 0.81,
+                    weight_count: 118,
+                    seconds: 0.27,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_including_nan_logs() {
+        let state = sample_state();
+        let dir = std::env::temp_dir().join("tsnn_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.tsnt");
+        save_state(&state, &path).unwrap();
+        let loaded = load_state(&path).unwrap();
+        assert_eq!(loaded.rng, state.rng);
+        assert_eq!(loaded.next_epoch, 7);
+        assert_eq!(loaded.start_weights, 123);
+        assert_eq!(loaded.best_test, 0.81);
+        assert!(loaded.final_test.is_nan());
+        assert_eq!(loaded.epochs.len(), 2);
+        assert!(loaded.epochs[0].test_accuracy.is_nan());
+        assert_eq!(loaded.epochs[1].weight_count, 118);
+        assert_eq!(loaded.model.sizes, state.model.sizes);
+        for (a, b) in loaded.model.layers.iter().zip(state.model.layers.iter()) {
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.velocity, b.velocity);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_typed_errors() {
+        let state = sample_state();
+        let dir = std::env::temp_dir().join("tsnn_state_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.tsnt");
+        save_state(&state, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        for cut in [0, 3, 7, 11, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load_state(&path).is_err(), "cut at {cut} loaded");
+        }
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 3;
+        flipped[mid] ^= 0x10;
+        std::fs::write(&path, &flipped).unwrap();
+        match load_state(&path) {
+            Err(TsnnError::ChecksumMismatch(_)) => {}
+            other => panic!("expected checksum mismatch, got {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,101 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the integrity
+//! trailer on durable checkpoints (DESIGN.md §13.1).
+//!
+//! The vendored crate set has no checksum crate, so this is the classic
+//! byte-at-a-time table implementation. The table is built at first use
+//! and cached behind a `OnceLock`; throughput is irrelevant next to the
+//! `fsync` the trailer rides with.
+
+use std::sync::OnceLock;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// Incremental CRC-32 over a byte stream.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    /// Fresh digest (initial state all-ones, per the IEEE spec).
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the digest.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let t = table();
+        for &b in bytes {
+            self.state = t[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    /// Finish (final xor); the digest can keep accepting updates — this
+    /// just reads the current value.
+    pub fn value(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard check value for "123456789" and a few others that any
+        // IEEE CRC-32 implementation must reproduce.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let whole = crc32(&data);
+        let mut inc = Crc32::new();
+        for chunk in data.chunks(7) {
+            inc.update(chunk);
+        }
+        assert_eq!(inc.value(), whole);
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_digest() {
+        let data = vec![0xA5u8; 512];
+        let base = crc32(&data);
+        for bit in [0, 1, 7, 100, 511 * 8 + 7] {
+            let mut mutated = data.clone();
+            mutated[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32(&mutated), base, "bit {bit} not detected");
+        }
+    }
+}

@@ -4,11 +4,13 @@
 //! (no rand/serde/criterion), so these modules provide the equivalents
 //! the rest of the crate builds on. Each has its own unit tests.
 
+pub mod crc;
 pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod timer;
 
+pub use crc::{crc32, Crc32};
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::{cpu_time_secs, peak_rss_mib, rss_mib, PhaseTimes, Timer};

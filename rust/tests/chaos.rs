@@ -1,0 +1,407 @@
+//! Crash/chaos harness for the fault-tolerance layer (DESIGN.md §13).
+//!
+//! In-process legs pin the resume-parity contract: a run checkpointed
+//! at every epoch boundary, stopped at an arbitrary one and resumed,
+//! lands on the bit-identical final model the uninterrupted run
+//! produces — across kernel budgets (or the single `KERNEL_THREADS`
+//! budget CI pins) and with dropout drawing from the restored RNG.
+//!
+//! Process legs drive the real binary: SIGKILL a `tsnn train` run
+//! mid-training and resume it; corrupt a durable state and watch the
+//! resume be refused; SIGKILL a supervised `tsnn worker` child
+//! mid-phase-1 and assert the respawned worker rejoins without changing
+//! the applied-update trajectory (same saved checkpoint bytes, same
+//! printed accuracy as the unharmed run).
+
+use std::path::{Path, PathBuf};
+
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::data::{datasets, Dataset};
+use tsnn::model::SparseMlp;
+use tsnn::nn::LrSchedule;
+use tsnn::train::{
+    load_state, train_model_hooked, train_resume, train_sequential_opts, CheckpointPolicy,
+    HookAction, TrainOptions, TrainState,
+};
+use tsnn::util::{PhaseTimes, Rng};
+
+mod common;
+
+const SEED: u64 = 40;
+
+/// Per-test scratch directory, unique per process so parallel CI legs
+/// sharing a host never collide.
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tsnn_chaos_{}_{}", name, std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small madelon-style toy set: these tests pin recovery machinery, not
+/// learning capacity.
+fn toy_data() -> Dataset {
+    let spec = DatasetSpec {
+        name: "toy".into(),
+        generator: "madelon".into(),
+        n_features: 60,
+        n_classes: 2,
+        n_train: 400,
+        n_test: 160,
+    };
+    datasets::generate(&spec, &mut Rng::new(1)).unwrap()
+}
+
+fn quick_cfg() -> TrainConfig {
+    TrainConfig {
+        hidden: vec![32, 16],
+        epsilon: 8.0,
+        epochs: 8,
+        batch: 50,
+        dropout: 0.0,
+        lr: LrSchedule::Constant(0.05),
+        ..TrainConfig::default()
+    }
+}
+
+fn assert_models_bit_equal(a: &SparseMlp, b: &SparseMlp, what: &str) {
+    assert_eq!(a.sizes, b.sizes, "{what}: sizes differ");
+    for (l, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.weights, lb.weights, "{what}: layer {l} weights differ");
+        assert_eq!(la.bias, lb.bias, "{what}: layer {l} bias differs");
+        assert_eq!(la.velocity, lb.velocity, "{what}: layer {l} velocity differs");
+        assert_eq!(
+            la.bias_velocity, lb.bias_velocity,
+            "{what}: layer {l} bias velocity differs"
+        );
+    }
+}
+
+/// The staging sibling the durable-write protocol renames from. Pinned
+/// by name here: resume-time crash hygiene deletes exactly this path.
+fn stale_tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// A run checkpointed every epoch and stopped at an arbitrary boundary
+/// resumes to the bit-identical final model: same weights, velocities,
+/// accuracies and epoch logs as the run that never died. Dropout in the
+/// last case proves the restored RNG replays regularisation draws too.
+#[test]
+fn resume_from_a_mid_run_checkpoint_matches_the_uninterrupted_run() {
+    let data = toy_data();
+    let dir = tmp_dir("resume_parity");
+    let cases: &[(usize, f32)] = &[(0, 0.0), (5, 0.0), (3, 0.2)];
+    for &threads in &common::thread_counts() {
+        for (case, &(stop, dropout)) in cases.iter().enumerate() {
+            let mut cfg = quick_cfg();
+            cfg.kernel_threads = threads;
+            cfg.dropout = dropout;
+            let what = format!("threads {threads} stop {stop} dropout {dropout}");
+
+            let reference =
+                train_sequential_opts(&cfg, &data, &mut Rng::new(SEED), TrainOptions::default())
+                    .unwrap();
+
+            // the "killed" run: same model construction and RNG stream
+            // as train_sequential_opts, every-epoch checkpoints, stopped
+            // at the chosen epoch boundary
+            let path = dir.join(format!("resume_{threads}_{case}.tsnt"));
+            let mut rng = Rng::new(SEED);
+            let sizes = cfg.sizes(data.n_features, data.n_classes);
+            let mut model =
+                SparseMlp::new(&sizes, cfg.epsilon, cfg.activation, &cfg.init, &mut rng).unwrap();
+            let opts = TrainOptions {
+                checkpoint: Some(CheckpointPolicy { path: path.clone(), every: 1 }),
+                ..TrainOptions::default()
+            };
+            let mut stop_hook = |epoch: usize, _: &SparseMlp| {
+                if epoch == stop {
+                    HookAction::Stop
+                } else {
+                    HookAction::Continue
+                }
+            };
+            let mut phases = PhaseTimes::new();
+            train_model_hooked(
+                &cfg,
+                &data,
+                &mut model,
+                &mut rng,
+                opts,
+                &mut phases,
+                Some(&mut stop_hook),
+            )
+            .unwrap();
+            drop(model); // the predecessor process is gone
+
+            let state = load_state(&path).unwrap();
+            assert_eq!(state.next_epoch, stop + 1, "{what}: checkpoint cadence");
+            let mut phases = PhaseTimes::new();
+            let resumed =
+                train_resume(&cfg, &data, state, TrainOptions::default(), &mut phases).unwrap();
+
+            assert_models_bit_equal(&reference.model, &resumed.model, &what);
+            assert_eq!(reference.epochs.len(), resumed.epochs.len(), "{what}: epoch logs");
+            assert_eq!(reference.end_weights, resumed.end_weights, "{what}: end weights");
+            assert_eq!(
+                reference.final_test_accuracy.to_bits(),
+                resumed.final_test_accuracy.to_bits(),
+                "{what}: final accuracy"
+            );
+            assert_eq!(
+                reference.best_test_accuracy.to_bits(),
+                resumed.best_test_accuracy.to_bits(),
+                "{what}: best accuracy"
+            );
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+/// A crash between the temp write and the atomic rename leaves a
+/// `PATH.tmp` sibling. Only the renamed file is ever trusted: loading
+/// ignores the sibling, and resume-time hygiene removes it.
+#[test]
+fn a_stale_temp_from_a_crashed_save_is_ignored_and_cleaned() {
+    let data = toy_data();
+    let mut cfg = quick_cfg();
+    cfg.epochs = 2;
+    let dir = tmp_dir("stale_tmp");
+    let path = dir.join("run.tsnt");
+    let opts = TrainOptions {
+        checkpoint: Some(CheckpointPolicy { path: path.clone(), every: 1 }),
+        ..TrainOptions::default()
+    };
+    train_sequential_opts(&cfg, &data, &mut Rng::new(SEED), opts).unwrap();
+
+    let tmp = stale_tmp_sibling(&path);
+    std::fs::write(&tmp, b"torn half-written image").unwrap();
+    let state = load_state(&path).unwrap();
+    assert_eq!(state.next_epoch, 2, "stale temp must not shadow the real state");
+    TrainState::clean_stale_tmp(&path);
+    assert!(!tmp.exists(), "stale temp must be removed");
+    assert!(load_state(&path).is_ok());
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Process-level chaos against the real binary (SIGKILL semantics).
+#[cfg(unix)]
+mod cli {
+    use std::process::{Command, Output, Stdio};
+    use std::thread;
+    use std::time::{Duration, Instant};
+
+    use super::tmp_dir;
+
+    fn tsnn() -> Command {
+        Command::new(env!("CARGO_BIN_EXE_tsnn"))
+    }
+
+    fn stderr_of(out: &Output) -> String {
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    }
+
+    /// `tsnn train` arguments sized so a debug-mode run lasts long
+    /// enough to be killed mid-training yet stays CI-cheap.
+    fn train_args(epochs: usize) -> Vec<String> {
+        vec![
+            "train".into(),
+            "madelon".into(),
+            "--seed".into(),
+            "40".into(),
+            format!("epochs={epochs}"),
+            "hidden=32x16".into(),
+            "epsilon=2".into(),
+            "batch=100".into(),
+            "dropout=0".into(),
+            "kernel_threads=1".into(),
+        ]
+    }
+
+    /// SIGKILL a `tsnn train --state … --checkpoint-every 1` process as
+    /// soon as its first durable state lands, then `--resume` it: the
+    /// resumed run's saved final model is byte-identical to a run that
+    /// was never interrupted.
+    #[test]
+    fn a_sigkilled_trainer_resumes_to_the_uninterrupted_final_model() {
+        let dir = tmp_dir("cli_kill_trainer");
+        let state = dir.join("run.tsnt");
+        let reference = dir.join("reference.tsnn");
+        let resumed = dir.join("resumed.tsnn");
+
+        let out = tsnn().args(train_args(5)).arg("--save").arg(&reference).output().unwrap();
+        assert!(out.status.success(), "reference run failed: {}", stderr_of(&out));
+
+        let mut child = tsnn()
+            .args(train_args(5))
+            .arg("--state")
+            .arg(&state)
+            .args(["--checkpoint-every", "1"])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while !state.exists() && Instant::now() < deadline {
+            if matches!(child.try_wait(), Ok(Some(_))) {
+                break;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(state.exists(), "trainer never wrote a durable state");
+        let _ = child.kill(); // SIGKILL mid-run (no-op if it already finished)
+        let _ = child.wait();
+
+        let out = tsnn()
+            .args(train_args(5))
+            .arg("--resume")
+            .arg(&state)
+            .arg("--save")
+            .arg(&resumed)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "resume failed: {}", stderr_of(&out));
+        let a = std::fs::read(&reference).unwrap();
+        let b = std::fs::read(&resumed).unwrap();
+        assert!(a == b, "resumed final model differs from the uninterrupted run");
+    }
+
+    /// A flipped bit anywhere in a durable state is refused at resume
+    /// with the typed checksum error — never a half-restored run.
+    #[test]
+    fn resuming_from_a_corrupt_state_is_refused_with_a_checksum_error() {
+        let dir = tmp_dir("cli_corrupt_state");
+        let state = dir.join("run.tsnt");
+        let out = tsnn().args(train_args(2)).arg("--state").arg(&state).output().unwrap();
+        assert!(out.status.success(), "seed run failed: {}", stderr_of(&out));
+
+        let mut bytes = std::fs::read(&state).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&state, &bytes).unwrap();
+
+        let out = tsnn().args(train_args(2)).arg("--resume").arg(&state).output().unwrap();
+        assert!(!out.status.success(), "corrupt state must not resume");
+        let err = stderr_of(&out);
+        assert!(err.contains("checksum mismatch"), "unexpected error: {err}");
+    }
+
+    /// Kernel budget for the multiprocess leg: the pinned
+    /// `KERNEL_THREADS` when CI sets one, else 2.
+    #[cfg(target_os = "linux")]
+    fn pinned_kernel_threads() -> usize {
+        std::env::var("KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(2)
+    }
+
+    /// Find a live `tsnn worker` child of this run (argv `worker
+    /// --connect …` mentioning the run's unique socket path) via /proc.
+    #[cfg(target_os = "linux")]
+    fn find_worker_pid(marker: &str, coordinator: u32) -> Option<u32> {
+        for entry in std::fs::read_dir("/proc").ok()?.flatten() {
+            let Some(pid) = entry.file_name().to_str().and_then(|s| s.parse::<u32>().ok()) else {
+                continue;
+            };
+            if pid == coordinator {
+                continue;
+            }
+            let Ok(cmdline) = std::fs::read(format!("/proc/{pid}/cmdline")) else {
+                continue;
+            };
+            let is_worker = cmdline.split(|&b| b == 0).nth(1) == Some(&b"worker"[..]);
+            if is_worker && cmdline.windows(marker.len()).any(|w| w == marker.as_bytes()) {
+                return Some(pid);
+            }
+        }
+        None
+    }
+
+    #[cfg(target_os = "linux")]
+    fn final_acc(stdout: &[u8]) -> String {
+        let text = String::from_utf8_lossy(stdout);
+        text.split_whitespace()
+            .find(|t| t.starts_with("final_acc="))
+            .map(str::to_string)
+            .unwrap_or_else(|| panic!("no final_acc in output: {text}"))
+    }
+
+    /// SIGKILL one of two supervised worker processes mid-run: the
+    /// supervisor respawns it, the coordinator holds its shard for
+    /// rejoin, and the run completes with exactly the unharmed run's
+    /// final model and accuracy (the rejoin cursor keeps the crash off
+    /// the applied-update trajectory).
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn a_sigkilled_worker_is_respawned_and_the_run_completes_identically() {
+        let dir = tmp_dir("cli_kill_worker");
+        let sock = dir.join("coord.sock");
+        let reference = dir.join("reference.tsnn");
+        let harmed = dir.join("harmed.tsnn");
+        let kt = pinned_kernel_threads();
+
+        let base: Vec<String> = vec![
+            "parallel".into(),
+            "madelon".into(),
+            "--seed".into(),
+            "7".into(),
+            "epochs=4".into(),
+            "hidden=32x16".into(),
+            "epsilon=2".into(),
+            "batch=100".into(),
+            "dropout=0".into(),
+            format!("kernel_threads={kt}"),
+            "--workers".into(),
+            "2".into(),
+            "--phase1".into(),
+            "2".into(),
+            "--phase2".into(),
+            "1".into(),
+            "--sync".into(),
+        ];
+
+        let out = tsnn().args(&base).arg("--save").arg(&reference).output().unwrap();
+        assert!(out.status.success(), "in-process reference failed: {}", stderr_of(&out));
+        let ref_acc = final_acc(&out.stdout);
+
+        let transport = format!("unix:{}", sock.display());
+        let mut child = tsnn()
+            .args(&base)
+            .args(["--transport", &transport, "--supervise", "--max-restarts", "3"])
+            .arg("--save")
+            .arg(&harmed)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+
+        let marker = sock.display().to_string();
+        let mut victim = None;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while victim.is_none() && Instant::now() < deadline {
+            if matches!(child.try_wait(), Ok(Some(_))) {
+                break;
+            }
+            victim = find_worker_pid(&marker, child.id());
+            thread::sleep(Duration::from_millis(2));
+        }
+        let victim = victim.expect("no worker process appeared to kill");
+        let killed = Command::new("kill")
+            .args(["-9", &victim.to_string()])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        assert!(killed, "kill -9 {victim} failed");
+
+        let out = child.wait_with_output().unwrap();
+        assert!(out.status.success(), "supervised run did not complete after the kill");
+        assert_eq!(final_acc(&out.stdout), ref_acc, "accuracy diverged after the worker kill");
+        let a = std::fs::read(&reference).unwrap();
+        let b = std::fs::read(&harmed).unwrap();
+        assert!(a == b, "final model diverged after the worker kill");
+    }
+}

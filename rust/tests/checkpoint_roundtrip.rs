@@ -147,7 +147,11 @@ fn truncation_at_every_boundary_is_a_typed_error() {
         }
         std::fs::write(&pt, &full[..cut]).unwrap();
         match checkpoint::load(&pt) {
-            Err(TsnnError::Io(_)) | Err(TsnnError::Checkpoint(_)) => {}
+            // pre-header cuts die in Io/Checkpoint; any cut past the
+            // version field breaks the CRC-32 trailer first
+            Err(TsnnError::Io(_))
+            | Err(TsnnError::Checkpoint(_))
+            | Err(TsnnError::ChecksumMismatch(_)) => {}
             Err(other) => panic!("cut {cut}: unexpected error kind {other}"),
             Ok(_) => panic!("cut {cut}: truncated checkpoint must not load"),
         }
@@ -233,6 +237,11 @@ fn corrupt_header_nnz_fails_without_allocating() {
     out.extend_from_slice(&(corrupted.len() as u32).to_le_bytes());
     out.extend_from_slice(corrupted.as_bytes());
     out.extend_from_slice(&bytes[12 + hlen..]);
+    // re-seal the CRC-32 trailer so the nnz guard, not the integrity
+    // check, is what rejects the file
+    let body_end = out.len() - 4;
+    let crc = tsnn::util::crc::crc32(&out[..body_end]).to_le_bytes();
+    out[body_end..].copy_from_slice(&crc);
     std::fs::write(&p, &out).unwrap();
     let err = checkpoint::load(&p).unwrap_err();
     std::fs::remove_file(&p).unwrap();

@@ -228,6 +228,7 @@ fn gradflow_instrumentation_composes_with_pruning() {
         tsnn::train::TrainOptions {
             gradflow_every: 3,
             verbose: false,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -454,6 +454,71 @@ fn wassp_over_tcp_socket_matches_channel() {
     );
 }
 
+/// Startup race: workers that launch *before* the coordinator is
+/// listening connect via `connect_retry` and the run is still bit-exact
+/// with the channel reference — worker-first startup order changes
+/// connection timing, never the applied-update trajectory.
+#[test]
+fn workers_started_before_coordinator_listens_still_match() {
+    let cfg = quick_cfg();
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 2,
+        phase1_epochs: 2,
+        phase2_epochs: 0,
+        synchronous: true,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let channel_report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(31)).unwrap();
+
+    // reserve a port, then free it: the workers start dialing an address
+    // nothing listens on yet
+    let port = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().port()
+    };
+    let hostport = format!("127.0.0.1:{port}");
+    let connect = Addr::Tcp(hostport.clone());
+    let budgets = worker_kernel_budgets(&cfg, pcfg.workers);
+    let data_ref = &data;
+    let socket_report = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for k in 0..pcfg.workers {
+            let job = WorkerJob::new(k as u32, budgets[k], &cfg, &pcfg);
+            let connect = connect.clone();
+            handles.push(scope.spawn(move || {
+                let client =
+                    SocketClient::connect_retry(&connect, Duration::from_secs(20)).unwrap();
+                run_worker(Box::new(client), RetryPolicy::default(), &job, data_ref)
+            }));
+        }
+        // workers are already retrying against a dead address; bind late
+        std::thread::sleep(Duration::from_millis(250));
+        let mut hub = SocketHub::bind(&Addr::Tcp(hostport)).unwrap();
+        let report = run_parallel_listener(
+            &cfg,
+            &pcfg,
+            &data,
+            &mut Rng::new(31),
+            &mut hub,
+            None,
+            &CoordinatorOptions::default(),
+        );
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        report
+    })
+    .unwrap();
+
+    assert_models_bit_equal(
+        &channel_report.model,
+        &socket_report.model,
+        "worker-first socket vs channel",
+    );
+}
+
 /// Satellite 1 regression: a non-finite gradient norm zeroes the buffers
 /// (even with clipping off) instead of silently skipping the scale and
 /// letting NaNs through; finite gradients behave as before.

@@ -49,7 +49,26 @@ fn sample_frames() -> Vec<Vec<u8>> {
         .collect();
     vec![
         encode_frame(0, 1, &Message::Join),
-        encode_frame(0, 2, &Message::JoinAck { job: Some("{\"k\":1}".into()) }),
+        encode_frame(
+            0,
+            2,
+            &Message::JoinAck {
+                job: Some("{\"k\":1}".into()),
+                resume_pushes: 0,
+                resume_step: NONE_U64,
+            },
+        ),
+        encode_frame(
+            4,
+            11,
+            &Message::JoinAck {
+                job: None,
+                resume_pushes: 17,
+                resume_step: 9,
+            },
+        ),
+        encode_frame(4, 12, &Message::Ping),
+        encode_frame(4, 13, &Message::Pong),
         encode_frame(1, 3, &Message::Fetch { have_gen: 7, have_step: NONE_U64 }),
         encode_frame(
             1,
