@@ -51,7 +51,7 @@ fn single_layer_mlp(n: usize, density: f64, seed: u64) -> SparseMlp {
     let weights = erdos_renyi(n, n, density, &mut rng, &WeightInit::Normal(0.3));
     let layer = SparseLayer {
         bias: (0..n).map(|_| rng.normal() * 0.1).collect(),
-        velocity: vec![0.0; weights.nnz()],
+        velocity: vec![0.0; weights.nnz()].into(),
         bias_velocity: vec![0.0; n],
         weights,
         activation: Activation::Linear,

@@ -47,7 +47,7 @@ fn dense_model(n_in: usize, n_out: usize, seed: u64) -> SparseMlp {
     let weights = erdos_renyi(n_in, n_out, 0.6, &mut rng, &WeightInit::Normal(0.3));
     let layer = SparseLayer {
         bias: (0..n_out).map(|_| rng.normal() * 0.1).collect(),
-        velocity: vec![0.0; weights.nnz()],
+        velocity: vec![0.0; weights.nnz()].into(),
         bias_velocity: vec![0.0; n_out],
         weights,
         activation: Activation::Linear,

@@ -1,0 +1,553 @@
+//! Streaming topology evolution for mapped models (DESIGN.md §14.5).
+//!
+//! [`evolve_epoch`] is the out-of-core twin of
+//! [`EvolutionEngine::evolve_epoch`][crate::set::EvolutionEngine]: the
+//! same fused importance + SET epoch, bit-exact against the in-RAM
+//! engine and the sequential oracles, but with peak resident memory
+//! O(plan) instead of O(nnz):
+//!
+//! * the engine's `part` scratch (a full copy of the value array for
+//!   `select_nth_unstable`) is replaced by an **exact** two-pass
+//!   bucket-histogram selection over the value *bit patterns*
+//!   ([`streamed_prune_cuts`]) — O(1) scratch, zero RNG, same cuts to
+//!   the last bit;
+//! * the engine's `out_*` rebuild buffers are replaced by mapped windows
+//!   into a **fresh staged segment**: survivors and regrowth merge
+//!   straight to disk through [`rebuild_rows`] (the engine's own merge,
+//!   `pub(crate)` for exactly this), row-chunked with
+//!   `msync`+`MADV_DONTNEED` behind the cursor so only one chunk of the
+//!   new generation is ever resident;
+//! * the swap is the segment generation handover (seal → atomic rename
+//!   over the live path → re-window), not a `Vec` swap — a crash at any
+//!   point leaves either the old sealed generation or a refused `.tmp`.
+//!
+//! What stays in RAM is the *plan*: per-row survivor/regrowth counts and
+//! prefix sums (O(n_rows)), the sampled gap ordinals and drawn weights
+//! (O(to_grow)), and the per-output importance sums (O(n_cols)) — the
+//! "plan in RAM, data on disk" split DESIGN.md §14.5 argues is the right
+//! boundary.
+//!
+//! RNG layout is copied from the engine verbatim: one caller `u64` seeds
+//! a root stream when SET is active (none on importance-only epochs),
+//! layer `l` runs on `root.split(l)`, gap ordinals are drawn before the
+//! regrown weights, weights in sorted (row, col) order. Parity is pinned
+//! by `tests/outofcore_parity.rs` across thread counts and ISAs.
+
+use crate::error::Result;
+use crate::importance::{importance_threshold_from, ImportanceConfig};
+use crate::set::engine::{rebuild_rows, EpochStats, KeepSpec};
+use crate::set::{sample_gap_ordinals, EvolutionConfig};
+use crate::util::Rng;
+
+use super::model::BigModel;
+use super::segment::Segment;
+
+/// Output slots per rebuild chunk (~1 MiB of columns, ~1 MiB of values,
+/// ~1 MiB of velocity resident at a time).
+const CHUNK_SLOTS: usize = 1 << 18;
+
+/// One fused evolution epoch over a mapped model — the out-of-core
+/// equivalent of `EvolutionEngine::evolve_epoch` (same caller-RNG
+/// consumption: one `u64` when `evo` is set, none otherwise; the final
+/// classifier layer is importance-exempt). Layers whose epoch is a
+/// provable no-op keep their current segment generation untouched.
+pub fn evolve_epoch(
+    model: &mut BigModel,
+    evo: Option<&EvolutionConfig>,
+    imp: Option<&ImportanceConfig>,
+    rng: &mut Rng,
+) -> Result<Vec<EpochStats>> {
+    let n_layers = model.mlp.layers.len();
+    if evo.is_none() && imp.is_none() {
+        return Ok(vec![EpochStats::default(); n_layers]);
+    }
+    let root = match evo {
+        Some(_) => Rng::new(rng.next_u64()),
+        None => Rng::new(0),
+    };
+    let mut stats = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let imp_l = if l + 1 == n_layers { None } else { imp };
+        let layer_rng = root.split(l as u64);
+        stats.push(evolve_layer_streamed(model, l, evo, imp_l, layer_rng)?);
+    }
+    Ok(stats)
+}
+
+/// Plan one layer's epoch in RAM, then stream the rebuild into a fresh
+/// segment generation and install it. Mirrors the engine's `plan_layer`
+/// + `rebuild_and_swap` decision-for-decision.
+fn evolve_layer_streamed(
+    model: &mut BigModel,
+    l: usize,
+    evo: Option<&EvolutionConfig>,
+    imp: Option<&ImportanceConfig>,
+    mut rng: Rng,
+) -> Result<EpochStats> {
+    let layer = &model.mlp.layers[l];
+    let w = &layer.weights;
+    let (n_in, n_out) = (w.n_rows, w.n_cols);
+    let nnz0 = w.nnz();
+
+    // --- importance threshold (Eq. 4), engine's exact gating ---
+    let mut imp_sums: Vec<f32> = Vec::new();
+    let imp_thr: Option<f32> = match imp {
+        Some(cfg) if nnz0 > cfg.min_connections => {
+            imp_sums.resize(n_out, 0.0);
+            for (&j, &v) in w.col_idx.iter().zip(w.values.iter()) {
+                imp_sums[j as usize] += v.abs();
+            }
+            let mut active = Vec::new();
+            importance_threshold_from(&imp_sums, nnz0, cfg, &mut active)
+        }
+        _ => None,
+    };
+    if evo.is_none() && imp_thr.is_none() {
+        // provable no-op: current generation stays (the engine skips the
+        // rebuild on this path too, and consumes no layer RNG either way)
+        return Ok(EpochStats::default());
+    }
+    let imp_view: Option<(&[f32], f32)> = imp_thr.map(|thr| (imp_sums.as_slice(), thr));
+
+    // --- SET prune cuts over the importance-surviving values: exact
+    //     streamed selection instead of the engine's O(nnz) partition ---
+    let (pos_cut, neg_cut, set_active) = match evo {
+        Some(cfg) => {
+            let (p, n) = streamed_prune_cuts(&w.col_idx, &w.values, imp_view, cfg.zeta);
+            (p, n, true)
+        }
+        None => (0.0, 0.0, false),
+    };
+    let keep = KeepSpec {
+        imp: imp_view,
+        pos_cut,
+        neg_cut,
+        set_active,
+    };
+
+    // --- pass 1: per-row survivor counts + removal tallies ---
+    let mut keep_counts = vec![0usize; n_in];
+    let (mut total_kept, mut imp_pruned, mut set_pruned) = (0usize, 0usize, 0usize);
+    for i in 0..n_in {
+        let (s, e) = (w.row_ptr[i], w.row_ptr[i + 1]);
+        let mut kept = 0usize;
+        for k in s..e {
+            if !keep.imp_ok(w.col_idx[k]) {
+                imp_pruned += 1;
+            } else if !keep.set_ok(w.values[k]) {
+                set_pruned += 1;
+            } else {
+                kept += 1;
+            }
+        }
+        keep_counts[i] = kept;
+        total_kept += kept;
+    }
+
+    // --- regrowth plan: gap ordinals -> (row, col) -> weight draws,
+    //     verbatim from the engine (identical RNG stream) ---
+    let capacity = n_in * n_out - total_kept;
+    let to_grow = if set_active {
+        set_pruned.min(capacity)
+    } else {
+        0
+    };
+    let mut gap_prefix = vec![0usize; n_in + 1];
+    for i in 0..n_in {
+        gap_prefix[i + 1] = gap_prefix[i] + (n_out - keep_counts[i]);
+    }
+    debug_assert_eq!(gap_prefix[n_in], capacity);
+
+    let mut ordinals = Vec::with_capacity(to_grow);
+    let mut seen = std::collections::HashSet::with_capacity(to_grow);
+    sample_gap_ordinals(&mut rng, capacity, to_grow, &mut ordinals, &mut seen);
+    ordinals.sort_unstable();
+
+    let mut grow_counts = vec![0usize; n_in];
+    let mut grow_cols: Vec<u32> = Vec::with_capacity(to_grow);
+    let mut grow_vals: Vec<f32> = Vec::with_capacity(to_grow);
+    let mut oi = 0usize;
+    for i in 0..n_in {
+        if oi >= ordinals.len() {
+            break;
+        }
+        let hi = gap_prefix[i + 1];
+        if ordinals[oi] >= hi {
+            continue;
+        }
+        let lo = gap_prefix[i];
+        let (s, e) = (w.row_ptr[i], w.row_ptr[i + 1]);
+        let row_start = grow_cols.len();
+        // two-pointer gap selection over this row's (virtual) survivors:
+        // the g-th empty column is g + #survivors c_t with c_t - t <= g
+        let mut t = 0usize;
+        let mut k = s;
+        let mut next_surv: Option<usize> = None;
+        while oi < ordinals.len() && ordinals[oi] < hi {
+            let g = ordinals[oi] - lo;
+            loop {
+                if next_surv.is_none() {
+                    while k < e {
+                        if keep.keep(w.col_idx[k], w.values[k]) {
+                            next_surv = Some(w.col_idx[k] as usize);
+                            break;
+                        }
+                        k += 1;
+                    }
+                }
+                match next_surv {
+                    Some(c) if c - t <= g => {
+                        t += 1;
+                        k += 1;
+                        next_surv = None;
+                    }
+                    _ => break,
+                }
+            }
+            grow_cols.push((g + t) as u32);
+            oi += 1;
+        }
+        grow_counts[i] = grow_cols.len() - row_start;
+    }
+    debug_assert_eq!(grow_cols.len(), to_grow);
+    // weights drawn in sorted (row, col) order — the oracle's exact order
+    if let Some(cfg) = evo {
+        for _ in 0..to_grow {
+            grow_vals.push(cfg.init.sample(&mut rng, n_in, n_out));
+        }
+    }
+
+    let mut grow_ptr = vec![0usize; n_in + 1];
+    let mut new_row_ptr = vec![0usize; n_in + 1];
+    for i in 0..n_in {
+        grow_ptr[i + 1] = grow_ptr[i] + grow_counts[i];
+        new_row_ptr[i + 1] = new_row_ptr[i] + keep_counts[i] + grow_counts[i];
+    }
+    let new_nnz = new_row_ptr[n_in];
+    debug_assert_eq!(new_nnz, total_kept + to_grow);
+
+    // --- rebuild: merge straight into the next segment generation,
+    //     one row chunk resident at a time ---
+    let old_region = std::sync::Arc::clone(model.segment(l).region());
+    // flush training-dirty pages so per-chunk drops behind the read
+    // cursor cannot outrun writeback
+    old_region.sync(0, old_region.len())?;
+    let mut new_seg = Segment::create(model.segment(l).path(), n_in, n_out, new_nnz)?;
+    {
+        let mut rp = new_seg.row_ptr_buf()?;
+        rp.as_mut_slice().copy_from_slice(&new_row_ptr);
+    }
+    {
+        let mut col_win = new_seg.col_idx_buf()?;
+        let mut val_win = new_seg.values_buf()?;
+        let mut vel_win = new_seg.velocity_buf()?;
+        let out_col = col_win.as_mut_slice();
+        let out_val = val_win.as_mut_slice();
+        let out_vel = vel_win.as_mut_slice();
+        let old_vel = layer.velocity.as_slice();
+        let lay = *new_seg.layout();
+        let new_region = std::sync::Arc::clone(new_seg.region());
+        let mut r0 = 0usize;
+        while r0 < n_in {
+            let mut r1 = r0 + 1;
+            while r1 < n_in && new_row_ptr[r1 + 1] - new_row_ptr[r0] <= CHUNK_SLOTS {
+                r1 += 1;
+            }
+            let (o0, o1) = (new_row_ptr[r0], new_row_ptr[r1]);
+            rebuild_rows(
+                w,
+                old_vel,
+                keep,
+                &grow_cols,
+                &grow_vals,
+                &grow_ptr,
+                &new_row_ptr,
+                r0,
+                r1,
+                &mut out_col[o0..o1],
+                &mut out_val[o0..o1],
+                &mut out_vel[o0..o1],
+            );
+            // retire the chunk: new-generation slots flushed and dropped,
+            // old-generation rows (already synced above) dropped
+            for base in [lay.col_idx_off, lay.values_off, lay.velocity_off] {
+                let off = base as usize + o0 * 4;
+                let len = (o1 - o0) * 4;
+                new_region.sync(off, len)?;
+                new_region.advise_dontneed(off, len);
+            }
+            let (s0, s1) = (w.row_ptr[r0], w.row_ptr[r1]);
+            let old_lay = *model.segment(l).layout();
+            for base in [old_lay.col_idx_off, old_lay.values_off, old_lay.velocity_off] {
+                old_region.advise_dontneed(base as usize + s0 * 4, (s1 - s0) * 4);
+            }
+            r0 = r1;
+        }
+    }
+    new_seg.write_bias(&layer.bias, &layer.bias_velocity)?;
+    new_seg.seal()?;
+    model.install_segment(l, new_seg)?;
+    Ok(EpochStats {
+        importance_pruned: imp_pruned,
+        pruned: set_pruned,
+        regrown: to_grow,
+    })
+}
+
+/// Exact SET prune cuts with O(1) scratch: the streamed replacement for
+/// `partition_signs` + `thresholds_from_partition`.
+///
+/// Why this is bit-exact (not approximate): for finite IEEE-754 floats of
+/// one sign, numeric order and unsigned bit-pattern order coincide —
+/// ascending for positives, and for negatives *descending numeric*
+/// (closest to zero first, the order the SET cut ranks in) is ascending
+/// bit order. So both cuts are "the value whose u32 pattern has rank
+/// `k-1` in ascending bit order within its sign class", recoverable by
+/// histogram prefix sums: a coarse pass over the high 16 pattern bits
+/// locates the winning bucket, a fine pass over the low 16 bits inside
+/// that bucket pins the exact pattern. Ties are harmless — equal floats
+/// share one pattern, and `select_nth_unstable_by` returns that value.
+/// Zeros are excluded (`v > 0.0` / `v < 0.0`), matching the partition.
+pub(crate) fn streamed_prune_cuts(
+    col_idx: &[u32],
+    values: &[f32],
+    imp: Option<(&[f32], f32)>,
+    zeta: f64,
+) -> (f32, f32) {
+    let imp_ok = |j: u32| match imp {
+        Some((sums, thr)) => sums[j as usize] >= thr,
+        None => true,
+    };
+    // coarse: one histogram over the high 16 pattern bits; positives land
+    // in [0, 0x8000), negatives in [0x8000, 0x10000), each ascending in
+    // its class's selection order
+    let mut coarse = vec![0u64; 1 << 16];
+    for (&j, &v) in col_idx.iter().zip(values.iter()) {
+        if (v > 0.0 || v < 0.0) && imp_ok(j) {
+            coarse[(v.to_bits() >> 16) as usize] += 1;
+        }
+    }
+    let npos: u64 = coarse[..1 << 15].iter().sum();
+    let nneg: u64 = coarse[1 << 15..].iter().sum();
+    let kp = (npos as f64 * zeta).floor() as u64;
+    let kn = (nneg as f64 * zeta).floor() as u64;
+    let pos_bucket = (kp > 0).then(|| locate_bucket(&coarse[..1 << 15], kp - 1));
+    let neg_bucket =
+        (kn > 0).then(|| locate_bucket(&coarse[1 << 15..], kn - 1)).map(|(b, r)| (b + (1 << 15), r));
+    drop(coarse);
+    // fine: low 16 bits inside each winning bucket, both classes in one
+    // second pass
+    let mut fine_pos = vec![0u64; 1 << 16];
+    let mut fine_neg = vec![0u64; 1 << 16];
+    if pos_bucket.is_some() || neg_bucket.is_some() {
+        for (&j, &v) in col_idx.iter().zip(values.iter()) {
+            if (v > 0.0 || v < 0.0) && imp_ok(j) {
+                let bits = v.to_bits();
+                let hi = (bits >> 16) as usize;
+                if Some(hi) == pos_bucket.map(|(b, _)| b) {
+                    fine_pos[(bits & 0xFFFF) as usize] += 1;
+                } else if Some(hi) == neg_bucket.map(|(b, _)| b) {
+                    fine_neg[(bits & 0xFFFF) as usize] += 1;
+                }
+            }
+        }
+    }
+    let cut = |bucket: Option<(usize, u64)>, fine: &[u64]| -> f32 {
+        match bucket {
+            None => 0.0,
+            Some((b, rank)) => {
+                let (lo, _) = locate_bucket(fine, rank);
+                f32::from_bits(((b as u32) << 16) | lo as u32)
+            }
+        }
+    };
+    (cut(pos_bucket, &fine_pos), cut(neg_bucket, &fine_neg))
+}
+
+/// Index of the histogram bucket containing ascending rank `rank`, plus
+/// the remaining rank *within* that bucket.
+fn locate_bucket(hist: &[u64], rank: u64) -> (usize, u64) {
+    let mut before = 0u64;
+    for (b, &c) in hist.iter().enumerate() {
+        if before + c > rank {
+            return (b, rank - before);
+        }
+        before += c;
+    }
+    unreachable!("rank {rank} beyond histogram total {before}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::set::prune_thresholds;
+
+    /// Filter `values` the way the engine's partition does, then ask the
+    /// in-RAM oracle for its cuts.
+    fn oracle_cuts(
+        col_idx: &[u32],
+        values: &[f32],
+        imp: Option<(&[f32], f32)>,
+        zeta: f64,
+    ) -> (f32, f32) {
+        let filtered: Vec<f32> = col_idx
+            .iter()
+            .zip(values.iter())
+            .filter(|(&j, _)| match imp {
+                Some((sums, thr)) => sums[j as usize] >= thr,
+                None => true,
+            })
+            .map(|(_, &v)| v)
+            .collect();
+        prune_thresholds(&filtered, zeta)
+    }
+
+    fn check(col_idx: &[u32], values: &[f32], imp: Option<(&[f32], f32)>, zeta: f64, label: &str) {
+        let want = oracle_cuts(col_idx, values, imp, zeta);
+        let got = streamed_prune_cuts(col_idx, values, imp, zeta);
+        assert_eq!(
+            want.0.to_bits(),
+            got.0.to_bits(),
+            "{label}: positive cut (want {}, got {})",
+            want.0,
+            got.0
+        );
+        assert_eq!(
+            want.1.to_bits(),
+            got.1.to_bits(),
+            "{label}: negative cut (want {}, got {})",
+            want.1,
+            got.1
+        );
+    }
+
+    #[test]
+    fn streamed_cuts_match_the_select_nth_oracle() {
+        let mut rng = Rng::new(42);
+        for trial in 0..50 {
+            let n = 1 + rng.below_usize(400);
+            let values: Vec<f32> = (0..n)
+                .map(|_| match rng.below_usize(10) {
+                    0 => 0.0,
+                    1 => values_tie(trial),
+                    _ => rng.normal(),
+                })
+                .collect();
+            let col_idx: Vec<u32> = (0..n).map(|_| rng.below_usize(7) as u32).collect();
+            for zeta in [0.0, 0.1, 0.3, 0.5, 0.99, 1.0] {
+                check(&col_idx, &values, None, zeta, &format!("trial {trial} ζ={zeta}"));
+            }
+        }
+    }
+
+    /// A repeated value so the selection regularly lands on ties.
+    fn values_tie(trial: usize) -> f32 {
+        if trial % 2 == 0 {
+            0.25
+        } else {
+            -0.25
+        }
+    }
+
+    #[test]
+    fn streamed_cuts_honor_the_importance_filter() {
+        let mut rng = Rng::new(7);
+        let n = 300;
+        let n_out = 9usize;
+        let values: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let col_idx: Vec<u32> = (0..n).map(|_| rng.below_usize(n_out) as u32).collect();
+        let sums: Vec<f32> = (0..n_out).map(|j| j as f32).collect();
+        for thr in [0.0f32, 3.0, 8.0, 100.0] {
+            check(
+                &col_idx,
+                &values,
+                Some((&sums, thr)),
+                0.3,
+                &format!("thr={thr}"),
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_cuts_edge_cases() {
+        // empty, all-zero, single-sign, single-element
+        check(&[], &[], None, 0.3, "empty");
+        check(&[0, 0, 0], &[0.0, 0.0, 0.0], None, 0.5, "all zeros");
+        check(&[0, 1, 2], &[1.0, 2.0, 3.0], None, 0.5, "all positive");
+        check(&[0, 1, 2], &[-1.0, -2.0, -3.0], None, 0.5, "all negative");
+        check(&[0], &[0.5], None, 1.0, "single ζ=1");
+        // denormals and extremes keep the bit-order argument honest
+        check(
+            &[0, 1, 2, 3, 4, 5],
+            &[f32::MIN_POSITIVE / 2.0, 1e-30, -1e-30, f32::MAX, f32::MIN, -f32::MIN_POSITIVE],
+            None,
+            0.5,
+            "denormals/extremes",
+        );
+    }
+
+    use crate::util::Rng;
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn mapped_epoch_matches_the_inram_engine() {
+        use crate::model::SparseMlp;
+        use crate::nn::Activation;
+        use crate::set::EvolutionEngine;
+        use crate::sparse::WeightInit;
+
+        let dir = std::env::temp_dir()
+            .join(format!("tsnn_bigmodel_evolve_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sizes = [31usize, 44, 6];
+        let act = Activation::Relu;
+        let init = WeightInit::Normal(0.5);
+        let mut ram = SparseMlp::new(&sizes, 6.0, act, &init, &mut Rng::new(21)).unwrap();
+        let mut big = BigModel::create(&dir, &sizes, 6.0, act, &init, &mut Rng::new(21)).unwrap();
+        // non-trivial optimizer state so velocity remapping is observable
+        for (lr, lb) in ram.layers.iter_mut().zip(big.mlp.layers.iter_mut()) {
+            for (k, (vr, vb)) in lr
+                .velocity
+                .iter_mut()
+                .zip(lb.velocity.as_mut_slice().iter_mut())
+                .enumerate()
+            {
+                *vr = 0.25 * (k + 1) as f32;
+                *vb = 0.25 * (k + 1) as f32;
+            }
+        }
+        let evo = EvolutionConfig::default();
+        let imp = ImportanceConfig {
+            start_epoch: 0,
+            period: 1,
+            percentile: 20.0,
+            min_connections: 0,
+        };
+        let mut engine = EvolutionEngine::new();
+        for round in 0..3 {
+            let mut rng_a = Rng::new(100 + round);
+            let mut rng_b = Rng::new(100 + round);
+            let want = engine
+                .evolve_epoch(&mut ram, Some(&evo), Some(&imp), &mut rng_a, 1)
+                .unwrap();
+            let got = evolve_epoch(&mut big, Some(&evo), Some(&imp), &mut rng_b).unwrap();
+            assert_eq!(want, got, "round {round}: stats");
+            for (l, (a, b)) in ram.layers.iter().zip(big.mlp.layers.iter()).enumerate() {
+                assert_eq!(a.weights, b.weights, "round {round} layer {l}: weights");
+                assert_eq!(
+                    a.velocity.as_slice(),
+                    b.velocity.as_slice(),
+                    "round {round} layer {l}: velocity"
+                );
+            }
+        }
+        // the new generations survive a close + reopen
+        big.persist().unwrap();
+        drop(big);
+        let back = BigModel::open(&dir).unwrap();
+        for (l, (a, b)) in ram.layers.iter().zip(back.mlp.layers.iter()).enumerate() {
+            assert_eq!(a.weights, b.weights, "reopen layer {l}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,43 @@
+//! Out-of-core sparse model storage: mmap-backed layers for beyond-RAM
+//! training (DESIGN.md §14).
+//!
+//! The paper's "bat brain" argument — a sparse network with the synapse
+//! count of a bat's brain needs far less memory than its dense
+//! equivalent — stops at RAM. This subsystem moves the boundary to
+//! disk: every layer's CSR arrays, velocity and bias state live in one
+//! durable, CRC-trailed `TSNS` segment file ([`segment`]), memory-mapped
+//! and exposed to the *unmodified* kernels through the
+//! [`Buf`][crate::sparse::Buf] abstraction. Model size is bounded by
+//! disk; resident memory by what the kernels touch, with an optional
+//! in-process eviction advisor ([`residency`]) holding RSS near a
+//! configured budget.
+//!
+//! The module splits along the plan/data boundary:
+//! * [`segment`] — the on-disk format and its durability protocol
+//!   (staged `.tmp` build → seal (CRC + fsync) → atomic rename);
+//! * [`model`] — [`BigModel`]: a real `SparseMlp` over mapped windows,
+//!   with streaming Erdős–Rényi creation bit-identical to
+//!   `SparseMlp::new`;
+//! * [`evolve`] — streaming SET/importance epochs: plan in RAM
+//!   (O(rows + regrowth)), rebuild into a fresh segment generation
+//!   chunk by chunk, swap by rename;
+//! * [`train`] — the epoch driver, RNG-identical to the in-RAM
+//!   sequential driver (no model clones);
+//! * [`residency`] — `/proc/self/status` accounting + the soft-budget
+//!   page-drop advisor.
+//!
+//! Everything here assumes `usize` can index the mapped `u64` row
+//! offsets, so the module is compiled only on 64-bit targets (gated in
+//! `lib.rs`).
+
+pub mod evolve;
+pub mod model;
+pub mod residency;
+pub mod segment;
+pub mod train;
+
+pub use evolve::evolve_epoch;
+pub use model::{layer_path, BigModel};
+pub use residency::{vm_hwm_bytes, vm_rss_bytes, SegmentResidency};
+pub use segment::{Segment, SegmentLayout};
+pub use train::{train_big, BigTrainOptions, BigTrainReport};

@@ -1,0 +1,464 @@
+//! [`BigModel`]: a [`SparseMlp`] whose layer arrays live in mapped
+//! `TSNS` segment files (DESIGN.md §14.3) — model size bounded by disk,
+//! resident memory by what the kernels touch (plus whatever the
+//! [`crate::bigmodel::residency`] advisor lets linger).
+//!
+//! The wrapped `mlp` field is a *real* [`SparseMlp`] — same struct, same
+//! kernels, same `Workspace` — whose `row_ptr`/`col_idx`/`values`/
+//! `velocity` buffers are [`Buf::Mapped`] windows into one segment per
+//! layer. Everything that takes `&SparseMlp`/`&mut SparseMlp`
+//! (forward, train_step, evaluate, checkpoint::save) works unchanged;
+//! only *structural* rebuilds must go through [`crate::bigmodel::evolve`]
+//! (the in-RAM engine's swap would silently materialise the layer).
+//!
+//! Initialisation parity: [`BigModel::create`] draws its Erdős–Rényi
+//! topology through the same [`er_sample_row`] per-row sequence as
+//! [`SparseMlp::new`] — row degrees, sorted columns, then one weight
+//! draw per link — so a `BigModel` and a `SparseMlp` built from equal
+//! RNG states are bit-identical (pinned by `tests/outofcore_parity.rs`).
+//! The draw pass streams each row's slots to spill files and the final
+//! segment is assembled by a chunked disk-to-disk copy, so peak resident
+//! memory during creation is O(n_rows + chunk), never O(nnz).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Result, TsnnError};
+use crate::model::checkpoint::act_name;
+use crate::model::{SparseLayer, SparseMlp};
+use crate::nn::Activation;
+use crate::sparse::{epsilon_density, er_sample_row, CsrMatrix, MapRegion, WeightInit};
+use crate::util::json::{obj, parse, Json};
+use crate::util::Rng;
+
+use super::segment::{Segment, STREAM_CHUNK};
+
+/// Manifest file name inside a model directory.
+pub const MANIFEST: &str = "model.tsnm";
+const MANIFEST_MAGIC: &str = "TSNM";
+const MANIFEST_VERSION: f64 = 1.0;
+
+/// Segment file of layer `l` inside `dir`.
+pub fn layer_path(dir: &Path, l: usize) -> PathBuf {
+    dir.join(format!("layer_{l}.tsns"))
+}
+
+/// An out-of-core sparse MLP: one mapped segment per layer plus a tiny
+/// JSON manifest (sizes + activations) tying the directory together.
+#[derive(Debug)]
+pub struct BigModel {
+    /// The trainable model; its layer buffers are mapped windows into
+    /// `segments`. Use it directly with the normal kernels/Workspace.
+    pub mlp: SparseMlp,
+    segments: Vec<Segment>,
+    dir: PathBuf,
+}
+
+impl BigModel {
+    /// Build a fresh model under `dir` with the exact RNG consumption of
+    /// [`SparseMlp::new`], then open it mapped. Hidden layers get
+    /// `activation`, the output layer is linear, biases start at zero.
+    pub fn create(
+        dir: &Path,
+        sizes: &[usize],
+        epsilon: f64,
+        activation: Activation,
+        init: &WeightInit,
+        rng: &mut Rng,
+    ) -> Result<BigModel> {
+        if sizes.len() < 2 {
+            return Err(TsnnError::Config("need at least input+output sizes".into()));
+        }
+        std::fs::create_dir_all(dir)?;
+        let n_layers = sizes.len() - 1;
+        let mut acts = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let act = if l + 1 == n_layers {
+                Activation::Linear
+            } else {
+                activation
+            };
+            acts.push(act);
+            build_layer_segment(&layer_path(dir, l), sizes[l], sizes[l + 1], epsilon, init, rng)?;
+        }
+        write_manifest(dir, sizes, &acts)?;
+        BigModel::open(dir)
+    }
+
+    /// Open an existing model directory: manifest parsed, every segment
+    /// CRC-verified and mapped, bias state read into RAM.
+    pub fn open(dir: &Path) -> Result<BigModel> {
+        let (sizes, acts) = read_manifest(dir)?;
+        let n_layers = sizes.len() - 1;
+        let mut segments = Vec::with_capacity(n_layers);
+        let mut layers = Vec::with_capacity(n_layers);
+        for (l, &act) in acts.iter().enumerate().take(n_layers) {
+            let seg = Segment::open(&layer_path(dir, l))?;
+            let lay = seg.layout();
+            if lay.n_rows != sizes[l] as u64 || lay.n_cols != sizes[l + 1] as u64 {
+                return Err(TsnnError::Storage(format!(
+                    "layer {l} segment is {}x{}, manifest says {}x{}",
+                    lay.n_rows,
+                    lay.n_cols,
+                    sizes[l],
+                    sizes[l + 1]
+                )));
+            }
+            let (bias, bias_velocity) = seg.read_bias()?;
+            layers.push(SparseLayer {
+                weights: CsrMatrix {
+                    n_rows: sizes[l],
+                    n_cols: sizes[l + 1],
+                    row_ptr: seg.row_ptr_buf()?,
+                    col_idx: seg.col_idx_buf()?,
+                    values: seg.values_buf()?,
+                },
+                bias,
+                velocity: seg.velocity_buf()?,
+                bias_velocity,
+                activation: act,
+                srelu: None,
+            });
+            segments.push(seg);
+        }
+        Ok(BigModel {
+            mlp: SparseMlp { sizes, layers },
+            segments,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Model directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The segment behind layer `l`.
+    pub fn segment(&self, l: usize) -> &Segment {
+        &self.segments[l]
+    }
+
+    /// Per-layer mapped regions, in layer order (for the residency
+    /// advisor).
+    pub fn regions(&self) -> Vec<Arc<MapRegion>> {
+        self.segments.iter().map(|s| Arc::clone(s.region())).collect()
+    }
+
+    /// Total bytes of all segment files — the number the extreme-scale
+    /// bench compares against the RAM budget.
+    pub fn total_segment_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.file_len()).sum()
+    }
+
+    /// Flush the RAM bias state into every segment and re-seal them
+    /// (msync + fresh CRC trailers), making the on-disk model
+    /// self-consistent at this instant. Weight/velocity mutations since
+    /// the last `persist` were already reaching the page cache; this
+    /// pins them to the file and restores CRC validity.
+    pub fn persist(&mut self) -> Result<()> {
+        for (seg, layer) in self.segments.iter_mut().zip(self.mlp.layers.iter()) {
+            seg.write_bias(&layer.bias, &layer.bias_velocity)?;
+            seg.seal()?;
+        }
+        Ok(())
+    }
+
+    /// Install the next generation of layer `l` (a sealed rebuild from
+    /// [`crate::bigmodel::evolve`], already renamed over the live path)
+    /// and re-window the layer's buffers onto it. Bias state stays the
+    /// RAM copy the layer already holds.
+    pub fn install_segment(&mut self, l: usize, new_seg: Segment) -> Result<()> {
+        let layer = &mut self.mlp.layers[l];
+        layer.weights.row_ptr = new_seg.row_ptr_buf()?;
+        layer.weights.col_idx = new_seg.col_idx_buf()?;
+        layer.weights.values = new_seg.values_buf()?;
+        layer.velocity = new_seg.velocity_buf()?;
+        self.segments[l].replace_with(new_seg);
+        Ok(())
+    }
+
+    /// Save a standard `TSNN` checkpoint of the current weights (reads
+    /// stream through the mapping; the file is byte-identical to one
+    /// saved from an in-RAM model in the same state).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        crate::model::checkpoint::save(&self.mlp, path)
+    }
+}
+
+/// Stream one layer's Erdős–Rényi draw into a sealed segment: rows are
+/// drawn with [`er_sample_row`] (the exact [`SparseMlp::new`] sequence),
+/// spilled to temporary files, and copied chunk-wise into the mapped
+/// sections once the total nnz is known.
+fn build_layer_segment(
+    path: &Path,
+    n_in: usize,
+    n_out: usize,
+    epsilon: f64,
+    init: &WeightInit,
+    rng: &mut Rng,
+) -> Result<()> {
+    let density = epsilon_density(epsilon, n_in, n_out);
+    let spill_cols = path.with_extension("cols.spill");
+    let spill_vals = path.with_extension("vals.spill");
+    let mut row_ptr: Vec<usize> = Vec::with_capacity(n_in + 1);
+    row_ptr.push(0);
+    {
+        let mut wc = BufWriter::new(File::create(&spill_cols)?);
+        let mut wv = BufWriter::new(File::create(&spill_vals)?);
+        let (mut cols, mut vals) = (Vec::new(), Vec::new());
+        for _ in 0..n_in {
+            er_sample_row(rng, n_in, n_out, density, init, &mut cols, &mut vals);
+            for &c in &cols {
+                wc.write_all(&c.to_le_bytes())?;
+            }
+            for &v in &vals {
+                wv.write_all(&v.to_le_bytes())?;
+            }
+            row_ptr.push(row_ptr[row_ptr.len() - 1] + cols.len());
+        }
+        wc.flush()?;
+        wv.flush()?;
+    }
+    let nnz = row_ptr[n_in];
+    let mut seg = Segment::create(path, n_in, n_out, nnz)?;
+    {
+        let mut rp = seg.row_ptr_buf()?;
+        rp.as_mut_slice().copy_from_slice(&row_ptr);
+    }
+    copy_spill_u32(&spill_cols, &mut seg)?;
+    copy_spill_f32(&spill_vals, &mut seg)?;
+    // velocity / bias / bias_velocity sections are already zero (the
+    // file was sized with set_len), matching the in-RAM initialiser
+    seg.seal()?;
+    std::fs::remove_file(&spill_cols)?;
+    std::fs::remove_file(&spill_vals)?;
+    Ok(())
+}
+
+fn copy_spill_u32(spill: &Path, seg: &mut Segment) -> Result<()> {
+    let mut window = seg.col_idx_buf()?;
+    let out = window.as_mut_slice();
+    let mut f = File::open(spill)?;
+    let mut chunk = vec![0u8; STREAM_CHUNK];
+    let mut at = 0usize;
+    loop {
+        let n = read_full(&mut f, &mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        for (slot, b) in out[at..at + n / 4].iter_mut().zip(chunk[..n].chunks_exact(4)) {
+            *slot = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        at += n / 4;
+        let region = seg.region();
+        let byte_base = crate::sparse::storage::checked_usize(seg.layout().col_idx_off, "col_idx offset")?;
+        region.sync(byte_base + (at * 4).saturating_sub(n), n)?;
+        region.advise_dontneed(byte_base + (at * 4).saturating_sub(n), n);
+    }
+    if at != out.len() {
+        return Err(TsnnError::Storage(format!(
+            "col spill holds {at} entries, segment expects {}",
+            out.len()
+        )));
+    }
+    Ok(())
+}
+
+fn copy_spill_f32(spill: &Path, seg: &mut Segment) -> Result<()> {
+    let mut window = seg.values_buf()?;
+    let out = window.as_mut_slice();
+    let mut f = File::open(spill)?;
+    let mut chunk = vec![0u8; STREAM_CHUNK];
+    let mut at = 0usize;
+    loop {
+        let n = read_full(&mut f, &mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        for (slot, b) in out[at..at + n / 4].iter_mut().zip(chunk[..n].chunks_exact(4)) {
+            *slot = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        at += n / 4;
+        let region = seg.region();
+        let byte_base = crate::sparse::storage::checked_usize(seg.layout().values_off, "values offset")?;
+        region.sync(byte_base + (at * 4).saturating_sub(n), n)?;
+        region.advise_dontneed(byte_base + (at * 4).saturating_sub(n), n);
+    }
+    if at != out.len() {
+        return Err(TsnnError::Storage(format!(
+            "value spill holds {at} entries, segment expects {}",
+            out.len()
+        )));
+    }
+    Ok(())
+}
+
+/// `Read::read` until `buf` is full or EOF; returns bytes read.
+fn read_full(f: &mut File, buf: &mut [u8]) -> Result<usize> {
+    let mut n = 0usize;
+    while n < buf.len() {
+        let got = f.read(&mut buf[n..])?;
+        if got == 0 {
+            break;
+        }
+        n += got;
+    }
+    Ok(n)
+}
+
+fn write_manifest(dir: &Path, sizes: &[usize], acts: &[Activation]) -> Result<()> {
+    let doc = obj(vec![
+        ("magic", Json::Str(MANIFEST_MAGIC.into())),
+        ("version", Json::Num(MANIFEST_VERSION)),
+        (
+            "sizes",
+            Json::Arr(sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        (
+            "activations",
+            Json::Arr(acts.iter().map(|a| Json::Str(act_name(a))).collect()),
+        ),
+    ]);
+    let tmp = dir.join(format!("{MANIFEST}.tmp"));
+    let final_path = dir.join(MANIFEST);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(doc.dump().as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &final_path)?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+fn read_manifest(dir: &Path) -> Result<(Vec<usize>, Vec<Activation>)> {
+    let path = dir.join(MANIFEST);
+    let text = std::fs::read_to_string(&path)?;
+    let doc = parse(&text)
+        .map_err(|e| TsnnError::Storage(format!("{}: manifest parse: {e}", path.display())))?;
+    if doc.get("magic").and_then(Json::as_str) != Some(MANIFEST_MAGIC) {
+        return Err(TsnnError::Storage(format!(
+            "{}: not a TSNM model manifest",
+            path.display()
+        )));
+    }
+    let sizes: Vec<usize> = doc
+        .get("sizes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| TsnnError::Storage("manifest missing sizes".into()))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let acts: Vec<Activation> = doc
+        .get("activations")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| TsnnError::Storage("manifest missing activations".into()))?
+        .iter()
+        .filter_map(|v| v.as_str().and_then(Activation::parse))
+        .collect();
+    if sizes.len() < 2 || acts.len() != sizes.len() - 1 {
+        return Err(TsnnError::Storage(format!(
+            "manifest shape mismatch: {} sizes, {} activations",
+            sizes.len(),
+            acts.len()
+        )));
+    }
+    Ok((sizes, acts))
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tsnn_bigmodel_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn create_is_bit_identical_to_sparse_mlp_new() {
+        let dir = test_dir("init_parity");
+        let sizes = [17usize, 29, 5];
+        let act = Activation::AllRelu { alpha: 0.6 };
+        let init = WeightInit::HeUniform;
+        let ram = SparseMlp::new(&sizes, 3.0, act, &init, &mut Rng::new(99)).unwrap();
+        let big = BigModel::create(&dir, &sizes, 3.0, act, &init, &mut Rng::new(99)).unwrap();
+        assert_eq!(ram.sizes, big.mlp.sizes);
+        for (l, (a, b)) in ram.layers.iter().zip(big.mlp.layers.iter()).enumerate() {
+            assert!(b.weights.values.is_mapped(), "layer {l} must be mapped");
+            assert_eq!(a.weights, b.weights, "layer {l} weights");
+            assert_eq!(a.bias, b.bias, "layer {l} bias");
+            assert_eq!(a.velocity, b.velocity, "layer {l} velocity");
+            assert_eq!(a.activation, b.activation, "layer {l} activation");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn persist_then_reopen_preserves_all_state() {
+        let dir = test_dir("reopen");
+        let sizes = [9usize, 12, 4];
+        let mut big = BigModel::create(
+            &dir,
+            &sizes,
+            2.0,
+            Activation::Relu,
+            &WeightInit::Normal(0.4),
+            &mut Rng::new(5),
+        )
+        .unwrap();
+        // mutate every piece of state through the mapped windows
+        for layer in big.mlp.layers.iter_mut() {
+            for v in layer.weights.values.as_mut_slice() {
+                *v += 0.5;
+            }
+            for v in layer.velocity.as_mut_slice() {
+                *v = 0.125;
+            }
+            for b in layer.bias.iter_mut() {
+                *b = 1.5;
+            }
+        }
+        let want: Vec<_> = big
+            .mlp
+            .layers
+            .iter()
+            .map(|l| (l.weights.clone(), l.velocity.to_vec(), l.bias.clone()))
+            .collect();
+        big.persist().unwrap();
+        drop(big);
+        let back = BigModel::open(&dir).unwrap();
+        for (l, (layer, (w, v, b))) in back.mlp.layers.iter().zip(want.iter()).enumerate() {
+            assert_eq!(&layer.weights, w, "layer {l} weights");
+            assert_eq!(layer.velocity.as_slice(), v.as_slice(), "layer {l} velocity");
+            assert_eq!(&layer.bias, b, "layer {l} bias");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_from_mapped_matches_checkpoint_from_ram() {
+        let dir = test_dir("ckpt");
+        let sizes = [11usize, 16, 3];
+        let act = Activation::AllRelu { alpha: 0.75 };
+        let init = WeightInit::HeUniform;
+        let ram = SparseMlp::new(&sizes, 4.0, act, &init, &mut Rng::new(31)).unwrap();
+        let big = BigModel::create(&dir, &sizes, 4.0, act, &init, &mut Rng::new(31)).unwrap();
+        let p_ram = dir.join("ram.tsnn");
+        let p_map = dir.join("map.tsnn");
+        crate::model::checkpoint::save(&ram, &p_ram).unwrap();
+        big.save_checkpoint(&p_map).unwrap();
+        assert_eq!(
+            std::fs::read(&p_ram).unwrap(),
+            std::fs::read(&p_map).unwrap(),
+            "mapped and RAM checkpoints must be byte-identical"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,555 @@
+//! `TSNS` per-layer segment files — the durable on-disk backing of an
+//! out-of-core model (DESIGN.md §14.2).
+//!
+//! One segment file holds everything one [`crate::model::SparseLayer`]
+//! owns: the CSR arrays (`row_ptr`/`col_idx`/`values`), the momentum
+//! `velocity`, and the bias state. The CSR + velocity sections are
+//! memory-mapped read-write ([`crate::sparse::MapRegion`]) and handed to
+//! the layer as [`Buf::Mapped`] windows, so the kernels train directly
+//! against the page cache; the O(n_out) bias vectors are read into RAM at
+//! open and written back at [`Segment::seal`].
+//!
+//! Layout (little-endian, every section 8-byte aligned):
+//!
+//! ```text
+//! off 0   magic "TSNS" | version u32 | state u32 | reserved u32
+//! off 16  n_rows u64 | n_cols u64 | nnz u64
+//! off 40  reserved (zero) .. HEADER_BYTES (64)
+//! row_ptr        (n_rows + 1) × u64   (mapped as usize — 64-bit hosts)
+//! col_idx        nnz × u32
+//! values         nnz × f32
+//! velocity       nnz × f32
+//! bias           n_cols × f32
+//! bias_velocity  n_cols × f32
+//! crc            u32 over [0, crc_off)   (valid only when SEALED)
+//! ```
+//!
+//! Durability protocol (mirrors `checkpoint::write_durable`): a segment
+//! is built at `<path>.tmp`, filled through the mapping, then
+//! [`Segment::seal`]ed — state flips to `SEALED`, the mapping is
+//! msync'ed, a streaming CRC-32 is stamped, the file is fsync'ed and
+//! atomically renamed over `<path>` (plus a best-effort directory
+//! fsync). A crash at any point leaves either the old sealed file or a
+//! `.tmp` that [`Segment::open`] refuses (state byte / CRC), never a
+//! torn segment at the live path. SET evolution rebuilds into a fresh
+//! `.tmp` the same way and the rename swaps generations atomically.
+//!
+//! All header arithmetic is u64 with checked ops ([`TsnnError::IndexOverflow`]
+//! on a hypothetical overflow), so layouts past `u32::MAX` total slots
+//! are computed exactly — see `layout_handles_past_u32_max_nnz`.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Result, TsnnError};
+use crate::sparse::storage::checked_usize;
+use crate::sparse::{Buf, MapRegion, MapSlice};
+use crate::util::crc::Crc32;
+
+/// Segment file magic.
+pub const MAGIC: [u8; 4] = *b"TSNS";
+/// Segment format version.
+pub const VERSION: u32 = 1;
+/// Fixed header span; sections start here.
+pub const HEADER_BYTES: u64 = 64;
+/// State byte of a segment still being written (no valid CRC).
+pub const STATE_OPEN: u32 = 0;
+/// State byte of a sealed segment (CRC trailer valid).
+pub const STATE_SEALED: u32 = 1;
+/// Chunk size of the streaming CRC / copy passes — this, not the segment
+/// size, is what those passes keep resident.
+pub const STREAM_CHUNK: usize = 1 << 20;
+
+fn add(a: u64, b: u64, what: &str) -> Result<u64> {
+    a.checked_add(b)
+        .ok_or_else(|| TsnnError::IndexOverflow(format!("{what}: {a} + {b} overflows u64")))
+}
+
+fn mul(a: u64, b: u64, what: &str) -> Result<u64> {
+    a.checked_mul(b)
+        .ok_or_else(|| TsnnError::IndexOverflow(format!("{what}: {a} * {b} overflows u64")))
+}
+
+fn align8(v: u64, what: &str) -> Result<u64> {
+    Ok(add(v, 7, what)? & !7)
+}
+
+/// Byte offsets of every section of one segment file, computed once with
+/// checked u64 arithmetic and shared by create/open/window code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentLayout {
+    pub n_rows: u64,
+    pub n_cols: u64,
+    pub nnz: u64,
+    pub row_ptr_off: u64,
+    pub col_idx_off: u64,
+    pub values_off: u64,
+    pub velocity_off: u64,
+    pub bias_off: u64,
+    pub bias_velocity_off: u64,
+    /// Offset of the CRC-32 trailer; the digest covers `[0, crc_off)`.
+    pub crc_off: u64,
+    pub file_len: u64,
+}
+
+impl SegmentLayout {
+    /// Section offsets for a layer of shape `n_rows × n_cols` with `nnz`
+    /// connections. Pure arithmetic — callable (and tested) at scales far
+    /// past what the host could allocate.
+    pub fn compute(n_rows: u64, n_cols: u64, nnz: u64) -> Result<SegmentLayout> {
+        let row_ptr_off = HEADER_BYTES;
+        let row_ptr_end = add(row_ptr_off, mul(add(n_rows, 1, "row count")?, 8, "row_ptr bytes")?, "row_ptr end")?;
+        let col_idx_off = align8(row_ptr_end, "col_idx offset")?;
+        let col_idx_end = add(col_idx_off, mul(nnz, 4, "col_idx bytes")?, "col_idx end")?;
+        let values_off = align8(col_idx_end, "values offset")?;
+        let values_end = add(values_off, mul(nnz, 4, "values bytes")?, "values end")?;
+        let velocity_off = align8(values_end, "velocity offset")?;
+        let velocity_end = add(velocity_off, mul(nnz, 4, "velocity bytes")?, "velocity end")?;
+        let bias_off = align8(velocity_end, "bias offset")?;
+        let bias_end = add(bias_off, mul(n_cols, 4, "bias bytes")?, "bias end")?;
+        let bias_velocity_off = align8(bias_end, "bias_velocity offset")?;
+        let bias_velocity_end =
+            add(bias_velocity_off, mul(n_cols, 4, "bias_velocity bytes")?, "bias_velocity end")?;
+        let crc_off = align8(bias_velocity_end, "crc offset")?;
+        let file_len = add(crc_off, 4, "segment file length")?;
+        Ok(SegmentLayout {
+            n_rows,
+            n_cols,
+            nnz,
+            row_ptr_off,
+            col_idx_off,
+            values_off,
+            velocity_off,
+            bias_off,
+            bias_velocity_off,
+            crc_off,
+            file_len,
+        })
+    }
+
+    fn header_image(&self, state: u32) -> [u8; HEADER_BYTES as usize] {
+        let mut h = [0u8; HEADER_BYTES as usize];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        h[8..12].copy_from_slice(&state.to_le_bytes());
+        h[16..24].copy_from_slice(&self.n_rows.to_le_bytes());
+        h[24..32].copy_from_slice(&self.n_cols.to_le_bytes());
+        h[32..40].copy_from_slice(&self.nnz.to_le_bytes());
+        h
+    }
+}
+
+/// `<path>.tmp` — the build/rebuild staging name next to the live file.
+fn staging_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn fsync_dir(path: &Path) {
+    // best-effort parent-directory fsync so the rename itself is durable
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// One mapped layer-segment file. Holds the file handle, the shared
+/// mapping every [`Buf::Mapped`] window of the layer points into, and the
+/// section layout.
+#[derive(Debug)]
+pub struct Segment {
+    file: File,
+    region: Arc<MapRegion>,
+    layout: SegmentLayout,
+    /// The live path the segment belongs at (post-rename).
+    path: PathBuf,
+    /// True while the file still lives at `staging_path` (pre-seal).
+    staged: bool,
+}
+
+impl Segment {
+    /// Create a fresh segment at `<path>.tmp`, sized for `nnz` slots and
+    /// zero-filled (`set_len` — velocity/bias sections need no explicit
+    /// zeroing), with an `OPEN` header. [`Segment::seal`] stamps the CRC
+    /// and renames it over `path`.
+    pub fn create(path: &Path, n_rows: usize, n_cols: usize, nnz: usize) -> Result<Segment> {
+        let layout = SegmentLayout::compute(n_rows as u64, n_cols as u64, nnz as u64)?;
+        let map_len = checked_usize(layout.file_len, "segment file length")?;
+        let staged_at = staging_path(path);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&staged_at)?;
+        file.set_len(layout.file_len)?;
+        let region = MapRegion::map_file(&file, map_len)?;
+        let mut seg = Segment {
+            file,
+            region,
+            layout,
+            path: path.to_path_buf(),
+            staged: true,
+        };
+        seg.byte_window(0, HEADER_BYTES as usize)?
+            .as_mut_slice()
+            .copy_from_slice(&layout.header_image(STATE_OPEN));
+        Ok(seg)
+    }
+
+    /// Open a sealed segment at `path`: header + length validated, the
+    /// CRC-32 trailer re-verified by a streaming read (O([`STREAM_CHUNK`])
+    /// resident), then mapped.
+    pub fn open(path: &Path) -> Result<Segment> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut h = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut h)?;
+        if h[0..4] != MAGIC {
+            return Err(TsnnError::Storage(format!(
+                "{}: bad magic (not a TSNS segment)",
+                path.display()
+            )));
+        }
+        let version = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+        if version != VERSION {
+            return Err(TsnnError::Storage(format!(
+                "{}: unsupported segment version {version}",
+                path.display()
+            )));
+        }
+        let state = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+        if state != STATE_SEALED {
+            return Err(TsnnError::Storage(format!(
+                "{}: segment was never sealed (state {state}) — crashed mid-build",
+                path.display()
+            )));
+        }
+        let n_rows = u64::from_le_bytes(h[16..24].try_into().unwrap());
+        let n_cols = u64::from_le_bytes(h[24..32].try_into().unwrap());
+        let nnz = u64::from_le_bytes(h[32..40].try_into().unwrap());
+        let layout = SegmentLayout::compute(n_rows, n_cols, nnz)?;
+        let disk_len = file.metadata()?.len();
+        if disk_len != layout.file_len {
+            return Err(TsnnError::Storage(format!(
+                "{}: segment is {disk_len} bytes, layout demands {}",
+                path.display(),
+                layout.file_len
+            )));
+        }
+        // streaming CRC over [0, crc_off), then the stored trailer
+        file.seek(SeekFrom::Start(0))?;
+        let mut digest = Crc32::new();
+        let mut remaining = layout.crc_off;
+        let mut chunk = vec![0u8; STREAM_CHUNK.min(checked_usize(layout.crc_off.max(1), "crc span")?)];
+        while remaining > 0 {
+            let take = checked_usize(remaining, "crc span")?.min(chunk.len());
+            file.read_exact(&mut chunk[..take])?;
+            digest.update(&chunk[..take]);
+            remaining -= take as u64;
+        }
+        let mut trailer = [0u8; 4];
+        file.read_exact(&mut trailer)?;
+        let stored = u32::from_le_bytes(trailer);
+        if digest.value() != stored {
+            return Err(TsnnError::ChecksumMismatch(format!(
+                "{}: segment CRC {stored:#010x} != computed {:#010x}",
+                path.display(),
+                digest.value()
+            )));
+        }
+        let map_len = checked_usize(layout.file_len, "segment file length")?;
+        let region = MapRegion::map_file(&file, map_len)?;
+        Ok(Segment {
+            file,
+            region,
+            layout,
+            path: path.to_path_buf(),
+            staged: false,
+        })
+    }
+
+    /// Seal: flip the header state to `SEALED`, msync the whole mapping,
+    /// stamp the streaming CRC-32 trailer, fsync, and (when the segment
+    /// was freshly built) atomically rename `<path>.tmp` → `<path>`.
+    pub fn seal(&mut self) -> Result<()> {
+        let layout = self.layout;
+        self.byte_window(8, 4)?
+            .as_mut_slice()
+            .copy_from_slice(&STATE_SEALED.to_le_bytes());
+        let map_len = self.region.len();
+        self.region.sync(0, map_len)?;
+        // CRC over the now-clean mapped bytes, chunked with the pages
+        // dropped behind the cursor so sealing a beyond-RAM segment never
+        // faults the whole file resident at once.
+        let crc_span = checked_usize(layout.crc_off, "crc span")?;
+        let mut digest = Crc32::new();
+        let mut off = 0usize;
+        while off < crc_span {
+            let take = STREAM_CHUNK.min(crc_span - off);
+            digest.update(self.byte_window(off, take)?.as_slice());
+            self.region.advise_dontneed(off, take);
+            off += take;
+        }
+        self.byte_window(crc_span, 4)?
+            .as_mut_slice()
+            .copy_from_slice(&digest.value().to_le_bytes());
+        self.region.sync(crc_span, 4)?;
+        self.file.sync_all()?;
+        if self.staged {
+            std::fs::rename(staging_path(&self.path), &self.path)?;
+            fsync_dir(&self.path);
+            self.staged = false;
+        }
+        Ok(())
+    }
+
+    /// Replace the sealed segment at this segment's live path with `new`
+    /// (which must be sealed, i.e. already renamed into place by
+    /// [`Segment::seal`]) — the generation handover of an evolution
+    /// rebuild. `self` becomes `new`; the old mapping dies with the old
+    /// `Segment` value (the old inode stays alive until then).
+    pub fn replace_with(&mut self, new: Segment) {
+        debug_assert!(!new.staged, "replacement segment must be sealed");
+        debug_assert_eq!(self.path, new.path);
+        *self = new;
+    }
+
+    /// Section layout.
+    pub fn layout(&self) -> &SegmentLayout {
+        &self.layout
+    }
+
+    /// The live path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The shared mapping (residency sync/advise hooks).
+    pub fn region(&self) -> &Arc<MapRegion> {
+        &self.region
+    }
+
+    /// Total on-disk size.
+    pub fn file_len(&self) -> u64 {
+        self.layout.file_len
+    }
+
+    fn byte_window(&self, off: usize, len: usize) -> Result<Buf<u8>> {
+        Ok(Buf::Mapped(MapSlice::new(Arc::clone(&self.region), off, len)?))
+    }
+
+    fn window<T: crate::sparse::storage::Pod>(&self, off: u64, len: u64) -> Result<Buf<T>> {
+        Ok(Buf::Mapped(MapSlice::new(
+            Arc::clone(&self.region),
+            checked_usize(off, "section offset")?,
+            checked_usize(len, "section length")?,
+        )?))
+    }
+
+    /// Mapped `row_ptr` window. The on-disk section is u64; mapping it as
+    /// `usize` is exact on the 64-bit hosts this module is compiled for
+    /// (the `bigmodel` module is gated on `target_pointer_width = "64"`).
+    pub fn row_ptr_buf(&self) -> Result<Buf<usize>> {
+        self.window(self.layout.row_ptr_off, self.layout.n_rows + 1)
+    }
+
+    /// Mapped `col_idx` window.
+    pub fn col_idx_buf(&self) -> Result<Buf<u32>> {
+        self.window(self.layout.col_idx_off, self.layout.nnz)
+    }
+
+    /// Mapped `values` window.
+    pub fn values_buf(&self) -> Result<Buf<f32>> {
+        self.window(self.layout.values_off, self.layout.nnz)
+    }
+
+    /// Mapped `velocity` window.
+    pub fn velocity_buf(&self) -> Result<Buf<f32>> {
+        self.window(self.layout.velocity_off, self.layout.nnz)
+    }
+
+    /// Copy the bias sections out into RAM (`(bias, bias_velocity)`) —
+    /// the O(n_out) state [`crate::model::SparseLayer`] keeps as plain
+    /// `Vec`s between seals.
+    pub fn read_bias(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b: Buf<f32> = self.window(self.layout.bias_off, self.layout.n_cols)?;
+        let bv: Buf<f32> = self.window(self.layout.bias_velocity_off, self.layout.n_cols)?;
+        Ok((b.to_vec(), bv.to_vec()))
+    }
+
+    /// Write the RAM bias state back into the segment (pre-seal).
+    pub fn write_bias(&mut self, bias: &[f32], bias_velocity: &[f32]) -> Result<()> {
+        if bias.len() as u64 != self.layout.n_cols || bias_velocity.len() as u64 != self.layout.n_cols
+        {
+            return Err(TsnnError::Shape(format!(
+                "bias write of {} / {} values into a segment with n_cols {}",
+                bias.len(),
+                bias_velocity.len(),
+                self.layout.n_cols
+            )));
+        }
+        let mut b: Buf<f32> = self.window(self.layout.bias_off, self.layout.n_cols)?;
+        b.as_mut_slice().copy_from_slice(bias);
+        let mut bv: Buf<f32> = self.window(self.layout.bias_velocity_off, self.layout.n_cols)?;
+        bv.as_mut_slice().copy_from_slice(bias_velocity);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_handles_past_u32_max_nnz() {
+        // pure header arithmetic at a scale no host could allocate: a
+        // 3B-row layer with 2^33+5 connections — every offset exact,
+        // 8-aligned, and ordered; nothing is allocated.
+        let nnz = (1u64 << 33) + 5;
+        let l = SegmentLayout::compute(3_000_000_000, 1 << 20, nnz).unwrap();
+        assert_eq!(l.row_ptr_off, HEADER_BYTES);
+        assert_eq!(l.col_idx_off, HEADER_BYTES + (3_000_000_001) * 8);
+        assert_eq!(l.values_off - l.col_idx_off, ((nnz * 4) + 7) & !7);
+        assert_eq!(l.velocity_off - l.values_off, nnz * 4);
+        for off in [
+            l.row_ptr_off,
+            l.col_idx_off,
+            l.values_off,
+            l.velocity_off,
+            l.bias_off,
+            l.bias_velocity_off,
+            l.crc_off,
+        ] {
+            assert_eq!(off % 8, 0, "section at {off} not 8-aligned");
+        }
+        assert!(l.file_len > u32::MAX as u64, "layout exceeds u32 accounting");
+        assert_eq!(l.file_len, l.crc_off + 4);
+    }
+
+    #[test]
+    fn layout_overflow_is_a_typed_error() {
+        let err = SegmentLayout::compute(u64::MAX / 4, 8, 8).unwrap_err();
+        assert!(matches!(err, TsnnError::IndexOverflow(_)), "{err}");
+    }
+
+    #[cfg(target_os = "linux")]
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tsnn_segment_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn create_seal_open_roundtrips_all_sections() {
+        let dir = test_dir("roundtrip");
+        let path = dir.join("layer0.tsns");
+        let (n_rows, n_cols, nnz) = (3usize, 4usize, 5usize);
+        let mut seg = Segment::create(&path, n_rows, n_cols, nnz).unwrap();
+        seg.row_ptr_buf()
+            .unwrap()
+            .as_mut_slice()
+            .copy_from_slice(&[0, 2, 2, 5]);
+        seg.col_idx_buf()
+            .unwrap()
+            .as_mut_slice()
+            .copy_from_slice(&[0, 3, 1, 2, 3]);
+        seg.values_buf()
+            .unwrap()
+            .as_mut_slice()
+            .copy_from_slice(&[1.0, -2.0, 3.5, -0.25, 0.5]);
+        seg.velocity_buf()
+            .unwrap()
+            .as_mut_slice()
+            .copy_from_slice(&[0.1, 0.2, 0.3, 0.4, 0.5]);
+        seg.write_bias(&[1.0, 2.0, 3.0, 4.0], &[0.0, -1.0, 0.0, 1.0])
+            .unwrap();
+        assert!(!path.exists(), "segment stays at .tmp until sealed");
+        seg.seal().unwrap();
+        assert!(path.exists());
+        drop(seg);
+
+        let seg = Segment::open(&path).unwrap();
+        assert_eq!(seg.row_ptr_buf().unwrap().as_slice(), &[0, 2, 2, 5]);
+        assert_eq!(seg.col_idx_buf().unwrap().as_slice(), &[0, 3, 1, 2, 3]);
+        assert_eq!(
+            seg.values_buf().unwrap().as_slice(),
+            &[1.0, -2.0, 3.5, -0.25, 0.5]
+        );
+        assert_eq!(
+            seg.velocity_buf().unwrap().as_slice(),
+            &[0.1, 0.2, 0.3, 0.4, 0.5]
+        );
+        let (b, bv) = seg.read_bias().unwrap();
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(bv, vec![0.0, -1.0, 0.0, 1.0]);
+        drop(seg);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn corruption_and_unsealed_segments_are_refused() {
+        let dir = test_dir("refuse");
+        let path = dir.join("layer.tsns");
+        let mut seg = Segment::create(&path, 2, 2, 2).unwrap();
+        seg.col_idx_buf().unwrap().as_mut_slice().copy_from_slice(&[0, 1]);
+        seg.row_ptr_buf().unwrap().as_mut_slice().copy_from_slice(&[0, 1, 2]);
+        seg.seal().unwrap();
+        drop(seg);
+
+        // flip one payload byte → ChecksumMismatch
+        let mut bytes = std::fs::read(&path).unwrap();
+        let i = HEADER_BYTES as usize + 3;
+        bytes[i] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        match Segment::open(&path) {
+            Err(TsnnError::ChecksumMismatch(_)) => {}
+            other => panic!("corrupt segment must fail CRC, got {other:?}"),
+        }
+
+        // a never-sealed (state OPEN) file must be refused up front
+        bytes[i] ^= 0x40;
+        bytes[8..12].copy_from_slice(&STATE_OPEN.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        match Segment::open(&path) {
+            Err(TsnnError::Storage(m)) => assert!(m.contains("never sealed"), "{m}"),
+            other => panic!("unsealed segment must be refused, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn rebuild_rename_swaps_generations_atomically() {
+        let dir = test_dir("swap");
+        let path = dir.join("layer.tsns");
+        let mut gen0 = Segment::create(&path, 1, 1, 1).unwrap();
+        gen0.row_ptr_buf().unwrap().as_mut_slice().copy_from_slice(&[0, 1]);
+        gen0.values_buf().unwrap().as_mut_slice()[0] = 7.0;
+        gen0.seal().unwrap();
+
+        // build the next generation at .tmp while gen0 stays live+mapped
+        let mut gen1 = Segment::create(&path, 1, 1, 1).unwrap();
+        gen1.row_ptr_buf().unwrap().as_mut_slice().copy_from_slice(&[0, 1]);
+        gen1.values_buf().unwrap().as_mut_slice()[0] = 9.0;
+        assert_eq!(gen0.values_buf().unwrap().as_slice(), &[7.0]);
+        gen1.seal().unwrap(); // rename over the live path
+        assert_eq!(
+            gen0.values_buf().unwrap().as_slice(),
+            &[7.0],
+            "old mapping survives the rename (old inode pinned)"
+        );
+        gen0.replace_with(gen1);
+        assert_eq!(gen0.values_buf().unwrap().as_slice(), &[9.0]);
+        drop(gen0);
+        let reopened = Segment::open(&path).unwrap();
+        assert_eq!(reopened.values_buf().unwrap().as_slice(), &[9.0]);
+        drop(reopened);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,213 @@
+//! Out-of-core training driver (DESIGN.md §14.7).
+//!
+//! [`train_big`] runs the exact epoch loop of the in-RAM sequential
+//! driver (`train::train_model`) over a mapped [`BigModel`]: same
+//! batcher shuffles, same `train_step` calls, same fused
+//! evolution/importance dispatch, same evaluation cadence — and,
+//! crucially, the **same RNG consumption at every point**, so a mapped
+//! run and an in-RAM run from equal seeds produce bit-identical models
+//! (`tests/outofcore_parity.rs` pins final checkpoints byte-for-byte).
+//!
+//! What it deliberately does NOT do is clone the model: `TrainReport`
+//! carries a `SparseMlp` by value, which for a beyond-RAM model is
+//! exactly the allocation this subsystem exists to avoid. The
+//! [`BigTrainReport`] carries logs and accounting only — the trained
+//! weights live in the (persisted) segment files.
+//!
+//! Differences from the in-RAM loop, all RNG-neutral:
+//! * topology evolution routes to the streaming
+//!   [`evolve_epoch`](super::evolve::evolve_epoch) (segment-generation
+//!   rebuilds) instead of the in-place engine — bit-equal by
+//!   construction, and importance-only epochs use the same streamed path
+//!   (which consumes no caller randomness, like `prune_model`);
+//! * an optional [`SegmentResidency`] advisor rides in the workspace and
+//!   is re-pointed at the new segment generations after each evolution
+//!   epoch;
+//! * `persist_every` reseals the segments periodically (and always once
+//!   at the end — training dirties mapped values in place, so the final
+//!   reseal is what restores CRC validity for a later
+//!   [`BigModel::open`]).
+
+use std::sync::Arc;
+
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::model::Batcher;
+use crate::nn::Dropout;
+use crate::train::EpochLog;
+use crate::util::{Rng, Timer};
+
+use super::evolve::evolve_epoch;
+use super::model::BigModel;
+use super::residency::{vm_hwm_bytes, SegmentResidency};
+
+/// Knobs specific to out-of-core runs (everything else comes from the
+/// shared [`TrainConfig`]).
+#[derive(Debug, Clone, Default)]
+pub struct BigTrainOptions {
+    /// Install a [`SegmentResidency`] advisor with this soft RSS budget
+    /// (bytes). `None` trains without in-process eviction pressure.
+    pub soft_budget_bytes: Option<u64>,
+    /// Advisor `/proc` polling cadence (hook calls per check; 0 = every
+    /// hook).
+    pub residency_check_every: usize,
+    /// Reseal all segments every N completed epochs (0 = only at the
+    /// end).
+    pub persist_every: usize,
+    /// Progress lines via `log`.
+    pub verbose: bool,
+}
+
+/// Outcome of an out-of-core run. No model clone — the trained weights
+/// are the sealed segment files in the model directory.
+#[derive(Debug)]
+pub struct BigTrainReport {
+    /// Per-epoch records (same shape as the in-RAM report's).
+    pub epochs: Vec<EpochLog>,
+    /// Stored weights at the start of training.
+    pub start_weights: usize,
+    /// Stored weights at the end.
+    pub end_weights: usize,
+    /// Best test accuracy observed.
+    pub best_test_accuracy: f32,
+    /// Final test accuracy.
+    pub final_test_accuracy: f32,
+    /// `VmHWM` after training — the number the extreme-scale bench
+    /// asserts against the RAM budget (`None` off-Linux).
+    pub peak_rss_bytes: Option<u64>,
+    /// Residency sync+drop events (0 without an advisor).
+    pub trim_events: usize,
+}
+
+/// Train a mapped model in place. RNG consumption is identical to
+/// `train::train_model` with the same config, which is what makes the
+/// mapped-vs-RAM parity suite possible.
+pub fn train_big(
+    cfg: &TrainConfig,
+    data: &Dataset,
+    model: &mut BigModel,
+    rng: &mut Rng,
+    opts: &BigTrainOptions,
+) -> Result<BigTrainReport> {
+    let start_weights = model.mlp.weight_count();
+    let mut ws = model.mlp.alloc_workspace(cfg.batch);
+    ws.kernel_threads = cfg.kernel_threads;
+    ws.ensure_pool();
+    let advisor = opts.soft_budget_bytes.map(|budget| {
+        Arc::new(SegmentResidency::new(
+            model.regions(),
+            budget,
+            opts.residency_check_every,
+        ))
+    });
+    if let Some(adv) = &advisor {
+        ws.residency = Some(Arc::clone(adv) as Arc<dyn crate::sparse::Residency>);
+    }
+    let mut batcher = Batcher::new(data.n_train(), data.n_features, cfg.batch);
+    let dropout = if cfg.dropout > 0.0 {
+        Some(Dropout::new(cfg.dropout))
+    } else {
+        None
+    };
+
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut best_test = 0.0f32;
+    let mut final_test = f32::NAN;
+
+    for epoch in 0..cfg.epochs {
+        let lr = cfg.lr.at(epoch);
+        let timer = Timer::start();
+        batcher.reset(rng);
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut n_batches = 0usize;
+        while let Some((x, y)) = batcher.next_batch(&data.x_train, &data.y_train) {
+            let stats =
+                model
+                    .mlp
+                    .train_step(x, y, &cfg.optimizer, lr, dropout.as_ref(), &mut ws, rng);
+            loss_sum += stats.loss as f64;
+            acc_sum += stats.accuracy as f64;
+            n_batches += 1;
+        }
+        let train_secs = timer.secs();
+
+        // fused evolution / importance — identical dispatch (and RNG
+        // consumption) to the in-RAM loop, on the streaming path
+        let imp_due = cfg.importance.as_ref().filter(|imp| imp.due(epoch));
+        let evo_due = cfg.evolution.as_ref().filter(|_| epoch + 1 < cfg.epochs);
+        match (evo_due, imp_due) {
+            (Some(evo), imp) => {
+                let stats = evolve_epoch(model, Some(evo), imp, rng)?;
+                if opts.verbose && imp.is_some() {
+                    let removed: usize = stats.iter().map(|s| s.importance_pruned).sum();
+                    log::info!("epoch {epoch}: importance pruning removed {removed}");
+                }
+            }
+            (None, Some(imp)) => {
+                let stats = evolve_epoch(model, None, Some(imp), rng)?;
+                if opts.verbose {
+                    let removed: usize = stats.iter().map(|s| s.importance_pruned).sum();
+                    log::info!("epoch {epoch}: importance pruning removed {removed}");
+                }
+            }
+            (None, None) => {}
+        }
+        if evo_due.is_some() || imp_due.is_some() {
+            if let Some(adv) = &advisor {
+                adv.set_regions(model.regions());
+            }
+        }
+
+        // evaluation — same cadence and batch clamp as the in-RAM loop
+        let (mut test_loss, mut test_acc) = (f32::NAN, f32::NAN);
+        if cfg.eval_every > 0 && (epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs) {
+            let (l, a) = model
+                .mlp
+                .evaluate(&data.x_test, &data.y_test, cfg.batch.max(256), &mut ws);
+            test_loss = l;
+            test_acc = a;
+            best_test = best_test.max(a);
+            final_test = a;
+        }
+
+        let log_entry = EpochLog {
+            epoch,
+            train_loss: (loss_sum / n_batches.max(1) as f64) as f32,
+            train_accuracy: (acc_sum / n_batches.max(1) as f64) as f32,
+            test_loss,
+            test_accuracy: test_acc,
+            weight_count: model.mlp.weight_count(),
+            seconds: train_secs,
+        };
+        if opts.verbose {
+            log::info!(
+                "epoch {:>4}  loss {:.4}  train_acc {:.4}  test_acc {:.4}  weights {}",
+                epoch,
+                log_entry.train_loss,
+                log_entry.train_accuracy,
+                log_entry.test_accuracy,
+                log_entry.weight_count
+            );
+        }
+        epochs.push(log_entry);
+
+        if opts.persist_every > 0 && (epoch + 1) % opts.persist_every == 0 {
+            model.persist()?;
+        }
+    }
+
+    // final reseal: training wrote values/velocity through the mappings,
+    // so the CRC trailers are stale until this
+    model.persist()?;
+    Ok(BigTrainReport {
+        end_weights: model.mlp.weight_count(),
+        start_weights,
+        best_test_accuracy: best_test,
+        final_test_accuracy: final_test,
+        epochs,
+        peak_rss_bytes: vm_hwm_bytes(),
+        trim_events: advisor.map_or(0, |a| a.trim_events()),
+    })
+}

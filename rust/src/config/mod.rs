@@ -13,7 +13,8 @@ use crate::sparse::WeightInit;
 pub struct DatasetSpec {
     /// Human-readable name (used in reports).
     pub name: String,
-    /// Generator id: leukemia | higgs | madelon | fashion | cifar | extreme.
+    /// Generator id: leukemia | higgs | madelon | fashion | cifar |
+    /// extreme | recommender.
     pub generator: String,
     /// Feature dimensionality.
     pub n_features: usize,
@@ -77,6 +78,17 @@ impl DatasetSpec {
                 n_train: 7000,
                 n_test: 3000,
             },
+            // out-of-core workload (DESIGN.md §14.8): the very wide,
+            // count-sparse input is what blows the first layer's
+            // parameter count past RAM
+            "recommender" => DatasetSpec {
+                name: name.into(),
+                generator: "recommender".into(),
+                n_features: 262_144,
+                n_classes: 8,
+                n_train: 20_000,
+                n_test: 4000,
+            },
             other => panic!("unknown paper dataset '{other}'"),
         }
     }
@@ -132,6 +144,14 @@ impl DatasetSpec {
                 n_classes: 2,
                 n_train: 1400,
                 n_test: 600,
+            },
+            "recommender" => DatasetSpec {
+                name: name.into(),
+                generator: "recommender".into(),
+                n_features: 2048,
+                n_classes: 8,
+                n_train: 1200,
+                n_test: 400,
             },
             other => panic!("unknown small dataset '{other}'"),
         }

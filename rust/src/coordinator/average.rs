@@ -89,7 +89,7 @@ pub fn average_and_resparsify(models: &[SparseMlp], target_nnz: &[usize]) -> Res
         layers.push(SparseLayer {
             weights,
             bias,
-            velocity: vec![0.0; nnz],
+            velocity: vec![0.0; nnz].into(),
             bias_velocity: vec![0.0; n_out],
             activation: models[0].layers[l].activation,
             srelu: None,

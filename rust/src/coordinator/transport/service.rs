@@ -698,7 +698,7 @@ impl CoordinatorService {
                     .model
                     .layers
                     .iter()
-                    .map(|l| l.weights.values.clone())
+                    .map(|l| l.weights.values.to_vec())
                     .collect(),
                 bias: snap.model.layers.iter().map(|l| l.bias.clone()).collect(),
             }

@@ -392,7 +392,7 @@ fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
         } => {
             w.push(u8::from(job.is_some()));
             if let Some(j) = job {
-                write_u32(&mut w, j.len() as u32)?;
+                write_u32(&mut w, crate::sparse::storage::checked_u32(j.len(), "job name length")?)?;
                 w.write_all(j.as_bytes())?;
             }
             write_u64(&mut w, *resume_pushes)?;
@@ -434,25 +434,45 @@ fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
             encode_model(&mut w, model, false)?;
         }
         Message::Err { message } => {
-            write_u32(&mut w, message.len() as u32)?;
+            write_u32(
+                &mut w,
+                crate::sparse::storage::checked_u32(message.len(), "error message length")?,
+            )?;
             w.write_all(message.as_bytes())?;
         }
     }
     Ok(w)
 }
 
-/// Encode a complete frame (header + payload).
-pub fn encode_frame(worker: u32, seq: u64, msg: &Message) -> Vec<u8> {
-    let payload = encode_payload(msg).expect("in-memory frame encode cannot fail");
+/// Encode a complete frame (header + payload), with the payload length
+/// checked against the u32 header field and [`MAX_PAYLOAD_BYTES`] — a
+/// hypothetical >4 GiB model snapshot becomes a typed
+/// [`TsnnError::IndexOverflow`] instead of a silently truncated length.
+pub fn try_encode_frame(worker: u32, seq: u64, msg: &Message) -> Result<Vec<u8>> {
+    let payload = encode_payload(msg)?;
+    if payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(TsnnError::IndexOverflow(format!(
+            "frame payload of {} bytes exceeds the wire cap {MAX_PAYLOAD_BYTES}",
+            payload.len()
+        )));
+    }
+    let len32 = crate::sparse::storage::checked_u32(payload.len(), "frame payload length")?;
     let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(msg.kind() as u8);
     out.extend_from_slice(&worker.to_le_bytes());
     out.extend_from_slice(&seq.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&len32.to_le_bytes());
     out.extend_from_slice(&payload);
-    out
+    Ok(out)
+}
+
+/// Encode a complete frame (header + payload). Panics only on payloads
+/// past the wire cap — every message the coordinator produces is far
+/// below it; size-unbounded callers use [`try_encode_frame`].
+pub fn encode_frame(worker: u32, seq: u64, msg: &Message) -> Vec<u8> {
+    try_encode_frame(worker, seq, msg).expect("in-memory frame encode cannot fail")
 }
 
 // --- decoding ---------------------------------------------------------------
@@ -673,9 +693,9 @@ fn decode_model(c: &mut Cur) -> Result<SparseMlp> {
         let weights = CsrMatrix {
             n_rows: n_in,
             n_cols: n_out,
-            row_ptr,
-            col_idx,
-            values,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            values: values.into(),
         };
         weights
             .validate()
@@ -683,7 +703,7 @@ fn decode_model(c: &mut Cur) -> Result<SparseMlp> {
         layers.push(SparseLayer {
             weights,
             bias,
-            velocity,
+            velocity: velocity.into(),
             bias_velocity,
             activation,
             srelu: None,
@@ -861,6 +881,44 @@ mod tests {
     use super::*;
     use crate::sparse::WeightInit;
     use crate::util::Rng;
+
+    /// Frame fields carrying row offsets / nnz totals past `u32::MAX`
+    /// must roundtrip untruncated through both integer codecs — the
+    /// LEB128 varints of the topology encoding and the fixed u64
+    /// fields. Header-level only: no multi-gigabyte model is built.
+    #[test]
+    fn varints_and_u64_fields_roundtrip_past_u32_max() {
+        let values: &[u64] = &[
+            0,
+            1,
+            127,
+            128,
+            u64::from(u32::MAX) - 1,
+            u64::from(u32::MAX),
+            u64::from(u32::MAX) + 1,
+            1u64 << 33,
+            (1u64 << 42) + 987_654_321,
+            u64::MAX,
+        ];
+        let mut buf = Vec::new();
+        for &v in values {
+            write_varint(&mut buf, v);
+        }
+        let mut c = Cur::new(&buf);
+        for &v in values {
+            assert_eq!(c.varint().unwrap(), v, "varint truncated {v}");
+        }
+        assert_eq!(c.remaining(), 0, "canonical varints leave no slack");
+
+        let mut buf = Vec::new();
+        for &v in values {
+            write_u64(&mut buf, v).unwrap();
+        }
+        let mut c = Cur::new(&buf);
+        for &v in values {
+            assert_eq!(c.u64().unwrap(), v, "u64 field truncated {v}");
+        }
+    }
 
     fn model() -> SparseMlp {
         SparseMlp::new(

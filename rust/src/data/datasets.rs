@@ -93,6 +93,7 @@ pub fn generate(spec: &DatasetSpec, rng: &mut Rng) -> Result<Dataset> {
         "fashion" => fashion_like(spec, rng),
         "cifar" => cifar_like(spec, rng),
         "extreme" => extreme(spec, rng),
+        "recommender" => recommender(spec, rng),
         other => Err(crate::error::TsnnError::Data(format!(
             "unknown dataset generator '{other}'"
         ))),
@@ -301,6 +302,68 @@ pub fn extreme(spec: &DatasetSpec, rng: &mut Rng) -> Result<Dataset> {
     ))
 }
 
+/// Recommender-style wide-sparse task: count-valued token features over
+/// a very wide vocabulary (the out-of-core "bat brain" workload of
+/// DESIGN.md §14.8 — input width is the axis that blows up the first
+/// layer's parameter count). Each class has a small set of preferred
+/// tokens; a sample activates a handful of tokens, drawn mostly from its
+/// class's preferences plus shared background popularity, with small
+/// interaction counts as values. Features stay raw counts — no
+/// standardisation, which would destroy the sparsity that makes the
+/// workload representative.
+pub fn recommender(spec: &DatasetSpec, rng: &mut Rng) -> Result<Dataset> {
+    let nf = spec.n_features;
+    let nc = spec.n_classes.max(2);
+    if nf < 16 {
+        return Err(crate::error::TsnnError::Data(format!(
+            "recommender needs >= 16 features, got {nf}"
+        )));
+    }
+    // class preference profiles over the vocabulary
+    let prefs_per_class = (nf / 8).clamp(8, 64);
+    let prefs: Vec<Vec<usize>> = (0..nc)
+        .map(|_| rng.sample_indices(nf, prefs_per_class))
+        .collect();
+    // shared popular tokens every class touches (non-discriminative mass)
+    let background = rng.sample_indices(nf, (nf / 16).clamp(4, 32));
+    let tokens_per_sample = (nf / 32).clamp(6, 48);
+
+    let mut fill = |n_samples: usize, rng: &mut Rng| -> (Vec<f32>, Vec<u32>) {
+        let mut x = vec![0.0f32; n_samples * nf];
+        let mut y = vec![0u32; n_samples];
+        for s in 0..n_samples {
+            let c = rng.below_usize(nc);
+            y[s] = c as u32;
+            let row = &mut x[s * nf..(s + 1) * nf];
+            for _ in 0..tokens_per_sample {
+                // 60% preferred, 25% background, 15% uniform noise
+                let roll = rng.f32();
+                let tok = if roll < 0.60 {
+                    prefs[c][rng.below_usize(prefs[c].len())]
+                } else if roll < 0.85 {
+                    background[rng.below_usize(background.len())]
+                } else {
+                    rng.below_usize(nf)
+                };
+                // interaction counts, not indicators
+                row[tok] += 1.0 + rng.below_usize(3) as f32;
+            }
+        }
+        (x, y)
+    };
+    let (x_train, y_train) = fill(spec.n_train, rng);
+    let (x_test, y_test) = fill(spec.n_test, rng);
+    Ok(Dataset {
+        name: spec.name.clone(),
+        n_features: nf,
+        n_classes: nc,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,7 +371,15 @@ mod tests {
 
     #[test]
     fn all_generators_produce_consistent_shapes() {
-        for name in ["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme"] {
+        for name in [
+            "leukemia",
+            "higgs",
+            "madelon",
+            "fashion",
+            "cifar",
+            "extreme",
+            "recommender",
+        ] {
             let spec = DatasetSpec::small(name);
             let d = generate(&spec, &mut Rng::new(1)).unwrap();
             assert_eq!(d.x_train.len(), d.n_train() * d.n_features, "{name}");
@@ -371,6 +442,49 @@ mod tests {
         assert!(
             neighbour > distant,
             "neighbour {neighbour} vs distant {distant}"
+        );
+    }
+
+    #[test]
+    fn recommender_is_sparse_and_class_informative() {
+        let spec = DatasetSpec::small("recommender");
+        let d = generate(&spec, &mut Rng::new(11)).unwrap();
+        // counts, not standardised: mostly zeros, all non-negative
+        let zeros = d.x_train.iter().filter(|&&v| v == 0.0).count();
+        assert!(
+            zeros as f64 > 0.8 * d.x_train.len() as f64,
+            "expected sparse rows, got {} / {} zeros",
+            zeros,
+            d.x_train.len()
+        );
+        assert!(d.x_train.iter().all(|&v| v >= 0.0));
+        // class-preferred tokens must separate class-conditional means:
+        // the top token of class 0 should be touched more by class-0 rows
+        let nf = d.n_features;
+        let mut mean0 = vec![0.0f64; nf];
+        let mut mean1 = vec![0.0f64; nf];
+        let (mut n0, mut n1) = (0usize, 0usize);
+        for (s, &c) in d.y_train.iter().enumerate() {
+            let row = &d.x_train[s * nf..(s + 1) * nf];
+            if c == 0 {
+                n0 += 1;
+                for (m, &v) in mean0.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            } else if c == 1 {
+                n1 += 1;
+                for (m, &v) in mean1.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            }
+        }
+        let max_gap = (0..nf)
+            .map(|f| (mean0[f] / n0 as f64 - mean1[f] / n1 as f64).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_gap > 0.1,
+            "class-preferred tokens should separate the class-conditional \
+             means (max gap {max_gap})"
         );
     }
 

@@ -39,6 +39,13 @@ pub enum TsnnError {
     /// Coordinator transport failure (malformed frame, timeout, peer gone).
     Transport(String),
 
+    /// Index / nnz counter would not fit the target integer width
+    /// (silent-truncation guard for >4B-edge models).
+    IndexOverflow(String),
+
+    /// Out-of-core storage failure (mmap, segment layout, swap protocol).
+    Storage(String),
+
     /// IO wrapper.
     Io(std::io::Error),
 }
@@ -56,6 +63,8 @@ impl fmt::Display for TsnnError {
             TsnnError::ChecksumMismatch(m) => write!(f, "checksum mismatch: {m}"),
             TsnnError::Serve(m) => write!(f, "serving error: {m}"),
             TsnnError::Transport(m) => write!(f, "transport error: {m}"),
+            TsnnError::IndexOverflow(m) => write!(f, "index overflow: {m}"),
+            TsnnError::Storage(m) => write!(f, "storage error: {m}"),
             // transparent: delegate straight to the wrapped error
             TsnnError::Io(e) => fmt::Display::fmt(e, f),
         }

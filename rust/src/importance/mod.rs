@@ -168,7 +168,7 @@ mod tests {
         SparseLayer {
             weights,
             bias: vec![0.0; n_out],
-            velocity: vec![0.0; nnz],
+            velocity: vec![0.0; nnz].into(),
             bias_velocity: vec![0.0; n_out],
             activation: Activation::Relu,
             srelu: None,

@@ -62,6 +62,10 @@
 //! ```
 
 pub mod bench;
+/// Out-of-core mmap-backed model storage (DESIGN.md §14). 64-bit only:
+/// mapped `u64` row offsets are indexed through `usize`.
+#[cfg(target_pointer_width = "64")]
+pub mod bigmodel;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

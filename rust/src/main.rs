@@ -8,6 +8,8 @@
 //!   baseline <arch> [k=v ...]        masked-dense XLA baseline ("Keras")
 //!   inspect <checkpoint>             print a checkpoint's structure
 //!   serve-bench [checkpoint]         serving QPS sweep (DESIGN.md §10)
+//!   extreme [k=v ...]                out-of-core mmap-backed training
+//!                                    under a RAM budget (DESIGN.md §14)
 //!
 //! Common options: --paper (full paper-scale dataset), --seed N,
 //! --save PATH, --workers K, --sync, --phase1 N, --phase2 N, --verbose.
@@ -18,6 +20,16 @@
 //! workers as `tsnn worker` child processes (DESIGN.md §12);
 //! `--supervise [--max-restarts N]` respawns crashed workers and holds
 //! their shards for rejoin; `--fault drop=N,dup=N,...` injects faults.
+//!
+//! Multi-node: bind the coordinator to a non-loopback interface
+//! (`parallel <dataset> --transport tcp:0.0.0.0:PORT`) — locally spawned
+//! workers still connect over loopback, and workers on *other* hosts
+//! join the same run with `tsnn worker --connect tcp:COORD_HOST:PORT
+//! --worker K`. The job spec (config + dataset recipe + kernel budgets)
+//! travels over the socket at join, so remote workers need no shared
+//! filesystem; they regenerate their shard deterministically from the
+//! spec (`tests/transport_parity.rs` pins a `0.0.0.0`-bound run
+//! bit-equal to the in-process reference).
 
 use std::time::Duration;
 
@@ -46,7 +58,8 @@ use tsnn::train::{
 };
 use tsnn::util::logging;
 
-const DATASETS: &[&str] = &["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme"];
+const DATASETS: &[&str] =
+    &["leukemia", "higgs", "madelon", "fashion", "cifar", "extreme", "recommender"];
 
 fn main() {
     logging::init();
@@ -76,6 +89,12 @@ fn run(args: &Args) -> Result<()> {
         "baseline" => cmd_baseline(args),
         "inspect" => cmd_inspect(args),
         "serve-bench" => cmd_serve_bench(args),
+        #[cfg(target_pointer_width = "64")]
+        "extreme" => cmd_extreme(args),
+        #[cfg(not(target_pointer_width = "64"))]
+        "extreme" => Err(TsnnError::Config(
+            "the out-of-core subsystem needs a 64-bit build".into(),
+        )),
         "" | "help" => {
             print_help();
             Ok(())
@@ -105,7 +124,17 @@ fn print_help() {
          \x20 inspect <checkpoint.tsnn>     checkpoint summary\n\
          \x20 serve-bench [checkpoint]      serving layout + offered-QPS sweep\n\
          \x20   (--qps N --steps N --requests N --batch N --queue N\n\
-         \x20    --wait-us N --threads N)\n\n\
+         \x20    --wait-us N --threads N)\n\
+         \x20 extreme [k=v ...]             out-of-core mmap-backed training\n\
+         \x20   (--dir PATH --budget-mb N --features N --train N --test N\n\
+         \x20    --persist-every N --check-every N --assert --save PATH;\n\
+         \x20    segments on disk may exceed the budget, resident memory\n\
+         \x20    should not — --assert enforces both; defaults to\n\
+         \x20    weight_decay=0 evolution=off so the activity-gated\n\
+         \x20    update can leave inactive rows on disk, --set overrides)\n\
+         multi-node: parallel ... --transport tcp:0.0.0.0:PORT, then on\n\
+         \x20        other hosts: worker --connect tcp:COORD_HOST:PORT\n\
+         \x20        --worker K\n\n\
          options: --paper --seed N --save PATH --workers K --sync\n\
          \x20        --phase1 N --phase2 N --verbose --gradflow N\n\
          overrides: epochs= batch= epsilon= lr= alpha= activation= init=\n\
@@ -154,6 +183,7 @@ fn cmd_datasets(args: &Args) -> Result<()> {
         ("fashion", "images (synthetic)"),
         ("cifar", "RGB images (synthetic)"),
         ("extreme", "big artificial (§2.4)"),
+        ("recommender", "wide sparse recsys (§14)"),
     ];
     for (name, domain) in domains {
         let spec = dataset_spec(args, name);
@@ -642,6 +672,120 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         println!("saturation at ~{:.0} offered qps", knee.offered_qps);
     } else {
         println!("no saturation reached within the sweep (raise --qps or --steps)");
+    }
+    Ok(())
+}
+
+/// Out-of-core training under a RAM budget (DESIGN.md §14): build a
+/// mapped [`tsnn::bigmodel::BigModel`] on the wide-sparse recommender
+/// dataset and train it with segment files on disk allowed to exceed
+/// the budget while resident memory is held near it. `--assert` turns
+/// the two residency claims into hard errors (the extreme-smoke CI job
+/// and `benches/perf_outofcore.rs` both lean on this).
+#[cfg(target_pointer_width = "64")]
+fn cmd_extreme(args: &Args) -> Result<()> {
+    use tsnn::bigmodel::{train_big, vm_hwm_bytes, BigModel, BigTrainOptions};
+
+    let dir = std::path::PathBuf::from(args.opt("dir").unwrap_or("extreme_model"));
+    let budget_mb: u64 = args.opt_parse("budget-mb", 512u64)?;
+    let budget_bytes = budget_mb.saturating_mul(1024 * 1024);
+
+    let mut spec = dataset_spec(args, "recommender");
+    spec.n_features = args.opt_parse("features", spec.n_features)?;
+    spec.n_train = args.opt_parse("train", spec.n_train)?;
+    spec.n_test = args.opt_parse("test", spec.n_test)?;
+    let mut cfg = build_config(args, "recommender")?;
+    // weight_decay = 0 arms the activity-gated optimizer update
+    // (DESIGN.md §14.6) — without it every weight moves every step, the
+    // whole model is touched per batch, and no residency budget below
+    // the model size can hold. Explicit `--set weight_decay=...` wins.
+    if !args.overrides.iter().any(|(k, _)| k.as_str() == "weight_decay") {
+        cfg.set("weight_decay", "0")?;
+    }
+    // topology evolution's magnitude scan faults in every mapped page of
+    // every layer, so an evolving run peaks at full model size; default
+    // it off here and let `--set evolution=on` opt back in.
+    if !args.overrides.iter().any(|(k, _)| k.as_str() == "evolution") {
+        cfg.set("evolution", "off")?;
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    log::info!(
+        "generating {} ({} features, {} train)",
+        spec.name,
+        spec.n_features,
+        spec.n_train
+    );
+    let data = datasets::generate(&spec, &mut rng)?;
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    log::info!(
+        "creating mapped model {:?} ε={} under {}",
+        sizes,
+        cfg.epsilon,
+        dir.display()
+    );
+    let mut model = BigModel::create(&dir, &sizes, cfg.epsilon, cfg.activation, &cfg.init, &mut rng)?;
+    let segment_bytes = model.total_segment_bytes();
+    println!(
+        "segments: {} files, {:.1} MiB on disk (budget {budget_mb} MiB, dataset {:.1} MiB)",
+        sizes.len() - 1,
+        segment_bytes as f64 / (1024.0 * 1024.0),
+        data.memory_mib()
+    );
+
+    let opts = BigTrainOptions {
+        soft_budget_bytes: Some(budget_bytes),
+        residency_check_every: args.opt_parse("check-every", 16usize)?,
+        persist_every: args.opt_parse("persist-every", 0usize)?,
+        verbose: args.flag("verbose"),
+    };
+    let report = train_big(&cfg, &data, &mut model, &mut rng, &opts)?;
+
+    let hwm = report.peak_rss_bytes.or_else(vm_hwm_bytes);
+    println!(
+        "dataset={} best_test_acc={:.4} final_test_acc={:.4} start_w={} end_w={}",
+        spec.name,
+        report.best_test_accuracy,
+        report.final_test_accuracy,
+        report.start_weights,
+        report.end_weights
+    );
+    match hwm {
+        Some(peak) => println!(
+            "residency: segments {:.1} MiB, peak RSS {:.1} MiB, budget {budget_mb} MiB, trims {}",
+            segment_bytes as f64 / (1024.0 * 1024.0),
+            peak as f64 / (1024.0 * 1024.0),
+            report.trim_events
+        ),
+        None => println!(
+            "residency: segments {:.1} MiB, peak RSS unavailable (no /proc), trims {}",
+            segment_bytes as f64 / (1024.0 * 1024.0),
+            report.trim_events
+        ),
+    }
+    if args.flag("assert") {
+        if segment_bytes <= budget_bytes {
+            return Err(TsnnError::Config(format!(
+                "--assert: segment bytes {segment_bytes} do not exceed the budget \
+                 {budget_bytes}; the run never left RAM scale (raise --features/hidden= \
+                 or lower --budget-mb)"
+            )));
+        }
+        let peak = hwm.ok_or_else(|| {
+            TsnnError::Config("--assert needs /proc/self/status (Linux)".into())
+        })?;
+        if peak >= budget_bytes {
+            return Err(TsnnError::Config(format!(
+                "--assert: peak RSS {peak} B breached the budget {budget_bytes} B \
+                 ({} trims)",
+                report.trim_events
+            )));
+        }
+        println!("asserted: disk {segment_bytes} B > budget > peak RSS {peak} B");
+    }
+    if let Some(path) = args.opt("save") {
+        model.save_checkpoint(std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
     }
     Ok(())
 }

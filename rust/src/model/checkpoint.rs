@@ -333,9 +333,9 @@ pub(crate) fn read_model(r: &mut impl Read) -> Result<SparseMlp> {
         let weights = CsrMatrix {
             n_rows: n_in,
             n_cols: n_out,
-            row_ptr,
-            col_idx,
-            values,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            values: values.into(),
         };
         weights
             .validate()
@@ -343,7 +343,7 @@ pub(crate) fn read_model(r: &mut impl Read) -> Result<SparseMlp> {
         layers.push(SparseLayer {
             weights,
             bias,
-            velocity,
+            velocity: velocity.into(),
             bias_velocity,
             activation: acts[l],
             srelu: None,
@@ -380,6 +380,39 @@ mod tests {
     use super::*;
     use crate::sparse::WeightInit;
     use crate::util::Rng;
+
+    /// Header-level guard for beyond-u32 models (DESIGN.md §14): row
+    /// offsets and nnz totals past `u32::MAX` must survive the u64
+    /// writer/reader pair untruncated. No multi-gigabyte layer is ever
+    /// materialised — only the 8-byte codec itself is on trial.
+    #[test]
+    fn row_offsets_past_u32_max_roundtrip_through_the_u64_codec() {
+        let offsets: Vec<usize> = vec![
+            0,
+            1,
+            u32::MAX as usize - 1,
+            u32::MAX as usize,
+            u32::MAX as usize + 1,
+            1usize << 33,
+            (1usize << 40) + 12_345,
+            usize::MAX >> 1,
+        ];
+        let mut buf = Vec::new();
+        write_usize_slice_as_u64(&mut buf, &offsets).unwrap();
+        assert_eq!(buf.len(), offsets.len() * 8);
+        let mut r = Cursor::new(&buf[..]);
+        let back = read_u64_vec(&mut r, offsets.len()).unwrap();
+        for (&o, &b) in offsets.iter().zip(back.iter()) {
+            assert_eq!(o as u64, b, "u64 codec truncated {o}");
+        }
+
+        // an nnz total past u32::MAX through the scalar u64 field
+        let nnz = (1u64 << 35) + 7;
+        let mut buf = Vec::new();
+        write_u64(&mut buf, nnz).unwrap();
+        let mut r = Cursor::new(&buf[..]);
+        assert_eq!(read_u64_vec(&mut r, 1).unwrap(), vec![nnz]);
+    }
 
     #[test]
     fn roundtrip_preserves_everything() {

@@ -2,10 +2,16 @@
 //! state + activation.
 
 use crate::nn::{remap_aligned, Activation, MomentumSgd, SRelu};
-use crate::sparse::{erdos_renyi_epsilon, ops, simd, CsrMatrix, Exec, WeightInit};
+use crate::sparse::{erdos_renyi_epsilon, ops, simd, Buf, CsrMatrix, Exec, WeightInit};
 use crate::util::Rng;
 
 /// One sparse layer of the MLP (`n_in × n_out` CSR weights).
+///
+/// `velocity` shares the weights' [`Buf`] backing story: RAM `Vec` on
+/// the normal path, a window into the layer's mapped segment under the
+/// out-of-core subsystem (DESIGN.md §14). Biases stay RAM `Vec`s —
+/// they are O(n_out), negligible next to nnz, and written back to the
+/// segment at seal time.
 #[derive(Debug, Clone)]
 pub struct SparseLayer {
     /// Sparse weights, rows = inputs.
@@ -13,7 +19,7 @@ pub struct SparseLayer {
     /// Bias per output neuron.
     pub bias: Vec<f32>,
     /// Momentum velocity aligned with `weights.values`.
-    pub velocity: Vec<f32>,
+    pub velocity: Buf<f32>,
     /// Momentum velocity for biases.
     pub bias_velocity: Vec<f32>,
     /// Element-wise activation (ignored when `srelu` is set).
@@ -37,7 +43,7 @@ impl SparseLayer {
         SparseLayer {
             weights,
             bias: vec![0.0; n_out],
-            velocity: vec![0.0; nnz],
+            velocity: vec![0.0; nnz].into(),
             bias_velocity: vec![0.0; n_out],
             activation,
             srelu: None,
@@ -151,11 +157,72 @@ impl SparseLayer {
         opt.update_bias(&mut self.bias, grad_b, &mut self.bias_velocity, lr);
     }
 
+    /// Activity-gated optimizer update (DESIGN.md §14.6): skip rows whose
+    /// gradient is entirely zero and whose velocity is known to be all
+    /// zero. For such a row the dense update is a provable no-op when
+    /// `weight_decay == 0`: `v' = μ·0 − η·(0 + 0·w) = 0` bitwise (μ·±0.0
+    /// keeps its sign; `x − 0.0` preserves `±0.0`) and `w' = w + ±0.0 = w`
+    /// bitwise for every value the trainer can produce (no init or update
+    /// path yields a `-0.0` weight: IEEE-754 `x + (−x) = +0.0`, and both
+    /// init samplers end in an addition or a product with a nonzero
+    /// factor). With weight decay the skip would drift (`λ·w ≠ 0`), so
+    /// the gate falls back to the dense path.
+    ///
+    /// `row_live` is a caller-owned bitmap of "this row may hold nonzero
+    /// velocity", one bit per input row; it is resized (conservatively
+    /// all-live) on first use. Bits stay conservative across topology
+    /// evolution: surviving links keep their velocity and new links start
+    /// at zero, so a clear bit can never become wrong.
+    ///
+    /// For mmap-backed models this is what makes out-of-core training
+    /// possible at all: the dense update touches every values/velocity
+    /// page of every layer on every step, pinning peak RSS at the full
+    /// model size no matter what the residency advisor trims. The gate
+    /// leaves pages of inactive input rows untouched, so a wide-sparse
+    /// input layer stays on disk.
+    pub fn apply_update_gated(
+        &mut self,
+        opt: &MomentumSgd,
+        grad_w: &[f32],
+        grad_b: &[f32],
+        lr: f32,
+        row_live: &mut Vec<u64>,
+    ) {
+        if opt.weight_decay != 0.0 {
+            self.apply_update(opt, grad_w, grad_b, lr);
+            return;
+        }
+        let n_rows = self.weights.n_rows;
+        let words = n_rows.div_ceil(64);
+        if row_live.len() != words {
+            row_live.clear();
+            row_live.resize(words, u64::MAX);
+        }
+        let w = &mut self.weights;
+        let row_ptr = &w.row_ptr;
+        let values: &mut [f32] = &mut w.values;
+        let velocity: &mut [f32] = &mut self.velocity;
+        for r in 0..n_rows {
+            let (s, e) = (row_ptr[r], row_ptr[r + 1]);
+            let live = (row_live[r >> 6] >> (r & 63)) & 1 != 0;
+            if !live && grad_w[s..e].iter().all(|&g| g == 0.0) {
+                continue;
+            }
+            opt.update(&mut values[s..e], &grad_w[s..e], &mut velocity[s..e], lr);
+            if velocity[s..e].iter().any(|&v| v != 0.0) {
+                row_live[r >> 6] |= 1u64 << (r & 63);
+            } else {
+                row_live[r >> 6] &= !(1u64 << (r & 63));
+            }
+        }
+        opt.update_bias(&mut self.bias, grad_b, &mut self.bias_velocity, lr);
+    }
+
     /// Rebuild aligned state after a structural change described by
     /// `old_index_of_new` (see [`remap_aligned`]). New links start with
     /// zero velocity.
     pub fn remap_state(&mut self, old_index_of_new: &[Option<usize>]) {
-        self.velocity = remap_aligned(&self.velocity, old_index_of_new, 0.0);
+        self.velocity = remap_aligned(&self.velocity, old_index_of_new, 0.0).into();
         debug_assert_eq!(self.velocity.len(), self.weights.nnz());
     }
 
@@ -164,7 +231,8 @@ impl SparseLayer {
     pub fn retain_entries(&mut self, keep: impl FnMut(usize) -> bool) -> usize {
         let before = self.weights.nnz();
         let kept = self.weights.retain(keep);
-        self.velocity = kept.iter().map(|&k| self.velocity[k]).collect();
+        let vel: Vec<f32> = kept.iter().map(|&k| self.velocity[k]).collect();
+        self.velocity = vel.into();
         before - self.weights.nnz()
     }
 
@@ -186,10 +254,10 @@ impl SparseLayer {
         debug_assert_eq!(row_ptr.len(), self.weights.n_rows + 1);
         debug_assert_eq!(col_idx.len(), values.len());
         debug_assert_eq!(velocity.len(), values.len());
-        std::mem::swap(&mut self.weights.row_ptr, row_ptr);
-        std::mem::swap(&mut self.weights.col_idx, col_idx);
-        std::mem::swap(&mut self.weights.values, values);
-        std::mem::swap(&mut self.velocity, velocity);
+        self.weights.row_ptr.swap_vec(row_ptr);
+        self.weights.col_idx.swap_vec(col_idx);
+        self.weights.values.swap_vec(values);
+        self.velocity.swap_vec(velocity);
         debug_assert!(self.weights.validate().is_ok());
     }
 
@@ -202,7 +270,7 @@ impl SparseLayer {
         for (old, &new) in old_to_new.iter().enumerate() {
             vel[new] = self.velocity[old];
         }
-        self.velocity = vel;
+        self.velocity = vel.into();
         debug_assert_eq!(self.weights.nnz(), old_to_new.len() + n_add);
         Ok(())
     }
@@ -277,9 +345,9 @@ mod tests {
     fn swap_storage_exchanges_arrays_and_keeps_alignment() {
         let mut l = layer();
         let (mut rp, mut ci, mut va) = (
-            l.weights.row_ptr.clone(),
-            l.weights.col_idx.clone(),
-            l.weights.values.clone(),
+            l.weights.row_ptr.to_vec(),
+            l.weights.col_idx.to_vec(),
+            l.weights.values.to_vec(),
         );
         for v in va.iter_mut() {
             *v += 1.0;
@@ -360,6 +428,68 @@ mod tests {
             assert_eq!(gw2, gw_o, "{label}");
             assert_eq!(gb2, gb_o, "{label}");
         }
+    }
+
+    #[test]
+    fn gated_update_matches_dense_update_bit_for_bit() {
+        let opt = MomentumSgd {
+            momentum: 0.9,
+            weight_decay: 0.0,
+        };
+        // identical twins (same construction seed)
+        let mut dense = layer();
+        let mut gated = layer();
+        let mut rng = Rng::new(42);
+        let mut live = Vec::new();
+        for _ in 0..6 {
+            // gradients confined to a few input rows, as a sparse batch
+            // would produce; everything else is exactly zero
+            let mut gw = vec![0.0f32; dense.weights.nnz()];
+            for &r in &[0usize, 3, 17] {
+                let (s, e) = (dense.weights.row_ptr[r], dense.weights.row_ptr[r + 1]);
+                for g in &mut gw[s..e] {
+                    *g = rng.normal();
+                }
+            }
+            let gb: Vec<f32> = (0..dense.n_out()).map(|_| rng.normal()).collect();
+            dense.apply_update(&opt, &gw, &gb, 0.05);
+            gated.apply_update_gated(&opt, &gw, &gb, 0.05, &mut live);
+        }
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dense.weights.values), bits(&gated.weights.values));
+        assert_eq!(bits(&dense.velocity), bits(&gated.velocity));
+        assert_eq!(bits(&dense.bias), bits(&gated.bias));
+        assert_eq!(bits(&dense.bias_velocity), bits(&gated.bias_velocity));
+        // rows that never saw a gradient were retired from the bitmap
+        // after the first (all-live) pass proved their velocity zero
+        let live_rows = (0..dense.weights.n_rows)
+            .filter(|&r| (live[r >> 6] >> (r & 63)) & 1 != 0)
+            .count();
+        assert!(
+            (1..=3).contains(&live_rows),
+            "expected only gradient-active rows live, got {live_rows}"
+        );
+    }
+
+    #[test]
+    fn gated_update_with_weight_decay_falls_back_to_dense() {
+        let opt = MomentumSgd::default(); // weight_decay != 0
+        let mut dense = layer();
+        let mut gated = layer();
+        let mut rng = Rng::new(43);
+        let mut live = Vec::new();
+        for _ in 0..3 {
+            let gw: Vec<f32> = (0..dense.weights.nnz())
+                .map(|i| if i % 4 == 0 { rng.normal() } else { 0.0 })
+                .collect();
+            let gb: Vec<f32> = (0..dense.n_out()).map(|_| rng.normal()).collect();
+            dense.apply_update(&opt, &gw, &gb, 0.05);
+            gated.apply_update_gated(&opt, &gw, &gb, 0.05, &mut live);
+        }
+        assert!(live.is_empty(), "dense fallback must not touch the bitmap");
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dense.weights.values), bits(&gated.weights.values));
+        assert_eq!(bits(&dense.velocity), bits(&gated.velocity));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::error::{Result, TsnnError};
 use crate::nn::{accuracy, softmax_cross_entropy, Activation, Dropout, MomentumSgd};
-use crate::sparse::{ops, Exec, WeightInit, WorkerPool};
+use crate::sparse::{ops, Exec, Residency, WeightInit, WorkerPool};
 use crate::util::Rng;
 
 use super::layer::SparseLayer;
@@ -29,7 +29,7 @@ pub struct SparseMlp {
 }
 
 /// Reusable buffers for forward/backward over a fixed max batch size.
-#[derive(Debug, Default)]
+#[derive(Default)]
 pub struct Workspace {
     /// Pre-activations per layer: pre[l] is [batch, sizes[l+1]].
     pub pre: Vec<Vec<f32>>,
@@ -62,6 +62,32 @@ pub struct Workspace {
     /// Created once per resolved budget by [`Workspace::ensure_pool`];
     /// one pool lives for the whole training run.
     pool: Option<Arc<WorkerPool>>,
+    /// Residency advisor for mmap-backed models (DESIGN.md §14.4): the
+    /// train/eval loops report when they are done touching a layer's
+    /// arrays for the current batch, and the advisor may trim resident
+    /// mapped pages. `None` (the default, and always for RAM-backed
+    /// models) makes every hook a no-op; installed advisors are
+    /// correctness-neutral by the [`Residency`] contract.
+    pub residency: Option<Arc<dyn Residency>>,
+    /// Per-layer row-liveness bitmaps for the activity-gated optimizer
+    /// update (DESIGN.md §14.6): bit r set ⇔ input row r of that layer
+    /// may hold nonzero velocity. Owned here (not by the layer) so the
+    /// bare model stays a pure function of its parameters; sized lazily
+    /// by [`SparseMlp::train_step`].
+    pub row_live: Vec<Vec<u64>>,
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // buffers are uninteresting noise; `Arc<dyn Residency>` has no
+        // Debug, so the derive is replaced by this summary
+        f.debug_struct("Workspace")
+            .field("kernel_threads", &self.kernel_threads)
+            .field("pooled", &self.pool.is_some())
+            .field("residency", &self.residency.is_some())
+            .field("layers", &self.grad_w.len())
+            .finish()
+    }
 }
 
 impl Workspace {
@@ -280,6 +306,11 @@ impl SparseMlp {
                     ws.drop_masks[l] = mask;
                 }
             }
+            // the forward pass is done with this layer's weights; an
+            // installed residency advisor may trim its mapped pages
+            if let Some(res) = ws.residency.as_ref() {
+                res.after_forward(l);
+            }
         }
         &ws.act[n_layers]
     }
@@ -365,10 +396,18 @@ impl SparseMlp {
         rng: &mut Rng,
     ) -> StepStats {
         let stats = self.compute_gradients(x, labels, dropout, ws, rng);
+        if ws.row_live.len() != self.layers.len() {
+            ws.row_live.resize_with(self.layers.len(), Vec::new);
+        }
         for (l, layer) in self.layers.iter_mut().enumerate() {
-            layer.apply_update(opt, &ws.grad_w[l], &ws.grad_b[l], lr);
+            layer.apply_update_gated(opt, &ws.grad_w[l], &ws.grad_b[l], lr, &mut ws.row_live[l]);
             if let (Some(srelu), Some(g)) = (layer.srelu.as_mut(), ws.srelu_grads[l].take()) {
                 srelu.update(&g, lr);
+            }
+            // the optimizer update is the step's last touch of this
+            // layer's weights/velocity — the trim point for mapped models
+            if let Some(res) = ws.residency.as_ref() {
+                res.after_update(l);
             }
         }
         stats

@@ -132,20 +132,22 @@ fn ensure_set(seen: &mut HashSet<usize>, want: usize, grows: &mut usize) {
 /// when its output neuron's importance clears the layer threshold AND its
 /// magnitude lies outside the SET prune bands. Plain copyable data so the
 /// planning, mapping and sharded rebuild passes all evaluate the exact
-/// same predicate.
+/// same predicate. Crate-visible: the out-of-core streaming evolution
+/// (`bigmodel::evolve`) builds the identical predicate so the mapped and
+/// in-RAM paths prune the exact same entries.
 #[derive(Clone, Copy)]
-struct KeepSpec<'a> {
+pub(crate) struct KeepSpec<'a> {
     /// `(importance_sums, threshold)` when importance pruning is active.
-    imp: Option<(&'a [f32], f32)>,
-    pos_cut: f32,
-    neg_cut: f32,
+    pub(crate) imp: Option<(&'a [f32], f32)>,
+    pub(crate) pos_cut: f32,
+    pub(crate) neg_cut: f32,
     /// False when SET pruning is off (importance-only epoch).
-    set_active: bool,
+    pub(crate) set_active: bool,
 }
 
 impl KeepSpec<'_> {
     #[inline]
-    fn imp_ok(&self, col: u32) -> bool {
+    pub(crate) fn imp_ok(&self, col: u32) -> bool {
         match self.imp {
             Some((imp, thr)) => imp[col as usize] >= thr,
             None => true,
@@ -153,12 +155,12 @@ impl KeepSpec<'_> {
     }
 
     #[inline]
-    fn set_ok(&self, v: f32) -> bool {
+    pub(crate) fn set_ok(&self, v: f32) -> bool {
         !self.set_active || v > self.pos_cut || v < self.neg_cut
     }
 
     #[inline]
-    fn keep(&self, col: u32, v: f32) -> bool {
+    pub(crate) fn keep(&self, col: u32, v: f32) -> bool {
         self.imp_ok(col) && self.set_ok(v)
     }
 }
@@ -734,8 +736,11 @@ fn evolve_shard_count(exec: Exec<'_>, nnz: usize, n_rows: usize) -> usize {
 /// sorted order (zero velocity, pre-drawn weights). The output slices
 /// span exactly `[new_row_ptr[r0], new_row_ptr[r1])` — contiguous and
 /// disjoint across shards, so the sharded pass needs no synchronisation.
+/// Crate-visible: `bigmodel::evolve` runs the same merge per row shard
+/// with the output slices aimed at a memory-mapped fresh segment, which
+/// is what makes out-of-core evolution bit-exact against this engine.
 #[allow(clippy::too_many_arguments)]
-fn rebuild_rows(
+pub(crate) fn rebuild_rows(
     w: &CsrMatrix,
     old_vel: &[f32],
     keep: KeepSpec<'_>,

@@ -14,8 +14,20 @@
 //! an old-index mapping so aligned optimizer state (momentum) survives.
 
 use crate::error::{Result, TsnnError};
+use crate::sparse::storage::{checked_u32, Buf};
 
 /// Sparse weight matrix in CSR layout (rows = inputs, cols = outputs).
+///
+/// The three arrays live in a [`Buf`] each: plain `Vec`s everywhere on
+/// the normal path, or windows into one mmap-backed segment file under
+/// the out-of-core subsystem (`bigmodel`, DESIGN.md §14). `Buf` derefs
+/// to `[T]`, so kernels and analysis code index/slice these fields
+/// exactly as before regardless of backing.
+///
+/// Index-width contract: `col_idx` stays `u32` (cache-footprint choice,
+/// so a single layer is capped at 2^32 columns — checked, not assumed),
+/// while row offsets and nnz totals are `usize`/`u64` end-to-end so
+/// total edge counts past 4B are representable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
     /// Number of rows (input neurons / fan-in dimension).
@@ -23,11 +35,11 @@ pub struct CsrMatrix {
     /// Number of columns (output neurons / fan-out dimension).
     pub n_cols: usize,
     /// Row start offsets, length `n_rows + 1`.
-    pub row_ptr: Vec<usize>,
+    pub row_ptr: Buf<usize>,
     /// Column index of each stored entry, sorted within each row.
-    pub col_idx: Vec<u32>,
+    pub col_idx: Buf<u32>,
     /// Weight value of each stored entry, aligned with `col_idx`.
-    pub values: Vec<f32>,
+    pub values: Buf<f32>,
 }
 
 impl CsrMatrix {
@@ -36,9 +48,9 @@ impl CsrMatrix {
         CsrMatrix {
             n_rows,
             n_cols,
-            row_ptr: vec![0; n_rows + 1],
-            col_idx: Vec::new(),
-            values: Vec::new(),
+            row_ptr: vec![0; n_rows + 1].into(),
+            col_idx: Buf::new(),
+            values: Buf::new(),
         }
     }
 
@@ -63,6 +75,8 @@ impl CsrMatrix {
         n_cols: usize,
         mut triplets: Vec<(u32, u32, f32)>,
     ) -> Result<Self> {
+        checked_u32(n_rows, "CSR row count")?;
+        checked_u32(n_cols, "CSR column count")?;
         triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
         for w in triplets.windows(2) {
             if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
@@ -91,9 +105,9 @@ impl CsrMatrix {
         Ok(CsrMatrix {
             n_rows,
             n_cols,
-            row_ptr,
-            col_idx,
-            values,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            values: values.into(),
         })
     }
 
@@ -219,8 +233,11 @@ impl CsrMatrix {
         (g + lo) as u32
     }
 
-    /// Validate structural invariants (sorted unique cols, monotone ptrs).
+    /// Validate structural invariants (sorted unique cols, monotone ptrs,
+    /// dimensions within the u32 column-index width).
     pub fn validate(&self) -> Result<()> {
+        checked_u32(self.n_rows, "CSR row count")?;
+        checked_u32(self.n_cols, "CSR column count")?;
         if self.row_ptr.len() != self.n_rows + 1 {
             return Err(TsnnError::Sparse("row_ptr length".into()));
         }
@@ -258,12 +275,15 @@ impl CsrMatrix {
         let mut kept = Vec::with_capacity(self.nnz());
         let mut new_ptr = vec![0usize; self.n_rows + 1];
         let mut w = 0usize;
+        let row_ptr = self.row_ptr.as_slice();
+        let cols = self.col_idx.as_mut_slice();
+        let vals = self.values.as_mut_slice();
         for i in 0..self.n_rows {
-            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
             for k in s..e {
                 if keep(k) {
-                    self.col_idx[w] = self.col_idx[k];
-                    self.values[w] = self.values[k];
+                    cols[w] = cols[k];
+                    vals[w] = vals[k];
                     kept.push(k);
                     w += 1;
                 }
@@ -272,7 +292,7 @@ impl CsrMatrix {
         }
         self.col_idx.truncate(w);
         self.values.truncate(w);
-        self.row_ptr = new_ptr;
+        self.row_ptr = new_ptr.into();
         kept
     }
 
@@ -334,9 +354,9 @@ impl CsrMatrix {
             }
             row_ptr[i + 1] = col_idx.len();
         }
-        self.col_idx = col_idx;
-        self.values = values;
-        self.row_ptr = row_ptr;
+        self.col_idx = col_idx.into();
+        self.values = values.into();
+        self.row_ptr = row_ptr.into();
         Ok(old_to_new)
     }
 
@@ -361,9 +381,9 @@ impl CsrMatrix {
         CsrMatrix {
             n_rows: self.n_cols,
             n_cols: self.n_rows,
-            row_ptr,
-            col_idx,
-            values,
+            row_ptr: row_ptr.into(),
+            col_idx: col_idx.into(),
+            values: values.into(),
         }
     }
 
@@ -526,5 +546,23 @@ mod tests {
     fn memory_accounting() {
         let m = sample();
         assert_eq!(m.memory_bytes(), 4 * 8 + 5 * 4 + 5 * 4);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn dimensions_past_u32_are_typed_errors() {
+        let too_wide = u32::MAX as usize + 1;
+        let err = CsrMatrix::from_coo(2, too_wide, vec![]).unwrap_err();
+        assert!(matches!(err, TsnnError::IndexOverflow(_)), "{err}");
+        let err = CsrMatrix::from_coo(too_wide, 2, vec![]).unwrap_err();
+        assert!(matches!(err, TsnnError::IndexOverflow(_)), "{err}");
+        // validate applies the same guard to hand-built matrices
+        let mut m = CsrMatrix::empty(1, 1);
+        m.n_cols = too_wide;
+        m.row_ptr = vec![0, 0].into();
+        assert!(matches!(
+            m.validate().unwrap_err(),
+            TsnnError::IndexOverflow(_)
+        ));
     }
 }

@@ -111,6 +111,34 @@ fn binomial_normal(rng: &mut Rng, n: usize, p: f64) -> usize {
     v.round().clamp(0.0, n as f64) as usize
 }
 
+/// Draw one Erdős–Rényi row into `cols_out`/`vals_out` (cleared first):
+/// a Binomial(n_cols, density) degree, columns sampled without
+/// replacement and sorted, then one weight per column in column order.
+///
+/// This is the exact per-row draw sequence of [`erdos_renyi`], split out
+/// so the out-of-core initialiser (`bigmodel`) can stream rows straight
+/// into a mapped segment while consuming the RNG identically to the
+/// in-RAM builder — bit-for-bit the same topology and weights.
+pub fn er_sample_row(
+    rng: &mut Rng,
+    n_rows: usize,
+    n_cols: usize,
+    density: f64,
+    init: &WeightInit,
+    cols_out: &mut Vec<u32>,
+    vals_out: &mut Vec<f32>,
+) {
+    cols_out.clear();
+    vals_out.clear();
+    let k = binomial(rng, n_cols, density);
+    let mut cols = rng.sample_indices(n_cols, k);
+    cols.sort_unstable();
+    for c in cols {
+        cols_out.push(c as u32);
+        vals_out.push(init.sample(rng, n_rows, n_cols));
+    }
+}
+
 /// Erdős–Rényi sparse matrix with the given density; weights drawn from
 /// `init`. Row degrees are Binomial(n_cols, density), columns sampled
 /// without replacement and sorted — O(nnz log deg) total.
@@ -128,22 +156,19 @@ pub fn erdos_renyi(
     let expected = (density * n_rows as f64 * n_cols as f64) as usize;
     col_idx.reserve(expected + n_rows);
     values.reserve(expected + n_rows);
+    let (mut row_cols, mut row_vals) = (Vec::new(), Vec::new());
     for _ in 0..n_rows {
-        let k = binomial(rng, n_cols, density);
-        let mut cols = rng.sample_indices(n_cols, k);
-        cols.sort_unstable();
-        for c in cols {
-            col_idx.push(c as u32);
-            values.push(init.sample(rng, n_rows, n_cols));
-        }
+        er_sample_row(rng, n_rows, n_cols, density, init, &mut row_cols, &mut row_vals);
+        col_idx.extend_from_slice(&row_cols);
+        values.extend_from_slice(&row_vals);
         row_ptr.push(col_idx.len());
     }
     CsrMatrix {
         n_rows,
         n_cols,
-        row_ptr,
-        col_idx,
-        values,
+        row_ptr: row_ptr.into(),
+        col_idx: col_idx.into(),
+        values: values.into(),
     }
 }
 

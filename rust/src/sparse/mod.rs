@@ -17,9 +17,11 @@ pub mod init;
 pub mod ops;
 pub mod pool;
 pub mod simd;
+pub mod storage;
 
 pub use csr::CsrMatrix;
-pub use init::{epsilon_density, erdos_renyi, erdos_renyi_epsilon, WeightInit};
+pub use storage::{Buf, MapRegion, MapSlice, Residency};
+pub use init::{epsilon_density, er_sample_row, erdos_renyi, erdos_renyi_epsilon, WeightInit};
 pub use ops::{
     spmm_backward_fused, spmm_forward_threaded, spmm_grad_input_threaded,
     spmm_grad_weights_threaded, Exec,

@@ -1,0 +1,648 @@
+//! Layer storage abstraction: in-RAM `Vec` or mmap-backed segment slices.
+//!
+//! The out-of-core subsystem (DESIGN.md §14) needs `CsrMatrix` /
+//! `SparseLayer` arrays to be backable by memory-mapped checkpoint
+//! segments so model size is bounded by disk instead of RAM. [`Buf`] is
+//! that seam: an owned, slice-like container that is either a plain
+//! `Vec<T>` (the existing backing, and the only one most of the engine
+//! ever sees) or a typed window into a shared [`MapRegion`] (one mapped
+//! segment file per layer, `rust/src/bigmodel/`).
+//!
+//! Design rules:
+//!
+//! * **Reads and in-place writes are backing-agnostic.** `Buf` derefs to
+//!   `[T]`, so indexing, slicing, `.iter()`, `.as_slice()` and deref
+//!   coercion at `&[T]` call sites — i.e. all four CSR kernels, the SIMD
+//!   dispatch table and the `WorkerPool` sharding — run unmodified over
+//!   mapped memory.
+//! * **Structural mutation spills to RAM.** Operations that reallocate
+//!   (`push`, `pop`, assignment of a fresh `Vec`) turn a mapped buffer
+//!   into a RAM one. The streaming evolution path in `bigmodel` never
+//!   takes those paths; they exist so small-model code (tests, serving,
+//!   transport decode) stays correct without caring about the backing.
+//! * **`Clone` is deep.** Cloning a mapped buffer materialises it into
+//!   RAM — two handles onto one mutable mapped range would alias writes,
+//!   which `Vec` semantics (and the parity suites) forbid.
+//!
+//! The mmap layer itself is raw `extern "C"` FFI (the offline vendor set
+//! has no `libc`/`memmap` crate): `mmap`/`munmap`/`msync`/`madvise`
+//! against Linux ABI constants, compiled only on Linux; other targets
+//! get a typed `Storage` error and the RAM backing keeps working.
+
+use std::sync::Arc;
+
+use crate::error::{Result, TsnnError};
+
+// --- raw mmap FFI (Linux) ---------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_long, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const PROT_WRITE: c_int = 0x2;
+    pub const MAP_SHARED: c_int = 0x01;
+    pub const MS_SYNC: c_int = 4;
+    pub const MADV_DONTNEED: c_int = 4;
+    pub const _SC_PAGESIZE: c_int = 30;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+        pub fn sysconf(name: c_int) -> c_long;
+    }
+
+    pub fn page_size() -> usize {
+        let v = unsafe { sysconf(_SC_PAGESIZE) };
+        if v <= 0 {
+            4096
+        } else {
+            v as usize
+        }
+    }
+}
+
+/// A whole-file shared mapping (`PROT_READ | PROT_WRITE`, `MAP_SHARED`):
+/// writes go through to the page cache and reach the file via
+/// [`MapRegion::sync`]. Unmapped on drop. Shared between the typed
+/// [`MapSlice`] windows of one segment via `Arc`.
+pub struct MapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is plain memory with a stable address for the
+// region's lifetime; &self methods only read metadata, and mutable
+// access is funnelled through `Buf`'s ownership discipline (each byte
+// range belongs to exactly one `Buf`), mirroring what makes `Vec<T>`
+// Send + Sync.
+unsafe impl Send for MapRegion {}
+unsafe impl Sync for MapRegion {}
+
+impl MapRegion {
+    /// Map `len` bytes of `file` read-write shared. `len == 0` maps
+    /// nothing (a valid empty region).
+    #[cfg(target_os = "linux")]
+    pub fn map_file(file: &std::fs::File, len: usize) -> Result<Arc<MapRegion>> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Arc::new(MapRegion {
+                ptr: std::ptr::null_mut(),
+                len: 0,
+            }));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(TsnnError::Storage(format!(
+                "mmap of {len} bytes failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(Arc::new(MapRegion {
+            ptr: ptr as *mut u8,
+            len,
+        }))
+    }
+
+    /// Unsupported-platform stub: mapped storage is Linux-only; the RAM
+    /// backing (`Buf::Ram`) works everywhere.
+    #[cfg(not(target_os = "linux"))]
+    pub fn map_file(_file: &std::fs::File, _len: usize) -> Result<Arc<MapRegion>> {
+        Err(TsnnError::Storage(
+            "mmap-backed storage is only supported on Linux".into(),
+        ))
+    }
+
+    /// Bytes mapped.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is mapped.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Base pointer (null for an empty region).
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    /// Synchronously write the page-aligned extent covering
+    /// `[offset, offset + len)` back to the file (`msync(MS_SYNC)`).
+    #[cfg(target_os = "linux")]
+    pub fn sync(&self, offset: usize, len: usize) -> Result<()> {
+        let Some((addr, span)) = self.aligned_extent(offset, len) else {
+            return Ok(());
+        };
+        let rc = unsafe { sys::msync(addr, span, sys::MS_SYNC) };
+        if rc != 0 {
+            return Err(TsnnError::Storage(format!(
+                "msync failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Drop the resident pages of the page-aligned extent covering
+    /// `[offset, offset + len)` (`madvise(MADV_DONTNEED)`); the next
+    /// access repopulates from the file. Callers must [`MapRegion::sync`]
+    /// first if the range may hold dirty pages they cannot afford to
+    /// leave to kernel writeback timing. Advisory: failure is ignored —
+    /// residency trimming is an optimisation, never a correctness step.
+    #[cfg(target_os = "linux")]
+    pub fn advise_dontneed(&self, offset: usize, len: usize) {
+        if let Some((addr, span)) = self.aligned_extent(offset, len) {
+            unsafe {
+                sys::madvise(addr, span, sys::MADV_DONTNEED);
+            }
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn sync(&self, _offset: usize, _len: usize) -> Result<()> {
+        Ok(())
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn advise_dontneed(&self, _offset: usize, _len: usize) {}
+
+    /// Page-align `[offset, offset+len)` downward/upward and clamp to the
+    /// region; `None` when the clamped extent is empty.
+    #[cfg(target_os = "linux")]
+    fn aligned_extent(&self, offset: usize, len: usize) -> Option<(*mut std::os::raw::c_void, usize)> {
+        if self.len == 0 || len == 0 || offset >= self.len {
+            return None;
+        }
+        let page = sys::page_size();
+        let start = (offset / page) * page;
+        let end = (offset + len).min(self.len);
+        if end <= start {
+            return None;
+        }
+        Some((
+            unsafe { self.ptr.add(start) } as *mut std::os::raw::c_void,
+            end - start,
+        ))
+    }
+}
+
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if !self.ptr.is_null() && self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MapRegion({} bytes)", self.len)
+    }
+}
+
+/// Marker for element types that may live in mapped segments: plain old
+/// data with no drop glue, valid for any bit pattern we write (we only
+/// ever read back bytes this crate wrote).
+pub trait Pod: Copy + 'static {}
+impl Pod for u8 {}
+impl Pod for u32 {}
+impl Pod for u64 {}
+impl Pod for usize {}
+impl Pod for f32 {}
+
+/// A typed window into a [`MapRegion`]: `len` elements of `T` starting
+/// at byte offset `byte_off`. Constructed only by the segment layout
+/// code, which guarantees alignment and that windows never overlap.
+pub struct MapSlice<T: Pod> {
+    region: Arc<MapRegion>,
+    byte_off: usize,
+    len: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+// SAFETY: see MapRegion — the window is plain memory and mutable access
+// is unique by construction (one Buf per window).
+unsafe impl<T: Pod + Send> Send for MapSlice<T> {}
+unsafe impl<T: Pod + Sync> Sync for MapSlice<T> {}
+
+impl<T: Pod> MapSlice<T> {
+    /// Window `len` elements at `byte_off` into `region`. Bounds and
+    /// alignment are checked here once; the accessors below rely on it.
+    pub fn new(region: Arc<MapRegion>, byte_off: usize, len: usize) -> Result<MapSlice<T>> {
+        let elem = std::mem::size_of::<T>();
+        let bytes = len
+            .checked_mul(elem)
+            .ok_or_else(|| TsnnError::IndexOverflow(format!("map window of {len} elements")))?;
+        let end = byte_off
+            .checked_add(bytes)
+            .ok_or_else(|| TsnnError::IndexOverflow(format!("map window end at {byte_off}+{bytes}")))?;
+        if end > region.len() {
+            return Err(TsnnError::Storage(format!(
+                "map window [{byte_off}, {end}) exceeds region of {} bytes",
+                region.len()
+            )));
+        }
+        if byte_off % std::mem::align_of::<T>() != 0 {
+            return Err(TsnnError::Storage(format!(
+                "map window at byte {byte_off} misaligned for element size {elem}"
+            )));
+        }
+        Ok(MapSlice {
+            region,
+            byte_off,
+            len,
+            _marker: std::marker::PhantomData,
+        })
+    }
+
+    fn as_slice(&self) -> &[T] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: bounds + alignment checked in `new`; the region lives
+        // as long as `self` (Arc), and `T: Pod` accepts any bytes.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.region.as_ptr().add(self.byte_off) as *const T,
+                self.len,
+            )
+        }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [T] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        // SAFETY: as above; mutation is unique because each window is
+        // owned by exactly one `Buf` and we hold `&mut self`.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.region.as_ptr().add(self.byte_off) as *mut T,
+                self.len,
+            )
+        }
+    }
+
+    /// The backing region (for residency sync/advise).
+    pub fn region(&self) -> &Arc<MapRegion> {
+        &self.region
+    }
+
+    /// Byte offset of the window inside the region.
+    pub fn byte_off(&self) -> usize {
+        self.byte_off
+    }
+
+    /// Byte length of the window.
+    pub fn byte_len(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+}
+
+/// Owned layer storage: a `Vec<T>` or a typed mapped window. See the
+/// module docs for the exact backing-transparency contract.
+pub enum Buf<T: Pod> {
+    /// Heap-allocated backing — the default everywhere.
+    Ram(Vec<T>),
+    /// Window into an mmap-backed segment file (`bigmodel`).
+    Mapped(MapSlice<T>),
+}
+
+impl<T: Pod> Buf<T> {
+    /// Empty RAM buffer.
+    pub fn new() -> Buf<T> {
+        Buf::Ram(Vec::new())
+    }
+
+    /// Contents as a slice (any backing).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Buf::Ram(v) => v.as_slice(),
+            Buf::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Contents as a mutable slice (any backing; mapped writes go
+    /// through to the page cache).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        match self {
+            Buf::Ram(v) => v.as_mut_slice(),
+            Buf::Mapped(m) => m.as_mut_slice(),
+        }
+    }
+
+    /// True when backed by a mapped segment.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Buf::Mapped(_))
+    }
+
+    /// Copy out into a fresh `Vec`.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    /// Turn a mapped buffer into a RAM one (no-op when already RAM).
+    pub fn materialize(&mut self) {
+        if self.is_mapped() {
+            *self = Buf::Ram(self.to_vec());
+        }
+    }
+
+    /// Shorten to `len` elements. RAM: `Vec::truncate`. Mapped: the
+    /// window shrinks (file bytes past the window become dead until the
+    /// next rebuild/swap).
+    pub fn truncate(&mut self, len: usize) {
+        match self {
+            Buf::Ram(v) => v.truncate(len),
+            Buf::Mapped(m) => m.len = m.len.min(len),
+        }
+    }
+
+    /// Append (spills a mapped buffer to RAM).
+    pub fn push(&mut self, value: T) {
+        self.materialize();
+        match self {
+            Buf::Ram(v) => v.push(value),
+            Buf::Mapped(_) => unreachable!("materialize() left a mapped buf"),
+        }
+    }
+
+    /// Remove and return the last element (spills a mapped buffer to RAM).
+    pub fn pop(&mut self) -> Option<T> {
+        self.materialize();
+        match self {
+            Buf::Ram(v) => v.pop(),
+            Buf::Mapped(_) => unreachable!("materialize() left a mapped buf"),
+        }
+    }
+
+    /// Exchange contents with a `Vec`: the buffer takes `other`'s
+    /// elements (as RAM backing) and `other` receives the buffer's old
+    /// contents — copied out when the buffer was mapped. This is the
+    /// structural-rebuild handshake (`SparseLayer::swap_storage`): the
+    /// engine installs freshly built arrays and reclaims the old ones as
+    /// scratch for the next layer.
+    pub fn swap_vec(&mut self, other: &mut Vec<T>) {
+        match self {
+            Buf::Ram(v) => std::mem::swap(v, other),
+            Buf::Mapped(m) => {
+                let old = m.as_slice().to_vec();
+                *self = Buf::Ram(std::mem::take(other));
+                *other = old;
+            }
+        }
+    }
+}
+
+impl<T: Pod> Default for Buf<T> {
+    fn default() -> Buf<T> {
+        Buf::new()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Buf<T> {
+    fn from(v: Vec<T>) -> Buf<T> {
+        Buf::Ram(v)
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Buf<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> std::ops::DerefMut for Buf<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Pod> Clone for Buf<T> {
+    /// Deep: a mapped buffer clones into RAM (two handles onto one
+    /// mutable mapped window would alias writes).
+    fn clone(&self) -> Buf<T> {
+        Buf::Ram(self.to_vec())
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Buf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Buf<T> {
+    fn eq(&self, other: &Buf<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Vec<T>> for Buf<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Buf<T>> for Vec<T> {
+    fn eq(&self, other: &Buf<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<&[T]> for Buf<T> {
+    fn eq(&self, other: &&[T]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<'a, T: Pod> IntoIterator for &'a Buf<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<'a, T: Pod> IntoIterator for &'a mut Buf<T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_mut_slice().iter_mut()
+    }
+}
+
+impl<T: Pod> FromIterator<T> for Buf<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Buf<T> {
+        Buf::Ram(iter.into_iter().collect())
+    }
+}
+
+/// Residency advisor hooks the training loop calls as it finishes with a
+/// layer's arrays (DESIGN.md §14.4). The RAM path never installs one;
+/// `bigmodel` installs one that trims mapped pages when resident memory
+/// approaches the configured budget. Correctness-neutral by contract:
+/// implementations may only sync/advise, never mutate data.
+pub trait Residency: Send + Sync {
+    /// Layer `l`'s weights were last read by the forward pass of one
+    /// batch (they will be read again by the backward pass).
+    fn after_forward(&self, l: usize);
+    /// Layer `l`'s weights/velocity received their optimizer update for
+    /// one batch — the last touch of this step.
+    fn after_update(&self, l: usize);
+}
+
+/// Checked `usize → u32` conversion for index/nnz accounting: silent
+/// truncation on a hypothetical >4B-edge model becomes a typed error.
+pub fn checked_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| {
+        TsnnError::IndexOverflow(format!("{what} {v} exceeds u32::MAX ({})", u32::MAX))
+    })
+}
+
+/// Checked `u64 → usize` conversion (32-bit hosts / corrupt headers).
+pub fn checked_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| {
+        TsnnError::IndexOverflow(format!("{what} {v} exceeds usize::MAX on this host"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ram_buf_behaves_like_vec() {
+        let mut b: Buf<u32> = vec![1, 2, 3].into();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[1], 2);
+        b[1] = 9;
+        assert_eq!(b.as_slice(), &[1, 9, 3]);
+        b.push(4);
+        assert_eq!(b.pop(), Some(4));
+        b.truncate(2);
+        assert_eq!(b, vec![1, 9]);
+        assert!(!b.is_mapped());
+        let sum: u32 = (&b).into_iter().sum();
+        assert_eq!(sum, 10);
+        for v in &mut b {
+            *v += 1;
+        }
+        assert_eq!(b, vec![2, 10]);
+    }
+
+    #[test]
+    fn swap_vec_exchanges_contents() {
+        let mut b: Buf<f32> = vec![1.0, 2.0].into();
+        let mut v = vec![5.0, 6.0, 7.0];
+        b.swap_vec(&mut v);
+        assert_eq!(b, vec![5.0, 6.0, 7.0]);
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+
+    #[cfg(target_os = "linux")]
+    fn mapped_file(bytes: usize) -> (std::fs::File, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join("tsnn_storage_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!(
+            "map_{}_{}.bin",
+            std::process::id(),
+            bytes
+        ));
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        file.set_len(bytes as u64).unwrap();
+        (file, path)
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn mapped_buf_reads_writes_and_syncs() {
+        let (file, path) = mapped_file(4096);
+        let region = MapRegion::map_file(&file, 4096).unwrap();
+        let mut b: Buf<u32> = Buf::Mapped(MapSlice::new(region.clone(), 64, 8).unwrap());
+        assert!(b.is_mapped());
+        assert_eq!(b.len(), 8);
+        for (i, v) in (&mut b).into_iter().enumerate() {
+            *v = (i * i) as u32;
+        }
+        assert_eq!(b[3], 9);
+        region.sync(0, 4096).unwrap();
+        drop(b);
+        drop(region);
+        // bytes reached the file
+        let raw = std::fs::read(&path).unwrap();
+        let v3 = u32::from_le_bytes([raw[64 + 12], raw[64 + 13], raw[64 + 14], raw[64 + 15]]);
+        assert_eq!(v3, 9);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn mapped_buf_spills_to_ram_on_structural_mutation() {
+        let (file, path) = mapped_file(256);
+        let region = MapRegion::map_file(&file, 256).unwrap();
+        let mut b: Buf<f32> = Buf::Mapped(MapSlice::new(region, 0, 4).unwrap());
+        b.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let c = b.clone();
+        assert!(!c.is_mapped(), "clone must be deep");
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 4.0]);
+        b.push(5.0);
+        assert!(!b.is_mapped(), "push must spill to RAM");
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn map_slice_rejects_oob_and_misalignment() {
+        let (file, path) = mapped_file(64);
+        let region = MapRegion::map_file(&file, 64).unwrap();
+        assert!(MapSlice::<u32>::new(region.clone(), 0, 17).is_err()); // 68 > 64
+        assert!(MapSlice::<u32>::new(region.clone(), 2, 1).is_err()); // misaligned
+        assert!(MapSlice::<u32>::new(region, 60, 1).is_ok());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn checked_casts_are_typed() {
+        assert_eq!(checked_u32(7, "x").unwrap(), 7);
+        let err = checked_u32(u32::MAX as usize + 1, "col count").unwrap_err();
+        assert!(matches!(err, TsnnError::IndexOverflow(_)), "{err}");
+        assert!(format!("{err}").contains("col count"));
+        assert_eq!(checked_usize(9, "y").unwrap(), 9);
+    }
+}

@@ -91,9 +91,9 @@ fn empty_rows_and_empty_layers_roundtrip() {
     let w0 = CsrMatrix {
         n_rows: 3,
         n_cols: 4,
-        row_ptr: vec![0, 2, 2, 3],
-        col_idx: vec![0, 3, 1],
-        values: vec![1.5, -2.5, 0.5],
+        row_ptr: vec![0, 2, 2, 3].into(),
+        col_idx: vec![0, 3, 1].into(),
+        values: vec![1.5, -2.5, 0.5].into(),
     };
     w0.validate().unwrap();
     let w1 = CsrMatrix::empty(4, 2);
@@ -102,7 +102,7 @@ fn empty_rows_and_empty_layers_roundtrip() {
         layers: vec![
             SparseLayer {
                 bias: vec![0.1, 0.2, 0.3, 0.4],
-                velocity: vec![0.0; 3],
+                velocity: vec![0.0; 3].into(),
                 bias_velocity: vec![0.0; 4],
                 weights: w0,
                 activation: Activation::Relu,
@@ -110,7 +110,7 @@ fn empty_rows_and_empty_layers_roundtrip() {
             },
             SparseLayer {
                 bias: vec![-1.0, 1.0],
-                velocity: vec![],
+                velocity: Vec::new().into(),
                 bias_velocity: vec![0.0, 0.0],
                 weights: w1,
                 activation: Activation::Linear,

@@ -1,0 +1,221 @@
+//! Mapped-vs-RAM training parity (DESIGN.md §14.8): a [`BigModel`]
+//! trained out-of-core and a plain [`SparseMlp`] trained in RAM from
+//! equal seeds must be **bit-identical** — same epoch logs, same final
+//! weights, byte-for-byte equal checkpoints — across kernel-thread
+//! budgets (the CI parity matrix additionally sweeps `TSNN_ISA` and
+//! pins `KERNEL_THREADS` per process, which this suite honors through
+//! `common::thread_counts`). No tolerances anywhere: the out-of-core
+//! path is the same arithmetic over mapped memory, so `assert_eq!` is
+//! the only acceptable comparison.
+
+#![cfg(all(target_os = "linux", target_pointer_width = "64"))]
+
+mod common;
+
+use std::path::PathBuf;
+
+use tsnn::bigmodel::{train_big, BigModel, BigTrainOptions};
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::data::datasets;
+use tsnn::model::checkpoint;
+use tsnn::train::{train_sequential_opts, TrainOptions};
+use tsnn::util::Rng;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tsnn_ooc_parity_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small wide-sparse recommender split — the out-of-core subsystem's
+/// native dataset, scaled down to suite size.
+fn spec() -> DatasetSpec {
+    DatasetSpec {
+        name: "recommender-parity".into(),
+        generator: "recommender".into(),
+        n_features: 256,
+        n_classes: 4,
+        n_train: 300,
+        n_test: 100,
+    }
+}
+
+/// Exercise everything the epoch loop can do: SET evolution AND
+/// importance pruning (fused and solo epochs), dropout off (its RNG is
+/// identical anyway), evaluation on a cadence with skipped epochs.
+fn config(threads: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::small_preset("recommender");
+    for (k, v) in [
+        ("epochs", "6"),
+        ("batch", "32"),
+        ("hidden", "48x24"),
+        ("epsilon", "6"),
+        ("zeta", "0.3"),
+        ("importance", "on"),
+        ("importance_start", "1"),
+        ("importance_period", "2"),
+        ("importance_min", "0"),
+        ("eval_every", "2"),
+        ("seed", "90210"),
+    ] {
+        cfg.set(k, v).unwrap();
+    }
+    cfg.set("kernel_threads", &threads.to_string()).unwrap();
+    cfg
+}
+
+#[test]
+fn mapped_training_matches_in_ram_training_bit_for_bit() {
+    for &threads in &common::thread_counts() {
+        let cfg = config(threads);
+        let spec = spec();
+
+        // in-RAM reference: generate → SparseMlp::new → train_model
+        let mut rng = Rng::new(cfg.seed);
+        let data = datasets::generate(&spec, &mut rng).unwrap();
+        let report =
+            train_sequential_opts(&cfg, &data, &mut rng, TrainOptions::default()).unwrap();
+
+        // mapped run: same seed, same RNG consumption at every point
+        let dir = tmp_dir(&format!("t{threads}"));
+        let mut rng2 = Rng::new(cfg.seed);
+        let data2 = datasets::generate(&spec, &mut rng2).unwrap();
+        let sizes = cfg.sizes(data2.n_features, data2.n_classes);
+        let mut big = BigModel::create(
+            &dir,
+            &sizes,
+            cfg.epsilon,
+            cfg.activation,
+            &cfg.init,
+            &mut rng2,
+        )
+        .unwrap();
+        let big_report =
+            train_big(&cfg, &data2, &mut big, &mut rng2, &BigTrainOptions::default()).unwrap();
+
+        // epoch logs bit-equal (timings excluded; NaN test metrics on
+        // skipped epochs compare equal through to_bits)
+        assert_eq!(report.epochs.len(), big_report.epochs.len());
+        for (a, b) in report.epochs.iter().zip(big_report.epochs.iter()) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "train loss diverged at threads={threads} epoch={}",
+                a.epoch
+            );
+            assert_eq!(a.train_accuracy.to_bits(), b.train_accuracy.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+            assert_eq!(
+                a.weight_count, b.weight_count,
+                "topology diverged at threads={threads} epoch={}",
+                a.epoch
+            );
+        }
+        assert_eq!(
+            report.final_test_accuracy.to_bits(),
+            big_report.final_test_accuracy.to_bits()
+        );
+        assert_eq!(
+            report.best_test_accuracy.to_bits(),
+            big_report.best_test_accuracy.to_bits()
+        );
+        assert_eq!(report.end_weights, big_report.end_weights);
+
+        // final models byte-identical through the checkpoint format —
+        // the strongest equality the formats can express
+        let p_ram = dir.join("ram.tsnn");
+        let p_map = dir.join("mapped.tsnn");
+        checkpoint::save(&report.model, &p_ram).unwrap();
+        big.save_checkpoint(&p_map).unwrap();
+        assert_eq!(
+            std::fs::read(&p_ram).unwrap(),
+            std::fs::read(&p_map).unwrap(),
+            "checkpoint bytes diverged at threads={threads}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// `weight_decay = 0` arms the activity-gated optimizer update
+/// (DESIGN.md §14.6) on both sides — the skip decision is a pure
+/// function of (gradients, liveness bitmap), identical in RAM and
+/// mapped runs, and a skipped row is a provable no-op of the dense
+/// update. Pin that end to end: gated mapped training must still be
+/// byte-identical to gated in-RAM training.
+#[test]
+fn gated_update_parity_with_zero_weight_decay() {
+    let mut cfg = config(1);
+    cfg.set("weight_decay", "0").unwrap();
+    let spec = spec();
+
+    let mut rng = Rng::new(cfg.seed);
+    let data = datasets::generate(&spec, &mut rng).unwrap();
+    let report = train_sequential_opts(&cfg, &data, &mut rng, TrainOptions::default()).unwrap();
+
+    let dir = tmp_dir("gated");
+    let mut rng2 = Rng::new(cfg.seed);
+    let data2 = datasets::generate(&spec, &mut rng2).unwrap();
+    let sizes = cfg.sizes(data2.n_features, data2.n_classes);
+    let mut big = BigModel::create(
+        &dir,
+        &sizes,
+        cfg.epsilon,
+        cfg.activation,
+        &cfg.init,
+        &mut rng2,
+    )
+    .unwrap();
+    train_big(&cfg, &data2, &mut big, &mut rng2, &BigTrainOptions::default()).unwrap();
+
+    let p_ram = dir.join("ram.tsnn");
+    let p_map = dir.join("mapped.tsnn");
+    checkpoint::save(&report.model, &p_ram).unwrap();
+    big.save_checkpoint(&p_map).unwrap();
+    assert_eq!(
+        std::fs::read(&p_ram).unwrap(),
+        std::fs::read(&p_map).unwrap(),
+        "gated-update checkpoints diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Training dirties mapped pages in place; `train_big` reseals at the
+/// end, so a cold [`BigModel::open`] of the directory must verify CRCs
+/// and produce the identical model.
+#[test]
+fn trained_directory_reopens_bit_identical() {
+    let mut cfg = config(1);
+    cfg.set("epochs", "4").unwrap();
+    let spec = spec();
+    let dir = tmp_dir("reopen");
+
+    let mut rng = Rng::new(cfg.seed);
+    let data = datasets::generate(&spec, &mut rng).unwrap();
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let mut big = BigModel::create(
+        &dir,
+        &sizes,
+        cfg.epsilon,
+        cfg.activation,
+        &cfg.init,
+        &mut rng,
+    )
+    .unwrap();
+    train_big(&cfg, &data, &mut big, &mut rng, &BigTrainOptions::default()).unwrap();
+
+    let p_live = dir.join("live.tsnn");
+    big.save_checkpoint(&p_live).unwrap();
+    drop(big);
+
+    let reopened = BigModel::open(&dir).unwrap();
+    let p_cold = dir.join("cold.tsnn");
+    reopened.save_checkpoint(&p_cold).unwrap();
+    assert_eq!(
+        std::fs::read(&p_live).unwrap(),
+        std::fs::read(&p_cold).unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,171 @@
+//! Residency-advisor behaviour under training load (DESIGN.md §14.4):
+//! the advisor is correctness-neutral (a run squeezed by an impossible
+//! RSS budget produces the bit-identical model to an unconstrained
+//! run), trims actually fire under pressure, and a sync+drop cycle over
+//! a trained model's segments releases resident pages without losing a
+//! byte. The *quantitative* peak-RSS-under-budget claim lives in
+//! `benches/perf_outofcore.rs` and the extreme-smoke CI job, where the
+//! model is big enough for the ratios to be meaningful.
+
+#![cfg(all(target_os = "linux", target_pointer_width = "64"))]
+
+use std::path::PathBuf;
+
+use tsnn::bigmodel::{train_big, vm_rss_bytes, BigModel, BigTrainOptions};
+use tsnn::config::{DatasetSpec, TrainConfig};
+use tsnn::data::datasets;
+use tsnn::util::Rng;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tsnn_ooc_res_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec() -> DatasetSpec {
+    DatasetSpec {
+        name: "recommender-residency".into(),
+        generator: "recommender".into(),
+        n_features: 512,
+        n_classes: 4,
+        n_train: 200,
+        n_test: 60,
+    }
+}
+
+fn config() -> TrainConfig {
+    let mut cfg = TrainConfig::small_preset("recommender");
+    for (k, v) in [
+        ("epochs", "3"),
+        ("batch", "32"),
+        ("hidden", "64x32"),
+        ("epsilon", "8"),
+        ("zeta", "0.3"),
+        ("eval_every", "1"),
+        ("seed", "5150"),
+        ("kernel_threads", "1"),
+    ] {
+        cfg.set(k, v).unwrap();
+    }
+    cfg
+}
+
+fn run_with(
+    dir: &PathBuf,
+    cfg: &TrainConfig,
+    spec: &DatasetSpec,
+    opts: &BigTrainOptions,
+) -> (BigModel, usize, Vec<u8>) {
+    let mut rng = Rng::new(cfg.seed);
+    let data = datasets::generate(spec, &mut rng).unwrap();
+    let sizes = cfg.sizes(data.n_features, data.n_classes);
+    let mut big = BigModel::create(
+        dir,
+        &sizes,
+        cfg.epsilon,
+        cfg.activation,
+        &cfg.init,
+        &mut rng,
+    )
+    .unwrap();
+    let report = train_big(cfg, &data, &mut big, &mut rng, opts).unwrap();
+    let ck = dir.join("final.tsnn");
+    big.save_checkpoint(&ck).unwrap();
+    let bytes = std::fs::read(&ck).unwrap();
+    (big, report.trim_events, bytes)
+}
+
+fn run(dir: &PathBuf, opts: &BigTrainOptions) -> (BigModel, usize, Vec<u8>) {
+    run_with(dir, &config(), &spec(), opts)
+}
+
+/// An impossible budget (0 bytes → every check is over budget) forces a
+/// trim at every hook; the trained model must still be bit-identical to
+/// an unconstrained run. This is the [`tsnn::sparse::Residency`]
+/// contract — advisors may only change *when pages are resident*, never
+/// what they contain.
+#[test]
+fn squeezed_run_is_bit_identical_to_unconstrained_run() {
+    let dir_free = tmp_dir("free");
+    let (_, trims_free, bytes_free) = run(&dir_free, &BigTrainOptions::default());
+    assert_eq!(trims_free, 0, "no advisor, no trims");
+
+    let dir_tight = tmp_dir("tight");
+    let opts = BigTrainOptions {
+        soft_budget_bytes: Some(0),
+        residency_check_every: 1,
+        ..BigTrainOptions::default()
+    };
+    let (_, trims_tight, bytes_tight) = run(&dir_tight, &opts);
+    assert!(
+        trims_tight > 0,
+        "an over-budget run must actually trim (got {trims_tight})"
+    );
+    assert_eq!(
+        bytes_free, bytes_tight,
+        "residency pressure changed the trained model"
+    );
+    std::fs::remove_dir_all(&dir_free).ok();
+    std::fs::remove_dir_all(&dir_tight).ok();
+}
+
+/// A comfortable budget (far above anything this process touches) must
+/// never trigger the advisor.
+#[test]
+fn comfortable_budget_never_trims() {
+    let dir = tmp_dir("comfy");
+    let opts = BigTrainOptions {
+        soft_budget_bytes: Some(u64::MAX),
+        residency_check_every: 1,
+        ..BigTrainOptions::default()
+    };
+    let (_, trims, _) = run(&dir, &opts);
+    assert_eq!(trims, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sync+drop over a trained (sealed) model's regions releases resident
+/// pages — RSS goes down, and a cold reopen still CRC-verifies and
+/// yields the same checkpoint. The drop really is lossless.
+#[test]
+fn dropping_resident_pages_loses_nothing() {
+    let dir = tmp_dir("drop");
+    // bigger layer 0 (~6 MiB of segment) so the RSS delta of the drop
+    // clears /proc's kilobyte granularity and allocator noise
+    let mut cfg = config();
+    cfg.set("epochs", "2").unwrap();
+    cfg.set("hidden", "256").unwrap();
+    cfg.set("epsilon", "32").unwrap();
+    let mut spec = spec();
+    spec.n_features = 16_384;
+    spec.n_train = 128;
+    spec.n_test = 32;
+    let (big, _, bytes_live) = run_with(&dir, &cfg, &spec, &BigTrainOptions::default());
+
+    // touch everything, then measure → drop → measure
+    let mut resident_sum = 0u64;
+    for layer in &big.mlp.layers {
+        for &v in layer.weights.values.as_slice() {
+            resident_sum = resident_sum.wrapping_add(v.to_bits() as u64);
+        }
+    }
+    let before = vm_rss_bytes().unwrap();
+    for region in big.regions() {
+        region.sync(0, region.len()).unwrap();
+        region.advise_dontneed(0, region.len());
+    }
+    let after = vm_rss_bytes().unwrap();
+    assert!(
+        after < before,
+        "RSS did not shrink after dropping mapped pages \
+         (before {before} B, after {after} B, touched-sum {resident_sum:x})"
+    );
+
+    drop(big);
+    let reopened = BigModel::open(&dir).unwrap();
+    let ck = dir.join("reopened.tsnn");
+    reopened.save_checkpoint(&ck).unwrap();
+    assert_eq!(bytes_live, std::fs::read(&ck).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -42,7 +42,7 @@ fn mixed_model(sizes: &[usize], densities: &[f64], seed: u64) -> SparseMlp {
             let n_out = sizes[l + 1];
             SparseLayer {
                 bias: (0..n_out).map(|_| rng.normal() * 0.1).collect(),
-                velocity: vec![0.0; weights.nnz()],
+                velocity: vec![0.0; weights.nnz()].into(),
                 bias_velocity: vec![0.0; n_out],
                 weights,
                 activation,

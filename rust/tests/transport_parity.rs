@@ -454,6 +454,72 @@ fn wassp_over_tcp_socket_matches_channel() {
     );
 }
 
+/// Multi-node posture: the coordinator binds the wildcard interface
+/// (`tcp:0.0.0.0:PORT`, how a real cross-host run is launched — see the
+/// CLI docs for `tsnn worker --connect tcp:HOST:PORT`) and workers dial
+/// in over an explicit host:port exactly as a remote machine would. The
+/// run must land bit-equal to the in-process channel reference: the
+/// bound interface changes reachability, never the protocol or the
+/// applied-update trajectory.
+#[test]
+fn wassp_bound_to_wildcard_interface_matches_channel() {
+    let cfg = quick_cfg();
+    let data = blob_data();
+    let pcfg = ParallelConfig {
+        workers: 2,
+        phase1_epochs: 2,
+        phase2_epochs: 1,
+        synchronous: true,
+        hot_start: true,
+        grad_clip: 5.0,
+    };
+    let channel_report = run_parallel(&cfg, &pcfg, &data, &mut Rng::new(53)).unwrap();
+
+    let mut hub = SocketHub::bind(&Addr::Tcp("0.0.0.0:0".into())).unwrap();
+    let bound = hub.local_tcp.clone().expect("tcp bind reports its port");
+    let port = bound.rsplit(':').next().unwrap().to_string();
+    // a remote worker would dial the coordinator's routable address;
+    // loopback is this test's stand-in for it
+    let connect = Addr::Tcp(format!("127.0.0.1:{port}"));
+    let budgets = worker_kernel_budgets(&cfg, pcfg.workers);
+    let data_ref = &data;
+    let socket_report = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for k in 0..pcfg.workers {
+            let job = WorkerJob::new(k as u32, budgets[k], &cfg, &pcfg);
+            let connect = connect.clone();
+            handles.push(scope.spawn(move || {
+                let client = SocketClient::connect(&connect).unwrap();
+                run_worker(Box::new(client), RetryPolicy::default(), &job, data_ref)
+            }));
+        }
+        let report = run_parallel_listener(
+            &cfg,
+            &pcfg,
+            &data,
+            &mut Rng::new(53),
+            &mut hub,
+            None,
+            &CoordinatorOptions::default(),
+        );
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        report
+    })
+    .unwrap();
+
+    assert_models_bit_equal(
+        &channel_report.model,
+        &socket_report.model,
+        "wildcard-bound socket vs channel",
+    );
+    assert_eq!(
+        channel_report.server_stats.steps,
+        socket_report.server_stats.steps
+    );
+}
+
 /// Startup race: workers that launch *before* the coordinator is
 /// listening connect via `connect_retry` and the run is still bit-exact
 /// with the channel reference — worker-first startup order changes

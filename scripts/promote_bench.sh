@@ -125,6 +125,38 @@ def check(doc):
             best is not None and best >= need,
             f"{bench}: best vector-ISA speedup {best} >= {need}",
         )
+    if bench == "perf_outofcore":
+        res = next((r for r in rows if r.get("op") == "residency"), None)
+        if res is None:
+            failures.append(f"FAIL {bench}: no residency row")
+            return False
+        seg, bud, peak = (
+            res.get("segment_bytes"),
+            res.get("budget_bytes"),
+            res.get("peak_rss_bytes"),
+        )
+        if None in (seg, bud, peak):
+            failures.append(f"FAIL {bench}: residency row missing bytes fields")
+            return False
+        ok = True
+        if acc.get("require_segments_exceed_budget", True):
+            ok = gate(
+                seg > bud,
+                f"{bench}: segments {seg} B exceed budget {bud} B",
+            ) and ok
+        if acc.get("require_peak_rss_under_budget", True):
+            ok = gate(
+                peak < bud,
+                f"{bench}: peak RSS {peak} B under budget {bud} B",
+            ) and ok
+        parity = next((r for r in rows if r.get("op") == "parity"), None)
+        return (
+            gate(
+                parity is not None and parity.get("equal") is True,
+                f"{bench}: mapped-vs-RAM parity row equal",
+            )
+            and ok
+        )
     failures.append(f"FAIL {bench}: no acceptance checker for this bench")
     return False
 
